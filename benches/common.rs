@@ -1,0 +1,117 @@
+//! Shared support for the bench binaries (each bench `#[path]`-includes
+//! this file; it is not a bench target itself).
+//!
+//! Benches reproduce the *shape* of the paper's tables/figures on scaled
+//! synthetic workloads (DESIGN.md section Substitutions). Row counts
+//! scale with `SB_BENCH_SCALE` (default 1.0; e.g. 0.25 for a smoke run,
+//! 2.0 for a longer, lower-variance run).
+
+#![allow(dead_code)]
+
+use sketchboost::baselines::one_vs_all::{fit_one_vs_all, OvaModel};
+use sketchboost::data::profiles::Profile;
+use sketchboost::prelude::*;
+use sketchboost::util::bench::time_once;
+
+pub fn scale() -> f64 {
+    std::env::var("SB_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+pub fn scaled_rows(p: &Profile) -> usize {
+    ((p.rows as f64 * scale()) as usize).max(200)
+}
+
+/// The paper-default training setup used across quality benches
+/// (Table 7 defaults, scaled round budget for the CPU testbed).
+pub fn bench_config(ds: &Dataset) -> GBDTConfig {
+    let mut cfg = GBDTConfig::for_dataset(ds);
+    cfg.n_rounds = 40;
+    cfg.learning_rate = 0.15;
+    cfg.max_depth = 4;
+    cfg.max_bins = 64;
+    cfg.early_stopping_rounds = 10;
+    cfg.seed = 42;
+    cfg
+}
+
+/// Generate the (train, test) pair for a profile, 80/20 as in B.2.
+pub fn profile_split(p: &Profile, seed: u64) -> (Dataset, Dataset) {
+    let ds = p.generate_sized(scaled_rows(p), seed);
+    split::train_test_split(&ds, 0.2, 7)
+}
+
+pub struct RunResult {
+    pub primary: f64,
+    pub secondary: f64,
+    pub seconds: f64,
+    pub n_trees: usize,
+    pub best_round: usize,
+}
+
+/// Train one single-tree configuration and evaluate on the test set.
+pub fn run_single_tree(cfg: &GBDTConfig, train: &Dataset, test: &Dataset) -> RunResult {
+    let (model, seconds) = time_once(|| GBDT::fit(cfg, train, Some(test)));
+    let preds = model.predict_raw(test);
+    RunResult {
+        primary: Metric::primary(&test.targets).eval(&preds, &test.targets),
+        secondary: Metric::secondary(&test.targets).eval(&preds, &test.targets),
+        seconds,
+        n_trees: model.n_trees(),
+        best_round: model.history.best_round,
+    }
+}
+
+/// Train the one-vs-all baseline. Rounds are capped so wide-output
+/// profiles stay tractable (the cap itself demonstrates the d-factor).
+pub fn run_ova(cfg: &GBDTConfig, train: &Dataset, test: &Dataset) -> (RunResult, usize) {
+    let d = cfg.n_outputs;
+    let mut ova_cfg = cfg.clone();
+    ova_cfg.n_rounds = cfg.n_rounds.min((1200 / d.max(1)).max(3));
+    let (model, seconds): (OvaModel, f64) =
+        time_once(|| fit_one_vs_all(&ova_cfg, train, Some(test)));
+    let preds = model.predict_raw(test);
+    (
+        RunResult {
+            primary: Metric::primary(&test.targets).eval(&preds, &test.targets),
+            secondary: Metric::secondary(&test.targets).eval(&preds, &test.targets),
+            seconds,
+            n_trees: model.n_trees(),
+            best_round: model.history.best_round,
+        },
+        ova_cfg.n_rounds,
+    )
+}
+
+/// Pick the best-k run among a k-grid for one strategy (the paper reports
+/// "for the best k"; grid scaled down from {1,2,5,10,20} for CPU budget).
+pub fn best_k_run<F: Fn(usize) -> SketchConfig>(
+    make: F,
+    ks: &[usize],
+    cfg: &GBDTConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> (usize, RunResult) {
+    let mut best: Option<(usize, RunResult)> = None;
+    for &k in ks {
+        if k >= cfg.n_outputs {
+            continue;
+        }
+        let mut c = cfg.clone();
+        c.sketch = make(k);
+        let r = run_single_tree(&c, train, test);
+        let better = match &best {
+            None => true,
+            Some((_, b)) => r.primary < b.primary,
+        };
+        if better {
+            best = Some((k, r));
+        }
+    }
+    best.unwrap_or_else(|| {
+        // d smaller than every k: fall back to full
+        (cfg.n_outputs, run_single_tree(cfg, train, test))
+    })
+}

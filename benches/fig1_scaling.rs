@@ -1,0 +1,94 @@
+//! Figures 1 & 4: training time vs number of classes on the Guyon
+//! synthetic dataset.
+//!
+//! Paper setup: 2000k rows x 100 features, 100 trees, depth 6, classes in
+//! {5, 10, 25, 50, 100, 250, 500} on a V100. Here: rows/features scaled
+//! for the CPU testbed (see DESIGN.md section Substitutions), same class
+//! grid shape, and time is normalized to "per 100 trees". Figure 1 is the
+//! two baseline arms (one-vs-all = XGBoost strategy, full single-tree =
+//! CatBoost strategy); Figure 4 adds SketchBoost with Random Projection
+//! k=5 staying flat in d.
+//!
+//!     cargo bench --bench fig1_scaling
+
+#[path = "common.rs"]
+mod common;
+
+use sketchboost::baselines::one_vs_all::fit_one_vs_all;
+use sketchboost::data::synthetic::{make_multiclass, FeatureSpec};
+use sketchboost::prelude::*;
+use sketchboost::util::bench::{fmt_secs, time_once, write_results, Table};
+use sketchboost::util::json::Json;
+
+fn main() {
+    let rows = ((3000.0 * common::scale()) as usize).max(500);
+    let m = 50;
+    let rounds = 20usize;
+    let classes = [5usize, 10, 25, 50, 100, 250];
+    println!(
+        "Figure 1/4 reproduction: {rows} rows x {m} features, depth 6, \
+         {rounds} measured trees (normalized to per-100-tree time)\n"
+    );
+
+    let mut table = Table::new(&[
+        "classes",
+        "one-vs-all (XGB strategy)",
+        "full single-tree (CatBoost strategy)",
+        "sketchboost rp k=5",
+        "full/rp speedup",
+    ]);
+    let mut series = Json::obj();
+    let (mut s_ova, mut s_full, mut s_rp) = (Vec::new(), Vec::new(), Vec::new());
+
+    for &d in &classes {
+        let ds = make_multiclass(rows, FeatureSpec::guyon(m), d, 1.6, 1);
+        let mut cfg = GBDTConfig::multiclass(d);
+        cfg.n_rounds = rounds;
+        cfg.max_depth = 6;
+        cfg.max_bins = 64;
+        cfg.learning_rate = 0.01; // paper B.7 settings
+        cfg.eval_train = false; // timing run: skip O(n*d) train metric
+        let norm = 100.0 / rounds as f64;
+
+        // one-vs-all: same tree budget in *rounds*; each round builds d trees
+        let ova_rounds = rounds.min((600 / d).max(2));
+        let mut ova_cfg = cfg.clone();
+        ova_cfg.n_rounds = ova_rounds;
+        let (_, t) = time_once(|| fit_one_vs_all(&ova_cfg, &ds, None));
+        let t_ova = t * (rounds as f64 / ova_rounds as f64) * norm;
+
+        let (_, t) = time_once(|| GBDT::fit(&cfg, &ds, None));
+        let t_full = t * norm;
+
+        let mut rp = cfg.clone();
+        rp.sketch = SketchConfig::RandomProjection { k: 5 };
+        let (_, t) = time_once(|| GBDT::fit(&rp, &ds, None));
+        let t_rp = t * norm;
+
+        table.row(&[
+            d.to_string(),
+            fmt_secs(t_ova),
+            fmt_secs(t_full),
+            fmt_secs(t_rp),
+            format!("{:.1}x", t_full / t_rp),
+        ]);
+        s_ova.push(t_ova);
+        s_full.push(t_full);
+        s_rp.push(t_rp);
+    }
+    table.print();
+
+    series.set("classes", Json::Arr(classes.iter().map(|&c| Json::Num(c as f64)).collect()));
+    series.set("one_vs_all_s", Json::from_f64_slice(&s_ova));
+    series.set("full_single_tree_s", Json::from_f64_slice(&s_full));
+    series.set("rp_k5_s", Json::from_f64_slice(&s_rp));
+    series.set("rows", Json::Num(rows as f64));
+    series.set("features", Json::Num(m as f64));
+    let path = write_results("fig1_scaling", &series).unwrap();
+    println!("\nseries written to {}", path.display());
+    println!(
+        "\nExpected shape: baseline arms grow ~linearly in classes; the rp
+arm stays nearly flat, with the speedup factor growing with d
+(paper: >40x at 500 classes on GPU)."
+    );
+}

@@ -1,0 +1,197 @@
+//! Hot-path microbenchmarks + engine ablation (repo-specific; feeds
+//! EXPERIMENTS.md section Perf).
+//!
+//! Measures the per-op throughput of the native engine (histogram
+//! accumulation across k, split-gain scan, projection gemm, CE
+//! derivatives), the end-to-end per-tree cost split, and — when
+//! artifacts are built — the same ops through the PJRT/XLA engine.
+//!
+//!     cargo bench --bench hot_paths
+
+#[path = "common.rs"]
+mod common;
+
+use sketchboost::boosting::losses::LossKind;
+use sketchboost::data::binning::BinnedDataset;
+use sketchboost::data::synthetic::{make_multiclass, FeatureSpec};
+use sketchboost::engine::{ComputeEngine, NativeEngine, ScoreMode, XlaEngine};
+use sketchboost::prelude::*;
+use sketchboost::runtime::registry::artifacts_available;
+use sketchboost::util::bench::{bench, fmt_secs, write_results, Table};
+use sketchboost::util::json::Json;
+use sketchboost::util::rng::Rng;
+
+fn main() {
+    let n = ((20_000.0 * common::scale()) as usize).max(1000);
+    let m = 32;
+    let bins = 64;
+    let d = 16;
+    let mut results = Json::obj();
+
+    let ds = make_multiclass(n, FeatureSpec::guyon(m), d, 1.6, 1);
+    let binned = BinnedDataset::from_dataset(&ds, bins);
+    let mut rng = Rng::new(7);
+    let mut eng = NativeEngine::new();
+
+    println!("== native hot paths (n = {n}, m = {m}, bins = {bins}, d = {d}) ==\n");
+
+    // --- histogram accumulation across k --------------------------------
+    let rows: Vec<u32> = (0..n as u32).collect();
+    let n_slots = 8;
+    let slot_of_row: Vec<u32> = (0..n).map(|_| rng.next_below(n_slots) as u32).collect();
+    let mut t = Table::new(&["op", "time", "throughput (rows*feat/s)"]);
+    let mut hist_series = Json::obj();
+    for k in [1usize, 2, 5, 10, 16] {
+        let k1 = k + 1;
+        let mut chan = vec![0.0f32; n * k1];
+        rng.fill_gaussian(&mut chan, 1.0);
+        for i in 0..n {
+            chan[i * k1 + k1 - 1] = 1.0;
+        }
+        let mut out = vec![0.0f32; n_slots * m * bins * k1];
+        let meas = bench(&format!("hist k={k}"), 1, 5, || {
+            out.fill(0.0);
+            eng.histograms(&binned, &rows, &slot_of_row, &chan, k1, n_slots, &mut out);
+        });
+        let thr = (n * m) as f64 / meas.median;
+        t.row(&[meas.label.clone(), fmt_secs(meas.median), format!("{:.1}M", thr / 1e6)]);
+        hist_series.set(&format!("k{k}"), Json::Num(meas.median));
+    }
+    results.set("native_hist", hist_series);
+
+    // --- split gain scan --------------------------------------------------
+    let k1 = 6;
+    let mut hist = vec![0.0f32; n_slots * m * bins * k1];
+    rng.fill_gaussian(&mut hist, 1.0);
+    let meas = bench("split_gains", 1, 10, || {
+        let _ = eng.split_gains(&hist, n_slots, m, bins, k1, 1.0, ScoreMode::CountL2);
+    });
+    t.row(&[meas.label.clone(), fmt_secs(meas.median), format!(
+        "{:.1}M cand/s",
+        (n_slots * m * bins) as f64 / meas.median / 1e6
+    )]);
+    results.set("native_gains_s", Json::Num(meas.median));
+
+    // --- projection gemm ---------------------------------------------------
+    let mut g = vec![0.0f32; n * d];
+    rng.fill_gaussian(&mut g, 1.0);
+    let mut proj = vec![0.0f32; d * 5];
+    rng.fill_gaussian(&mut proj, 0.5);
+    let mut gk = vec![0.0f32; n * 5];
+    let meas = bench("sketch gemm d=16 k=5", 1, 10, || {
+        eng.sketch_project(&g, n, d, &proj, 5, &mut gk);
+    });
+    t.row(&[meas.label.clone(), fmt_secs(meas.median), format!(
+        "{:.2}GFLOP/s",
+        (2 * n * d * 5) as f64 / meas.median / 1e9
+    )]);
+    results.set("native_gemm_s", Json::Num(meas.median));
+
+    // --- CE derivatives -----------------------------------------------------
+    let labels: Vec<u32> = (0..n).map(|_| rng.next_below(d) as u32).collect();
+    let targets = Targets::Multiclass { labels, n_classes: d };
+    let mut preds = vec![0.0f32; n * d];
+    rng.fill_gaussian(&mut preds, 1.0);
+    let mut gg = vec![0.0f32; n * d];
+    let mut hh = vec![0.0f32; n * d];
+    let meas = bench("ce grad/hess", 1, 10, || {
+        eng.grad_hess(LossKind::MulticlassCE, &preds, &targets, &mut gg, &mut hh);
+    });
+    t.row(&[meas.label.clone(), fmt_secs(meas.median), format!(
+        "{:.1}M rows/s",
+        n as f64 / meas.median / 1e6
+    )]);
+    results.set("native_ce_s", Json::Num(meas.median));
+    t.print();
+
+    // --- end-to-end per-tree cost: full vs sketched ------------------------
+    println!("\n== per-tree training cost (single-tree, depth 5) ==\n");
+    let mut t2 = Table::new(&["config", "time/tree", "speedup vs full"]);
+    let mut per_tree = Json::obj();
+    let mut full_tree = 0.0f64;
+    for (label, sketch) in [
+        ("full (k=d=16)", SketchConfig::None),
+        ("rp k=5", SketchConfig::RandomProjection { k: 5 }),
+        ("rs k=5", SketchConfig::RandomSampling { k: 5 }),
+        ("to k=5", SketchConfig::TopOutputs { k: 5 }),
+    ] {
+        let mut cfg = GBDTConfig::multiclass(d);
+        cfg.n_rounds = 10;
+        cfg.max_depth = 5;
+        cfg.max_bins = bins;
+        cfg.sketch = sketch;
+        let meas = bench(label, 0, 3, || {
+            let _ = GBDT::fit(&cfg, &ds, None);
+        });
+        let per = meas.median / 10.0;
+        if full_tree == 0.0 {
+            full_tree = per;
+        }
+        t2.row(&[label.into(), fmt_secs(per), format!("{:.2}x", full_tree / per)]);
+        per_tree.set(label, Json::Num(per));
+    }
+    t2.print();
+    results.set("per_tree", per_tree);
+
+    // --- engine ablation: native vs PJRT/XLA ops ---------------------------
+    if artifacts_available() {
+        println!("\n== engine ablation: native vs xla artifacts (e2e shapes) ==\n");
+        let mut xeng = XlaEngine::new("e2e").expect("open e2e artifacts");
+        let mut t3 = Table::new(&["op", "native", "xla (pjrt)", "ratio"]);
+        let mut abl = Json::obj();
+
+        // grad ce at artifact shape d=16
+        let mut g2 = vec![0.0f32; n * d];
+        let mut h2 = vec![0.0f32; n * d];
+        let mn = bench("ce native", 1, 5, || {
+            eng.grad_hess(LossKind::MulticlassCE, &preds, &targets, &mut g2, &mut h2);
+        });
+        let mx = bench("ce xla", 1, 3, || {
+            xeng.grad_hess(LossKind::MulticlassCE, &preds, &targets, &mut g2, &mut h2);
+        });
+        t3.row(&["grad_ce".into(), fmt_secs(mn.median), fmt_secs(mx.median),
+                 format!("{:.0}x", mx.median / mn.median)]);
+        abl.set("grad_ce", Json::from_f64_slice(&[mn.median, mx.median]));
+
+        // sketch projection
+        let mn = bench("gemm native", 1, 5, || {
+            eng.sketch_project(&g, n, d, &proj, 5, &mut gk);
+        });
+        let mx = bench("gemm xla", 1, 3, || {
+            xeng.sketch_project(&g, n, d, &proj, 5, &mut gk);
+        });
+        t3.row(&["sketch_rp".into(), fmt_secs(mn.median), fmt_secs(mx.median),
+                 format!("{:.0}x", mx.median / mn.median)]);
+        abl.set("sketch_rp", Json::from_f64_slice(&[mn.median, mx.median]));
+
+        // histograms (k1 = 6 matches artifact)
+        let k1 = 6;
+        let mut chan = vec![0.0f32; n * k1];
+        rng.fill_gaussian(&mut chan, 1.0);
+        for i in 0..n {
+            chan[i * k1 + k1 - 1] = 1.0;
+        }
+        let mut out = vec![0.0f32; 32 * m * bins * k1];
+        let slot32: Vec<u32> = (0..n).map(|_| rng.next_below(32) as u32).collect();
+        let mn = bench("hist native", 1, 3, || {
+            out.fill(0.0);
+            eng.histograms(&binned, &rows, &slot32, &chan, k1, 32, &mut out);
+        });
+        let mx = bench("hist xla", 0, 1, || {
+            out.fill(0.0);
+            xeng.histograms(&binned, &rows, &slot32, &chan, k1, 32, &mut out);
+        });
+        t3.row(&["histograms".into(), fmt_secs(mn.median), fmt_secs(mx.median),
+                 format!("{:.0}x", mx.median / mn.median)]);
+        abl.set("histograms", Json::from_f64_slice(&[mn.median, mx.median]));
+        t3.print();
+        results.set("engine_ablation", abl);
+        println!("\n(the xla column runs interpret-mode-lowered Pallas kernels on a");
+        println!("CPU PJRT client — the structural TPU analysis is in EXPERIMENTS.md)");
+    } else {
+        println!("\n(xla ablation skipped: run `make artifacts` first)");
+    }
+
+    let path = write_results("hot_paths", &results).unwrap();
+    println!("\nresults written to {}", path.display());
+}

@@ -1,0 +1,182 @@
+"""AOT: lower the L2 graph to HLO-text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is a shape-monomorphic lowering of one model.py op. The
+manifest below defines the signature families; ``artifacts/manifest.json``
+records them so the rust registry can discover available shapes without
+any Python at runtime. Usage:
+
+    python -m compile.aot --out-dir ../artifacts
+
+Incremental: artifacts are skipped when already present and newer than
+the python sources (make drives this too).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Default lambda baked into gain artifacts; the rust TrainConfig must use
+# the same value when running on the XLA engine (checked via manifest).
+LAMBDA = 1.0
+
+# Canonical shape families.
+#   e2e:  the end-to-end example / runtime integration config
+#   test: a tiny config so `cargo test` stays fast
+CHUNK_E2E, D_E2E, K_E2E, M_E2E, BINS_E2E, NODES_E2E = 2048, 16, 5, 32, 64, 32
+CHUNK_T, D_T, K_T, M_T, BINS_T, NODES_T = 256, 4, 2, 6, 16, 8
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def manifest_entries():
+    """(name, fn, example_args, meta) for every artifact to emit."""
+    entries = []
+
+    def add(name, fn, args, **meta):
+        entries.append((name, fn, args, meta))
+
+    for tag, (chunk, d, k, m, bins, nodes) in {
+        "e2e": (CHUNK_E2E, D_E2E, K_E2E, M_E2E, BINS_E2E, NODES_E2E),
+        "test": (CHUNK_T, D_T, K_T, M_T, BINS_T, NODES_T),
+    }.items():
+        k1 = k + 1
+        add(
+            f"grad_ce_{tag}",
+            model.grad_ce,
+            (spec((chunk, d)), spec((chunk,), I32)),
+            op="grad_ce", chunk=chunk, d=d,
+        )
+        add(
+            f"grad_bce_{tag}",
+            model.grad_bce,
+            (spec((chunk, d)), spec((chunk, d))),
+            op="grad_bce", chunk=chunk, d=d,
+        )
+        add(
+            f"grad_mse_{tag}",
+            model.grad_mse,
+            (spec((chunk, d)), spec((chunk, d))),
+            op="grad_mse", chunk=chunk, d=d,
+        )
+        add(
+            f"sketch_rp_{tag}",
+            model.sketch_rp,
+            (spec((chunk, d)), spec((d, k))),
+            op="sketch_rp", chunk=chunk, d=d, k=k,
+        )
+        add(
+            f"hist_{tag}",
+            lambda b, n, g, _nodes=nodes, _bins=bins: model.hist(
+                b, n, g, n_nodes=_nodes, n_bins=_bins
+            ),
+            (spec((chunk, m), I32), spec((chunk,), I32), spec((chunk, k1))),
+            op="hist", chunk=chunk, m=m, k1=k1, bins=bins, nodes=nodes,
+        )
+        add(
+            f"gain_{tag}",
+            lambda h, _lam=LAMBDA: model.gain(h, lam=_lam),
+            (spec((m, nodes, bins, k1)),),
+            op="gain", m=m, k1=k1, bins=bins, nodes=nodes, lam=LAMBDA,
+        )
+        add(
+            f"leaf_sums_{tag}",
+            lambda n, g, _nodes=nodes: model.leaf_sums(n, g, n_nodes=_nodes),
+            (spec((chunk,), I32), spec((chunk, 2 * d + 1))),
+            op="leaf_sums", chunk=chunk, d=d, nodes=nodes,
+        )
+
+    # Fusion-check artifact (e2e shapes only): grad -> sketch -> root hist.
+    add(
+        "round_step_ce_e2e",
+        model.round_step_ce,
+        (
+            spec((CHUNK_E2E, D_E2E)),
+            spec((CHUNK_E2E,), I32),
+            spec((D_E2E, K_E2E)),
+            spec((CHUNK_E2E, M_E2E), I32),
+            spec((CHUNK_E2E,), I32),
+        ),
+        op="round_step_ce", chunk=CHUNK_E2E, d=D_E2E, k=K_E2E,
+        m=M_E2E, bins=BINS_E2E,
+    )
+    return entries
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def newest_source_mtime() -> float:
+    root = os.path.dirname(os.path.abspath(__file__))
+    paths = [os.path.join(root, "model.py"), os.path.abspath(__file__)]
+    kdir = os.path.join(root, "kernels")
+    paths += [os.path.join(kdir, f) for f in os.listdir(kdir) if f.endswith(".py")]
+    return max(os.path.getmtime(p) for p in paths)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="rebuild everything")
+    ap.add_argument("--only", default=None, help="comma list of artifact names")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    src_mtime = newest_source_mtime()
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"lambda": LAMBDA, "artifacts": {}}
+    n_built = 0
+    for name, fn, example_args, meta in manifest_entries():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        manifest["artifacts"][name] = {
+            "file": os.path.basename(path),
+            **meta,
+        }
+        if only is not None and name not in only:
+            continue
+        fresh = (
+            os.path.exists(path) and os.path.getmtime(path) >= src_mtime
+        )
+        if fresh and not args.force:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        n_built += 1
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] built {n_built} artifacts; manifest at {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

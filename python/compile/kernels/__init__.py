@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered into L2 HLO artifacts).
+
+Kernels: histogram (one-hot MXU matmul), split_scan (cumsum gain),
+sketch (random-projection matmul), losses (fused softmax-CE grad/hess).
+``ref`` holds the pure-jnp oracles every kernel is tested against.
+"""
+
+from . import histogram, losses, ref, sketch, split_scan  # noqa: F401

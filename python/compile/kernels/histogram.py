@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: gradient-histogram build as a one-hot MXU matmul.
+
+The paper's GPU implementation (Py-Boost) accumulates histograms with CUDA
+scatter-add atomics into shared memory. TPUs have neither atomics nor
+shared memory; the idiomatic mapping (DESIGN.md section Hardware-Adaptation)
+is to express the scatter as a dense one-hot matmul that runs on the MXU
+systolic array:
+
+    hist[f] = onehot(node * n_bins + bin[f]).T @ [G_k | valid]
+
+BlockSpec tiles the row dimension so each grid step holds
+
+    onehot tile   ROWS x (n_nodes * n_bins)   f32
+    gradient tile ROWS x k1                   f32
+    hist block    (n_nodes * n_bins) x k1     f32 (accumulated in place)
+
+in VMEM; the grid is (m features, n / ROWS row-chunks) and the output
+block for feature f is revisited across row-chunks, accumulating partial
+histograms (grid-order guarantees the revisits are sequential).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so correctness runs through the interpreter and real-TPU
+performance is estimated from the VMEM footprint in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-chunk size per grid step. 256 rows x 2048 one-hot columns x 4 B
+# = 2 MiB for the one-hot tile at the default (nodes=32, bins=64) config,
+# comfortably inside a 16 MiB VMEM budget together with the 512 KiB hist
+# block. See EXPERIMENTS.md section Perf for the footprint table.
+ROWS = 256
+
+
+def _hist_kernel(bin_ref, node_ref, gkv_ref, out_ref, *, n_nodes, n_bins):
+    """One grid step: accumulate one row-chunk of one feature's histogram."""
+    chunk = pl.program_id(1)
+    bins = bin_ref[...][:, 0]  # i32[ROWS]
+    nodes = node_ref[...]  # i32[ROWS]
+    gkv = gkv_ref[...]  # f32[ROWS, k1]
+    combined = nodes * n_bins + bins  # i32[ROWS]
+    nb = n_nodes * n_bins
+    iota = jax.lax.broadcasted_iota(jnp.int32, (combined.shape[0], nb), 1)
+    onehot = (combined[:, None] == iota).astype(gkv.dtype)  # [ROWS, nb]
+    partial = jnp.dot(onehot.T, gkv, preferred_element_type=jnp.float32)
+
+    @pl.when(chunk == 0)
+    def _init():
+        out_ref[...] = partial[None]
+
+    @pl.when(chunk != 0)
+    def _acc():
+        out_ref[...] += partial[None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "rows"))
+def histogram(bin_ids, node_ids, gkv, *, n_nodes, n_bins, rows=ROWS):
+    """Pallas histogram over all features.
+
+    Args / returns match :func:`kernels.ref.histogram`; ``n`` must be a
+    multiple of ``rows`` (the rust caller pads chunks to a fixed size).
+    """
+    n, m = bin_ids.shape
+    k1 = gkv.shape[1]
+    if n % rows != 0:
+        raise ValueError(f"n={n} must be a multiple of the row tile {rows}")
+    nb = n_nodes * n_bins
+    grid = (m, n // rows)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, n_nodes=n_nodes, n_bins=n_bins),
+        grid=grid,
+        in_specs=[
+            # one feature column x one row-chunk
+            pl.BlockSpec((rows, 1), lambda f, c: (c, f)),
+            pl.BlockSpec((rows,), lambda f, c: (c,)),
+            pl.BlockSpec((rows, k1), lambda f, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nb, k1), lambda f, c: (f, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, nb, k1), jnp.float32),
+        interpret=True,
+    )(bin_ids, node_ids, gkv)

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: fused softmax cross-entropy gradient/hessian.
+
+Multiclass is the loss the paper benchmarks hardest (Dionis: 355 classes),
+and its per-round derivative pass is an n x d softmax — worth fusing so
+the max/exp/normalize/subtract pipeline happens in one VMEM-resident pass
+per row tile instead of four HBM round-trips. Outputs are the Newton
+ingredients of paper eq. (2) with the diagonal-hessian simplification:
+
+    g = softmax(z) - onehot(y),   h = p * (1 - p).
+
+BCE and MSE derivatives are memory-bound elementwise maps with no fusion
+upside; they live at L2 (model.py) as plain jnp.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 512
+
+
+def _ce_kernel(logit_ref, label_ref, g_ref, h_ref):
+    z = logit_ref[...]  # f32[ROWS, d]
+    y = label_ref[...]  # i32[ROWS]
+    z = z - jnp.max(z, axis=1, keepdims=True)
+    e = jnp.exp(z)
+    p = e / jnp.sum(e, axis=1, keepdims=True)
+    d = z.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (z.shape[0], d), 1)
+    onehot = (y[:, None] == iota).astype(p.dtype)
+    g_ref[...] = p - onehot
+    h_ref[...] = p * (1.0 - p)
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def softmax_ce_grad_hess(logits, labels, *, rows=ROWS):
+    """Pallas fused CE grad/hess; matches ref.softmax_ce_grad_hess."""
+    n, d = logits.shape
+    if n % rows != 0:
+        raise ValueError(f"n={n} must be a multiple of the row tile {rows}")
+    return pl.pallas_call(
+        _ce_kernel,
+        grid=(n // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda c: (c, 0)),
+            pl.BlockSpec((rows,), lambda c: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, d), lambda c: (c, 0)),
+            pl.BlockSpec((rows, d), lambda c: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, labels)

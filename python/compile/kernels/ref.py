@@ -1,0 +1,137 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Each function here is the semantic specification of a kernel in this
+package. pytest (``python/tests``) checks every Pallas kernel against its
+oracle with ``assert_allclose`` over hypothesis-driven shape/dtype sweeps.
+The rust NativeEngine is additionally cross-checked against the XLA
+artifacts lowered from these computations, so this file is the single
+source of truth for the numerics of the whole stack.
+
+Notation follows the paper (Iosipoi & Vakhrushev, NeurIPS 2022):
+``G`` is the n x d gradient matrix, ``G_k`` its n x k sketch, histograms
+are accumulated per (feature, node, bin) over the sketched outputs, and
+the split score is eq. (4) with second-order terms dropped during the
+search (the CatBoost-style "best practice" the paper builds on).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def softmax_ce_grad_hess(logits: jnp.ndarray, labels: jnp.ndarray):
+    """Gradient/diagonal-hessian of softmax cross-entropy.
+
+    Args:
+      logits: f32[n, d] raw scores.
+      labels: i32[n] class indices in [0, d).
+
+    Returns:
+      (g, h): f32[n, d] each, with g = p - onehot(y) and h = p * (1 - p)
+      (the diagonal of the softmax hessian, as used by CatBoost/Py-Boost).
+    """
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(z)
+    p = e / jnp.sum(e, axis=1, keepdims=True)
+    onehot = (labels[:, None] == jnp.arange(logits.shape[1])[None, :]).astype(
+        logits.dtype
+    )
+    g = p - onehot
+    h = p * (1.0 - p)
+    return g, h
+
+
+def bce_grad_hess(logits: jnp.ndarray, targets: jnp.ndarray):
+    """Gradient/hessian of elementwise sigmoid binary cross-entropy.
+
+    Args:
+      logits: f32[n, d].
+      targets: f32[n, d] in {0, 1} (soft targets allowed).
+    """
+    p = 1.0 / (1.0 + jnp.exp(-logits))
+    return p - targets, p * (1.0 - p)
+
+
+def mse_grad_hess(preds: jnp.ndarray, targets: jnp.ndarray):
+    """Gradient/hessian of 0.5 * ||pred - y||^2 (hessian is identically 1)."""
+    return preds - targets, jnp.ones_like(preds)
+
+
+def sketch_projection(g: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    """Random Projection sketch: G_k = G @ Pi  (paper section 3.3)."""
+    return jnp.dot(g, proj)
+
+
+def histogram(
+    bin_ids: jnp.ndarray,
+    node_ids: jnp.ndarray,
+    gkv: jnp.ndarray,
+    n_nodes: int,
+    n_bins: int,
+) -> jnp.ndarray:
+    """Gradient histograms per (feature, node, bin).
+
+    Args:
+      bin_ids: i32[n, m] quantized feature values in [0, n_bins).
+      node_ids: i32[n] leaf assignment in [0, n_nodes). Padding rows must
+        carry all-zero ``gkv`` rows so they contribute nothing.
+      gkv: f32[n, k1] sketched gradients with an extra trailing "valid"
+        column of 1.0 for real rows / 0.0 for padding, so channel k1-1 of
+        the result is the per-bin sample count.
+      n_nodes, n_bins: static sizes.
+
+    Returns:
+      hist: f32[m, n_nodes * n_bins, k1].
+    """
+    n, m = bin_ids.shape
+    combined = node_ids[:, None] * n_bins + bin_ids  # [n, m]
+    iota = jnp.arange(n_nodes * n_bins)
+    out = []
+    for f in range(m):
+        onehot = (combined[:, f][:, None] == iota[None, :]).astype(gkv.dtype)
+        out.append(jnp.dot(onehot.T, gkv))
+    return jnp.stack(out, axis=0)
+
+
+def split_gain(hist: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """Split impurity score S(R_left) + S(R_right) for every candidate.
+
+    The score of a region (paper eq. 4 without second-order terms, i.e.
+    the CatBoost multioutput regime) is
+
+        S(R) = sum_j (sum_{i in R} g_i^j)^2 / (|R| + lambda).
+
+    Args:
+      hist: f32[m, n_nodes, n_bins, k1] — per-feature histograms, where
+        channel k1-1 holds sample counts (see :func:`histogram`).
+      lam: l2 leaf regularization lambda > 0.
+
+    Returns:
+      gain: f32[m, n_nodes, n_bins] where entry b scores the split
+      "left = bins <= b". The last bin (b = n_bins - 1) puts everything
+      left and is a degenerate split the caller must ignore.
+    """
+    gsum = jnp.cumsum(hist[..., :-1], axis=2)  # [m, nodes, bins, k]
+    csum = jnp.cumsum(hist[..., -1], axis=2)  # [m, nodes, bins]
+    gtot = gsum[:, :, -1:, :]
+    ctot = csum[:, :, -1:]
+    gr = gtot - gsum
+    cr = ctot - csum
+    s_left = jnp.sum(gsum * gsum, axis=-1) / (csum + lam)
+    s_right = jnp.sum(gr * gr, axis=-1) / (cr + lam)
+    return s_left + s_right
+
+
+def leaf_sums(node_ids: jnp.ndarray, ghv: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+    """Per-leaf sums of (full) gradients/hessians for exact leaf values.
+
+    Args:
+      node_ids: i32[n] leaf assignment.
+      ghv: f32[n, c] concatenated [G | H | valid] rows (padding rows all
+        zero); c = 2d + 1 in the trainer.
+
+    Returns:
+      sums: f32[n_nodes, c].
+    """
+    onehot = (node_ids[:, None] == jnp.arange(n_nodes)[None, :]).astype(ghv.dtype)
+    return jnp.dot(onehot.T, ghv)

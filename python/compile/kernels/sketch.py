@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: Random Projection sketch G_k = G @ Pi.
+
+The projection (paper section 3.3) is a plain dense matmul of the n x d
+gradient matrix with a d x k Gaussian matrix, k << d. It is the only
+sketch that costs O(ndk) instead of O(nd), so it is the one worth a
+dedicated MXU kernel: rows are tiled into VMEM-sized chunks and each grid
+step performs a (ROWS x d) @ (d x k) matmul with f32 accumulation.
+
+Pi itself is sampled on the rust side (PCG64 + Box-Muller, N(0, 1/k))
+each boosting round and fed as an input, keeping the artifact
+deterministic and the randomness under the coordinator's seed control.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 512
+
+
+def _proj_kernel(g_ref, p_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        g_ref[...], p_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def sketch_projection(g, proj, *, rows=ROWS):
+    """Pallas projection; matches :func:`kernels.ref.sketch_projection`.
+
+    Args:
+      g: f32[n, d] gradient matrix, n a multiple of ``rows``.
+      proj: f32[d, k] projection matrix.
+    """
+    n, d = g.shape
+    k = proj.shape[1]
+    if n % rows != 0:
+        raise ValueError(f"n={n} must be a multiple of the row tile {rows}")
+    return pl.pallas_call(
+        _proj_kernel,
+        grid=(n // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda c: (c, 0)),
+            pl.BlockSpec((d, k), lambda c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, k), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(g, proj)

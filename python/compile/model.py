@@ -1,0 +1,96 @@
+"""L2: the per-boosting-round JAX compute graph, calling the L1 kernels.
+
+SketchBoost's "model" is not a neural network — the learned object is the
+tree ensemble owned by the rust coordinator. What gets AOT-compiled is the
+dense numeric core of one boosting round, i.e. exactly the pieces whose
+cost the paper analyzes (section 3.4):
+
+  grad_*            per-round loss derivatives  (eq. 2, diagonal hessian)
+  sketch_rp         the Random Projection sketch G @ Pi      (section 3.3)
+  hist              sketched histograms over a sample chunk  (section 3.4)
+  gain              split scores from accumulated histograms (eq. 4)
+  leaf_sums         exact per-leaf G/H sums for leaf values  (eq. 3)
+
+Each function is shape-monomorphic when jitted; aot.py lowers a family of
+signatures to HLO text that the rust runtime loads via PJRT. Chunked
+execution (fixed-row artifacts, zero-padded tails) handles dynamic n —
+zero gradient rows are exact no-ops for every op here.
+
+Top Outputs and Random Sampling sketches are pure column gathers (O(nd)),
+which the rust coordinator does in place; only Random Projection carries
+an O(ndk) matmul worth an MXU kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import histogram as _hist
+from .kernels import losses as _losses
+from .kernels import ref as _ref
+from .kernels import sketch as _sketch
+from .kernels import split_scan as _scan
+
+
+def grad_ce(logits, labels):
+    """Multiclass softmax-CE grad/hess, fused Pallas kernel (L1)."""
+    rows = min(_losses.ROWS, logits.shape[0])
+    return _losses.softmax_ce_grad_hess(logits, labels, rows=rows)
+
+
+def grad_bce(logits, targets):
+    """Multilabel sigmoid-BCE grad/hess (memory-bound; plain jnp)."""
+    return _ref.bce_grad_hess(logits, targets)
+
+
+def grad_mse(preds, targets):
+    """Multitask MSE grad/hess (memory-bound; plain jnp)."""
+    return _ref.mse_grad_hess(preds, targets)
+
+
+def sketch_rp(g, proj):
+    """Random Projection sketch G_k = G @ Pi via the Pallas matmul kernel."""
+    rows = min(_sketch.ROWS, g.shape[0])
+    return _sketch.sketch_projection(g, proj, rows=rows)
+
+
+def hist(bin_ids, node_ids, gkv, *, n_nodes, n_bins):
+    """Sketched histograms for one sample chunk via the Pallas kernel.
+
+    Returns f32[m, n_nodes * n_bins, k1]; the rust coordinator accumulates
+    chunks and reshapes to [m, n_nodes, n_bins, k1] before calling `gain`.
+    """
+    rows = min(_hist.ROWS, bin_ids.shape[0])
+    return _hist.histogram(
+        bin_ids, node_ids, gkv, n_nodes=n_nodes, n_bins=n_bins, rows=rows
+    )
+
+
+def gain(hist_acc, *, lam):
+    """Split scores for all (feature, node, threshold) candidates."""
+    return _scan.split_gain(hist_acc, lam=lam)
+
+
+def leaf_sums(node_ids, ghv, *, n_nodes):
+    """Exact per-leaf [G | H | count] sums for leaf values (eq. 3).
+
+    Plain jnp one-hot matmul — XLA fuses the compare+dot; there is no
+    extra structure for a hand kernel to exploit at these shapes.
+    """
+    return _ref.leaf_sums(node_ids, ghv, n_nodes)
+
+
+def round_step_ce(logits, labels, proj, bin_ids, node_ids):
+    """Fused first-depth round step (ablation / fusion-check artifact).
+
+    One HLO module covering grad -> sketch -> root histogram, used to
+    verify XLA fuses across kernel boundaries (EXPERIMENTS.md L2 pass)
+    and by the runtime integration test. Root histogram means all rows
+    sit in node 0, so n_nodes=1.
+    """
+    g, _h = grad_ce(logits, labels)
+    gk = sketch_rp(g, proj)
+    valid = jnp.ones((gk.shape[0], 1), dtype=gk.dtype)
+    gkv = jnp.concatenate([gk, valid], axis=1)
+    n_bins = 64
+    return hist(bin_ids, node_ids, gkv, n_nodes=1, n_bins=n_bins)

@@ -1,0 +1,234 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against ref.py.
+
+Hypothesis drives the shape/seed sweeps (the system's core correctness
+signal); a handful of hand-picked edge cases cover degenerate structures
+the fuzzers are unlikely to hit (empty nodes, single bin, constant
+gradients, padding rows).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import histogram, losses, ref, sketch, split_scan
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# histogram kernel
+# ---------------------------------------------------------------------------
+
+
+def _check_hist(n, m, k, bins, nodes, rows, seed, pad_tail=0):
+    rng = _rng(seed)
+    bin_ids = rng.integers(0, bins, (n, m)).astype(np.int32)
+    node_ids = rng.integers(0, nodes, n).astype(np.int32)
+    gkv = rng.normal(size=(n, k + 1)).astype(np.float32)
+    gkv[:, -1] = 1.0
+    if pad_tail:
+        gkv[n - pad_tail :, :] = 0.0  # padding rows: no contribution
+    got = histogram.histogram(
+        jnp.array(bin_ids),
+        jnp.array(node_ids),
+        jnp.array(gkv),
+        n_nodes=nodes,
+        n_bins=bins,
+        rows=rows,
+    )
+    want = ref.histogram(
+        jnp.array(bin_ids), jnp.array(node_ids), jnp.array(gkv), nodes, bins
+    )
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=RTOL, atol=ATOL)
+    return np.array(got)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 5),
+    k=st.integers(1, 6),
+    bins=st.sampled_from([2, 8, 16, 64]),
+    nodes=st.sampled_from([1, 2, 4, 8]),
+    chunks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_histogram_matches_ref(m, k, bins, nodes, chunks, seed):
+    _check_hist(64 * chunks, m, k, bins, nodes, 64, seed)
+
+
+def test_histogram_multi_chunk_accumulates():
+    # 4 row-chunks must accumulate, not overwrite, the output block.
+    _check_hist(256, 3, 2, 8, 4, 64, seed=7)
+
+
+def test_histogram_padding_rows_are_noops():
+    full = _check_hist(128, 2, 2, 8, 2, 64, seed=3, pad_tail=0)
+    rng = _rng(3)
+    bin_ids = rng.integers(0, 8, (128, 2)).astype(np.int32)
+    node_ids = rng.integers(0, 2, 128).astype(np.int32)
+    gkv = rng.normal(size=(128, 3)).astype(np.float32)
+    gkv[:, -1] = 1.0
+    gkv[96:, :] = 0.0
+    got = histogram.histogram(
+        jnp.array(bin_ids), jnp.array(node_ids), jnp.array(gkv),
+        n_nodes=2, n_bins=8, rows=64,
+    )
+    want = ref.histogram(
+        jnp.array(bin_ids[:96]), jnp.array(node_ids[:96]),
+        jnp.array(gkv[:96]), 2, 8,
+    )
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=RTOL, atol=ATOL)
+    del full
+
+
+def test_histogram_counts_channel_sums_to_n():
+    got = _check_hist(192, 2, 3, 16, 4, 64, seed=11)
+    # channel -1 is the count channel; it must total n per feature.
+    counts = got[:, :, -1].sum(axis=1)
+    np.testing.assert_allclose(counts, 192.0, rtol=1e-6)
+
+
+def test_histogram_empty_node_is_zero():
+    rng = _rng(5)
+    bin_ids = rng.integers(0, 8, (64, 2)).astype(np.int32)
+    node_ids = np.zeros(64, dtype=np.int32)  # node 1..3 empty
+    gkv = rng.normal(size=(64, 3)).astype(np.float32)
+    got = np.array(
+        histogram.histogram(
+            jnp.array(bin_ids), jnp.array(node_ids), jnp.array(gkv),
+            n_nodes=4, n_bins=8, rows=64,
+        )
+    ).reshape(2, 4, 8, 3)
+    assert np.all(got[:, 1:, :, :] == 0.0)
+
+
+def test_histogram_rejects_ragged_rows():
+    with pytest.raises(ValueError):
+        histogram.histogram(
+            jnp.zeros((100, 2), jnp.int32),
+            jnp.zeros((100,), jnp.int32),
+            jnp.zeros((100, 3), jnp.float32),
+            n_nodes=2,
+            n_bins=4,
+            rows=64,
+        )
+
+
+# ---------------------------------------------------------------------------
+# split-gain kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 4),
+    nodes=st.integers(1, 6),
+    bins=st.sampled_from([2, 4, 16, 64]),
+    k=st.integers(1, 6),
+    lam=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_split_gain_matches_ref(m, nodes, bins, k, lam, seed):
+    rng = _rng(seed)
+    hist = rng.normal(size=(m, nodes, bins, k + 1)).astype(np.float32)
+    hist[..., -1] = rng.integers(0, 50, size=(m, nodes, bins)).astype(np.float32)
+    got = split_scan.split_gain(jnp.array(hist), lam=lam)
+    want = ref.split_gain(jnp.array(hist), lam)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=RTOL, atol=ATOL)
+
+
+def test_split_gain_uniform_gradient_prefers_nothing():
+    # With identical gradients in every bin, all split candidates of a
+    # balanced histogram score the same by symmetry at the midpoint.
+    bins, k = 8, 2
+    hist = np.zeros((1, 1, bins, k + 1), dtype=np.float32)
+    hist[..., :-1] = 1.0
+    hist[..., -1] = 10.0
+    gain = np.array(split_scan.split_gain(jnp.array(hist), lam=1.0))[0, 0]
+    # gain[b] for b and bins-2-b mirror each other
+    np.testing.assert_allclose(gain[:-1], gain[:-1][::-1], rtol=1e-5)
+
+
+def test_split_gain_separable_data_peaks_at_boundary():
+    # Two clusters: bins 0-3 carry +1 gradients, bins 4-7 carry -1.
+    bins, k = 8, 1
+    hist = np.zeros((1, 1, bins, k + 1), dtype=np.float32)
+    hist[0, 0, :4, 0] = +5.0
+    hist[0, 0, 4:, 0] = -5.0
+    hist[..., -1] = 10.0
+    gain = np.array(split_scan.split_gain(jnp.array(hist), lam=1.0))[0, 0]
+    assert np.argmax(gain[:-1]) == 3  # split between the clusters
+
+
+# ---------------------------------------------------------------------------
+# sketch projection kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(1, 40),
+    k=st.integers(1, 10),
+    chunks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sketch_projection_matches_ref(d, k, chunks, seed):
+    rng = _rng(seed)
+    n = 128 * chunks
+    g = rng.normal(size=(n, d)).astype(np.float32)
+    p = rng.normal(size=(d, k)).astype(np.float32)
+    got = sketch.sketch_projection(jnp.array(g), jnp.array(p), rows=128)
+    np.testing.assert_allclose(np.array(got), g @ p, rtol=1e-3, atol=1e-4)
+
+
+def test_sketch_projection_identity():
+    rng = _rng(0)
+    g = rng.normal(size=(128, 4)).astype(np.float32)
+    got = sketch.sketch_projection(jnp.array(g), jnp.eye(4, dtype=np.float32), rows=128)
+    np.testing.assert_allclose(np.array(got), g, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused softmax-CE kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(2, 32),
+    chunks=st.integers(1, 3),
+    scale=st.sampled_from([0.1, 1.0, 30.0]),  # 30: stresses max-subtraction
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_ce_matches_ref(d, chunks, scale, seed):
+    rng = _rng(seed)
+    n = 128 * chunks
+    logits = (scale * rng.normal(size=(n, d))).astype(np.float32)
+    labels = rng.integers(0, d, n).astype(np.int32)
+    g1, h1 = losses.softmax_ce_grad_hess(jnp.array(logits), jnp.array(labels), rows=128)
+    g2, h2 = ref.softmax_ce_grad_hess(jnp.array(logits), jnp.array(labels))
+    np.testing.assert_allclose(np.array(g1), np.array(g2), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.array(h1), np.array(h2), rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_ce_gradient_rows_sum_to_zero():
+    rng = _rng(1)
+    logits = rng.normal(size=(128, 7)).astype(np.float32)
+    labels = rng.integers(0, 7, 128).astype(np.int32)
+    g, h = losses.softmax_ce_grad_hess(jnp.array(logits), jnp.array(labels), rows=128)
+    np.testing.assert_allclose(np.array(g).sum(axis=1), 0.0, atol=1e-5)
+    assert np.all(np.array(h) > 0.0)
+    assert np.all(np.array(h) <= 0.25 + 1e-6)
+
+
+def test_softmax_ce_extreme_logits_stable():
+    logits = np.array([[1000.0, -1000.0], [-1000.0, 1000.0]] * 64, dtype=np.float32)
+    labels = np.zeros(128, dtype=np.int32)
+    g, h = losses.softmax_ce_grad_hess(jnp.array(logits), jnp.array(labels), rows=128)
+    assert np.all(np.isfinite(np.array(g)))
+    assert np.all(np.isfinite(np.array(h)))

@@ -1,0 +1,93 @@
+"""L2 model graph: shape contracts and composition semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_grad_ce_shapes_and_values():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(512, 9)).astype(np.float32)
+    labels = rng.integers(0, 9, 512).astype(np.int32)
+    g, h = model.grad_ce(jnp.array(logits), jnp.array(labels))
+    assert g.shape == (512, 9) and h.shape == (512, 9)
+    g2, h2 = ref.softmax_ce_grad_hess(jnp.array(logits), jnp.array(labels))
+    np.testing.assert_allclose(np.array(g), np.array(g2), rtol=1e-4, atol=1e-6)
+
+
+def test_grad_bce_probability_bounds():
+    rng = np.random.default_rng(1)
+    logits = rng.normal(size=(64, 5)).astype(np.float32)
+    targets = rng.integers(0, 2, (64, 5)).astype(np.float32)
+    g, h = model.grad_bce(jnp.array(logits), jnp.array(targets))
+    assert np.all(np.array(g) > -1.0) and np.all(np.array(g) < 1.0)
+    assert np.all(np.array(h) > 0.0) and np.all(np.array(h) <= 0.25)
+
+
+def test_grad_mse_is_residual():
+    preds = jnp.array([[1.0, 2.0], [3.0, 4.0]])
+    targets = jnp.array([[0.0, 0.0], [3.0, 5.0]])
+    g, h = model.grad_mse(preds, targets)
+    np.testing.assert_allclose(np.array(g), [[1.0, 2.0], [0.0, -1.0]])
+    np.testing.assert_allclose(np.array(h), 1.0)
+
+
+def test_hist_then_gain_pipeline():
+    """hist output reshapes into gain input; totals are consistent."""
+    rng = np.random.default_rng(2)
+    n, m, k, bins, nodes = 256, 4, 3, 16, 4
+    bin_ids = rng.integers(0, bins, (n, m)).astype(np.int32)
+    node_ids = rng.integers(0, nodes, n).astype(np.int32)
+    gkv = rng.normal(size=(n, k + 1)).astype(np.float32)
+    gkv[:, -1] = 1.0
+    h = model.hist(
+        jnp.array(bin_ids), jnp.array(node_ids), jnp.array(gkv),
+        n_nodes=nodes, n_bins=bins,
+    )
+    assert h.shape == (m, nodes * bins, k + 1)
+    h4 = jnp.reshape(h, (m, nodes, bins, k + 1))
+    gain = model.gain(h4, lam=1.0)
+    assert gain.shape == (m, nodes, bins)
+    want = ref.split_gain(h4, 1.0)
+    np.testing.assert_allclose(np.array(gain), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+def test_leaf_sums_matches_manual_segsum():
+    rng = np.random.default_rng(3)
+    n, d, nodes = 200, 4, 8
+    node_ids = rng.integers(0, nodes, n).astype(np.int32)
+    ghv = rng.normal(size=(n, 2 * d + 1)).astype(np.float32)
+    got = np.array(model.leaf_sums(jnp.array(node_ids), jnp.array(ghv), n_nodes=nodes))
+    want = np.zeros((nodes, 2 * d + 1), dtype=np.float64)
+    for i in range(n):
+        want[node_ids[i]] += ghv[i]
+    np.testing.assert_allclose(got, want.astype(np.float32), rtol=1e-4, atol=1e-4)
+
+
+def test_round_step_ce_fused_graph():
+    """The fused artifact reproduces grad->sketch->root-hist step by step."""
+    rng = np.random.default_rng(4)
+    n, d, k, m, bins = 256, 16, 5, 32, 64
+    logits = rng.normal(size=(n, d)).astype(np.float32)
+    labels = rng.integers(0, d, n).astype(np.int32)
+    proj = rng.normal(size=(d, k)).astype(np.float32)
+    bin_ids = rng.integers(0, bins, (n, m)).astype(np.int32)
+    node_ids = np.zeros(n, dtype=np.int32)
+    fused = model.round_step_ce(
+        jnp.array(logits), jnp.array(labels), jnp.array(proj),
+        jnp.array(bin_ids), jnp.array(node_ids),
+    )
+    g, _ = ref.softmax_ce_grad_hess(jnp.array(logits), jnp.array(labels))
+    gk = jnp.dot(g, jnp.array(proj))
+    gkv = jnp.concatenate([gk, jnp.ones((n, 1), jnp.float32)], axis=1)
+    want = ref.histogram(jnp.array(bin_ids), jnp.array(node_ids), gkv, 1, bins)
+    np.testing.assert_allclose(np.array(fused), np.array(want), rtol=1e-3, atol=1e-3)
+
+
+def test_sketch_rp_shape_contract():
+    g = jnp.zeros((512, 16), jnp.float32)
+    p = jnp.zeros((16, 5), jnp.float32)
+    assert model.sketch_rp(g, p).shape == (512, 5)

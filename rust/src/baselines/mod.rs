@@ -1,0 +1,10 @@
+//! Baseline algorithms the paper compares against, built on the same
+//! substrate so comparisons isolate the algorithmic difference:
+//! one-vs-all (XGBoost strategy), GBDT-MO full/sparse, and the CatBoost
+//! single-tree stand-in.
+
+pub mod gbdt_mo;
+pub mod one_vs_all;
+
+pub use gbdt_mo::{catboost_config, gbdt_mo_full_config, gbdt_mo_sparse_config};
+pub use one_vs_all::{fit_one_vs_all, OvaModel};

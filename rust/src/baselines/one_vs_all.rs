@@ -1,0 +1,235 @@
+//! One-versus-all baseline (the XGBoost/LightGBM multioutput strategy).
+//!
+//! Each boosting round fits `d` univariate trees, one per output, on that
+//! output's gradient column — so per-round cost is proportional to d in
+//! *tree count* rather than histogram width. This is the strategy Figure
+//! 1 shows scaling linearly in the number of classes; sharing all other
+//! code with the single-tree trainer makes the comparison isolate exactly
+//! the strategy choice.
+
+use crate::boosting::ensemble::TrainHistory;
+use crate::boosting::losses::LossKind;
+use crate::boosting::metrics::Metric;
+use crate::boosting::trainer::GBDTConfig;
+use crate::data::binning::BinnedDataset;
+use crate::data::dataset::Dataset;
+use crate::engine::{ComputeEngine, NativeEngine, ScoreMode};
+use crate::tree::builder::{build_tree, BuildParams, SENTINEL};
+use crate::tree::tree::Tree;
+use crate::util::rng::Rng;
+
+/// One-vs-all model: per round, one univariate tree per output.
+#[derive(Clone, Debug)]
+pub struct OvaModel {
+    pub loss: LossKind,
+    pub n_outputs: usize,
+    pub base_score: Vec<f32>,
+    /// (output index, tree with n_outputs = 1)
+    pub trees: Vec<(u32, Tree)>,
+    pub history: TrainHistory,
+}
+
+impl OvaModel {
+    pub fn predict_raw(&self, ds: &Dataset) -> Vec<f32> {
+        let d = self.n_outputs;
+        let mut out = vec![0.0f32; ds.n_rows * d];
+        let mut row = vec![0.0f32; ds.n_features];
+        for i in 0..ds.n_rows {
+            for (f, r) in row.iter_mut().enumerate() {
+                *r = ds.value(i, f);
+            }
+            let o = &mut out[i * d..(i + 1) * d];
+            o.copy_from_slice(&self.base_score);
+            for (j, t) in &self.trees {
+                let leaf = t.leaf_for_raw(&row);
+                o[*j as usize] += t.leaf_values[leaf];
+            }
+        }
+        out
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+/// Train a one-vs-all ensemble. `cfg.sketch` is ignored (sketching is
+/// meaningless at d = 1 — the paper's point is that one-vs-all pays the
+/// d-factor in trees instead).
+pub fn fit_one_vs_all(cfg: &GBDTConfig, train: &Dataset, valid: Option<&Dataset>) -> OvaModel {
+    let mut engine = NativeEngine::new();
+    fit_one_vs_all_with_engine(cfg, train, valid, &mut engine)
+}
+
+pub fn fit_one_vs_all_with_engine(
+    cfg: &GBDTConfig,
+    train: &Dataset,
+    valid: Option<&Dataset>,
+    engine: &mut dyn ComputeEngine,
+) -> OvaModel {
+    let n = train.n_rows;
+    let d = cfg.n_outputs;
+    let binned = BinnedDataset::from_dataset(train, cfg.max_bins);
+    let metric = match cfg.loss {
+        LossKind::MulticlassCE => Metric::CrossEntropy,
+        LossKind::BCE => Metric::BceLogLoss,
+        LossKind::MSE => Metric::Rmse,
+    };
+    let mut rng = Rng::new(cfg.seed);
+
+    let base_score = cfg.loss.base_score(&train.targets);
+    let mut preds = vec![0.0f32; n * d];
+    for row in preds.chunks_mut(d) {
+        row.copy_from_slice(&base_score);
+    }
+    let mut valid_state: Option<(Vec<f32>, Vec<Vec<f32>>)> = valid.map(|v| {
+        let mut vp = vec![0.0f32; v.n_rows * d];
+        for row in vp.chunks_mut(d) {
+            row.copy_from_slice(&base_score);
+        }
+        ((vp), (0..v.n_rows).map(|i| v.row(i)).collect())
+    });
+
+    let mut g = vec![0.0f32; n * d];
+    let mut h = vec![0.0f32; n * d];
+    let mut gcol = vec![0.0f32; n];
+    let mut hcol = vec![0.0f32; n];
+    let all_rows: Vec<u32> = (0..n as u32).collect();
+
+    let mut trees: Vec<(u32, Tree)> = Vec::new();
+    let mut history = TrainHistory::default();
+    let mut best_loss = f64::INFINITY;
+    let mut best_round = 0usize;
+
+    for round in 0..cfg.n_rounds {
+        engine.grad_hess(cfg.loss, &preds, &train.targets, &mut g, &mut h);
+        let mut round_rng = rng.fork(round as u64);
+
+        let rows: Vec<u32> = if cfg.subsample < 1.0 {
+            let keep = ((n as f64) * cfg.subsample as f64).round().max(1.0) as usize;
+            let mut idx = round_rng.sample_indices(n, keep);
+            idx.sort_unstable();
+            idx
+        } else {
+            all_rows.clone()
+        };
+
+        for j in 0..d {
+            for r in 0..n {
+                gcol[r] = g[r * d + j];
+                hcol[r] = h[r * d + j];
+            }
+            let params = BuildParams {
+                binned: &binned,
+                rows: &rows,
+                g: &gcol,
+                h: &hcol,
+                d: 1,
+                score_g: &gcol,
+                kc: 1,
+                score_h: None,
+                mode: ScoreMode::CountL2,
+                max_depth: cfg.max_depth,
+                lambda: cfg.lambda_l2,
+                min_data_in_leaf: cfg.min_data_in_leaf,
+                min_gain: cfg.min_gain,
+                feature_mask: None,
+                sparse_topk: None,
+                row_weights: None,
+            };
+            let (mut tree, leaf_of_row) = build_tree(&params, engine);
+            tree.scale_leaves(cfg.learning_rate);
+            for r in 0..n {
+                let leaf = if leaf_of_row[r] != SENTINEL {
+                    leaf_of_row[r] as usize
+                } else {
+                    tree.leaf_for_binned(&binned, r)
+                };
+                preds[r * d + j] += tree.leaf_values[leaf];
+            }
+            if let (Some(v), Some((vp, vrows))) = (valid, valid_state.as_mut()) {
+                for i in 0..v.n_rows {
+                    let leaf = tree.leaf_for_raw(&vrows[i]);
+                    vp[i * d + j] += tree.leaf_values[leaf];
+                }
+            }
+            trees.push((j as u32, tree));
+        }
+
+        history.train_loss.push(metric.eval(&preds, &train.targets));
+        let mut stop = false;
+        if let (Some(v), Some((vp, _))) = (valid, valid_state.as_ref()) {
+            let vl = metric.eval(vp, &v.targets);
+            history.valid_loss.push(vl);
+            if vl < best_loss {
+                best_loss = vl;
+                best_round = round;
+            } else if cfg.early_stopping_rounds > 0
+                && round - best_round >= cfg.early_stopping_rounds
+            {
+                stop = true;
+            }
+        } else {
+            best_round = round;
+        }
+        if stop {
+            break;
+        }
+    }
+    if valid.is_some() && cfg.early_stopping_rounds > 0 {
+        trees.truncate((best_round + 1) * d);
+    }
+    history.best_round = best_round;
+
+    OvaModel { loss: cfg.loss, n_outputs: d, base_score, trees, history }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_multiclass, FeatureSpec};
+
+    #[test]
+    fn ova_learns_multiclass() {
+        let ds = make_multiclass(500, FeatureSpec::guyon(10), 4, 2.0, 1);
+        let mut cfg = GBDTConfig::multiclass(4);
+        cfg.n_rounds = 20;
+        cfg.learning_rate = 0.3;
+        cfg.max_depth = 3;
+        cfg.max_bins = 16;
+        let model = fit_one_vs_all(&cfg, &ds, None);
+        assert_eq!(model.n_trees(), 20 * 4); // d trees per round
+        let acc = Metric::Accuracy.eval(&model.predict_raw(&ds), &ds.targets);
+        assert!(acc > 0.8, "acc {acc}");
+        let hist = &model.history.train_loss;
+        assert!(hist.first().unwrap() > hist.last().unwrap());
+    }
+
+    #[test]
+    fn ova_tree_count_scales_with_d() {
+        for d in [2usize, 5] {
+            let ds = make_multiclass(200, FeatureSpec::guyon(6), d, 2.0, 2);
+            let mut cfg = GBDTConfig::multiclass(d);
+            cfg.n_rounds = 3;
+            cfg.max_bins = 8;
+            let model = fit_one_vs_all(&cfg, &ds, None);
+            assert_eq!(model.n_trees(), 3 * d);
+            // every tree is univariate
+            assert!(model.trees.iter().all(|(_, t)| t.n_outputs == 1));
+        }
+    }
+
+    #[test]
+    fn ova_early_stopping() {
+        let ds = make_multiclass(400, FeatureSpec::guyon(8), 3, 1.5, 3);
+        let (train, valid) = crate::data::split::train_test_split(&ds, 0.3, 0);
+        let mut cfg = GBDTConfig::multiclass(3);
+        cfg.n_rounds = 100;
+        cfg.learning_rate = 0.5;
+        cfg.max_bins = 16;
+        cfg.early_stopping_rounds = 5;
+        let model = fit_one_vs_all(&cfg, &train, Some(&valid));
+        assert!(model.n_trees() < 100 * 3);
+        assert_eq!(model.n_trees() % 3, 0, "whole rounds only");
+    }
+}

@@ -1,0 +1,293 @@
+//! The trained model: base score + tree ensemble, prediction, and JSON
+//! (de)serialization.
+
+use crate::boosting::losses::LossKind;
+use crate::boosting::metrics::softmax_rows;
+use crate::data::dataset::Dataset;
+use crate::tree::tree::{Tree, TreeNode};
+use crate::util::json::Json;
+
+/// Per-round evaluation history (Figure 3's learning curves come from
+/// here).
+#[derive(Clone, Debug, Default)]
+pub struct TrainHistory {
+    pub train_loss: Vec<f64>,
+    pub valid_loss: Vec<f64>,
+    /// round index of the best validation loss (early stopping point)
+    pub best_round: usize,
+}
+
+/// A fitted SketchBoost model.
+#[derive(Clone, Debug)]
+pub struct Ensemble {
+    pub loss: LossKind,
+    pub n_outputs: usize,
+    pub base_score: Vec<f32>,
+    /// leaf values already include the learning rate
+    pub trees: Vec<Tree>,
+    pub history: TrainHistory,
+}
+
+impl Ensemble {
+    /// Raw scores (logits for classification), row-major [n, d].
+    pub fn predict_raw(&self, ds: &Dataset) -> Vec<f32> {
+        let d = self.n_outputs;
+        let mut out = vec![0.0f32; ds.n_rows * d];
+        let mut row = vec![0.0f32; ds.n_features];
+        for i in 0..ds.n_rows {
+            for (f, r) in row.iter_mut().enumerate() {
+                *r = ds.value(i, f);
+            }
+            let o = &mut out[i * d..(i + 1) * d];
+            o.copy_from_slice(&self.base_score);
+            for t in &self.trees {
+                t.predict_into(&row, o);
+            }
+        }
+        out
+    }
+
+    /// Probabilities for classification losses; identity for MSE.
+    pub fn predict(&self, ds: &Dataset) -> Vec<f32> {
+        let mut raw = self.predict_raw(ds);
+        match self.loss {
+            LossKind::MulticlassCE => softmax_rows(&mut raw, self.n_outputs),
+            LossKind::BCE => {
+                for z in raw.iter_mut() {
+                    *z = 1.0 / (1.0 + (-*z).exp());
+                }
+            }
+            LossKind::MSE => {}
+        }
+        raw
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Total number of split nodes across the ensemble.
+    pub fn n_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.nodes.len()).sum()
+    }
+
+    // ------------------------------------------------------------------
+    // serialization
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("loss", Json::Str(self.loss.name().to_string()));
+        o.set("n_outputs", Json::Num(self.n_outputs as f64));
+        o.set("base_score", Json::from_f32_slice(&self.base_score));
+        let trees: Vec<Json> = self.trees.iter().map(tree_to_json).collect();
+        o.set("trees", Json::Arr(trees));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Ensemble, String> {
+        let loss = LossKind::parse(
+            j.get("loss").and_then(|v| v.as_str()).ok_or("missing loss")?,
+        )
+        .ok_or("bad loss")?;
+        let n_outputs = j
+            .get("n_outputs")
+            .and_then(|v| v.as_usize())
+            .ok_or("missing n_outputs")?;
+        let base_score = j
+            .get("base_score")
+            .and_then(|v| v.as_f32_vec())
+            .ok_or("missing base_score")?;
+        let trees = j
+            .get("trees")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing trees")?
+            .iter()
+            .map(tree_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Ensemble {
+            loss,
+            n_outputs,
+            base_score,
+            trees,
+            history: TrainHistory::default(),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Ensemble, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Ensemble::from_json(&j)
+    }
+}
+
+fn tree_to_json(t: &Tree) -> Json {
+    let mut o = Json::obj();
+    o.set("n_outputs", Json::Num(t.n_outputs as f64));
+    o.set("n_leaves", Json::Num(t.n_leaves as f64));
+    o.set("leaf_values", Json::from_f32_slice(&t.leaf_values));
+    let nodes: Vec<Json> = t
+        .nodes
+        .iter()
+        .map(|n| {
+            Json::Arr(vec![
+                Json::Num(n.feature as f64),
+                Json::Num(n.bin as f64),
+                Json::Num(n.threshold as f64),
+                Json::Num(n.left as f64),
+                Json::Num(n.right as f64),
+                Json::Num(n.gain as f64),
+            ])
+        })
+        .collect();
+    o.set("nodes", Json::Arr(nodes));
+    o
+}
+
+fn tree_from_json(j: &Json) -> Result<Tree, String> {
+    let n_outputs = j.get("n_outputs").and_then(|v| v.as_usize()).ok_or("tree n_outputs")?;
+    let n_leaves = j.get("n_leaves").and_then(|v| v.as_usize()).ok_or("tree n_leaves")?;
+    let leaf_values = j
+        .get("leaf_values")
+        .and_then(|v| v.as_f32_vec())
+        .ok_or("tree leaf_values")?;
+    let nodes = j
+        .get("nodes")
+        .and_then(|v| v.as_arr())
+        .ok_or("tree nodes")?
+        .iter()
+        .map(|n| {
+            let a = n.as_arr().ok_or("node must be array")?;
+            if a.len() != 6 {
+                return Err("node arity".to_string());
+            }
+            Ok(TreeNode {
+                feature: a[0].as_f64().ok_or("feature")? as u32,
+                bin: a[1].as_f64().ok_or("bin")? as u8,
+                threshold: a[2].as_f64().ok_or("threshold")? as f32,
+                left: a[3].as_f64().ok_or("left")? as i32,
+                right: a[4].as_f64().ok_or("right")? as i32,
+                gain: a[5].as_f64().ok_or("gain")? as f32,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let t = Tree { n_outputs, nodes, leaf_values, n_leaves };
+    t.validate()?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Targets;
+    use crate::tree::tree::encode_leaf;
+
+    fn toy_model() -> Ensemble {
+        let tree = Tree {
+            n_outputs: 2,
+            nodes: vec![TreeNode {
+                feature: 0,
+                bin: 0,
+                threshold: 0.0,
+                left: encode_leaf(0),
+                right: encode_leaf(1),
+                gain: 1.0,
+            }],
+            leaf_values: vec![0.5, -0.5, -0.5, 0.5],
+            n_leaves: 2,
+        };
+        Ensemble {
+            loss: LossKind::MulticlassCE,
+            n_outputs: 2,
+            base_score: vec![0.1, -0.1],
+            trees: vec![tree],
+            history: TrainHistory::default(),
+        }
+    }
+
+    fn toy_data() -> Dataset {
+        Dataset::new(
+            2,
+            1,
+            vec![-1.0, 1.0],
+            Targets::Multiclass { labels: vec![0, 1], n_classes: 2 },
+        )
+    }
+
+    #[test]
+    fn predict_raw_adds_base_and_trees() {
+        let m = toy_model();
+        let raw = m.predict_raw(&toy_data());
+        assert!((raw[0] - 0.6).abs() < 1e-6);
+        assert!((raw[1] + 0.6).abs() < 1e-6);
+        assert!((raw[2] + 0.4).abs() < 1e-6);
+        assert!((raw[3] - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn predict_softmax_rows_sum_to_one() {
+        let m = toy_model();
+        let p = m.predict(&toy_data());
+        assert!((p[0] + p[1] - 1.0).abs() < 1e-6);
+        assert!(p[0] > p[1]); // row 0 leans class 0
+    }
+
+    #[test]
+    fn bce_predictions_are_probs() {
+        let mut m = toy_model();
+        m.loss = LossKind::BCE;
+        let p = m.predict(&toy_data());
+        assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = toy_model();
+        let j = m.to_json();
+        let back = Ensemble::from_json(&j).unwrap();
+        assert_eq!(back.n_outputs, 2);
+        assert_eq!(back.trees.len(), 1);
+        assert_eq!(back.trees[0], m.trees[0]);
+        assert_eq!(back.base_score, m.base_score);
+        // predictions identical
+        let ds = toy_data();
+        assert_eq!(m.predict_raw(&ds), back.predict_raw(&ds));
+    }
+
+    #[test]
+    fn save_load_file() {
+        let m = toy_model();
+        let dir = std::env::temp_dir().join("sb_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        let back = Ensemble::load(&path).unwrap();
+        assert_eq!(back.trees.len(), 1);
+    }
+
+    #[test]
+    fn from_json_rejects_corrupt_tree() {
+        let m = toy_model();
+        let mut j = m.to_json();
+        // break a node arity
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(trees)) = o.get_mut("trees") {
+                if let Json::Obj(t) = &mut trees[0] {
+                    t.insert("nodes".into(), Json::Arr(vec![Json::Arr(vec![Json::Num(0.0)])]));
+                }
+            }
+        }
+        assert!(Ensemble::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn n_nodes_counts() {
+        let m = toy_model();
+        assert_eq!(m.n_trees(), 1);
+        assert_eq!(m.n_nodes(), 1);
+    }
+}

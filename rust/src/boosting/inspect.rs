@@ -1,0 +1,216 @@
+//! Model inspection: feature importances, staged prediction, leaf
+//! indices, and human-readable tree dumps — the introspection surface a
+//! production GBDT framework ships (XGBoost/CatBoost parity features).
+
+use crate::boosting::ensemble::Ensemble;
+use crate::boosting::metrics::Metric;
+use crate::data::dataset::Dataset;
+use crate::tree::tree::{is_leaf, leaf_id, Tree};
+
+/// How to weight splits when accumulating feature importance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ImportanceKind {
+    /// number of splits on the feature
+    SplitCount,
+    /// total impurity gain contributed by the feature's splits
+    TotalGain,
+}
+
+impl Ensemble {
+    /// Per-feature importance over the whole ensemble.
+    pub fn feature_importance(&self, n_features: usize, kind: ImportanceKind) -> Vec<f64> {
+        let mut imp = vec![0.0f64; n_features];
+        for tree in &self.trees {
+            for node in &tree.nodes {
+                let f = node.feature as usize;
+                debug_assert!(f < n_features);
+                match kind {
+                    ImportanceKind::SplitCount => imp[f] += 1.0,
+                    ImportanceKind::TotalGain => imp[f] += node.gain.max(0.0) as f64,
+                }
+            }
+        }
+        imp
+    }
+
+    /// Features ranked by importance (descending), with scores.
+    pub fn top_features(
+        &self,
+        n_features: usize,
+        kind: ImportanceKind,
+        top: usize,
+    ) -> Vec<(usize, f64)> {
+        let imp = self.feature_importance(n_features, kind);
+        let mut ranked: Vec<(usize, f64)> = imp.into_iter().enumerate().collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        ranked.truncate(top);
+        ranked
+    }
+
+    /// Metric value after each prefix of trees (cheap learning-curve
+    /// recovery for a saved model; Figure-3-style analysis post hoc).
+    pub fn staged_eval(&self, ds: &Dataset, metric: Metric, every: usize) -> Vec<(usize, f64)> {
+        let d = self.n_outputs;
+        let every = every.max(1);
+        let mut preds = vec![0.0f32; ds.n_rows * d];
+        for row in preds.chunks_mut(d) {
+            row.copy_from_slice(&self.base_score);
+        }
+        let rows: Vec<Vec<f32>> = (0..ds.n_rows).map(|i| ds.row(i)).collect();
+        let mut out = Vec::new();
+        for (t, tree) in self.trees.iter().enumerate() {
+            for (i, row) in rows.iter().enumerate() {
+                tree.predict_into(row, &mut preds[i * d..(i + 1) * d]);
+            }
+            if (t + 1) % every == 0 || t + 1 == self.trees.len() {
+                out.push((t + 1, metric.eval(&preds, &ds.targets)));
+            }
+        }
+        out
+    }
+
+    /// Leaf index of every row in every tree — the "apply" output used
+    /// for embedding/feature-engineering pipelines.
+    pub fn predict_leaf_indices(&self, ds: &Dataset) -> Vec<u32> {
+        let mut out = Vec::with_capacity(ds.n_rows * self.trees.len());
+        let mut row = vec![0.0f32; ds.n_features];
+        for i in 0..ds.n_rows {
+            for (f, r) in row.iter_mut().enumerate() {
+                *r = ds.value(i, f);
+            }
+            for tree in &self.trees {
+                out.push(tree.leaf_for_raw(&row) as u32);
+            }
+        }
+        out
+    }
+
+    /// Human-readable dump of one tree.
+    pub fn dump_tree(&self, index: usize) -> String {
+        dump_tree(&self.trees[index])
+    }
+}
+
+/// Render a tree as an indented text diagram.
+pub fn dump_tree(tree: &Tree) -> String {
+    let mut s = String::new();
+    if tree.nodes.is_empty() {
+        s.push_str(&format!("leaf0: {:?}\n", head(&tree.leaf_values, tree.n_outputs)));
+        return s;
+    }
+    fn walk(tree: &Tree, child: i32, depth: usize, s: &mut String) {
+        let pad = "  ".repeat(depth);
+        if is_leaf(child) {
+            let l = leaf_id(child);
+            let v = &tree.leaf_values[l * tree.n_outputs..(l + 1) * tree.n_outputs];
+            s.push_str(&format!("{pad}leaf{l}: {:?}\n", head(v, tree.n_outputs)));
+        } else {
+            let n = &tree.nodes[child as usize];
+            s.push_str(&format!(
+                "{pad}[f{} <= {:.4}] gain={:.3}\n",
+                n.feature, n.threshold, n.gain
+            ));
+            walk(tree, n.left, depth + 1, s);
+            walk(tree, n.right, depth + 1, s);
+        }
+    }
+    walk(tree, 0, 0, &mut s);
+    s
+}
+
+fn head(v: &[f32], d: usize) -> Vec<f32> {
+    v.iter().copied().take(d.min(4)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boosting::trainer::{GBDTConfig, GBDT};
+    use crate::data::synthetic::{make_multiclass, FeatureSpec};
+    use crate::prelude::SketchConfig;
+
+    fn model_and_data() -> (Ensemble, Dataset) {
+        let ds = make_multiclass(
+            600,
+            FeatureSpec { n_informative: 4, n_linear: 2, n_redundant: 4 },
+            3,
+            2.0,
+            1,
+        );
+        let mut cfg = GBDTConfig::multiclass(3);
+        cfg.n_rounds = 15;
+        cfg.max_depth = 3;
+        cfg.max_bins = 16;
+        cfg.learning_rate = 0.3;
+        (GBDT::fit(&cfg, &ds, None), ds)
+    }
+
+    #[test]
+    fn importance_favors_informative_features() {
+        let (model, ds) = model_and_data();
+        let imp = model.feature_importance(ds.n_features, ImportanceKind::TotalGain);
+        assert_eq!(imp.len(), 10);
+        // informative (0..4) + linear combos (4..6) carry signal; pure
+        // noise features (6..10) should collectively matter less
+        let signal: f64 = imp[..6].iter().sum();
+        let noise: f64 = imp[6..].iter().sum();
+        assert!(signal > noise, "signal {signal} vs noise {noise}");
+    }
+
+    #[test]
+    fn split_count_and_gain_rankings_defined() {
+        let (model, ds) = model_and_data();
+        let top = model.top_features(ds.n_features, ImportanceKind::SplitCount, 3);
+        assert_eq!(top.len(), 3);
+        assert!(top[0].1 >= top[1].1 && top[1].1 >= top[2].1);
+        let total_splits: f64 = model
+            .feature_importance(ds.n_features, ImportanceKind::SplitCount)
+            .iter()
+            .sum();
+        assert_eq!(total_splits as usize, model.n_nodes());
+    }
+
+    #[test]
+    fn staged_eval_monotone_in_trees() {
+        let (model, ds) = model_and_data();
+        let stages = model.staged_eval(&ds, Metric::CrossEntropy, 5);
+        assert_eq!(stages.last().unwrap().0, model.n_trees());
+        // train CE at the last stage beats the first stage
+        assert!(stages.last().unwrap().1 < stages.first().unwrap().1);
+        // final stage equals full-model eval
+        let full = Metric::CrossEntropy.eval(&model.predict_raw(&ds), &ds.targets);
+        assert!((stages.last().unwrap().1 - full).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leaf_indices_shape_and_range() {
+        let (model, ds) = model_and_data();
+        let leaves = model.predict_leaf_indices(&ds);
+        assert_eq!(leaves.len(), ds.n_rows * model.n_trees());
+        for (i, &l) in leaves.iter().enumerate() {
+            let tree = &model.trees[i % model.n_trees()];
+            assert!((l as usize) < tree.n_leaves);
+        }
+    }
+
+    #[test]
+    fn dump_tree_mentions_features_and_leaves() {
+        let (model, _) = model_and_data();
+        let dump = model.dump_tree(0);
+        assert!(dump.contains("[f"));
+        assert!(dump.contains("leaf"));
+        assert!(dump.lines().count() >= 3);
+    }
+
+    #[test]
+    fn sketched_model_importances_work_too() {
+        let ds = make_multiclass(400, FeatureSpec::guyon(10), 4, 2.0, 2);
+        let mut cfg = GBDTConfig::multiclass(4);
+        cfg.n_rounds = 8;
+        cfg.max_bins = 16;
+        cfg.sketch = SketchConfig::RandomProjection { k: 2 };
+        let model = GBDT::fit(&cfg, &ds, None);
+        let imp = model.feature_importance(10, ImportanceKind::TotalGain);
+        assert!(imp.iter().sum::<f64>() > 0.0);
+    }
+}

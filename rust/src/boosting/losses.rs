@@ -1,0 +1,131 @@
+//! Loss functions (paper section 2): multioutput losses with separable
+//! (diagonal) hessians, as assumed by eq. (3).
+
+use crate::data::dataset::Targets;
+
+/// Supported multioutput losses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    /// softmax cross-entropy over d mutually exclusive classes
+    MulticlassCE,
+    /// independent sigmoid binary cross-entropy per label
+    BCE,
+    /// 0.5 * squared error per target
+    MSE,
+}
+
+impl LossKind {
+    pub fn parse(s: &str) -> Option<LossKind> {
+        match s {
+            "ce" | "multiclass" | "crossentropy" => Some(LossKind::MulticlassCE),
+            "bce" | "multilabel" | "logloss" => Some(LossKind::BCE),
+            "mse" | "regression" | "multitask" | "l2" => Some(LossKind::MSE),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossKind::MulticlassCE => "ce",
+            LossKind::BCE => "bce",
+            LossKind::MSE => "mse",
+        }
+    }
+
+    /// Default loss for a targets kind.
+    pub fn for_targets(t: &Targets) -> LossKind {
+        match t {
+            Targets::Multiclass { .. } => LossKind::MulticlassCE,
+            Targets::Multilabel { .. } => LossKind::BCE,
+            Targets::Regression { .. } => LossKind::MSE,
+        }
+    }
+
+    /// Initial prediction F_0 (one value per output).
+    ///
+    /// MSE starts at the target mean; CE at zero logits (uniform); BCE at
+    /// the label log-odds (the standard prior, which matters for sparse
+    /// multilabel data like Delicious where base rates are ~1%).
+    pub fn base_score(&self, targets: &Targets) -> Vec<f32> {
+        match (self, targets) {
+            (LossKind::MulticlassCE, Targets::Multiclass { n_classes, .. }) => {
+                vec![0.0; *n_classes]
+            }
+            (LossKind::BCE, Targets::Multilabel { labels, n_labels }) => {
+                let d = *n_labels;
+                let n = labels.len() / d;
+                let mut base = vec![0.0f32; d];
+                for i in 0..n {
+                    for j in 0..d {
+                        base[j] += labels[i * d + j];
+                    }
+                }
+                for b in base.iter_mut() {
+                    let p = (*b as f64 / n as f64).clamp(1e-4, 1.0 - 1e-4);
+                    *b = (p / (1.0 - p)).ln() as f32;
+                }
+                base
+            }
+            (LossKind::MSE, Targets::Regression { values, n_targets }) => {
+                let d = *n_targets;
+                let n = values.len() / d;
+                let mut base = vec![0.0f32; d];
+                for i in 0..n {
+                    for j in 0..d {
+                        base[j] += values[i * d + j];
+                    }
+                }
+                for b in base.iter_mut() {
+                    *b /= n as f32;
+                }
+                base
+            }
+            (l, _) => panic!("base_score: loss {l:?} incompatible with targets"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(LossKind::parse("ce"), Some(LossKind::MulticlassCE));
+        assert_eq!(LossKind::parse("multilabel"), Some(LossKind::BCE));
+        assert_eq!(LossKind::parse("l2"), Some(LossKind::MSE));
+        assert_eq!(LossKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn base_score_mse_is_mean() {
+        let t = Targets::Regression { values: vec![1.0, 10.0, 3.0, 30.0], n_targets: 2 };
+        let b = LossKind::MSE.base_score(&t);
+        assert!((b[0] - 2.0).abs() < 1e-6);
+        assert!((b[1] - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn base_score_bce_is_logodds() {
+        // label 0 on 3/4 rows -> logit ln(3)
+        let t = Targets::Multilabel {
+            labels: vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0],
+            n_labels: 2,
+        };
+        let b = LossKind::BCE.base_score(&t);
+        assert!((b[0] - (3.0f32 / 1.0).ln()).abs() < 1e-4);
+        assert!(b[1] < -5.0); // clamped log-odds of 0 rate
+    }
+
+    #[test]
+    fn base_score_ce_is_zero() {
+        let t = Targets::Multiclass { labels: vec![0, 1, 2], n_classes: 3 };
+        assert_eq!(LossKind::MulticlassCE.base_score(&t), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn default_loss_for_targets() {
+        let t = Targets::Multiclass { labels: vec![0], n_classes: 2 };
+        assert_eq!(LossKind::for_targets(&t), LossKind::MulticlassCE);
+    }
+}

@@ -1,0 +1,263 @@
+//! Evaluation metrics: cross-entropy / RMSE (the paper's primary
+//! measures) plus accuracy / R² (Appendix B.5's secondary measures).
+
+use crate::data::dataset::Targets;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// multiclass logloss (softmax over raw scores)
+    CrossEntropy,
+    /// mean per-label sigmoid logloss (the paper's multilabel CE)
+    BceLogLoss,
+    /// root mean squared error over all targets
+    Rmse,
+    /// argmax accuracy (multiclass)
+    Accuracy,
+    /// macro-averaged subset accuracy per label at threshold 0 (logits)
+    LabelAccuracy,
+    /// R² averaged over targets
+    R2,
+}
+
+impl Metric {
+    /// Paper's primary metric for a targets kind.
+    pub fn primary(t: &Targets) -> Metric {
+        match t {
+            Targets::Multiclass { .. } => Metric::CrossEntropy,
+            Targets::Multilabel { .. } => Metric::BceLogLoss,
+            Targets::Regression { .. } => Metric::Rmse,
+        }
+    }
+
+    /// Paper's secondary metric (Appendix B.5).
+    pub fn secondary(t: &Targets) -> Metric {
+        match t {
+            Targets::Multiclass { .. } => Metric::Accuracy,
+            Targets::Multilabel { .. } => Metric::LabelAccuracy,
+            Targets::Regression { .. } => Metric::R2,
+        }
+    }
+
+    /// Lower is better?
+    pub fn minimize(&self) -> bool {
+        matches!(self, Metric::CrossEntropy | Metric::BceLogLoss | Metric::Rmse)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::CrossEntropy => "cross-entropy",
+            Metric::BceLogLoss => "bce-logloss",
+            Metric::Rmse => "rmse",
+            Metric::Accuracy => "accuracy",
+            Metric::LabelAccuracy => "label-accuracy",
+            Metric::R2 => "r2",
+        }
+    }
+
+    /// Evaluate on raw model scores (logits for classification).
+    /// `preds` is row-major [n, d].
+    pub fn eval(&self, preds: &[f32], targets: &Targets) -> f64 {
+        match self {
+            Metric::CrossEntropy => ce_logloss(preds, targets),
+            Metric::BceLogLoss => bce_logloss(preds, targets),
+            Metric::Rmse => rmse(preds, targets),
+            Metric::Accuracy => accuracy(preds, targets),
+            Metric::LabelAccuracy => label_accuracy(preds, targets),
+            Metric::R2 => r2(preds, targets),
+        }
+    }
+}
+
+fn ce_logloss(preds: &[f32], targets: &Targets) -> f64 {
+    let (labels, d) = match targets {
+        Targets::Multiclass { labels, n_classes } => (labels, *n_classes),
+        _ => panic!("cross-entropy needs multiclass targets"),
+    };
+    let n = labels.len();
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let row = &preds[i * d..(i + 1) * d];
+        let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b)) as f64;
+        let lse: f64 = row.iter().map(|&z| ((z as f64) - mx).exp()).sum::<f64>().ln() + mx;
+        total += lse - preds[i * d + labels[i] as usize] as f64;
+    }
+    total / n as f64
+}
+
+fn bce_logloss(preds: &[f32], targets: &Targets) -> f64 {
+    let (labels, d) = match targets {
+        Targets::Multilabel { labels, n_labels } => (labels, *n_labels),
+        _ => panic!("bce needs multilabel targets"),
+    };
+    let mut total = 0.0f64;
+    for (i, &y) in labels.iter().enumerate() {
+        let z = preds[i] as f64;
+        // log(1 + e^-|z|) + max(z, 0) - y*z, numerically stable
+        let loss = z.max(0.0) - y as f64 * z + (-(z.abs())).exp().ln_1p();
+        total += loss;
+    }
+    let _ = d;
+    total / labels.len() as f64
+}
+
+fn rmse(preds: &[f32], targets: &Targets) -> f64 {
+    let values = match targets {
+        Targets::Regression { values, .. } => values,
+        _ => panic!("rmse needs regression targets"),
+    };
+    let mut sse = 0.0f64;
+    for i in 0..values.len() {
+        let e = preds[i] as f64 - values[i] as f64;
+        sse += e * e;
+    }
+    (sse / values.len() as f64).sqrt()
+}
+
+fn accuracy(preds: &[f32], targets: &Targets) -> f64 {
+    let (labels, d) = match targets {
+        Targets::Multiclass { labels, n_classes } => (labels, *n_classes),
+        _ => panic!("accuracy needs multiclass targets"),
+    };
+    let n = labels.len();
+    let mut hits = 0usize;
+    for i in 0..n {
+        let row = &preds[i * d..(i + 1) * d];
+        let mut best = 0usize;
+        for j in 1..d {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        hits += usize::from(best == labels[i] as usize);
+    }
+    hits as f64 / n as f64
+}
+
+fn label_accuracy(preds: &[f32], targets: &Targets) -> f64 {
+    let labels = match targets {
+        Targets::Multilabel { labels, .. } => labels,
+        _ => panic!("label accuracy needs multilabel targets"),
+    };
+    let mut hits = 0usize;
+    for (i, &y) in labels.iter().enumerate() {
+        let pred = preds[i] > 0.0; // sigmoid(z) > 0.5 <=> z > 0
+        hits += usize::from(pred == (y > 0.5));
+    }
+    hits as f64 / labels.len() as f64
+}
+
+fn r2(preds: &[f32], targets: &Targets) -> f64 {
+    let (values, d) = match targets {
+        Targets::Regression { values, n_targets } => (values, *n_targets),
+        _ => panic!("r2 needs regression targets"),
+    };
+    let n = values.len() / d;
+    let mut total_r2 = 0.0f64;
+    for j in 0..d {
+        let mean: f64 = (0..n).map(|i| values[i * d + j] as f64).sum::<f64>() / n as f64;
+        let mut sse = 0.0f64;
+        let mut sst = 0.0f64;
+        for i in 0..n {
+            let y = values[i * d + j] as f64;
+            let e = preds[i * d + j] as f64 - y;
+            sse += e * e;
+            sst += (y - mean) * (y - mean);
+        }
+        total_r2 += 1.0 - sse / sst.max(1e-12);
+    }
+    total_r2 / d as f64
+}
+
+/// Convert raw multiclass logits to probabilities in place (softmax rows).
+pub fn softmax_rows(preds: &mut [f32], d: usize) {
+    for row in preds.chunks_mut(d) {
+        let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+        let mut s = 0.0f32;
+        for z in row.iter_mut() {
+            *z = (*z - mx).exp();
+            s += *z;
+        }
+        for z in row.iter_mut() {
+            *z /= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce_perfect_and_uniform() {
+        let t = Targets::Multiclass { labels: vec![0, 1], n_classes: 2 };
+        // strongly correct logits -> ~0 loss
+        let good = vec![10.0f32, -10.0, -10.0, 10.0];
+        assert!(Metric::CrossEntropy.eval(&good, &t) < 1e-4);
+        // uniform -> ln(2)
+        let unif = vec![0.0f32; 4];
+        assert!((Metric::CrossEntropy.eval(&unif, &t) - (2.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bce_uniform_is_ln2() {
+        let t = Targets::Multilabel { labels: vec![1.0, 0.0, 1.0], n_labels: 3 };
+        let z = vec![0.0f32; 3];
+        assert!((Metric::BceLogLoss.eval(&z, &t) - (2.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bce_matches_manual() {
+        let t = Targets::Multilabel { labels: vec![1.0], n_labels: 1 };
+        let z = 1.7f64;
+        let manual = -((1.0 / (1.0 + (-z).exp())).ln());
+        assert!((Metric::BceLogLoss.eval(&[z as f32], &t) - manual).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmse_basic() {
+        let t = Targets::Regression { values: vec![0.0, 0.0], n_targets: 1 };
+        assert!((Metric::Rmse.eval(&[3.0, 4.0], &t) - (12.5f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_and_argmax() {
+        let t = Targets::Multiclass { labels: vec![1, 0], n_classes: 2 };
+        let p = vec![0.1f32, 0.9, 0.8, 0.2];
+        assert_eq!(Metric::Accuracy.eval(&p, &t), 1.0);
+        let p = vec![0.9f32, 0.1, 0.8, 0.2];
+        assert_eq!(Metric::Accuracy.eval(&p, &t), 0.5);
+    }
+
+    #[test]
+    fn r2_perfect_is_one() {
+        let t = Targets::Regression { values: vec![1.0, 2.0, 3.0], n_targets: 1 };
+        assert!((Metric::R2.eval(&[1.0, 2.0, 3.0], &t) - 1.0).abs() < 1e-9);
+        // predicting the mean -> 0
+        let m = vec![2.0f32; 3];
+        assert!(Metric::R2.eval(&m, &t).abs() < 1e-9);
+    }
+
+    #[test]
+    fn label_accuracy_threshold() {
+        let t = Targets::Multilabel { labels: vec![1.0, 0.0, 1.0, 1.0], n_labels: 2 };
+        let z = vec![0.5f32, -0.5, 0.5, -0.5];
+        assert_eq!(Metric::LabelAccuracy.eval(&z, &t), 0.75);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut p = vec![1.0f32, 1.0, 0.0, 2.0];
+        softmax_rows(&mut p, 2);
+        assert!((p[0] + p[1] - 1.0).abs() < 1e-6);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+        assert!(p[3] > p[2]);
+    }
+
+    #[test]
+    fn primary_metric_per_task() {
+        let t = Targets::Multiclass { labels: vec![0], n_classes: 2 };
+        assert_eq!(Metric::primary(&t), Metric::CrossEntropy);
+        assert!(Metric::CrossEntropy.minimize());
+        assert!(!Metric::Accuracy.minimize());
+    }
+}

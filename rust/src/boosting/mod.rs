@@ -1,0 +1,14 @@
+//! Boosting layer: losses, metrics, the training loop, and the trained
+//! ensemble model.
+
+pub mod ensemble;
+pub mod inspect;
+pub mod losses;
+pub mod metrics;
+pub mod sampling;
+pub mod trainer;
+
+pub use ensemble::Ensemble;
+pub use losses::LossKind;
+pub use metrics::Metric;
+pub use trainer::{GBDTConfig, GBDT};

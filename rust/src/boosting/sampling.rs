@@ -1,0 +1,212 @@
+//! Row-sampling schemes beyond uniform subsampling (Related-work §:
+//! SGB, GOSS, MVS). The paper positions its output-dimension sketches as
+//! orthogonal to these instance-dimension reductions — this module makes
+//! that claim concrete by letting the trainer combine both.
+
+use crate::util::rng::Rng;
+
+/// Which rows participate in each tree.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RowSampling {
+    /// all rows
+    None,
+    /// Stochastic Gradient Boosting: uniform fraction (Friedman 2002)
+    Uniform { rate: f32 },
+    /// Gradient-based One-Side Sampling (Ke et al. 2017): keep the
+    /// `top_rate` fraction with largest gradient norm, sample
+    /// `other_rate` of the rest and up-weight them by
+    /// (1 - top_rate) / other_rate.
+    Goss { top_rate: f32, other_rate: f32 },
+    /// Minimal Variance Sampling (Ibragimov & Gusev 2019), simplified:
+    /// keep row i with probability min(1, c * ||g_i||); weight 1/p_i.
+    /// `rate` sets the expected kept fraction.
+    Mvs { rate: f32 },
+}
+
+/// A sampled row set with per-row weights (1.0 unless re-weighted).
+pub struct SampledRows {
+    pub rows: Vec<u32>,
+    /// parallel to `rows`; scales the scoring-gradient contribution
+    pub weights: Vec<f32>,
+    /// true if any weight != 1 (callers can skip the weighting pass)
+    pub weighted: bool,
+}
+
+impl RowSampling {
+    /// Sample rows given per-row gradient l2 norms (row-major over n).
+    pub fn sample(&self, grad_norms: &[f64], rng: &mut Rng) -> SampledRows {
+        let n = grad_norms.len();
+        match *self {
+            RowSampling::None => SampledRows {
+                rows: (0..n as u32).collect(),
+                weights: vec![1.0; n],
+                weighted: false,
+            },
+            RowSampling::Uniform { rate } => {
+                let keep = ((n as f64 * rate as f64).round() as usize).clamp(1, n);
+                let mut rows = rng.sample_indices(n, keep);
+                rows.sort_unstable();
+                SampledRows { weights: vec![1.0; rows.len()], rows, weighted: false }
+            }
+            RowSampling::Goss { top_rate, other_rate } => {
+                let a = ((n as f64 * top_rate as f64).round() as usize).clamp(1, n);
+                let b = ((n as f64 * other_rate as f64).round() as usize).min(n - a);
+                let mut idx: Vec<u32> = (0..n as u32).collect();
+                idx.sort_by(|&x, &y| {
+                    grad_norms[y as usize]
+                        .partial_cmp(&grad_norms[x as usize])
+                        .unwrap()
+                });
+                let mut rows: Vec<u32> = idx[..a].to_vec();
+                let mut weights = vec![1.0f32; a];
+                // sample b of the remaining n-a uniformly
+                let rest = &idx[a..];
+                let mut picked = rng.sample_indices(rest.len(), b);
+                picked.sort_unstable();
+                let w = if b > 0 { (n - a) as f32 / b as f32 } else { 1.0 };
+                for &p in &picked {
+                    rows.push(rest[p as usize]);
+                    weights.push(w);
+                }
+                // keep rows ascending for cache-friendly histogram passes
+                let mut order: Vec<usize> = (0..rows.len()).collect();
+                order.sort_by_key(|&i| rows[i]);
+                let rows = order.iter().map(|&i| rows[i]).collect();
+                let weights: Vec<f32> = order.iter().map(|&i| weights[i]).collect();
+                let weighted = weights.iter().any(|&w| w != 1.0);
+                SampledRows { rows, weights, weighted }
+            }
+            RowSampling::Mvs { rate } => {
+                // threshold-free simplification: p_i ∝ ||g_i||, scaled so
+                // E[|kept|] = rate * n, capped at 1
+                let total: f64 = grad_norms.iter().sum();
+                if total <= 0.0 {
+                    return RowSampling::Uniform { rate }.sample(grad_norms, rng);
+                }
+                let target = rate as f64 * n as f64;
+                let scale = target / total;
+                let mut rows = Vec::new();
+                let mut weights = Vec::new();
+                for (i, &norm) in grad_norms.iter().enumerate() {
+                    let p = (norm * scale).min(1.0);
+                    if p >= 1.0 || rng.next_f64() < p {
+                        rows.push(i as u32);
+                        weights.push((1.0 / p.max(1e-12)) as f32);
+                    }
+                }
+                if rows.is_empty() {
+                    rows.push(0);
+                    weights.push(1.0);
+                }
+                SampledRows { rows, weights, weighted: true }
+            }
+        }
+    }
+}
+
+/// Per-row gradient l2 norms of row-major g [n, d].
+pub fn row_grad_norms(g: &[f32], n: usize, d: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            g[i * d..(i + 1) * d]
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    fn norms(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.next_f64() + 0.01).collect()
+    }
+
+    #[test]
+    fn none_keeps_everything() {
+        let s = RowSampling::None.sample(&norms(50, 1), &mut Rng::new(0));
+        assert_eq!(s.rows.len(), 50);
+        assert!(!s.weighted);
+    }
+
+    #[test]
+    fn uniform_keeps_fraction() {
+        let s = RowSampling::Uniform { rate: 0.3 }.sample(&norms(100, 2), &mut Rng::new(1));
+        assert_eq!(s.rows.len(), 30);
+        let mut sorted = s.rows.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30, "no duplicates");
+    }
+
+    #[test]
+    fn goss_keeps_top_gradients() {
+        let mut g = norms(100, 3);
+        // rows 90..100 have huge gradients
+        for i in 90..100 {
+            g[i] = 100.0;
+        }
+        let s = RowSampling::Goss { top_rate: 0.1, other_rate: 0.2 }
+            .sample(&g, &mut Rng::new(2));
+        assert_eq!(s.rows.len(), 30); // a = 10 top + b = 20 sampled
+        // all ten heavy rows kept with weight 1
+        for i in 90u32..100 {
+            let pos = s.rows.iter().position(|&r| r == i);
+            assert!(pos.is_some(), "heavy row {i} dropped");
+            assert_eq!(s.weights[pos.unwrap()], 1.0);
+        }
+        assert!(s.weighted);
+        // sampled remainder upweighted by (n-a)/b = 90/20
+        let w_other = s
+            .weights
+            .iter()
+            .copied()
+            .filter(|&w| w != 1.0)
+            .next()
+            .unwrap();
+        assert!((w_other - 4.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mvs_expected_size_and_weights() {
+        run_prop("mvs sizing", 10, |gen| {
+            let n = gen.usize_in(200, 800);
+            let g: Vec<f64> = (0..n).map(|_| gen.f32_in(0.01, 1.0) as f64).collect();
+            let mut rng = Rng::new(gen.seed);
+            let s = RowSampling::Mvs { rate: 0.5 }.sample(&g, &mut rng);
+            let frac = s.rows.len() as f64 / n as f64;
+            assert!((0.25..=0.75).contains(&frac), "kept {frac}");
+            // weights are inverse probabilities >= 1
+            assert!(s.weights.iter().all(|&w| w >= 1.0 - 1e-5));
+        });
+    }
+
+    #[test]
+    fn mvs_keeps_large_gradients_deterministically() {
+        let mut g = vec![0.001f64; 100];
+        g[7] = 1000.0;
+        let s = RowSampling::Mvs { rate: 0.2 }.sample(&g, &mut Rng::new(5));
+        let pos = s.rows.iter().position(|&r| r == 7).expect("row 7 kept");
+        assert!((s.weights[pos] - 1.0).abs() < 1e-6, "p=1 row has weight 1");
+    }
+
+    #[test]
+    fn row_grad_norms_basic() {
+        let g = vec![3.0f32, 4.0, 0.0, 0.0];
+        let n = row_grad_norms(&g, 2, 2);
+        assert!((n[0] - 5.0).abs() < 1e-9);
+        assert_eq!(n[1], 0.0);
+    }
+
+    #[test]
+    fn zero_gradients_fall_back() {
+        let g = vec![0.0f64; 50];
+        let s = RowSampling::Mvs { rate: 0.4 }.sample(&g, &mut Rng::new(6));
+        assert_eq!(s.rows.len(), 20); // uniform fallback
+    }
+}

@@ -1,0 +1,509 @@
+//! The boosting loop (paper section 2) with sketched split scoring
+//! (section 3) — the coordinator that ties every subsystem together.
+
+use crate::boosting::ensemble::{Ensemble, TrainHistory};
+use crate::boosting::losses::LossKind;
+use crate::boosting::sampling::{row_grad_norms, RowSampling};
+use crate::boosting::metrics::Metric;
+use crate::data::binning::BinnedDataset;
+use crate::data::dataset::Dataset;
+use crate::engine::{ComputeEngine, NativeEngine, ScoreMode};
+use crate::sketch::SketchConfig;
+use crate::tree::builder::{build_tree, BuildParams, SENTINEL};
+use crate::util::rng::Rng;
+
+/// Training configuration. Defaults follow the paper's Table 7 defaults
+/// (depth 6, lambda 1, no row/column sampling) with `k = 5` as the
+/// recommended sketch size.
+#[derive(Clone, Debug)]
+pub struct GBDTConfig {
+    pub loss: LossKind,
+    pub n_outputs: usize,
+    pub n_rounds: usize,
+    pub learning_rate: f32,
+    pub max_depth: usize,
+    pub lambda_l2: f32,
+    pub min_data_in_leaf: usize,
+    pub min_gain: f32,
+    /// row sampling rate per tree in (0, 1]
+    pub subsample: f32,
+    /// gradient-aware row sampling (GOSS/MVS); None defers to `subsample`
+    pub row_sampling: RowSampling,
+    /// feature sampling rate per tree in (0, 1]
+    pub colsample: f32,
+    pub max_bins: usize,
+    pub sketch: SketchConfig,
+    pub seed: u64,
+    /// stop after this many rounds without validation improvement (0 = off)
+    pub early_stopping_rounds: usize,
+    /// GBDT-MO regime: hessian histograms in the split score
+    pub use_hess_split: bool,
+    /// GBDT-MO (sparse): keep top-K outputs per leaf
+    pub sparse_leaves: Option<usize>,
+    pub verbose: bool,
+    /// record the train metric every round (costs an O(n*d) softmax
+    /// pass; timing benches disable it — the paper tracks valid only)
+    pub eval_train: bool,
+}
+
+impl GBDTConfig {
+    fn base(loss: LossKind, n_outputs: usize) -> GBDTConfig {
+        GBDTConfig {
+            loss,
+            n_outputs,
+            n_rounds: 100,
+            learning_rate: 0.05,
+            max_depth: 6,
+            lambda_l2: 1.0,
+            min_data_in_leaf: 1,
+            min_gain: 0.0,
+            subsample: 1.0,
+            row_sampling: RowSampling::None,
+            colsample: 1.0,
+            max_bins: 64,
+            sketch: SketchConfig::None,
+            seed: 42,
+            early_stopping_rounds: 0,
+            use_hess_split: false,
+            sparse_leaves: None,
+            verbose: false,
+            eval_train: true,
+        }
+    }
+
+    pub fn multiclass(n_classes: usize) -> GBDTConfig {
+        GBDTConfig::base(LossKind::MulticlassCE, n_classes)
+    }
+
+    pub fn multilabel(n_labels: usize) -> GBDTConfig {
+        GBDTConfig::base(LossKind::BCE, n_labels)
+    }
+
+    pub fn multitask(n_targets: usize) -> GBDTConfig {
+        GBDTConfig::base(LossKind::MSE, n_targets)
+    }
+
+    /// Config matching the targets of a dataset.
+    pub fn for_dataset(ds: &Dataset) -> GBDTConfig {
+        GBDTConfig::base(LossKind::for_targets(&ds.targets), ds.n_outputs())
+    }
+
+    /// The metric used for train/valid tracking and early stopping.
+    pub fn metric(&self) -> Metric {
+        match self.loss {
+            LossKind::MulticlassCE => Metric::CrossEntropy,
+            LossKind::BCE => Metric::BceLogLoss,
+            LossKind::MSE => Metric::Rmse,
+        }
+    }
+
+    fn validate(&self, ds: &Dataset) {
+        assert_eq!(
+            self.n_outputs,
+            ds.n_outputs(),
+            "config n_outputs != dataset outputs"
+        );
+        assert!(self.n_rounds >= 1);
+        assert!(self.learning_rate > 0.0);
+        assert!((0.0..=1.0).contains(&self.subsample) && self.subsample > 0.0);
+        assert!((0.0..=1.0).contains(&self.colsample) && self.colsample > 0.0);
+        assert!(self.lambda_l2 > 0.0, "lambda must be > 0 (eq. 3/4)");
+        if self.use_hess_split {
+            assert!(
+                matches!(self.sketch, SketchConfig::None),
+                "HessL2 scoring (GBDT-MO regime) is defined on the full \
+                 gradient matrix; combine it with SketchConfig::None"
+            );
+        }
+    }
+}
+
+/// Namespace for the training entry points.
+pub struct GBDT;
+
+impl GBDT {
+    /// Train with the pure-rust engine.
+    pub fn fit(cfg: &GBDTConfig, train: &Dataset, valid: Option<&Dataset>) -> Ensemble {
+        let mut engine = NativeEngine::new();
+        GBDT::fit_with_engine(cfg, train, valid, &mut engine)
+    }
+
+    /// Train with any [`ComputeEngine`] (e.g. the PJRT-backed XlaEngine).
+    pub fn fit_with_engine(
+        cfg: &GBDTConfig,
+        train: &Dataset,
+        valid: Option<&Dataset>,
+        engine: &mut dyn ComputeEngine,
+    ) -> Ensemble {
+        cfg.validate(train);
+        let n = train.n_rows;
+        let d = cfg.n_outputs;
+        let binned = BinnedDataset::from_dataset(train, cfg.max_bins);
+        let metric = cfg.metric();
+        let mut rng = Rng::new(cfg.seed);
+
+        let base_score = cfg.loss.base_score(&train.targets);
+        let mut preds = vec![0.0f32; n * d];
+        for row in preds.chunks_mut(d) {
+            row.copy_from_slice(&base_score);
+        }
+        let mut valid_preds: Option<(Vec<f32>, Vec<Vec<f32>>)> = valid.map(|v| {
+            let mut vp = vec![0.0f32; v.n_rows * d];
+            for row in vp.chunks_mut(d) {
+                row.copy_from_slice(&base_score);
+            }
+            // cache raw rows once: prediction updates touch every tree
+            let rows: Vec<Vec<f32>> = (0..v.n_rows).map(|i| v.row(i)).collect();
+            (vp, rows)
+        });
+
+        let mut g = vec![0.0f32; n * d];
+        let mut h = vec![0.0f32; n * d];
+        let mode = if cfg.use_hess_split { ScoreMode::HessL2 } else { ScoreMode::CountL2 };
+        let all_rows: Vec<u32> = (0..n as u32).collect();
+
+        let mut trees = Vec::with_capacity(cfg.n_rounds);
+        let mut history = TrainHistory::default();
+        let mut best_loss = f64::INFINITY;
+        let mut best_round = 0usize;
+
+        for round in 0..cfg.n_rounds {
+            engine.grad_hess(cfg.loss, &preds, &train.targets, &mut g, &mut h);
+
+            // sketch the gradient matrix for split scoring (section 3)
+            let mut round_rng = rng.fork(round as u64);
+            let sketched = cfg.sketch.apply(&g, n, d, &mut round_rng, engine);
+            let (score_g, kc): (&[f32], usize) = match &sketched {
+                None => (&g, d),
+                Some((gk, k)) => (gk.as_slice(), *k),
+            };
+            let score_h: Option<&[f32]> = if cfg.use_hess_split { Some(&h) } else { None };
+
+            // row sampling: gradient-aware (GOSS/MVS) takes precedence,
+            // then plain uniform subsampling, then all rows
+            let (rows, row_weights): (Vec<u32>, Option<Vec<f32>>) =
+                if cfg.row_sampling != RowSampling::None {
+                    let norms = row_grad_norms(&g, n, d);
+                    let s = cfg.row_sampling.sample(&norms, &mut round_rng);
+                    let w = if s.weighted { Some(s.weights) } else { None };
+                    (s.rows, w)
+                } else if cfg.subsample < 1.0 {
+                    let keep =
+                        ((n as f64) * cfg.subsample as f64).round().max(1.0) as usize;
+                    let mut idx = round_rng.sample_indices(n, keep);
+                    idx.sort_unstable();
+                    (idx, None)
+                } else {
+                    (all_rows.clone(), None)
+                };
+
+            // feature subsample
+            let feature_mask: Option<Vec<bool>> = if cfg.colsample < 1.0 {
+                let m = binned.n_features;
+                let keep = ((m as f64) * cfg.colsample as f64).round().max(1.0) as usize;
+                let chosen = round_rng.sample_indices(m, keep);
+                let mut mask = vec![false; m];
+                for &f in &chosen {
+                    mask[f as usize] = true;
+                }
+                Some(mask)
+            } else {
+                None
+            };
+
+            let params = BuildParams {
+                binned: &binned,
+                rows: &rows,
+                g: &g,
+                h: &h,
+                d,
+                score_g,
+                kc,
+                score_h,
+                mode,
+                max_depth: cfg.max_depth,
+                lambda: cfg.lambda_l2,
+                min_data_in_leaf: cfg.min_data_in_leaf,
+                min_gain: cfg.min_gain,
+                feature_mask: feature_mask.as_deref(),
+                sparse_topk: cfg.sparse_leaves,
+                row_weights: row_weights.as_deref(),
+            };
+            let (mut tree, leaf_of_row) = build_tree(&params, engine);
+            tree.scale_leaves(cfg.learning_rate);
+
+            // update train predictions (leaf_of_row for sampled rows;
+            // route the rest through the binned tree)
+            for r in 0..n {
+                let leaf = if leaf_of_row[r] != SENTINEL {
+                    leaf_of_row[r] as usize
+                } else {
+                    tree.leaf_for_binned(&binned, r)
+                };
+                let v = &tree.leaf_values[leaf * d..(leaf + 1) * d];
+                let p = &mut preds[r * d..(r + 1) * d];
+                for j in 0..d {
+                    p[j] += v[j];
+                }
+            }
+
+            let train_loss = if cfg.eval_train || valid.is_none() {
+                let l = metric.eval(&preds, &train.targets);
+                history.train_loss.push(l);
+                l
+            } else {
+                f64::NAN
+            };
+
+            // update valid predictions + early stopping
+            let mut stop = false;
+            if let (Some(v), Some((vp, vrows))) = (valid, valid_preds.as_mut()) {
+                for i in 0..v.n_rows {
+                    tree.predict_into(&vrows[i], &mut vp[i * d..(i + 1) * d]);
+                }
+                let vl = metric.eval(vp, &v.targets);
+                history.valid_loss.push(vl);
+                let improved = if metric.minimize() { vl < best_loss } else { vl > best_loss };
+                if improved {
+                    best_loss = vl;
+                    best_round = round;
+                } else if cfg.early_stopping_rounds > 0
+                    && round - best_round >= cfg.early_stopping_rounds
+                {
+                    stop = true;
+                }
+                if cfg.verbose && (round % 10 == 0 || stop) {
+                    eprintln!(
+                        "[round {round}] train {} = {train_loss:.5}, valid = {vl:.5}",
+                        metric.name()
+                    );
+                }
+            } else {
+                best_round = round;
+                if cfg.verbose && round % 10 == 0 {
+                    eprintln!("[round {round}] train {} = {train_loss:.5}", metric.name());
+                }
+            }
+
+            trees.push(tree);
+            if stop {
+                break;
+            }
+        }
+
+        // truncate to the best validation round (early-stopping semantics)
+        if valid.is_some() && cfg.early_stopping_rounds > 0 {
+            trees.truncate(best_round + 1);
+        }
+        history.best_round = best_round;
+
+        Ensemble {
+            loss: cfg.loss,
+            n_outputs: d,
+            base_score,
+            trees,
+            history,
+        }
+    }
+
+    /// 5-fold CV as in Appendix B.2: returns per-fold (model, valid loss).
+    pub fn fit_cv(
+        cfg: &GBDTConfig,
+        data: &Dataset,
+        k_folds: usize,
+    ) -> Vec<(Ensemble, f64)> {
+        let folds = crate::data::split::kfold_indices(data.n_rows, k_folds, cfg.seed);
+        let metric = cfg.metric();
+        folds
+            .iter()
+            .map(|(tr, va)| {
+                let train = data.gather(tr);
+                let valid = data.gather(va);
+                let model = GBDT::fit(cfg, &train, Some(&valid));
+                let loss = metric.eval(&model.predict_raw(&valid), &valid.targets);
+                (model, loss)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_multiclass, make_multilabel, make_multitask, FeatureSpec};
+
+    fn quick_cfg(mut cfg: GBDTConfig) -> GBDTConfig {
+        cfg.n_rounds = 30;
+        cfg.learning_rate = 0.3;
+        cfg.max_depth = 3;
+        cfg.max_bins = 16;
+        cfg
+    }
+
+    #[test]
+    fn multiclass_loss_decreases_and_beats_uniform() {
+        let ds = make_multiclass(600, FeatureSpec::guyon(10), 4, 2.0, 1);
+        let cfg = quick_cfg(GBDTConfig::multiclass(4));
+        let model = GBDT::fit(&cfg, &ds, None);
+        let hist = &model.history.train_loss;
+        assert!(hist.first().unwrap() > hist.last().unwrap());
+        // much better than uniform ln(4)
+        assert!(
+            *hist.last().unwrap() < (4.0f64).ln() * 0.6,
+            "final loss {}",
+            hist.last().unwrap()
+        );
+        let acc = Metric::Accuracy.eval(&model.predict_raw(&ds), &ds.targets);
+        assert!(acc > 0.8, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn multilabel_trains() {
+        let ds = make_multilabel(400, FeatureSpec::guyon(10), 6, 2, 3);
+        let cfg = quick_cfg(GBDTConfig::multilabel(6));
+        let model = GBDT::fit(&cfg, &ds, None);
+        let hist = &model.history.train_loss;
+        assert!(hist.first().unwrap() > hist.last().unwrap());
+    }
+
+    #[test]
+    fn multitask_fits_regression() {
+        let ds = make_multitask(500, FeatureSpec::guyon(8), 4, 2, 0.1, 5);
+        let mut cfg = quick_cfg(GBDTConfig::multitask(4));
+        cfg.n_rounds = 60;
+        let model = GBDT::fit(&cfg, &ds, None);
+        let r2 = Metric::R2.eval(&model.predict_raw(&ds), &ds.targets);
+        assert!(r2 > 0.5, "train r2 = {r2}");
+    }
+
+    #[test]
+    fn sketches_reach_comparable_quality() {
+        let ds = make_multiclass(800, FeatureSpec::guyon(12), 8, 2.0, 7);
+        let mut full_cfg = quick_cfg(GBDTConfig::multiclass(8));
+        full_cfg.n_rounds = 40;
+        let full = GBDT::fit(&full_cfg, &ds, None);
+        let full_loss = *full.history.train_loss.last().unwrap();
+        for sketch in [
+            SketchConfig::TopOutputs { k: 2 },
+            SketchConfig::RandomSampling { k: 2 },
+            SketchConfig::RandomProjection { k: 2 },
+        ] {
+            let mut cfg = full_cfg.clone();
+            cfg.sketch = sketch;
+            let m = GBDT::fit(&cfg, &ds, None);
+            let loss = *m.history.train_loss.last().unwrap();
+            assert!(
+                loss < full_loss * 2.0 && loss < 1.5,
+                "{}: loss {loss} vs full {full_loss}",
+                sketch.name()
+            );
+        }
+    }
+
+    #[test]
+    fn early_stopping_truncates() {
+        let ds = make_multiclass(500, FeatureSpec::guyon(8), 3, 1.5, 11);
+        let (train, valid) = crate::data::split::train_test_split(&ds, 0.3, 1);
+        let mut cfg = quick_cfg(GBDTConfig::multiclass(3));
+        cfg.n_rounds = 200;
+        cfg.learning_rate = 0.5; // aggressive: will overfit quickly
+        cfg.early_stopping_rounds = 5;
+        let model = GBDT::fit(&cfg, &train, Some(&valid));
+        assert!(model.n_trees() < 200, "stopped at {}", model.n_trees());
+        assert_eq!(model.n_trees(), model.history.best_round + 1);
+    }
+
+    #[test]
+    fn subsample_and_colsample_work() {
+        let ds = make_multiclass(400, FeatureSpec::guyon(10), 3, 2.0, 13);
+        let mut cfg = quick_cfg(GBDTConfig::multiclass(3));
+        cfg.subsample = 0.7;
+        cfg.colsample = 0.5;
+        let model = GBDT::fit(&cfg, &ds, None);
+        let hist = &model.history.train_loss;
+        assert!(hist.first().unwrap() > hist.last().unwrap());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = make_multiclass(300, FeatureSpec::guyon(8), 3, 2.0, 17);
+        let mut cfg = quick_cfg(GBDTConfig::multiclass(3));
+        cfg.sketch = SketchConfig::RandomProjection { k: 2 };
+        cfg.n_rounds = 10;
+        let a = GBDT::fit(&cfg, &ds, None);
+        let b = GBDT::fit(&cfg, &ds, None);
+        assert_eq!(a.predict_raw(&ds), b.predict_raw(&ds));
+    }
+
+    #[test]
+    fn cv_returns_k_models() {
+        let ds = make_multiclass(300, FeatureSpec::guyon(6), 3, 2.0, 19);
+        let mut cfg = quick_cfg(GBDTConfig::multiclass(3));
+        cfg.n_rounds = 5;
+        let folds = GBDT::fit_cv(&cfg, &ds, 3);
+        assert_eq!(folds.len(), 3);
+        for (m, loss) in &folds {
+            assert_eq!(m.n_trees(), 5);
+            assert!(loss.is_finite());
+        }
+    }
+
+    #[test]
+    fn gbdt_mo_modes_train() {
+        let ds = make_multitask(300, FeatureSpec::guyon(8), 4, 2, 0.1, 23);
+        let mut cfg = quick_cfg(GBDTConfig::multitask(4));
+        cfg.use_hess_split = true;
+        let full = GBDT::fit(&cfg, &ds, None);
+        assert!(full.history.train_loss.first().unwrap() > full.history.train_loss.last().unwrap());
+        cfg.sparse_leaves = Some(2);
+        let sparse = GBDT::fit(&cfg, &ds, None);
+        // sparse leaves: at most 2 nonzero outputs per leaf
+        for t in &sparse.trees {
+            for l in 0..t.n_leaves {
+                let nz = t.leaf_values[l * 4..(l + 1) * 4]
+                    .iter()
+                    .filter(|&&v| v != 0.0)
+                    .count();
+                assert!(nz <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn goss_and_mvs_sampling_learn() {
+        let ds = make_multiclass(800, FeatureSpec::guyon(10), 4, 2.0, 37);
+        for sampling in [
+            RowSampling::Goss { top_rate: 0.2, other_rate: 0.2 },
+            RowSampling::Mvs { rate: 0.5 },
+        ] {
+            let mut cfg = quick_cfg(GBDTConfig::multiclass(4));
+            cfg.row_sampling = sampling;
+            cfg.sketch = SketchConfig::RandomSampling { k: 2 };
+            let model = GBDT::fit(&cfg, &ds, None);
+            let h = &model.history.train_loss;
+            assert!(
+                h.last().unwrap() < &((4.0f64).ln() * 0.8),
+                "{sampling:?}: loss {}",
+                h.last().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn hess_split_with_sketch_rejected() {
+        let ds = make_multiclass(100, FeatureSpec::guyon(6), 3, 2.0, 29);
+        let mut cfg = quick_cfg(GBDTConfig::multiclass(3));
+        cfg.use_hess_split = true;
+        cfg.sketch = SketchConfig::RandomProjection { k: 2 };
+        GBDT::fit(&cfg, &ds, None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn output_mismatch_rejected() {
+        let ds = make_multiclass(100, FeatureSpec::guyon(6), 3, 2.0, 31);
+        let cfg = GBDTConfig::multiclass(5);
+        GBDT::fit(&cfg, &ds, None);
+    }
+}

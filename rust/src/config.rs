@@ -1,0 +1,183 @@
+//! Config-file support: GBDTConfig <-> JSON round-trips so experiments
+//! are reproducible from checked-in config files (`sketchboost train
+//! --config run.json`).
+
+use crate::boosting::losses::LossKind;
+use crate::boosting::sampling::RowSampling;
+use crate::boosting::trainer::GBDTConfig;
+use crate::sketch::SketchConfig;
+use crate::util::json::Json;
+
+pub fn config_to_json(cfg: &GBDTConfig) -> Json {
+    let mut o = Json::obj();
+    o.set("loss", Json::Str(cfg.loss.name().into()));
+    o.set("n_outputs", Json::Num(cfg.n_outputs as f64));
+    o.set("n_rounds", Json::Num(cfg.n_rounds as f64));
+    o.set("learning_rate", Json::Num(cfg.learning_rate as f64));
+    o.set("max_depth", Json::Num(cfg.max_depth as f64));
+    o.set("lambda_l2", Json::Num(cfg.lambda_l2 as f64));
+    o.set("min_data_in_leaf", Json::Num(cfg.min_data_in_leaf as f64));
+    o.set("min_gain", Json::Num(cfg.min_gain as f64));
+    o.set("subsample", Json::Num(cfg.subsample as f64));
+    o.set("colsample", Json::Num(cfg.colsample as f64));
+    o.set("max_bins", Json::Num(cfg.max_bins as f64));
+    o.set("seed", Json::Num(cfg.seed as f64));
+    o.set("early_stopping_rounds", Json::Num(cfg.early_stopping_rounds as f64));
+    o.set("use_hess_split", Json::Bool(cfg.use_hess_split));
+    o.set("eval_train", Json::Bool(cfg.eval_train));
+    match cfg.sparse_leaves {
+        Some(k) => o.set("sparse_leaves", Json::Num(k as f64)),
+        None => o.set("sparse_leaves", Json::Null),
+    };
+    let mut sk = Json::obj();
+    sk.set("strategy", Json::Str(cfg.sketch.name().into()));
+    let k = match cfg.sketch {
+        SketchConfig::None => 0,
+        SketchConfig::TopOutputs { k }
+        | SketchConfig::RandomSampling { k }
+        | SketchConfig::RandomProjection { k }
+        | SketchConfig::TruncatedSvd { k, .. } => k,
+    };
+    sk.set("k", Json::Num(k as f64));
+    o.set("sketch", sk);
+    let mut rs = Json::obj();
+    match cfg.row_sampling {
+        RowSampling::None => {
+            rs.set("kind", Json::Str("none".into()));
+        }
+        RowSampling::Uniform { rate } => {
+            rs.set("kind", Json::Str("uniform".into()));
+            rs.set("rate", Json::Num(rate as f64));
+        }
+        RowSampling::Goss { top_rate, other_rate } => {
+            rs.set("kind", Json::Str("goss".into()));
+            rs.set("top_rate", Json::Num(top_rate as f64));
+            rs.set("other_rate", Json::Num(other_rate as f64));
+        }
+        RowSampling::Mvs { rate } => {
+            rs.set("kind", Json::Str("mvs".into()));
+            rs.set("rate", Json::Num(rate as f64));
+        }
+    }
+    o.set("row_sampling", rs);
+    o
+}
+
+pub fn config_from_json(j: &Json) -> Result<GBDTConfig, String> {
+    let loss = LossKind::parse(j.get("loss").and_then(|v| v.as_str()).ok_or("loss")?)
+        .ok_or("bad loss")?;
+    let n_outputs = j.get("n_outputs").and_then(|v| v.as_usize()).ok_or("n_outputs")?;
+    let mut cfg = match loss {
+        LossKind::MulticlassCE => GBDTConfig::multiclass(n_outputs),
+        LossKind::BCE => GBDTConfig::multilabel(n_outputs),
+        LossKind::MSE => GBDTConfig::multitask(n_outputs),
+    };
+    let num = |key: &str, dflt: f64| j.get(key).and_then(|v| v.as_f64()).unwrap_or(dflt);
+    cfg.n_rounds = num("n_rounds", cfg.n_rounds as f64) as usize;
+    cfg.learning_rate = num("learning_rate", cfg.learning_rate as f64) as f32;
+    cfg.max_depth = num("max_depth", cfg.max_depth as f64) as usize;
+    cfg.lambda_l2 = num("lambda_l2", cfg.lambda_l2 as f64) as f32;
+    cfg.min_data_in_leaf = num("min_data_in_leaf", cfg.min_data_in_leaf as f64) as usize;
+    cfg.min_gain = num("min_gain", cfg.min_gain as f64) as f32;
+    cfg.subsample = num("subsample", cfg.subsample as f64) as f32;
+    cfg.colsample = num("colsample", cfg.colsample as f64) as f32;
+    cfg.max_bins = num("max_bins", cfg.max_bins as f64) as usize;
+    cfg.seed = num("seed", cfg.seed as f64) as u64;
+    cfg.early_stopping_rounds =
+        num("early_stopping_rounds", cfg.early_stopping_rounds as f64) as usize;
+    cfg.use_hess_split = j
+        .get("use_hess_split")
+        .and_then(|v| v.as_bool())
+        .unwrap_or(cfg.use_hess_split);
+    cfg.eval_train = j.get("eval_train").and_then(|v| v.as_bool()).unwrap_or(true);
+    cfg.sparse_leaves = j.get("sparse_leaves").and_then(|v| v.as_usize());
+    if let Some(sk) = j.get("sketch") {
+        let strategy = sk.get("strategy").and_then(|v| v.as_str()).unwrap_or("full");
+        let k = sk.get("k").and_then(|v| v.as_usize()).unwrap_or(5);
+        cfg.sketch =
+            SketchConfig::parse(strategy, k).ok_or_else(|| format!("bad sketch {strategy:?}"))?;
+    }
+    if let Some(rs) = j.get("row_sampling") {
+        let kind = rs.get("kind").and_then(|v| v.as_str()).unwrap_or("none");
+        let rate = rs.get("rate").and_then(|v| v.as_f64()).unwrap_or(1.0) as f32;
+        cfg.row_sampling = match kind {
+            "none" => RowSampling::None,
+            "uniform" => RowSampling::Uniform { rate },
+            "goss" => RowSampling::Goss {
+                top_rate: rs.get("top_rate").and_then(|v| v.as_f64()).unwrap_or(0.2) as f32,
+                other_rate: rs.get("other_rate").and_then(|v| v.as_f64()).unwrap_or(0.1) as f32,
+            },
+            "mvs" => RowSampling::Mvs { rate },
+            other => return Err(format!("bad row_sampling {other:?}")),
+        };
+    }
+    Ok(cfg)
+}
+
+/// Load a config from a JSON file.
+pub fn load_config(path: &std::path::Path) -> Result<GBDTConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let j = Json::parse(&text).map_err(|e| e.to_string())?;
+    config_from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_default() {
+        let cfg = GBDTConfig::multiclass(7);
+        let back = config_from_json(&config_to_json(&cfg)).unwrap();
+        assert_eq!(back.n_outputs, 7);
+        assert_eq!(back.n_rounds, cfg.n_rounds);
+        assert_eq!(back.sketch, cfg.sketch);
+        assert_eq!(back.row_sampling, cfg.row_sampling);
+    }
+
+    #[test]
+    fn roundtrip_exotic() {
+        let mut cfg = GBDTConfig::multitask(4);
+        cfg.sketch = SketchConfig::RandomProjection { k: 3 };
+        cfg.row_sampling = RowSampling::Goss { top_rate: 0.3, other_rate: 0.15 };
+        cfg.sparse_leaves = Some(2);
+        cfg.use_hess_split = true;
+        cfg.subsample = 0.8;
+        cfg.eval_train = false;
+        let back = config_from_json(&config_to_json(&cfg)).unwrap();
+        assert_eq!(back.sketch, cfg.sketch);
+        assert_eq!(back.row_sampling, cfg.row_sampling);
+        assert_eq!(back.sparse_leaves, Some(2));
+        assert!(back.use_hess_split);
+        assert!(!back.eval_train);
+        assert!((back.subsample - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn svd_sketch_parses_with_default_iters() {
+        let mut cfg = GBDTConfig::multiclass(5);
+        cfg.sketch = SketchConfig::TruncatedSvd { k: 2, iters: 8 };
+        let back = config_from_json(&config_to_json(&cfg)).unwrap();
+        assert!(matches!(back.sketch, SketchConfig::TruncatedSvd { k: 2, .. }));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = GBDTConfig::multilabel(9);
+        let dir = std::env::temp_dir().join("sb_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, config_to_json(&cfg).to_pretty()).unwrap();
+        let back = load_config(&path).unwrap();
+        assert_eq!(back.n_outputs, 9);
+    }
+
+    #[test]
+    fn rejects_bad_strategy() {
+        let mut j = config_to_json(&GBDTConfig::multiclass(3));
+        let mut sk = Json::obj();
+        sk.set("strategy", Json::Str("bogus".into()));
+        j.set("sketch", sk);
+        assert!(config_from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Quantile binning: continuous features -> u8 bin codes (histogram
+//! algorithm, max 256 bins — Py-Boost's limit, Appendix B.1).
+//!
+//! Bin semantics: for edges e_0 < e_1 < ... < e_{B-2}, a value x maps to
+//! the number of edges with e < x... precisely `bin(x) = #{j : x > e_j}`,
+//! so bin b contains (e_{b-1}, e_b]. A split "left = bins <= b" therefore
+//! corresponds to the raw-value predicate `x <= e_b`, which is what the
+//! tree stores as its float threshold for inference on unbinned data.
+//! NaN maps to bin 0 (missing-as-smallest policy).
+
+use crate::data::dataset::Dataset;
+
+/// Per-feature quantization of a dataset.
+#[derive(Clone, Debug)]
+pub struct BinnedDataset {
+    pub n_rows: usize,
+    pub n_features: usize,
+    /// Column-major bin codes: codes[f * n_rows + i].
+    pub codes: Vec<u8>,
+    /// Ascending split-candidate edges per feature; bin b <-> x <= edges[b].
+    pub edges: Vec<Vec<f32>>,
+    /// Number of distinct bins actually used per feature (= edges.len()+1).
+    pub n_bins: Vec<u16>,
+    /// The global bin budget histograms are sized to (power of two helps
+    /// the kernels; always >= max(n_bins)).
+    pub max_bins: usize,
+}
+
+impl BinnedDataset {
+    /// Quantile-bin every feature of `ds` into at most `max_bins` bins.
+    pub fn from_dataset(ds: &Dataset, max_bins: usize) -> BinnedDataset {
+        assert!((2..=256).contains(&max_bins), "max_bins must be in [2, 256]");
+        let n = ds.n_rows;
+        let mut codes = vec![0u8; n * ds.n_features];
+        let mut edges_all = Vec::with_capacity(ds.n_features);
+        let mut n_bins = Vec::with_capacity(ds.n_features);
+        for f in 0..ds.n_features {
+            let col = ds.column(f);
+            let edges = quantile_edges(col, max_bins);
+            let dst = &mut codes[f * n..(f + 1) * n];
+            for (i, &x) in col.iter().enumerate() {
+                dst[i] = bin_of(&edges, x);
+            }
+            n_bins.push((edges.len() + 1) as u16);
+            edges_all.push(edges);
+        }
+        BinnedDataset {
+            n_rows: n,
+            n_features: ds.n_features,
+            codes,
+            edges: edges_all,
+            n_bins,
+            max_bins,
+        }
+    }
+
+    #[inline]
+    pub fn column(&self, f: usize) -> &[u8] {
+        &self.codes[f * self.n_rows..(f + 1) * self.n_rows]
+    }
+
+    /// Raw-value threshold for split "left = bins <= b" on feature f.
+    pub fn threshold_value(&self, f: usize, b: usize) -> f32 {
+        let e = &self.edges[f];
+        if e.is_empty() {
+            f32::INFINITY // constant feature: degenerate split
+        } else {
+            e[b.min(e.len() - 1)]
+        }
+    }
+}
+
+/// Compute up to `max_bins - 1` ascending, deduplicated quantile edges.
+pub fn quantile_edges(col: &[f32], max_bins: usize) -> Vec<f32> {
+    let mut vals: Vec<f32> = col.iter().copied().filter(|x| !x.is_nan()).collect();
+    if vals.is_empty() {
+        return Vec::new();
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = vals.len();
+    let n_edges = max_bins - 1;
+    let mut edges = Vec::with_capacity(n_edges);
+    for q in 1..=n_edges {
+        // midpoint-free plain quantile on the sorted sample
+        let pos = (q as f64 / max_bins as f64 * n as f64) as usize;
+        let e = vals[pos.min(n - 1)];
+        if edges.last().map(|&last| e > last).unwrap_or(true) {
+            edges.push(e);
+        }
+    }
+    // A trailing edge equal to the max puts all rows <= it: harmless but
+    // wasteful; drop it so the last bin is non-empty.
+    if edges.last() == vals.last() && !edges.is_empty() {
+        edges.pop();
+    }
+    edges
+}
+
+/// bin(x) = #{j : x > e_j}; NaN -> 0.
+#[inline]
+pub fn bin_of(edges: &[f32], x: f32) -> u8 {
+    if x.is_nan() {
+        return 0;
+    }
+    // binary search for the first edge >= x
+    let mut lo = 0usize;
+    let mut hi = edges.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if x > edges[mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Targets;
+    use crate::util::proptest::run_prop;
+
+    fn ds_from_col(col: Vec<f32>) -> Dataset {
+        let n = col.len();
+        Dataset::new(
+            n,
+            1,
+            col,
+            Targets::Regression { values: vec![0.0; n], n_targets: 1 },
+        )
+    }
+
+    #[test]
+    fn bin_of_basics() {
+        let edges = vec![1.0, 2.0, 3.0];
+        assert_eq!(bin_of(&edges, 0.5), 0);
+        assert_eq!(bin_of(&edges, 1.0), 0); // x <= e_0
+        assert_eq!(bin_of(&edges, 1.5), 1);
+        assert_eq!(bin_of(&edges, 3.0), 2);
+        assert_eq!(bin_of(&edges, 9.0), 3);
+        assert_eq!(bin_of(&edges, f32::NAN), 0);
+    }
+
+    #[test]
+    fn constant_feature_one_bin() {
+        let b = BinnedDataset::from_dataset(&ds_from_col(vec![5.0; 10]), 16);
+        assert_eq!(b.n_bins[0], 1);
+        assert!(b.column(0).iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn uniform_feature_fills_bins() {
+        let col: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let b = BinnedDataset::from_dataset(&ds_from_col(col), 16);
+        assert!(b.n_bins[0] >= 15, "n_bins={}", b.n_bins[0]);
+        // roughly balanced occupancy
+        let mut counts = [0usize; 16];
+        for &c in b.column(0) {
+            counts[c as usize] += 1;
+        }
+        let used = counts.iter().filter(|&&c| c > 0).count();
+        assert!(used >= 15);
+        assert!(counts.iter().filter(|&&c| c > 0).all(|&c| c >= 40));
+    }
+
+    #[test]
+    fn binning_is_monotone() {
+        run_prop("binning monotone", 30, |g| {
+            let n = g.usize_in(10, 300);
+            let col = g.vec_gaussian(n, 3.0);
+            let bins = *g.choose(&[2usize, 8, 64, 256]);
+            let b = BinnedDataset::from_dataset(&ds_from_col(col.clone()), bins);
+            let codes = b.column(0);
+            for i in 0..n {
+                for j in 0..n {
+                    if col[i] < col[j] {
+                        assert!(
+                            codes[i] <= codes[j],
+                            "monotonicity violated: x {} < {} but bin {} > {}",
+                            col[i], col[j], codes[i], codes[j]
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn split_predicate_matches_bins() {
+        // For every feature edge b: (bin <= b) == (x <= threshold_value(b))
+        run_prop("bin/threshold equivalence", 20, |g| {
+            let n = g.usize_in(20, 200);
+            let col = g.vec_gaussian(n, 2.0);
+            let b = BinnedDataset::from_dataset(&ds_from_col(col.clone()), 16);
+            let codes = b.column(0);
+            for bin in 0..b.edges[0].len() {
+                let t = b.threshold_value(0, bin);
+                for i in 0..n {
+                    assert_eq!(
+                        codes[i] as usize <= bin,
+                        col[i] <= t,
+                        "x={} bin={} b={} t={}",
+                        col[i], codes[i], bin, t
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn nan_goes_to_bin_zero() {
+        let mut col: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        col[7] = f32::NAN;
+        let b = BinnedDataset::from_dataset(&ds_from_col(col), 8);
+        assert_eq!(b.column(0)[7], 0);
+    }
+
+    #[test]
+    fn duplicate_heavy_feature_dedupes_edges() {
+        let mut col = vec![0.0f32; 900];
+        col.extend(vec![1.0f32; 100]);
+        let b = BinnedDataset::from_dataset(&ds_from_col(col), 64);
+        assert!(b.n_bins[0] <= 2, "n_bins={}", b.n_bins[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn max_bins_over_256_rejected() {
+        BinnedDataset::from_dataset(&ds_from_col(vec![1.0, 2.0]), 300);
+    }
+}

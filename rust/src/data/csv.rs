@@ -1,0 +1,230 @@
+//! Numeric CSV I/O for the CLI (`sketchboost train --data file.csv`).
+//!
+//! Format: optional header row; all cells numeric (NaN/empty allowed for
+//! features). Target columns are named on load: the last `d` columns for
+//! multilabel/regression, or a single integer class column for
+//! multiclass. This is deliberately minimal — the paper pipeline feeds
+//! everything through the synthetic generators; CSV exists so real data
+//! can be dropped in.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::data::dataset::{Dataset, Targets};
+
+#[derive(Debug)]
+pub struct CsvError(pub String);
+
+impl std::fmt::Display for CsvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "csv error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CsvError {}
+
+fn parse_cell(s: &str) -> Result<f32, CsvError> {
+    let t = s.trim();
+    if t.is_empty() || t.eq_ignore_ascii_case("nan") {
+        return Ok(f32::NAN);
+    }
+    t.parse::<f32>()
+        .map_err(|_| CsvError(format!("bad numeric cell {t:?}")))
+}
+
+/// Raw numeric table (row-major) as read from disk.
+pub struct Table {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub cells: Vec<f32>,
+    pub header: Option<Vec<String>>,
+}
+
+pub fn read_table(path: &Path) -> Result<Table, Box<dyn std::error::Error>> {
+    let f = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(f);
+    let mut cells: Vec<f32> = Vec::new();
+    let mut n_cols = 0usize;
+    let mut n_rows = 0usize;
+    let mut header: Option<Vec<String>> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if lineno == 0 {
+            // header if any field fails to parse as a number
+            let numeric = fields.iter().all(|f| parse_cell(f).is_ok());
+            if !numeric {
+                header = Some(fields.iter().map(|s| s.trim().to_string()).collect());
+                n_cols = fields.len();
+                continue;
+            }
+        }
+        if n_cols == 0 {
+            n_cols = fields.len();
+        } else if fields.len() != n_cols {
+            return Err(Box::new(CsvError(format!(
+                "row {lineno}: expected {n_cols} fields, got {}",
+                fields.len()
+            ))));
+        }
+        for f in &fields {
+            cells.push(parse_cell(f)?);
+        }
+        n_rows += 1;
+    }
+    Ok(Table { n_rows, n_cols, cells, header })
+}
+
+/// Load a dataset whose last `n_targets` columns are the targets.
+pub fn load_dataset(
+    path: &Path,
+    task: &str,
+    n_targets: usize,
+) -> Result<Dataset, Box<dyn std::error::Error>> {
+    let t = read_table(path)?;
+    let tgt_cols = if task == "multiclass" { 1 } else { n_targets };
+    if t.n_cols <= tgt_cols {
+        return Err(Box::new(CsvError("no feature columns left".into())));
+    }
+    let m = t.n_cols - tgt_cols;
+    let mut rows = vec![0.0f32; t.n_rows * m];
+    for i in 0..t.n_rows {
+        rows[i * m..(i + 1) * m].copy_from_slice(&t.cells[i * t.n_cols..i * t.n_cols + m]);
+    }
+    let targets = match task {
+        "multiclass" => {
+            let labels: Vec<u32> = (0..t.n_rows)
+                .map(|i| t.cells[i * t.n_cols + m] as u32)
+                .collect();
+            let n_classes = n_targets.max(labels.iter().copied().max().unwrap_or(0) as usize + 1);
+            Targets::Multiclass { labels, n_classes }
+        }
+        "multilabel" => {
+            let mut labels = vec![0.0f32; t.n_rows * n_targets];
+            for i in 0..t.n_rows {
+                for j in 0..n_targets {
+                    labels[i * n_targets + j] = t.cells[i * t.n_cols + m + j];
+                }
+            }
+            Targets::Multilabel { labels, n_labels: n_targets }
+        }
+        "regression" | "multitask" => {
+            let mut values = vec![0.0f32; t.n_rows * n_targets];
+            for i in 0..t.n_rows {
+                for j in 0..n_targets {
+                    values[i * n_targets + j] = t.cells[i * t.n_cols + m + j];
+                }
+            }
+            Targets::Regression { values, n_targets }
+        }
+        other => return Err(Box::new(CsvError(format!("unknown task {other:?}")))),
+    };
+    Ok(Dataset::from_row_major(t.n_rows, m, &rows, targets))
+}
+
+/// Write a dataset to CSV (features then targets), for `gen-data`.
+pub fn write_dataset(path: &Path, ds: &Dataset) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let d = ds.n_outputs();
+    // header
+    for j in 0..ds.n_features {
+        write!(w, "f{j},")?;
+    }
+    match &ds.targets {
+        Targets::Multiclass { .. } => writeln!(w, "label")?,
+        _ => {
+            for j in 0..d {
+                write!(w, "y{j}{}", if j + 1 == d { "\n" } else { "," })?;
+            }
+        }
+    }
+    for i in 0..ds.n_rows {
+        for j in 0..ds.n_features {
+            write!(w, "{},", ds.value(i, j))?;
+        }
+        match &ds.targets {
+            Targets::Multiclass { labels, .. } => writeln!(w, "{}", labels[i])?,
+            Targets::Multilabel { labels, n_labels } => {
+                for j in 0..*n_labels {
+                    write!(
+                        w,
+                        "{}{}",
+                        labels[i * n_labels + j],
+                        if j + 1 == *n_labels { "\n".to_string() } else { ",".to_string() }
+                    )?;
+                }
+            }
+            Targets::Regression { values, n_targets } => {
+                for j in 0..*n_targets {
+                    write!(
+                        w,
+                        "{}{}",
+                        values[i * n_targets + j],
+                        if j + 1 == *n_targets { "\n".to_string() } else { ",".to_string() }
+                    )?;
+                }
+            }
+        }
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_multiclass, FeatureSpec};
+
+    #[test]
+    fn roundtrip_multiclass() {
+        let ds = make_multiclass(50, FeatureSpec::guyon(5), 3, 1.0, 1);
+        let dir = std::env::temp_dir().join("sb_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mc.csv");
+        write_dataset(&path, &ds).unwrap();
+        let back = load_dataset(&path, "multiclass", 3).unwrap();
+        assert_eq!(back.n_rows, 50);
+        assert_eq!(back.n_features, 5);
+        assert_eq!(back.n_outputs(), 3);
+        for i in 0..50 {
+            for f in 0..5 {
+                assert!((back.value(i, f) - ds.value(i, f)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn parses_nan_and_empty() {
+        let dir = std::env::temp_dir().join("sb_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("nan.csv");
+        std::fs::write(&path, "a,b,y\n1.0,,0\nnan,2.0,1\n").unwrap();
+        let ds = load_dataset(&path, "multiclass", 2).unwrap();
+        assert!(ds.value(0, 1).is_nan());
+        assert!(ds.value(1, 0).is_nan());
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let dir = std::env::temp_dir().join("sb_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "1,2,3\n1,2\n").unwrap();
+        assert!(read_table(&path).is_err());
+    }
+
+    #[test]
+    fn header_detected() {
+        let dir = std::env::temp_dir().join("sb_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hdr.csv");
+        std::fs::write(&path, "x,y\n1,2\n3,4\n").unwrap();
+        let t = read_table(&path).unwrap();
+        assert_eq!(t.n_rows, 2);
+        assert!(t.header.is_some());
+    }
+}

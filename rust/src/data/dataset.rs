@@ -1,0 +1,200 @@
+//! In-memory dataset representation.
+//!
+//! Features are stored column-major (`f * n + i`), mirroring Py-Boost's
+//! device layout: binning, histogram building, and split application all
+//! stream one feature column at a time, so column-major keeps the hot
+//! loops sequential. Targets cover the paper's three task families.
+
+/// Task targets. `d` below is the model's output dimension.
+#[derive(Clone, Debug)]
+pub enum Targets {
+    /// Class index per row; `d` = number of classes.
+    Multiclass { labels: Vec<u32>, n_classes: usize },
+    /// Row-major n x d {0,1} indicator matrix.
+    Multilabel { labels: Vec<f32>, n_labels: usize },
+    /// Row-major n x d real targets.
+    Regression { values: Vec<f32>, n_targets: usize },
+}
+
+impl Targets {
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            Targets::Multiclass { n_classes, .. } => *n_classes,
+            Targets::Multilabel { n_labels, .. } => *n_labels,
+            Targets::Regression { n_targets, .. } => *n_targets,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Targets::Multiclass { labels, .. } => labels.len(),
+            Targets::Multilabel { labels, n_labels } => {
+                if *n_labels == 0 { 0 } else { labels.len() / n_labels }
+            }
+            Targets::Regression { values, n_targets } => {
+                if *n_targets == 0 { 0 } else { values.len() / n_targets }
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Gather a row subset (by index) into a new Targets of the same kind.
+    pub fn gather(&self, rows: &[u32]) -> Targets {
+        match self {
+            Targets::Multiclass { labels, n_classes } => Targets::Multiclass {
+                labels: rows.iter().map(|&i| labels[i as usize]).collect(),
+                n_classes: *n_classes,
+            },
+            Targets::Multilabel { labels, n_labels } => {
+                let d = *n_labels;
+                let mut out = Vec::with_capacity(rows.len() * d);
+                for &i in rows {
+                    let i = i as usize;
+                    out.extend_from_slice(&labels[i * d..(i + 1) * d]);
+                }
+                Targets::Multilabel { labels: out, n_labels: d }
+            }
+            Targets::Regression { values, n_targets } => {
+                let d = *n_targets;
+                let mut out = Vec::with_capacity(rows.len() * d);
+                for &i in rows {
+                    let i = i as usize;
+                    out.extend_from_slice(&values[i * d..(i + 1) * d]);
+                }
+                Targets::Regression { values: out, n_targets: d }
+            }
+        }
+    }
+}
+
+/// Dense numeric dataset (numeric features only — Py-Boost's own stated
+/// limitation, Appendix B.1; NaN is allowed and binned to bin 0).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n_rows: usize,
+    pub n_features: usize,
+    /// Column-major: features[f * n_rows + i].
+    pub features: Vec<f32>,
+    pub targets: Targets,
+}
+
+impl Dataset {
+    pub fn new(n_rows: usize, n_features: usize, features: Vec<f32>, targets: Targets) -> Dataset {
+        assert_eq!(features.len(), n_rows * n_features, "feature buffer size");
+        assert_eq!(targets.len(), n_rows, "targets/rows mismatch");
+        Dataset { n_rows, n_features, features, targets }
+    }
+
+    /// Build from a row-major buffer (as loaded from CSV).
+    pub fn from_row_major(
+        n_rows: usize,
+        n_features: usize,
+        rows: &[f32],
+        targets: Targets,
+    ) -> Dataset {
+        assert_eq!(rows.len(), n_rows * n_features);
+        let mut cols = vec![0.0f32; rows.len()];
+        for i in 0..n_rows {
+            for f in 0..n_features {
+                cols[f * n_rows + i] = rows[i * n_features + f];
+            }
+        }
+        Dataset::new(n_rows, n_features, cols, targets)
+    }
+
+    #[inline]
+    pub fn column(&self, f: usize) -> &[f32] {
+        &self.features[f * self.n_rows..(f + 1) * self.n_rows]
+    }
+
+    #[inline]
+    pub fn value(&self, row: usize, f: usize) -> f32 {
+        self.features[f * self.n_rows + row]
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.targets.n_outputs()
+    }
+
+    /// Row subset as a new dataset (used by CV and train/test splits).
+    pub fn gather(&self, rows: &[u32]) -> Dataset {
+        let n = rows.len();
+        let mut feats = vec![0.0f32; n * self.n_features];
+        for f in 0..self.n_features {
+            let src = self.column(f);
+            let dst = &mut feats[f * n..(f + 1) * n];
+            for (j, &i) in rows.iter().enumerate() {
+                dst[j] = src[i as usize];
+            }
+        }
+        Dataset::new(n, self.n_features, feats, self.targets.gather(rows))
+    }
+
+    /// One row's feature values (row-major order), for prediction APIs.
+    pub fn row(&self, i: usize) -> Vec<f32> {
+        (0..self.n_features).map(|f| self.value(i, f)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        // rows: [1,10], [2,20], [3,30]
+        Dataset::from_row_major(
+            3,
+            2,
+            &[1.0, 10.0, 2.0, 20.0, 3.0, 30.0],
+            Targets::Multiclass { labels: vec![0, 1, 0], n_classes: 2 },
+        )
+    }
+
+    #[test]
+    fn row_major_transposes() {
+        let d = toy();
+        assert_eq!(d.column(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(d.column(1), &[10.0, 20.0, 30.0]);
+        assert_eq!(d.value(1, 1), 20.0);
+        assert_eq!(d.row(2), vec![3.0, 30.0]);
+    }
+
+    #[test]
+    fn gather_subset() {
+        let d = toy();
+        let g = d.gather(&[2, 0]);
+        assert_eq!(g.n_rows, 2);
+        assert_eq!(g.column(0), &[3.0, 1.0]);
+        match g.targets {
+            Targets::Multiclass { ref labels, .. } => assert_eq!(labels, &vec![0, 0]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn gather_multilabel_rows() {
+        let t = Targets::Multilabel { labels: vec![1., 0., 0., 1., 1., 1.], n_labels: 2 };
+        let g = t.gather(&[2, 1]);
+        match g {
+            Targets::Multilabel { labels, .. } => assert_eq!(labels, vec![1., 1., 0., 1.]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_mismatch_panics() {
+        Dataset::new(3, 2, vec![0.0; 5], Targets::Regression { values: vec![0.0; 3], n_targets: 1 });
+    }
+
+    #[test]
+    fn outputs_dimension() {
+        assert_eq!(toy().n_outputs(), 2);
+        let t = Targets::Regression { values: vec![0.0; 12], n_targets: 4 };
+        assert_eq!(t.n_outputs(), 4);
+        assert_eq!(t.len(), 3);
+    }
+}

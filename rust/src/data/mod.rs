@@ -1,0 +1,12 @@
+//! Data substrate: dataset container, quantile binning, synthetic
+//! workload generators (paper-dataset profiles), CSV I/O, and CV splits.
+
+pub mod binning;
+pub mod csv;
+pub mod dataset;
+pub mod profiles;
+pub mod split;
+pub mod synthetic;
+
+pub use binning::BinnedDataset;
+pub use dataset::{Dataset, Targets};

@@ -1,0 +1,113 @@
+//! Synthetic stand-ins for the paper's evaluation datasets.
+//!
+//! Each profile records the real dataset's shape (Table 5 / Appendix B.6)
+//! and a CPU-budget scale factor for rows (and, for the very wide MoA /
+//! Delicious / MNIST-family sets, features). The generators keep the
+//! output dimension `d` exact — d is the variable the paper's claims are
+//! about — and preserve task type and rough n/m ratios. See DESIGN.md
+//! section Substitutions.
+
+use crate::data::dataset::Dataset;
+use crate::data::synthetic::{make_multiclass, make_multilabel, make_multitask, FeatureSpec};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Multiclass,
+    Multilabel,
+    Multitask,
+}
+
+/// A named dataset profile.
+#[derive(Clone, Copy, Debug)]
+pub struct Profile {
+    pub name: &'static str,
+    pub task: TaskKind,
+    /// the real dataset's shape (rows, features, outputs)
+    pub paper_rows: usize,
+    pub paper_features: usize,
+    pub outputs: usize,
+    /// scaled shape used by default in this repo's benches
+    pub rows: usize,
+    pub features: usize,
+    /// latent rank for multilabel/multitask (inter-output correlation)
+    pub rank: usize,
+}
+
+/// Table 5 datasets (the paper's main evaluation).
+pub const MAIN: [Profile; 9] = [
+    Profile { name: "otto", task: TaskKind::Multiclass, paper_rows: 61_878, paper_features: 93, outputs: 9, rows: 6000, features: 93, rank: 0 },
+    Profile { name: "sf-crime", task: TaskKind::Multiclass, paper_rows: 878_049, paper_features: 10, outputs: 39, rows: 8000, features: 10, rank: 0 },
+    Profile { name: "helena", task: TaskKind::Multiclass, paper_rows: 65_196, paper_features: 27, outputs: 100, rows: 6000, features: 27, rank: 0 },
+    Profile { name: "dionis", task: TaskKind::Multiclass, paper_rows: 416_188, paper_features: 60, outputs: 355, rows: 6000, features: 60, rank: 0 },
+    Profile { name: "mediamill", task: TaskKind::Multilabel, paper_rows: 43_907, paper_features: 120, outputs: 101, rows: 4000, features: 120, rank: 8 },
+    Profile { name: "moa", task: TaskKind::Multilabel, paper_rows: 23_814, paper_features: 876, outputs: 206, rows: 2000, features: 220, rank: 12 },
+    Profile { name: "delicious", task: TaskKind::Multilabel, paper_rows: 16_105, paper_features: 500, outputs: 983, rows: 1500, features: 125, rank: 16 },
+    Profile { name: "rf1", task: TaskKind::Multitask, paper_rows: 9_125, paper_features: 64, outputs: 8, rows: 4000, features: 64, rank: 3 },
+    Profile { name: "scm20d", task: TaskKind::Multitask, paper_rows: 8_966, paper_features: 61, outputs: 16, rows: 4000, features: 61, rank: 4 },
+];
+
+/// Appendix B.6 datasets (the GBDT-MO comparison).
+pub const GBDTMO: [Profile; 4] = [
+    Profile { name: "mnist", task: TaskKind::Multiclass, paper_rows: 70_000, paper_features: 784, outputs: 10, rows: 4000, features: 196, rank: 0 },
+    Profile { name: "caltech", task: TaskKind::Multiclass, paper_rows: 9_144, paper_features: 324, outputs: 101, rows: 2000, features: 162, rank: 0 },
+    Profile { name: "nus-wide", task: TaskKind::Multilabel, paper_rows: 269_648, paper_features: 128, outputs: 81, rows: 3000, features: 128, rank: 8 },
+    Profile { name: "mnist-reg", task: TaskKind::Multitask, paper_rows: 70_000, paper_features: 392, outputs: 24, rows: 3000, features: 98, rank: 6 },
+];
+
+impl Profile {
+    pub fn by_name(name: &str) -> Option<Profile> {
+        MAIN.iter().chain(GBDTMO.iter()).find(|p| p.name == name).copied()
+    }
+
+    /// Generate the scaled synthetic dataset for this profile.
+    pub fn generate(&self, seed: u64) -> Dataset {
+        self.generate_sized(self.rows, seed)
+    }
+
+    /// Generate with an explicit row count (benches shrink further).
+    pub fn generate_sized(&self, rows: usize, seed: u64) -> Dataset {
+        let spec = FeatureSpec::guyon(self.features);
+        match self.task {
+            TaskKind::Multiclass => make_multiclass(rows, spec, self.outputs, 1.6, seed),
+            TaskKind::Multilabel => make_multilabel(rows, spec, self.outputs, self.rank, seed),
+            TaskKind::Multitask => make_multitask(rows, spec, self.outputs, self.rank, 0.3, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Targets;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Profile::by_name("otto").unwrap().outputs, 9);
+        assert_eq!(Profile::by_name("mnist").unwrap().outputs, 10);
+        assert!(Profile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_profiles_generate() {
+        for p in MAIN.iter().chain(GBDTMO.iter()) {
+            let ds = p.generate_sized(200, 1);
+            assert_eq!(ds.n_rows, 200, "{}", p.name);
+            assert_eq!(ds.n_features, p.features, "{}", p.name);
+            assert_eq!(ds.n_outputs(), p.outputs, "{}", p.name);
+            let ok = matches!(
+                (&ds.targets, p.task),
+                (Targets::Multiclass { .. }, TaskKind::Multiclass)
+                    | (Targets::Multilabel { .. }, TaskKind::Multilabel)
+                    | (Targets::Regression { .. }, TaskKind::Multitask)
+            );
+            assert!(ok, "task kind mismatch for {}", p.name);
+        }
+    }
+
+    #[test]
+    fn output_dims_match_paper() {
+        // d is the variable the paper's claims are about: never scale it.
+        let d: Vec<usize> = MAIN.iter().map(|p| p.outputs).collect();
+        assert_eq!(d, vec![9, 39, 100, 355, 101, 206, 983, 8, 16]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Train/test splitting and k-fold cross-validation (experiment design of
+//! Appendix B.2: 80/20 split, then 5-fold CV on the train set with the
+//! validation fold driving early stopping).
+
+use crate::data::dataset::Dataset;
+use crate::util::rng::Rng;
+
+/// Random row split into (train, test) with `test_frac` in the test set.
+pub fn train_test_split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut rng = Rng::new(seed);
+    let mut idx: Vec<u32> = (0..ds.n_rows as u32).collect();
+    rng.shuffle(&mut idx);
+    let n_test = ((ds.n_rows as f64) * test_frac).round() as usize;
+    let n_test = n_test.clamp(1, ds.n_rows - 1);
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    (ds.gather(train_idx), ds.gather(test_idx))
+}
+
+/// Index folds for k-fold CV. Returns `k` (train_rows, valid_rows) pairs.
+pub fn kfold_indices(n: usize, k: usize, seed: u64) -> Vec<(Vec<u32>, Vec<u32>)> {
+    assert!(k >= 2 && k <= n, "need 2 <= k <= n");
+    let mut rng = Rng::new(seed);
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut idx);
+    let mut folds = Vec::with_capacity(k);
+    let base = n / k;
+    let extra = n % k;
+    let mut start = 0usize;
+    for f in 0..k {
+        let len = base + usize::from(f < extra);
+        let valid: Vec<u32> = idx[start..start + len].to_vec();
+        let mut train = Vec::with_capacity(n - len);
+        train.extend_from_slice(&idx[..start]);
+        train.extend_from_slice(&idx[start + len..]);
+        folds.push((train, valid));
+        start += len;
+    }
+    folds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Targets;
+    use crate::util::proptest::run_prop;
+
+    fn toy(n: usize) -> Dataset {
+        Dataset::new(
+            n,
+            1,
+            (0..n).map(|i| i as f32).collect(),
+            Targets::Regression { values: vec![0.0; n], n_targets: 1 },
+        )
+    }
+
+    #[test]
+    fn split_sizes() {
+        let (tr, te) = train_test_split(&toy(100), 0.2, 0);
+        assert_eq!(tr.n_rows, 80);
+        assert_eq!(te.n_rows, 20);
+    }
+
+    #[test]
+    fn split_is_partition() {
+        let (tr, te) = train_test_split(&toy(50), 0.3, 1);
+        let mut all: Vec<i64> = tr
+            .column(0)
+            .iter()
+            .chain(te.column(0).iter())
+            .map(|&x| x as i64)
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..50).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn kfold_partitions_everything() {
+        run_prop("kfold partition", 20, |g| {
+            let n = g.usize_in(10, 200);
+            let k = g.usize_in(2, 5.min(n));
+            let folds = kfold_indices(n, k, g.seed);
+            assert_eq!(folds.len(), k);
+            let mut all_valid: Vec<u32> = Vec::new();
+            for (tr, va) in &folds {
+                assert_eq!(tr.len() + va.len(), n);
+                // disjoint within a fold
+                let mut t = tr.clone();
+                t.extend_from_slice(va);
+                t.sort_unstable();
+                t.dedup();
+                assert_eq!(t.len(), n);
+                all_valid.extend_from_slice(va);
+            }
+            // valid folds tile [0, n)
+            all_valid.sort_unstable();
+            assert_eq!(all_valid, (0..n as u32).collect::<Vec<u32>>());
+        });
+    }
+
+    #[test]
+    fn fold_sizes_balanced() {
+        let folds = kfold_indices(103, 5, 7);
+        let sizes: Vec<usize> = folds.iter().map(|(_, v)| v.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        assert!(sizes.iter().all(|&s| s == 20 || s == 21));
+    }
+
+    #[test]
+    #[should_panic]
+    fn kfold_rejects_k1() {
+        kfold_indices(10, 1, 0);
+    }
+}

@@ -1,0 +1,322 @@
+//! Synthetic dataset generators.
+//!
+//! The paper evaluates on 13 public datasets (Kaggle/OpenML/Mulan) we
+//! cannot download in this environment; DESIGN.md section Substitutions
+//! documents the replacement. These generators produce workloads with the
+//! same *structural* parameters that drive the paper's effects: sample
+//! count n, feature count m (informative / linear-combination / redundant
+//! split, following Guyon's `make_classification` design used by the
+//! paper's own Appendix B.7 synthetic experiment), output dimension d,
+//! and inter-output correlation (cluster structure for multiclass, latent
+//! low-rank factors for multilabel/multitask — which is exactly when
+//! sketching can work: G has small stable rank).
+
+use crate::data::dataset::{Dataset, Targets};
+use crate::util::rng::Rng;
+
+/// Feature-block design shared by all generators (Guyon-style).
+#[derive(Clone, Copy, Debug)]
+pub struct FeatureSpec {
+    pub n_informative: usize,
+    /// features that are random linear combinations of informative ones
+    pub n_linear: usize,
+    /// pure-noise features
+    pub n_redundant: usize,
+}
+
+impl FeatureSpec {
+    pub fn total(&self) -> usize {
+        self.n_informative + self.n_linear + self.n_redundant
+    }
+
+    /// The paper's B.7 split for m=100: 10 informative, 20 linear, 70 noise.
+    pub fn guyon(m: usize) -> FeatureSpec {
+        let n_informative = (m / 10).max(2);
+        let n_linear = (m / 5).min(m - n_informative);
+        FeatureSpec {
+            n_informative,
+            n_linear,
+            n_redundant: m - n_informative - n_linear,
+        }
+    }
+}
+
+/// Fill the linear-combination and noise blocks given the informative
+/// block; returns a column-major feature buffer of spec.total() columns.
+fn expand_features(
+    inf: &[f32], // column-major n x n_informative
+    n: usize,
+    spec: FeatureSpec,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let m = spec.total();
+    let mut cols = vec![0.0f32; n * m];
+    cols[..n * spec.n_informative].copy_from_slice(inf);
+    // linear combinations
+    for j in 0..spec.n_linear {
+        let mut w = vec![0.0f32; spec.n_informative];
+        rng.fill_gaussian(&mut w, 1.0);
+        let dst_off = (spec.n_informative + j) * n;
+        for f in 0..spec.n_informative {
+            let src = &inf[f * n..(f + 1) * n];
+            let wf = w[f];
+            for i in 0..n {
+                cols[dst_off + i] += wf * src[i];
+            }
+        }
+    }
+    // noise
+    let noise_off = (spec.n_informative + spec.n_linear) * n;
+    rng.fill_gaussian(&mut cols[noise_off..], 1.0);
+    cols
+}
+
+/// Multiclass: class centroids at hypercube vertices + Gaussian scatter
+/// (the structure of Guyon's make_classification, as used in App. B.7).
+pub fn make_multiclass(
+    n: usize,
+    spec: FeatureSpec,
+    n_classes: usize,
+    class_sep: f32,
+    seed: u64,
+) -> Dataset {
+    assert!(n_classes >= 2);
+    let mut rng = Rng::new(seed);
+    let p = spec.n_informative;
+    // centroid per class: random sign pattern scaled by class_sep
+    let mut centroids = vec![0.0f32; n_classes * p];
+    for c in &mut centroids {
+        *c = if rng.next_u64() & 1 == 0 { class_sep } else { -class_sep };
+    }
+    // make centroids distinct even at small p by adding gaussian offsets
+    for c in centroids.iter_mut() {
+        *c += (rng.next_gaussian() * 0.5) as f32;
+    }
+    let mut labels = vec![0u32; n];
+    let mut inf = vec![0.0f32; n * p];
+    for i in 0..n {
+        let y = rng.next_below(n_classes) as u32;
+        labels[i] = y;
+        for f in 0..p {
+            inf[f * n + i] =
+                centroids[y as usize * p + f] + (rng.next_gaussian()) as f32;
+        }
+    }
+    let cols = expand_features(&inf, n, spec, &mut rng);
+    Dataset::new(n, spec.total(), cols, Targets::Multiclass { labels, n_classes })
+}
+
+/// Multilabel: latent low-rank factors drive correlated Bernoulli labels.
+/// `rank` controls the stable rank of the induced gradient matrix — small
+/// rank is the regime where sketching provably wins (Props. A.4/A.5).
+pub fn make_multilabel(
+    n: usize,
+    spec: FeatureSpec,
+    n_labels: usize,
+    rank: usize,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let p = spec.n_informative;
+    let r = rank.max(1).min(n_labels);
+    // latent factors z in R^r; features see z through A; labels through W
+    let mut a = vec![0.0f32; r * p];
+    rng.fill_gaussian(&mut a, 1.0);
+    let mut w = vec![0.0f32; r * n_labels];
+    rng.fill_gaussian(&mut w, 1.5);
+    let mut bias = vec![0.0f32; n_labels];
+    for b in bias.iter_mut() {
+        *b = (rng.next_gaussian() * 0.5 - 1.0) as f32; // sparse-ish labels
+    }
+    let mut labels = vec![0.0f32; n * n_labels];
+    let mut inf = vec![0.0f32; n * p];
+    let mut z = vec![0.0f32; r];
+    for i in 0..n {
+        rng.fill_gaussian(&mut z, 1.0);
+        for f in 0..p {
+            let mut v = 0.0f32;
+            for t in 0..r {
+                v += z[t] * a[t * p + f];
+            }
+            inf[f * n + i] = v + (rng.next_gaussian() * 0.3) as f32;
+        }
+        for l in 0..n_labels {
+            let mut logit = bias[l];
+            for t in 0..r {
+                logit += z[t] * w[t * n_labels + l];
+            }
+            let prob = 1.0 / (1.0 + (-logit as f64).exp());
+            labels[i * n_labels + l] = if rng.next_f64() < prob { 1.0 } else { 0.0 };
+        }
+    }
+    let cols = expand_features(&inf, n, spec, &mut rng);
+    Dataset::new(n, spec.total(), cols, Targets::Multilabel { labels, n_labels })
+}
+
+/// Multitask regression: targets are low-rank linear + sinusoidal maps of
+/// the informative features plus noise (nonlinearity gives trees work).
+pub fn make_multitask(
+    n: usize,
+    spec: FeatureSpec,
+    n_targets: usize,
+    rank: usize,
+    noise: f32,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let p = spec.n_informative;
+    let r = rank.max(1).min(n_targets);
+    let mut mix = vec![0.0f32; p * r]; // features -> latent
+    rng.fill_gaussian(&mut mix, 1.0);
+    let mut head = vec![0.0f32; r * n_targets]; // latent -> targets
+    rng.fill_gaussian(&mut head, 1.0);
+    let mut inf = vec![0.0f32; n * p];
+    rng.fill_gaussian(&mut inf, 1.0);
+    let mut values = vec![0.0f32; n * n_targets];
+    let mut lat = vec![0.0f32; r];
+    for i in 0..n {
+        for t in 0..r {
+            let mut v = 0.0f32;
+            for f in 0..p {
+                v += inf[f * n + i] * mix[f * r + t];
+            }
+            // bounded nonlinearity so trees (piecewise-constant) can fit it
+            lat[t] = v + (v * 0.7).sin();
+        }
+        for j in 0..n_targets {
+            let mut y = 0.0f32;
+            for t in 0..r {
+                y += lat[t] * head[t * n_targets + j];
+            }
+            values[i * n_targets + j] = y + (rng.next_gaussian() as f32) * noise;
+        }
+    }
+    let cols = expand_features(&inf, n, spec, &mut rng);
+    Dataset::new(n, spec.total(), cols, Targets::Regression { values, n_targets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guyon_spec_partitions() {
+        let s = FeatureSpec::guyon(100);
+        assert_eq!(s.total(), 100);
+        assert_eq!(s.n_informative, 10);
+        assert_eq!(s.n_linear, 20);
+        assert_eq!(s.n_redundant, 70);
+    }
+
+    #[test]
+    fn multiclass_shapes_and_label_range() {
+        let ds = make_multiclass(500, FeatureSpec::guyon(20), 7, 1.5, 1);
+        assert_eq!(ds.n_rows, 500);
+        assert_eq!(ds.n_features, 20);
+        match &ds.targets {
+            Targets::Multiclass { labels, n_classes } => {
+                assert_eq!(*n_classes, 7);
+                assert!(labels.iter().all(|&l| l < 7));
+                // all classes present at n=500
+                let mut seen = vec![false; 7];
+                for &l in labels {
+                    seen[l as usize] = true;
+                }
+                assert!(seen.iter().all(|&s| s));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn multiclass_is_learnable_signal() {
+        // informative features must separate classes: per-class means of
+        // feature 0 should differ substantially vs. within-class std.
+        let ds = make_multiclass(2000, FeatureSpec::guyon(10), 3, 2.0, 3);
+        let labels = match &ds.targets {
+            Targets::Multiclass { labels, .. } => labels.clone(),
+            _ => panic!(),
+        };
+        let col = ds.column(0);
+        let mut sums = [0.0f64; 3];
+        let mut counts = [0usize; 3];
+        for i in 0..ds.n_rows {
+            sums[labels[i] as usize] += col[i] as f64;
+            counts[labels[i] as usize] += 1;
+        }
+        let means: Vec<f64> = (0..3).map(|c| sums[c] / counts[c] as f64).collect();
+        let spread = means
+            .iter()
+            .fold(f64::MIN, |a, &b| a.max(b))
+            - means.iter().fold(f64::MAX, |a, &b| a.min(b));
+        assert!(spread > 0.5, "classes not separated: {means:?}");
+    }
+
+    #[test]
+    fn multilabel_binary_and_correlated() {
+        let ds = make_multilabel(800, FeatureSpec::guyon(15), 12, 3, 5);
+        match &ds.targets {
+            Targets::Multilabel { labels, n_labels } => {
+                assert_eq!(*n_labels, 12);
+                assert!(labels.iter().all(|&v| v == 0.0 || v == 1.0));
+                let n = 800;
+                // some label must be on at least sometimes
+                let on: f32 = labels.iter().sum();
+                assert!(on > 0.0 && (on as usize) < n * 12);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn multitask_low_rank_targets_correlate() {
+        let ds = make_multitask(1000, FeatureSpec::guyon(10), 8, 2, 0.05, 7);
+        let values = match &ds.targets {
+            Targets::Regression { values, .. } => values.clone(),
+            _ => panic!(),
+        };
+        // rank-2 structure: gram matrix of targets must be rank-deficient;
+        // check total variance vs top-2 crude proxy: pairwise |corr| high
+        // for at least one pair.
+        let n = 1000usize;
+        let d = 8usize;
+        let col = |j: usize| -> Vec<f32> { (0..n).map(|i| values[i * d + j]).collect() };
+        let c0 = col(0);
+        let mut best = 0.0f64;
+        for j in 1..d {
+            let cj = col(j);
+            let corr = correlation(&c0, &cj).abs();
+            best = best.max(corr);
+        }
+        assert!(best > 0.5, "no correlated target pair: best |corr| = {best}");
+    }
+
+    fn correlation(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let (mut sab, mut saa, mut sbb) = (0.0, 0.0, 0.0);
+        for i in 0..a.len() {
+            let da = a[i] as f64 - ma;
+            let db = b[i] as f64 - mb;
+            sab += da * db;
+            saa += da * da;
+            sbb += db * db;
+        }
+        sab / (saa.sqrt() * sbb.sqrt() + 1e-12)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = make_multiclass(100, FeatureSpec::guyon(10), 3, 1.0, 42);
+        let b = make_multiclass(100, FeatureSpec::guyon(10), 3, 1.0, 42);
+        assert_eq!(a.features, b.features);
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = make_multiclass(100, FeatureSpec::guyon(10), 3, 1.0, 1);
+        let b = make_multiclass(100, FeatureSpec::guyon(10), 3, 1.0, 2);
+        assert_ne!(a.features, b.features);
+    }
+}

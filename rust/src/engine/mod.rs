@@ -1,0 +1,137 @@
+//! Compute engines: the numeric ops of one boosting round behind a trait.
+//!
+//! Two interchangeable backends implement [`ComputeEngine`]:
+//!
+//! * [`NativeEngine`] — pure rust, cache-tuned; the performance path.
+//! * [`XlaEngine`] — executes the AOT-compiled HLO artifacts (lowered from
+//!   the L2 JAX graph with its L1 Pallas kernels) on the PJRT CPU client.
+//!
+//! Both backends are required to be numerically equivalent (integration
+//! tests in `rust/tests/` cross-check them); `benches/hot_paths.rs`
+//! compares their throughput. The tree builder and trainer are written
+//! against the trait only.
+//!
+//! ## Histogram tensor layout
+//!
+//! `hist[((slot * m + f) * bins + b) * k1 + c]` where `slot` indexes the
+//! tree level's frontier nodes, `f` the feature, `b` the bin, and `c` the
+//! channel. Channels are `[g_0..g_k)` sketched-gradient sums, then (in
+//! `HessL2` mode) `[h_0..h_k)` hessian sums, then one count channel.
+
+pub mod native;
+pub mod xla;
+
+pub use native::NativeEngine;
+pub use xla::XlaEngine;
+
+use crate::boosting::losses::LossKind;
+use crate::data::binning::BinnedDataset;
+use crate::data::dataset::Targets;
+
+/// Split-scoring denominator (paper section 3 "best practices").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreMode {
+    /// S(R) = sum_j (sum g)^2 / (|R| + lambda) — CatBoost/SketchBoost
+    /// regime: hessians ignored during the search.
+    CountL2,
+    /// S(R) = sum_j (sum g)^2 / (sum h + lambda) — GBDT-MO regime:
+    /// hessian histograms double the accumulation cost.
+    HessL2,
+}
+
+impl ScoreMode {
+    /// Number of histogram channels for `k` scoring outputs.
+    pub fn channels(&self, k: usize) -> usize {
+        match self {
+            ScoreMode::CountL2 => k + 1,
+            ScoreMode::HessL2 => 2 * k + 1,
+        }
+    }
+}
+
+/// Per-leaf sums of full-dimensional derivatives, for exact leaf values.
+pub struct LeafSums {
+    /// row-major [n_leaves, d]
+    pub gsum: Vec<f32>,
+    pub hsum: Vec<f32>,
+    pub count: Vec<f32>,
+}
+
+/// The numeric core of one boosting round. Implementations may keep
+/// internal state (compiled executables, scratch buffers).
+pub trait ComputeEngine {
+    fn name(&self) -> &'static str;
+
+    /// Loss derivatives (paper eq. 2, diagonal hessian) for all rows.
+    /// `preds` is row-major [n, d]; outputs are written into g/h.
+    fn grad_hess(
+        &mut self,
+        loss: LossKind,
+        preds: &[f32],
+        targets: &Targets,
+        g: &mut [f32],
+        h: &mut [f32],
+    );
+
+    /// Random Projection sketch: out = g_mat @ proj, shapes [n,d]@[d,k].
+    fn sketch_project(
+        &mut self,
+        g_mat: &[f32],
+        n: usize,
+        d: usize,
+        proj: &[f32],
+        k: usize,
+        out: &mut [f32],
+    );
+
+    /// Accumulate histograms for `rows` into `out` (layout above).
+    /// `slot_of_row` maps *global* row index -> frontier slot; `chan` is
+    /// the row-major [n, k1] channel matrix (trailing channel must be the
+    /// valid/count indicator).
+    fn histograms(
+        &mut self,
+        binned: &BinnedDataset,
+        rows: &[u32],
+        slot_of_row: &[u32],
+        chan: &[f32],
+        k1: usize,
+        n_slots: usize,
+        out: &mut [f32],
+    );
+
+    /// Split scores S(left)+S(right) for every (slot, feature, bin).
+    /// Returns [n_slots * m * bins]; candidate b means "left = bins <= b".
+    fn split_gains(
+        &mut self,
+        hist: &[f32],
+        n_slots: usize,
+        m: usize,
+        bins: usize,
+        k1: usize,
+        lam: f32,
+        mode: ScoreMode,
+    ) -> Vec<f32>;
+
+    /// Per-leaf sums of the full gradient/hessian matrices over `rows`.
+    fn leaf_sums(
+        &mut self,
+        rows: &[u32],
+        leaf_of_row: &[u32],
+        g: &[f32],
+        h: &[f32],
+        d: usize,
+        n_leaves: usize,
+    ) -> LeafSums;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_counts() {
+        assert_eq!(ScoreMode::CountL2.channels(5), 6);
+        assert_eq!(ScoreMode::HessL2.channels(5), 11);
+        assert_eq!(ScoreMode::CountL2.channels(1), 2);
+    }
+}

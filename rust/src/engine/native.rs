@@ -1,0 +1,623 @@
+//! Pure-rust compute engine — the performance path.
+//!
+//! Numerics are defined by `python/compile/kernels/ref.py`; this file
+//! reimplements them with cache-conscious loops. The integration tests
+//! cross-check every op against the XLA artifacts compiled from the JAX
+//! reference, so drift is caught mechanically.
+
+use crate::boosting::losses::LossKind;
+use crate::data::binning::BinnedDataset;
+use crate::data::dataset::Targets;
+
+use super::{ComputeEngine, LeafSums, ScoreMode};
+
+/// Pure-rust engine. Stateless apart from scratch reuse.
+#[derive(Default)]
+pub struct NativeEngine {
+    /// scratch: per-level gathered channel rows (see `histograms`)
+    scratch_chan: Vec<f32>,
+}
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine::default()
+    }
+}
+
+impl ComputeEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn grad_hess(
+        &mut self,
+        loss: LossKind,
+        preds: &[f32],
+        targets: &Targets,
+        g: &mut [f32],
+        h: &mut [f32],
+    ) {
+        match (loss, targets) {
+            (LossKind::MulticlassCE, Targets::Multiclass { labels, n_classes }) => {
+                let d = *n_classes;
+                let n = labels.len();
+                debug_assert_eq!(preds.len(), n * d);
+                for i in 0..n {
+                    let row = &preds[i * d..(i + 1) * d];
+                    let gi = &mut g[i * d..(i + 1) * d];
+                    let hi = &mut h[i * d..(i + 1) * d];
+                    // numerically stable softmax
+                    let mut mx = f32::MIN;
+                    for &z in row {
+                        mx = mx.max(z);
+                    }
+                    let mut sum = 0.0f32;
+                    for (j, &z) in row.iter().enumerate() {
+                        let e = (z - mx).exp();
+                        gi[j] = e;
+                        sum += e;
+                    }
+                    let inv = 1.0 / sum;
+                    for j in 0..d {
+                        let p = gi[j] * inv;
+                        gi[j] = p;
+                        hi[j] = p * (1.0 - p);
+                    }
+                    gi[labels[i] as usize] -= 1.0;
+                }
+            }
+            (LossKind::BCE, Targets::Multilabel { labels, n_labels }) => {
+                let total = labels.len();
+                debug_assert_eq!(preds.len(), total);
+                debug_assert_eq!(total % n_labels, 0);
+                for i in 0..total {
+                    let p = 1.0 / (1.0 + (-preds[i]).exp());
+                    g[i] = p - labels[i];
+                    h[i] = p * (1.0 - p);
+                }
+            }
+            (LossKind::MSE, Targets::Regression { values, .. }) => {
+                debug_assert_eq!(preds.len(), values.len());
+                for i in 0..values.len() {
+                    g[i] = preds[i] - values[i];
+                    h[i] = 1.0;
+                }
+            }
+            (l, t) => panic!("loss {:?} incompatible with targets {:?}", l, kind_name(t)),
+        }
+    }
+
+    fn sketch_project(
+        &mut self,
+        g_mat: &[f32],
+        n: usize,
+        d: usize,
+        proj: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(g_mat.len(), n * d);
+        debug_assert_eq!(proj.len(), d * k);
+        debug_assert_eq!(out.len(), n * k);
+        // monomorphized accumulator-in-registers kernels for the paper's
+        // k grid; generic fallback otherwise (EXPERIMENTS.md §Perf)
+        match k {
+            1 => gemm_k::<1>(g_mat, n, d, proj, out),
+            2 => gemm_k::<2>(g_mat, n, d, proj, out),
+            5 => gemm_k::<5>(g_mat, n, d, proj, out),
+            10 => gemm_k::<10>(g_mat, n, d, proj, out),
+            20 => gemm_k::<20>(g_mat, n, d, proj, out),
+            _ => gemm_dyn(g_mat, n, d, proj, k, out),
+        }
+    }
+
+    fn histograms(
+        &mut self,
+        binned: &BinnedDataset,
+        rows: &[u32],
+        slot_of_row: &[u32],
+        chan: &[f32],
+        k1: usize,
+        n_slots: usize,
+        out: &mut [f32],
+    ) {
+        let n = binned.n_rows;
+        let m = binned.n_features;
+        let bins = binned.max_bins;
+        debug_assert_eq!(out.len(), n_slots * m * bins * k1);
+        debug_assert_eq!(chan.len(), n * k1);
+
+        // Gather channel rows and the per-row histogram slice base once
+        // into compact buffers so the per-feature pass streams
+        // sequentially instead of chasing `rows` indirection through the
+        // full [n, k1] matrix m times (perf log in EXPERIMENTS.md §Perf).
+        let nr = rows.len();
+        self.scratch_chan.clear();
+        self.scratch_chan.resize(nr * k1, 0.0);
+        let mut slot_base = Vec::with_capacity(nr);
+        let slice = m * bins * k1;
+        for (j, &r) in rows.iter().enumerate() {
+            let r = r as usize;
+            self.scratch_chan[j * k1..(j + 1) * k1]
+                .copy_from_slice(&chan[r * k1..(r + 1) * k1]);
+            slot_base.push(slot_of_row[r] as usize * slice);
+        }
+        let chan_g = &self.scratch_chan;
+
+        // monomorphize the common channel widths so the inner
+        // accumulation unrolls and vectorizes (k=1 scoring -> k1=2;
+        // k=5 default -> k1=6; HessL2 k=5 -> k1=11)
+        match k1 {
+            2 => hist_pass::<2>(binned, rows, &slot_base, chan_g, out),
+            3 => hist_pass::<3>(binned, rows, &slot_base, chan_g, out),
+            6 => hist_pass::<6>(binned, rows, &slot_base, chan_g, out),
+            11 => hist_pass::<11>(binned, rows, &slot_base, chan_g, out),
+            _ => hist_pass_dyn(binned, rows, &slot_base, chan_g, k1, out),
+        }
+    }
+
+    fn split_gains(
+        &mut self,
+        hist: &[f32],
+        n_slots: usize,
+        m: usize,
+        bins: usize,
+        k1: usize,
+        lam: f32,
+        mode: ScoreMode,
+    ) -> Vec<f32> {
+        let k = match mode {
+            ScoreMode::CountL2 => k1 - 1,
+            ScoreMode::HessL2 => (k1 - 1) / 2,
+        };
+        let mut gains = vec![0.0f32; n_slots * m * bins];
+        let mut acc_g = vec![0.0f64; k];
+        let mut acc_d: f64; // running denominator accumulator
+        for slot in 0..n_slots {
+            for f in 0..m {
+                let base = ((slot * m) + f) * bins * k1;
+                // totals
+                let mut tot_g = vec![0.0f64; k];
+                let mut tot_d = 0.0f64;
+                for b in 0..bins {
+                    let cell = &hist[base + b * k1..base + (b + 1) * k1];
+                    for c in 0..k {
+                        tot_g[c] += cell[c] as f64;
+                    }
+                    tot_d += denom_of(cell, k, k1, mode);
+                }
+                acc_g.iter_mut().for_each(|v| *v = 0.0);
+                acc_d = 0.0;
+                let gbase = (slot * m + f) * bins;
+                for b in 0..bins {
+                    let cell = &hist[base + b * k1..base + (b + 1) * k1];
+                    for c in 0..k {
+                        acc_g[c] += cell[c] as f64;
+                    }
+                    acc_d += denom_of(cell, k, k1, mode);
+                    let mut s_left = 0.0f64;
+                    let mut s_right = 0.0f64;
+                    for c in 0..k {
+                        let l = acc_g[c];
+                        let r = tot_g[c] - l;
+                        s_left += l * l;
+                        s_right += r * r;
+                    }
+                    s_left /= acc_d + lam as f64;
+                    s_right /= (tot_d - acc_d) + lam as f64;
+                    gains[gbase + b] = (s_left + s_right) as f32;
+                }
+            }
+        }
+        gains
+    }
+
+    fn leaf_sums(
+        &mut self,
+        rows: &[u32],
+        leaf_of_row: &[u32],
+        g: &[f32],
+        h: &[f32],
+        d: usize,
+        n_leaves: usize,
+    ) -> LeafSums {
+        let mut gsum = vec![0.0f32; n_leaves * d];
+        let mut hsum = vec![0.0f32; n_leaves * d];
+        let mut count = vec![0.0f32; n_leaves];
+        for &r in rows {
+            let r = r as usize;
+            let leaf = leaf_of_row[r] as usize;
+            debug_assert!(leaf < n_leaves);
+            count[leaf] += 1.0;
+            let gs = &mut gsum[leaf * d..(leaf + 1) * d];
+            let gr = &g[r * d..(r + 1) * d];
+            for c in 0..d {
+                gs[c] += gr[c];
+            }
+            let hs = &mut hsum[leaf * d..(leaf + 1) * d];
+            let hr = &h[r * d..(r + 1) * d];
+            for c in 0..d {
+                hs[c] += hr[c];
+            }
+        }
+        LeafSums { gsum, hsum, count }
+    }
+}
+
+/// Projection gemm with a compile-time k: the K accumulators live in
+/// registers across the full d-loop instead of round-tripping memory.
+fn gemm_k<const K: usize>(g_mat: &[f32], n: usize, d: usize, proj: &[f32], out: &mut [f32]) {
+    for i in 0..n {
+        let mut acc = [0.0f32; K];
+        let gi = &g_mat[i * d..(i + 1) * d];
+        for (j, &gv) in gi.iter().enumerate() {
+            let pj = &proj[j * K..j * K + K];
+            for c in 0..K {
+                acc[c] += gv * pj[c];
+            }
+        }
+        out[i * K..(i + 1) * K].copy_from_slice(&acc);
+    }
+}
+
+/// Generic projection gemm fallback.
+fn gemm_dyn(g_mat: &[f32], n: usize, d: usize, proj: &[f32], k: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..n {
+        let gi = &g_mat[i * d..(i + 1) * d];
+        let oi = &mut out[i * k..(i + 1) * k];
+        for (j, &gv) in gi.iter().enumerate() {
+            if gv == 0.0 {
+                continue;
+            }
+            let pj = &proj[j * k..(j + 1) * k];
+            for (o, &p) in oi.iter_mut().zip(pj.iter()) {
+                *o += gv * p;
+            }
+        }
+    }
+}
+
+/// One histogram pass with a compile-time channel width.
+fn hist_pass<const K1: usize>(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    slot_base: &[usize],
+    chan_g: &[f32],
+    out: &mut [f32],
+) {
+    let m = binned.n_features;
+    let bins = binned.max_bins;
+    for f in 0..m {
+        let col = binned.column(f);
+        let fbase = f * bins * K1;
+        for (j, &r) in rows.iter().enumerate() {
+            let b = unsafe { *col.get_unchecked(r as usize) } as usize;
+            let dst = slot_base[j] + fbase + b * K1;
+            let src = &chan_g[j * K1..j * K1 + K1];
+            let out_s = &mut out[dst..dst + K1];
+            for c in 0..K1 {
+                out_s[c] += src[c];
+            }
+        }
+    }
+}
+
+/// Fallback histogram pass for arbitrary channel widths (large-d Full
+/// runs hit this path); zip-iterated so the compiler elides bounds
+/// checks. (An explicit 8-wide blocked variant measured *slower* — see
+/// EXPERIMENTS.md §Perf iteration log.)
+fn hist_pass_dyn(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    slot_base: &[usize],
+    chan_g: &[f32],
+    k1: usize,
+    out: &mut [f32],
+) {
+    let m = binned.n_features;
+    let bins = binned.max_bins;
+    for f in 0..m {
+        let col = binned.column(f);
+        let fbase = f * bins * k1;
+        for (j, &r) in rows.iter().enumerate() {
+            let b = col[r as usize] as usize;
+            let dst = slot_base[j] + fbase + b * k1;
+            let src = &chan_g[j * k1..(j + 1) * k1];
+            let out_s = &mut out[dst..dst + k1];
+            for (o, &s) in out_s.iter_mut().zip(src.iter()) {
+                *o += s;
+            }
+        }
+    }
+}
+
+#[inline]
+fn denom_of(cell: &[f32], k: usize, k1: usize, mode: ScoreMode) -> f64 {
+    match mode {
+        // count channel
+        ScoreMode::CountL2 => cell[k1 - 1] as f64,
+        // GBDT-MO: sum of hessian channels (per-output denominators are
+        // approximated by the summed hessian, as GBDT-MO's shared-
+        // denominator formulation does)
+        ScoreMode::HessL2 => {
+            let mut s = 0.0f64;
+            for c in k..2 * k {
+                s += cell[c] as f64;
+            }
+            s
+        }
+    }
+}
+
+fn kind_name(t: &Targets) -> &'static str {
+    match t {
+        Targets::Multiclass { .. } => "multiclass",
+        Targets::Multilabel { .. } => "multilabel",
+        Targets::Regression { .. } => "regression",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::util::proptest::{assert_close, run_prop};
+    use crate::util::rng::Rng;
+
+    fn softmax_ref(row: &[f32]) -> Vec<f32> {
+        let mx = row.iter().fold(f32::MIN, |a, &b| a.max(b));
+        let e: Vec<f32> = row.iter().map(|&z| (z - mx).exp()).collect();
+        let s: f32 = e.iter().sum();
+        e.iter().map(|&x| x / s).collect()
+    }
+
+    #[test]
+    fn ce_grad_hess_matches_formula() {
+        let mut eng = NativeEngine::new();
+        let preds = vec![1.0f32, 2.0, 0.5, -1.0, 0.0, 3.0];
+        let t = Targets::Multiclass { labels: vec![2, 0], n_classes: 3 };
+        let mut g = vec![0.0f32; 6];
+        let mut h = vec![0.0f32; 6];
+        eng.grad_hess(LossKind::MulticlassCE, &preds, &t, &mut g, &mut h);
+        for i in 0..2 {
+            let p = softmax_ref(&preds[i * 3..(i + 1) * 3]);
+            for j in 0..3 {
+                let y = if (i == 0 && j == 2) || (i == 1 && j == 0) { 1.0 } else { 0.0 };
+                assert!((g[i * 3 + j] - (p[j] - y)).abs() < 1e-6);
+                assert!((h[i * 3 + j] - p[j] * (1.0 - p[j])).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn ce_gradient_rows_sum_to_zero() {
+        run_prop("ce grad sums to 0", 20, |gen| {
+            let n = gen.usize_in(1, 50);
+            let d = gen.usize_in(2, 20);
+            let preds = gen.vec_gaussian(n * d, 2.0);
+            let labels = gen.vec_u32_below(n, d);
+            let t = Targets::Multiclass { labels, n_classes: d };
+            let mut g = vec![0.0f32; n * d];
+            let mut h = vec![0.0f32; n * d];
+            NativeEngine::new().grad_hess(LossKind::MulticlassCE, &preds, &t, &mut g, &mut h);
+            for i in 0..n {
+                let s: f32 = g[i * d..(i + 1) * d].iter().sum();
+                assert!(s.abs() < 1e-4, "row {i} sums to {s}");
+            }
+            assert!(h.iter().all(|&x| x > 0.0 && x <= 0.25 + 1e-6));
+        });
+    }
+
+    #[test]
+    fn bce_and_mse_derivatives() {
+        let mut eng = NativeEngine::new();
+        let preds = vec![0.0f32, 2.0];
+        let t = Targets::Multilabel { labels: vec![1.0, 0.0], n_labels: 2 };
+        let mut g = vec![0.0f32; 2];
+        let mut h = vec![0.0f32; 2];
+        eng.grad_hess(LossKind::BCE, &preds, &t, &mut g, &mut h);
+        assert!((g[0] - (0.5 - 1.0)).abs() < 1e-6);
+        assert!((h[0] - 0.25).abs() < 1e-6);
+
+        let t = Targets::Regression { values: vec![1.0, -1.0], n_targets: 2 };
+        eng.grad_hess(LossKind::MSE, &[3.0, 1.0], &t, &mut g, &mut h);
+        assert_close(&g, &[2.0, 2.0], 1e-6, 1e-6);
+        assert_close(&h, &[1.0, 1.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn loss_target_mismatch_panics() {
+        let t = Targets::Regression { values: vec![0.0], n_targets: 1 };
+        NativeEngine::new().grad_hess(
+            LossKind::MulticlassCE,
+            &[0.0],
+            &t,
+            &mut [0.0],
+            &mut [0.0],
+        );
+    }
+
+    #[test]
+    fn projection_matches_naive() {
+        run_prop("native gemm", 20, |gen| {
+            let n = gen.usize_in(1, 40);
+            let d = gen.usize_in(1, 20);
+            let k = gen.usize_in(1, 8);
+            let g = gen.vec_gaussian(n * d, 1.0);
+            let p = gen.vec_gaussian(d * k, 1.0);
+            let mut out = vec![0.0f32; n * k];
+            NativeEngine::new().sketch_project(&g, n, d, &p, k, &mut out);
+            let mut want = vec![0.0f32; n * k];
+            for i in 0..n {
+                for c in 0..k {
+                    let mut s = 0.0f64;
+                    for j in 0..d {
+                        s += g[i * d + j] as f64 * p[j * k + c] as f64;
+                    }
+                    want[i * k + c] = s as f32;
+                }
+            }
+            assert_close(&out, &want, 1e-4, 1e-5);
+        });
+    }
+
+    fn tiny_binned(n: usize, m: usize, bins: usize, seed: u64) -> BinnedDataset {
+        let mut rng = Rng::new(seed);
+        let mut feats = vec![0.0f32; n * m];
+        rng.fill_gaussian(&mut feats, 1.0);
+        let ds = Dataset::new(
+            n,
+            m,
+            feats,
+            Targets::Regression { values: vec![0.0; n], n_targets: 1 },
+        );
+        BinnedDataset::from_dataset(&ds, bins)
+    }
+
+    #[test]
+    fn histogram_matches_naive() {
+        run_prop("native hist", 15, |gen| {
+            let n = gen.usize_in(10, 200);
+            let m = gen.usize_in(1, 5);
+            let bins = *gen.choose(&[4usize, 16, 64]);
+            let slots = gen.usize_in(1, 4);
+            let k1 = gen.usize_in(2, 5);
+            let binned = tiny_binned(n, m, bins, gen.seed);
+            let slot_of_row = gen.vec_u32_below(n, slots);
+            let mut chan = gen.vec_gaussian(n * k1, 1.0);
+            for i in 0..n {
+                chan[i * k1 + k1 - 1] = 1.0;
+            }
+            let rows: Vec<u32> = (0..n as u32).filter(|&r| r % 3 != 2).collect();
+            let mut out = vec![0.0f32; slots * m * bins * k1];
+            NativeEngine::new().histograms(
+                &binned, &rows, &slot_of_row, &chan, k1, slots, &mut out,
+            );
+            let mut want = vec![0.0f32; slots * m * bins * k1];
+            for &r in &rows {
+                let r = r as usize;
+                let slot = slot_of_row[r] as usize;
+                for f in 0..m {
+                    let b = binned.column(f)[r] as usize;
+                    let base = ((slot * m + f) * bins + b) * k1;
+                    for c in 0..k1 {
+                        want[base + c] += chan[r * k1 + c];
+                    }
+                }
+            }
+            assert_close(&out, &want, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn histogram_count_channel_totals_rows() {
+        let n = 100;
+        let binned = tiny_binned(n, 2, 8, 1);
+        let slot_of_row = vec![0u32; n];
+        let k1 = 3;
+        let mut chan = vec![0.5f32; n * k1];
+        for i in 0..n {
+            chan[i * k1 + 2] = 1.0;
+        }
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut out = vec![0.0f32; 2 * 8 * k1];
+        NativeEngine::new().histograms(&binned, &rows, &slot_of_row, &chan, k1, 1, &mut out);
+        for f in 0..2 {
+            let total: f32 = (0..8).map(|b| out[(f * 8 + b) * k1 + 2]).sum();
+            assert!((total - n as f32).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn split_gains_match_scalar_reference() {
+        run_prop("native gains", 15, |gen| {
+            let slots = gen.usize_in(1, 3);
+            let m = gen.usize_in(1, 3);
+            let bins = *gen.choose(&[2usize, 8, 16]);
+            let k = gen.usize_in(1, 4);
+            let lam = *gen.choose(&[0.5f32, 1.0, 5.0]);
+            let k1 = k + 1;
+            let mut hist = gen.vec_gaussian(slots * m * bins * k1, 1.0);
+            // counts >= 0
+            for s in 0..slots {
+                for f in 0..m {
+                    for b in 0..bins {
+                        let i = ((s * m + f) * bins + b) * k1 + k;
+                        hist[i] = gen.usize_in(0, 30) as f32;
+                    }
+                }
+            }
+            let gains = NativeEngine::new().split_gains(
+                &hist, slots, m, bins, k1, lam, ScoreMode::CountL2,
+            );
+            // scalar reference
+            for s in 0..slots {
+                for f in 0..m {
+                    let base = (s * m + f) * bins * k1;
+                    for b in 0..bins {
+                        let mut gl = vec![0.0f64; k];
+                        let mut cl = 0.0f64;
+                        let mut gt = vec![0.0f64; k];
+                        let mut ct = 0.0f64;
+                        for bb in 0..bins {
+                            for c in 0..k {
+                                let v = hist[base + bb * k1 + c] as f64;
+                                gt[c] += v;
+                                if bb <= b {
+                                    gl[c] += v;
+                                }
+                            }
+                            ct += hist[base + bb * k1 + k] as f64;
+                            if bb <= b {
+                                cl += hist[base + bb * k1 + k] as f64;
+                            }
+                        }
+                        let sl: f64 =
+                            gl.iter().map(|x| x * x).sum::<f64>() / (cl + lam as f64);
+                        let sr: f64 = gl
+                            .iter()
+                            .zip(gt.iter())
+                            .map(|(l, t)| (t - l) * (t - l))
+                            .sum::<f64>()
+                            / ((ct - cl) + lam as f64);
+                        let want = (sl + sr) as f32;
+                        let got = gains[(s * m + f) * bins + b];
+                        assert!(
+                            (got - want).abs() <= 1e-3 + 1e-3 * want.abs(),
+                            "slot {s} f {f} b {b}: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn hess_mode_uses_hessian_denominator() {
+        // one slot, one feature, two bins, k=1: g channels [1, 3],
+        // h channels [2, 4], counts [10, 10], lam = 1
+        let k1 = 3;
+        let hist = vec![
+            1.0, 2.0, 10.0, // bin 0: g=1 h=2 count=10
+            3.0, 4.0, 10.0, // bin 1
+        ];
+        let gains = NativeEngine::new().split_gains(&hist, 1, 1, 2, k1, 1.0, ScoreMode::HessL2);
+        // split at b=0: left g=1 h=2 -> 1/(2+1); right g=3 h=4 -> 9/(4+1)
+        let want0 = 1.0 / 3.0 + 9.0 / 5.0;
+        assert!((gains[0] - want0).abs() < 1e-5, "{} vs {want0}", gains[0]);
+    }
+
+    #[test]
+    fn leaf_sums_accumulate() {
+        let rows = vec![0u32, 1, 2, 3];
+        let leaf_of_row = vec![1u32, 0, 1, 0];
+        let g = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]; // d=2
+        let h = vec![0.1f32; 8];
+        let s = NativeEngine::new().leaf_sums(&rows, &leaf_of_row, &g, &h, 2, 2);
+        assert_close(&s.gsum, &[3.0 + 7.0, 4.0 + 8.0, 1.0 + 5.0, 2.0 + 6.0], 1e-6, 1e-6);
+        assert_close(&s.count, &[2.0, 2.0], 1e-6, 1e-6);
+        assert!((s.hsum[0] - 0.2).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,350 @@
+//! PJRT-backed compute engine: every op executes the AOT HLO artifact
+//! lowered from the L2 JAX graph (with its L1 Pallas kernels inside).
+//!
+//! Artifacts are shape-monomorphic; dynamic `n` is handled by fixed-size
+//! chunking with zero-padded tails (zero gradient rows are exact no-ops
+//! for histograms/sums, and padded outputs are simply not read back).
+//! The engine is constructed for one manifest *tag* (shape family) —
+//! `"e2e"` or `"test"` — and panics with a clear message if the training
+//! configuration disagrees with the artifact shapes, because silently
+//! falling back would invalidate the engine-ablation benchmarks.
+//!
+//! One documented exception: `ScoreMode::HessL2` (the GBDT-MO baseline)
+//! has no gain artifact — only the native engine supports it — so
+//! `split_gains` delegates to native in that mode.
+
+use crate::boosting::losses::LossKind;
+use crate::data::binning::BinnedDataset;
+use crate::data::dataset::Targets;
+use crate::runtime::registry::{ArtifactRegistry, Signature};
+use crate::runtime::{literal_f32, literal_i32};
+
+use super::{ComputeEngine, LeafSums, NativeEngine, ScoreMode};
+
+/// Engine executing PJRT artifacts; see module docs.
+pub struct XlaEngine {
+    reg: ArtifactRegistry,
+    tag: String,
+    native_fallback: NativeEngine,
+    /// number of artifact executions (for diagnostics/benches)
+    pub n_executions: usize,
+}
+
+impl XlaEngine {
+    /// Open the default artifact directory with the given shape tag.
+    pub fn new(tag: &str) -> anyhow::Result<XlaEngine> {
+        let reg = ArtifactRegistry::open_default()?;
+        let eng = XlaEngine {
+            reg,
+            tag: tag.to_string(),
+            native_fallback: NativeEngine::new(),
+            n_executions: 0,
+        };
+        // fail fast if the family is incomplete
+        for op in ["grad_ce", "grad_bce", "grad_mse", "sketch_rp", "hist", "gain", "leaf_sums"] {
+            let name = format!("{op}_{tag}");
+            anyhow::ensure!(
+                eng.reg.signature(&name).is_some(),
+                "artifact {name} missing from manifest"
+            );
+        }
+        Ok(eng)
+    }
+
+    fn sig(&self, op: &str) -> Signature {
+        self.reg
+            .signature(&format!("{op}_{}", self.tag))
+            .unwrap_or_else(|| panic!("artifact {op}_{} missing", self.tag))
+            .clone()
+    }
+
+    fn name_of(&self, op: &str) -> String {
+        format!("{op}_{}", self.tag)
+    }
+
+    /// The lambda baked into this family's gain artifact.
+    pub fn lambda(&self) -> f32 {
+        self.reg.lambda
+    }
+
+    /// Shape constraints a GBDT config must satisfy to run on this tag.
+    pub fn describe(&self) -> String {
+        let h = self.sig("hist");
+        let g = self.sig("grad_ce");
+        format!(
+            "tag={} chunk={} d={} m={} bins={} nodes={} k1={} lambda={}",
+            self.tag, g.chunk, g.d, h.m, h.bins, h.nodes, h.k1, self.reg.lambda
+        )
+    }
+}
+
+impl ComputeEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn grad_hess(
+        &mut self,
+        loss: LossKind,
+        preds: &[f32],
+        targets: &Targets,
+        g: &mut [f32],
+        h: &mut [f32],
+    ) {
+        let op = match loss {
+            LossKind::MulticlassCE => "grad_ce",
+            LossKind::BCE => "grad_bce",
+            LossKind::MSE => "grad_mse",
+        };
+        let sig = self.sig(op);
+        let d = sig.d;
+        let n = targets.len();
+        assert_eq!(preds.len(), n * d, "{op}: artifact d={d} vs preds len");
+        let chunk = sig.chunk;
+        let name = self.name_of(op);
+
+        let mut logits_buf = vec![0.0f32; chunk * d];
+        for start in (0..n).step_by(chunk) {
+            let len = chunk.min(n - start);
+            logits_buf[..len * d].copy_from_slice(&preds[start * d..(start + len) * d]);
+            logits_buf[len * d..].fill(0.0);
+            let logits = literal_f32(&logits_buf, &[chunk as i64, d as i64]).unwrap();
+            let tgt = match (loss, targets) {
+                (LossKind::MulticlassCE, Targets::Multiclass { labels, .. }) => {
+                    let mut lab = vec![0i32; chunk];
+                    for i in 0..len {
+                        lab[i] = labels[start + i] as i32;
+                    }
+                    literal_i32(&lab, &[chunk as i64]).unwrap()
+                }
+                (LossKind::BCE, Targets::Multilabel { labels, .. }) => {
+                    let mut t = vec![0.0f32; chunk * d];
+                    t[..len * d].copy_from_slice(&labels[start * d..(start + len) * d]);
+                    literal_f32(&t, &[chunk as i64, d as i64]).unwrap()
+                }
+                (LossKind::MSE, Targets::Regression { values, .. }) => {
+                    let mut t = vec![0.0f32; chunk * d];
+                    t[..len * d].copy_from_slice(&values[start * d..(start + len) * d]);
+                    literal_f32(&t, &[chunk as i64, d as i64]).unwrap()
+                }
+                _ => panic!("loss/targets mismatch"),
+            };
+            let exe = self.reg.get(&name).expect("compile artifact");
+            let outs = exe.run(&[logits, tgt]).expect("execute grad artifact");
+            self.n_executions += 1;
+            let gq = outs[0].to_vec::<f32>().expect("grad output");
+            let hq = outs[1].to_vec::<f32>().expect("hess output");
+            g[start * d..(start + len) * d].copy_from_slice(&gq[..len * d]);
+            h[start * d..(start + len) * d].copy_from_slice(&hq[..len * d]);
+        }
+    }
+
+    fn sketch_project(
+        &mut self,
+        g_mat: &[f32],
+        n: usize,
+        d: usize,
+        proj: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        let sig = self.sig("sketch_rp");
+        assert_eq!(d, sig.d, "sketch_rp artifact d={} vs {}", sig.d, d);
+        assert_eq!(k, sig.k, "sketch_rp artifact k={} vs {}", sig.k, k);
+        let chunk = sig.chunk;
+        let name = self.name_of("sketch_rp");
+        let proj_lit = literal_f32(proj, &[d as i64, k as i64]).unwrap();
+        let mut buf = vec![0.0f32; chunk * d];
+        for start in (0..n).step_by(chunk) {
+            let len = chunk.min(n - start);
+            buf[..len * d].copy_from_slice(&g_mat[start * d..(start + len) * d]);
+            buf[len * d..].fill(0.0);
+            let g_lit = literal_f32(&buf, &[chunk as i64, d as i64]).unwrap();
+            let exe = self.reg.get(&name).expect("compile sketch_rp");
+            let gk = exe
+                .run_f32(&[g_lit, proj_lit.reshape(&[d as i64, k as i64]).unwrap()])
+                .expect("execute sketch_rp");
+            self.n_executions += 1;
+            out[start * k..(start + len) * k].copy_from_slice(&gk[..len * k]);
+        }
+    }
+
+    fn histograms(
+        &mut self,
+        binned: &BinnedDataset,
+        rows: &[u32],
+        slot_of_row: &[u32],
+        chan: &[f32],
+        k1: usize,
+        n_slots: usize,
+        out: &mut [f32],
+    ) {
+        let sig = self.sig("hist");
+        let m = binned.n_features;
+        let bins = binned.max_bins;
+        assert_eq!(m, sig.m, "hist artifact m={} vs dataset m={}", sig.m, m);
+        assert_eq!(bins, sig.bins, "hist artifact bins={} vs {}", sig.bins, bins);
+        assert_eq!(k1, sig.k1, "hist artifact k1={} vs {}", sig.k1, k1);
+        assert!(
+            n_slots <= sig.nodes,
+            "hist artifact supports {} slots, need {n_slots}",
+            sig.nodes
+        );
+        let chunk = sig.chunk;
+        let nodes = sig.nodes;
+        let name = self.name_of("hist");
+
+        let mut bin_buf = vec![0i32; chunk * m];
+        let mut node_buf = vec![0i32; chunk];
+        let mut chan_buf = vec![0.0f32; chunk * k1];
+        for start in (0..rows.len()).step_by(chunk) {
+            let len = chunk.min(rows.len() - start);
+            bin_buf.fill(0);
+            node_buf.fill(0);
+            chan_buf.fill(0.0); // padding rows: zero channels => no-ops
+            for i in 0..len {
+                let r = rows[start + i] as usize;
+                for f in 0..m {
+                    bin_buf[i * m + f] = binned.codes[f * binned.n_rows + r] as i32;
+                }
+                node_buf[i] = slot_of_row[r] as i32;
+                chan_buf[i * k1..(i + 1) * k1].copy_from_slice(&chan[r * k1..(r + 1) * k1]);
+            }
+            let exe = self.reg.get(&name).expect("compile hist");
+            let hist = exe
+                .run_f32(&[
+                    literal_i32(&bin_buf, &[chunk as i64, m as i64]).unwrap(),
+                    literal_i32(&node_buf, &[chunk as i64]).unwrap(),
+                    literal_f32(&chan_buf, &[chunk as i64, k1 as i64]).unwrap(),
+                ])
+                .expect("execute hist");
+            self.n_executions += 1;
+            // artifact layout: [m, nodes * bins, k1] -> ours: [slot, f, bin, k1]
+            for f in 0..m {
+                for slot in 0..n_slots {
+                    let src = (f * nodes * bins + slot * bins) * k1;
+                    let dst = ((slot * m + f) * bins) * k1;
+                    for i in 0..bins * k1 {
+                        out[dst + i] += hist[src + i];
+                    }
+                }
+            }
+        }
+    }
+
+    fn split_gains(
+        &mut self,
+        hist: &[f32],
+        n_slots: usize,
+        m: usize,
+        bins: usize,
+        k1: usize,
+        lam: f32,
+        mode: ScoreMode,
+    ) -> Vec<f32> {
+        if mode == ScoreMode::HessL2 {
+            // documented fallback: no HessL2 gain artifact
+            return self
+                .native_fallback
+                .split_gains(hist, n_slots, m, bins, k1, lam, mode);
+        }
+        let sig = self.sig("gain");
+        assert_eq!(m, sig.m, "gain artifact m={} vs {}", sig.m, m);
+        assert_eq!(bins, sig.bins);
+        assert_eq!(k1, sig.k1);
+        assert!(n_slots <= sig.nodes);
+        assert!(
+            (lam - sig.lam).abs() < 1e-6,
+            "gain artifact bakes lambda={}, config uses {lam}",
+            sig.lam
+        );
+        let nodes = sig.nodes;
+        let name = self.name_of("gain");
+
+        // transpose ours [slot, f, bin, k1] -> artifact [m, nodes, bins, k1]
+        let mut buf = vec![0.0f32; m * nodes * bins * k1];
+        for slot in 0..n_slots {
+            for f in 0..m {
+                let src = ((slot * m + f) * bins) * k1;
+                let dst = ((f * nodes + slot) * bins) * k1;
+                buf[dst..dst + bins * k1].copy_from_slice(&hist[src..src + bins * k1]);
+            }
+        }
+        let exe = self.reg.get(&name).expect("compile gain");
+        let gains_art = exe
+            .run_f32(&[literal_f32(
+                &buf,
+                &[m as i64, nodes as i64, bins as i64, k1 as i64],
+            )
+            .unwrap()])
+            .expect("execute gain");
+        self.n_executions += 1;
+        // artifact [m, nodes, bins] -> ours [slot, f, bin]
+        let mut gains = vec![0.0f32; n_slots * m * bins];
+        for slot in 0..n_slots {
+            for f in 0..m {
+                let src = (f * nodes + slot) * bins;
+                let dst = (slot * m + f) * bins;
+                gains[dst..dst + bins].copy_from_slice(&gains_art[src..src + bins]);
+            }
+        }
+        gains
+    }
+
+    fn leaf_sums(
+        &mut self,
+        rows: &[u32],
+        leaf_of_row: &[u32],
+        g: &[f32],
+        h: &[f32],
+        d: usize,
+        n_leaves: usize,
+    ) -> LeafSums {
+        let sig = self.sig("leaf_sums");
+        assert_eq!(d, sig.d, "leaf_sums artifact d={} vs {}", sig.d, d);
+        assert!(n_leaves <= sig.nodes, "leaf_sums artifact nodes={}", sig.nodes);
+        let chunk = sig.chunk;
+        let nodes = sig.nodes;
+        let c = 2 * d + 1;
+        let name = self.name_of("leaf_sums");
+
+        let mut node_buf = vec![0i32; chunk];
+        let mut ghv = vec![0.0f32; chunk * c];
+        let mut acc = vec![0.0f32; nodes * c];
+        for start in (0..rows.len()).step_by(chunk) {
+            let len = chunk.min(rows.len() - start);
+            node_buf.fill(0);
+            ghv.fill(0.0);
+            for i in 0..len {
+                let r = rows[start + i] as usize;
+                node_buf[i] = leaf_of_row[r] as i32;
+                let dst = &mut ghv[i * c..(i + 1) * c];
+                dst[..d].copy_from_slice(&g[r * d..(r + 1) * d]);
+                dst[d..2 * d].copy_from_slice(&h[r * d..(r + 1) * d]);
+                dst[c - 1] = 1.0;
+            }
+            let exe = self.reg.get(&name).expect("compile leaf_sums");
+            let sums = exe
+                .run_f32(&[
+                    literal_i32(&node_buf, &[chunk as i64]).unwrap(),
+                    literal_f32(&ghv, &[chunk as i64, c as i64]).unwrap(),
+                ])
+                .expect("execute leaf_sums");
+            self.n_executions += 1;
+            for i in 0..nodes * c {
+                acc[i] += sums[i];
+            }
+        }
+        let mut out = LeafSums {
+            gsum: vec![0.0f32; n_leaves * d],
+            hsum: vec![0.0f32; n_leaves * d],
+            count: vec![0.0f32; n_leaves],
+        };
+        for l in 0..n_leaves {
+            out.gsum[l * d..(l + 1) * d].copy_from_slice(&acc[l * c..l * c + d]);
+            out.hsum[l * d..(l + 1) * d].copy_from_slice(&acc[l * c + d..l * c + 2 * d]);
+            out.count[l] = acc[l * c + c - 1];
+        }
+        out
+    }
+}

@@ -1,0 +1,58 @@
+//! # SketchBoost
+//!
+//! A rust + JAX/Pallas reproduction of *SketchBoost: Fast Gradient Boosted
+//! Decision Tree for Multioutput Problems* (Iosipoi & Vakhrushev, NeurIPS
+//! 2022).
+//!
+//! The library is a complete multioutput GBDT framework (the paper's
+//! Py-Boost analogue) with the paper's three sketched split-scoring
+//! strategies as first-class features:
+//!
+//! * [`sketch::SketchConfig::TopOutputs`] — keep the k largest-norm
+//!   gradient columns (section 3.1);
+//! * [`sketch::SketchConfig::RandomSampling`] — importance-sample columns
+//!   with probability ∝ ‖g_i‖² (section 3.2);
+//! * [`sketch::SketchConfig::RandomProjection`] — Gaussian sketch
+//!   `G_k = GΠ` (section 3.3);
+//! * plus the Appendix A.1 Truncated-SVD sketch as an ablation baseline.
+//!
+//! Architecture (see DESIGN.md): layer 3 is this rust coordinator (the
+//! training system); layer 2 is the per-round JAX compute graph; layer 1
+//! is the Pallas kernels inside it. Layers 1–2 are AOT-lowered to HLO
+//! text at build time and executed from rust via PJRT ([`runtime`],
+//! [`engine::XlaEngine`]); the pure-rust [`engine::NativeEngine`] is the
+//! numerically identical fast path.
+//!
+//! ```no_run
+//! use sketchboost::prelude::*;
+//!
+//! let ds = profiles::Profile::by_name("otto").unwrap().generate(42);
+//! let (train, test) = split::train_test_split(&ds, 0.2, 0);
+//! let mut cfg = GBDTConfig::multiclass(9);
+//! cfg.sketch = SketchConfig::RandomProjection { k: 5 };
+//! cfg.n_rounds = 100;
+//! let model = GBDT::fit(&cfg, &train, Some(&test));
+//! let preds = model.predict(&test);
+//! ```
+
+pub mod baselines;
+pub mod boosting;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod runtime;
+pub mod sketch;
+pub mod tree;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::boosting::ensemble::Ensemble;
+    pub use crate::boosting::losses::LossKind;
+    pub use crate::boosting::metrics::Metric;
+    pub use crate::boosting::trainer::{GBDTConfig, GBDT};
+    pub use crate::data::profiles;
+    pub use crate::data::split;
+    pub use crate::data::{BinnedDataset, Dataset, Targets};
+    pub use crate::sketch::SketchConfig;
+}

@@ -1,0 +1,318 @@
+//! SketchBoost CLI launcher.
+//!
+//! Subcommands:
+//!   train              train on a dataset profile or CSV file
+//!   evaluate           load a saved model and score a dataset
+//!   gen-data           write a synthetic profile dataset to CSV
+//!   bench-synth        quick Figure-1-style scaling run
+//!   inspect-artifacts  list the AOT artifact manifest
+//!
+//! Run `sketchboost <command> --help` for options.
+
+use std::process::ExitCode;
+
+use sketchboost::baselines::one_vs_all::fit_one_vs_all;
+use sketchboost::boosting::metrics::Metric;
+use sketchboost::boosting::trainer::{GBDTConfig, GBDT};
+use sketchboost::data::csv;
+use sketchboost::data::profiles::Profile;
+use sketchboost::data::split::train_test_split;
+use sketchboost::engine::XlaEngine;
+use sketchboost::prelude::*;
+use sketchboost::util::bench::{fmt_secs, time_once, Table};
+use sketchboost::util::cli::{usage, Args};
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "cv" => cmd_cv(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "bench-synth" => cmd_bench_synth(&args),
+        "inspect-artifacts" => cmd_inspect(&args),
+        "inspect-model" => cmd_inspect_model(&args),
+        _ => {
+            eprint!("{}", top_usage());
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn top_usage() -> String {
+    "SketchBoost: fast multioutput GBDT (NeurIPS 2022 reproduction)\n\n\
+     Usage: sketchboost <command> [options]\n\n\
+     Commands:\n\
+     \x20 train              train a model (see `train --help`)\n\
+     \x20 evaluate           score a saved model on a dataset\n\
+     \x20 cv                 5-fold cross-validation (paper Appendix B.2)\n\
+     \x20 gen-data           write a synthetic profile dataset to CSV\n\
+     \x20 bench-synth        Figure-1-style time-vs-classes scaling run\n\
+     \x20 inspect-artifacts  list AOT artifacts + shapes\n\
+     \x20 inspect-model      feature importances + tree dump of a model\n"
+        .to_string()
+}
+
+fn load_data(args: &Args) -> Result<Dataset, Box<dyn std::error::Error>> {
+    if let Some(path) = args.get("data") {
+        let task = args.get_str("task", "multiclass");
+        let d = args.get_usize("outputs", 2);
+        Ok(csv::load_dataset(std::path::Path::new(path), &task, d)?)
+    } else {
+        let name = args.get_str("profile", "otto");
+        let p = Profile::by_name(&name)
+            .ok_or_else(|| format!("unknown profile {name:?} (see data/profiles.rs)"))?;
+        let rows = args.get_usize("rows", p.rows);
+        Ok(p.generate_sized(rows, args.get_u64("data-seed", 42)))
+    }
+}
+
+fn config_from_args(args: &Args, ds: &Dataset) -> GBDTConfig {
+    if let Some(path) = args.get("config") {
+        let mut cfg = sketchboost::config::load_config(std::path::Path::new(path))
+            .unwrap_or_else(|e| panic!("--config {path}: {e}"));
+        assert_eq!(
+            cfg.n_outputs,
+            ds.n_outputs(),
+            "--config outputs != dataset outputs"
+        );
+        cfg.verbose = args.flag("verbose") || cfg.verbose;
+        return cfg;
+    }
+    let mut cfg = GBDTConfig::for_dataset(ds);
+    cfg.n_rounds = args.get_usize("rounds", 100);
+    cfg.learning_rate = args.get_f32("lr", 0.05);
+    cfg.max_depth = args.get_usize("depth", 6);
+    cfg.lambda_l2 = args.get_f32("lambda", 1.0);
+    cfg.min_data_in_leaf = args.get_usize("min-data", 1);
+    cfg.subsample = args.get_f32("subsample", 1.0);
+    cfg.colsample = args.get_f32("colsample", 1.0);
+    cfg.max_bins = args.get_usize("bins", 64);
+    cfg.seed = args.get_u64("seed", 42);
+    cfg.early_stopping_rounds = args.get_usize("early-stop", 0);
+    cfg.verbose = args.flag("verbose");
+    let k = args.get_usize("k", 5);
+    let sk = args.get_str("sketch", "full");
+    cfg.sketch = SketchConfig::parse(&sk, k)
+        .unwrap_or_else(|| panic!("unknown sketch {sk:?} (full|top|rs|rp|svd)"));
+    cfg
+}
+
+fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "sketchboost train [options]",
+                "Train a SketchBoost model.",
+                &[
+                    ("--profile NAME", "synthetic profile (default otto); see data/profiles.rs"),
+                    ("--rows N", "override profile row count"),
+                    ("--data FILE", "CSV instead of a profile (with --task, --outputs)"),
+                    ("--sketch S", "full | top | rs | rp | svd (default full)"),
+                    ("--k K", "sketch dimension (default 5)"),
+                    ("--rounds N", "boosting rounds (default 100)"),
+                    ("--lr F", "learning rate (default 0.05)"),
+                    ("--depth N", "max tree depth (default 6)"),
+                    ("--bins N", "max histogram bins (default 64)"),
+                    ("--early-stop N", "early stopping patience (default off)"),
+                    ("--strategy S", "single-tree | one-vs-all (default single-tree)"),
+                    ("--engine E", "native | xla (default native)"),
+                    ("--test-frac F", "holdout fraction (default 0.2)"),
+                    ("--out FILE", "save the model JSON"),
+                ],
+            )
+        );
+        return Ok(());
+    }
+    let ds = load_data(args)?;
+    let (train, test) = train_test_split(&ds, args.get_f32("test-frac", 0.2) as f64, 7);
+    let cfg = config_from_args(args, &ds);
+    let strategy = args.get_str("strategy", "single-tree");
+    let engine = args.get_str("engine", "native");
+    println!(
+        "training: n={} m={} d={} loss={} sketch={} engine={engine} strategy={strategy}",
+        train.n_rows,
+        train.n_features,
+        train.n_outputs(),
+        cfg.loss.name(),
+        cfg.sketch.name(),
+    );
+
+    if strategy == "one-vs-all" {
+        let (model, secs) = time_once(|| fit_one_vs_all(&cfg, &train, Some(&test)));
+        report_scores("one-vs-all", &model.predict_raw(&test), &test, secs);
+        return Ok(());
+    }
+
+    let (model, secs) = match engine.as_str() {
+        "native" => time_once(|| GBDT::fit(&cfg, &train, Some(&test))),
+        "xla" => {
+            let mut eng = XlaEngine::new(&args.get_str("tag", "e2e"))?;
+            println!("xla engine: {}", eng.describe());
+            time_once(|| GBDT::fit_with_engine(&cfg, &train, Some(&test), &mut eng))
+        }
+        other => return Err(format!("unknown engine {other:?}").into()),
+    };
+    report_scores(cfg.sketch.name(), &model.predict_raw(&test), &test, secs);
+    println!("trees: {}, nodes: {}", model.n_trees(), model.n_nodes());
+    if let Some(out) = args.get("out") {
+        model.save(std::path::Path::new(out))?;
+        println!("model saved to {out}");
+    }
+    Ok(())
+}
+
+fn report_scores(label: &str, preds: &[f32], test: &Dataset, secs: f64) {
+    let primary = Metric::primary(&test.targets);
+    let secondary = Metric::secondary(&test.targets);
+    println!(
+        "[{label}] test {} = {:.5}, {} = {:.4}, time = {}",
+        primary.name(),
+        primary.eval(preds, &test.targets),
+        secondary.name(),
+        secondary.eval(preds, &test.targets),
+        fmt_secs(secs),
+    );
+}
+
+fn cmd_evaluate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let model_path = args
+        .get("model")
+        .ok_or("evaluate needs --model FILE (a model saved by train --out)")?;
+    let model = Ensemble::load(std::path::Path::new(model_path))?;
+    let ds = load_data(args)?;
+    let preds = model.predict_raw(&ds);
+    report_scores("saved-model", &preds, &ds, 0.0);
+    Ok(())
+}
+
+/// 5-fold CV exactly as the paper's Appendix B.2 evaluation stage.
+fn cmd_cv(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let ds = load_data(args)?;
+    let cfg = config_from_args(args, &ds);
+    let k = args.get_usize("folds", 5);
+    let metric = cfg.metric();
+    println!(
+        "{k}-fold CV on n={} m={} d={} (sketch={}, {} rounds)",
+        ds.n_rows,
+        ds.n_features,
+        ds.n_outputs(),
+        cfg.sketch.name(),
+        cfg.n_rounds
+    );
+    let folds = GBDT::fit_cv(&cfg, &ds, k);
+    let losses: Vec<f64> = folds.iter().map(|(_, l)| *l).collect();
+    let mean = losses.iter().sum::<f64>() / k as f64;
+    let var = losses.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>() / (k - 1).max(1) as f64;
+    for (i, l) in losses.iter().enumerate() {
+        println!("fold {i}: {} = {l:.5}", metric.name());
+    }
+    println!("mean = {mean:.5} +/- {:.5}", var.sqrt());
+    Ok(())
+}
+
+/// Print feature importances + the first tree of a saved model.
+fn cmd_inspect_model(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    use sketchboost::boosting::inspect::ImportanceKind;
+    let model_path = args.get("model").ok_or("inspect-model needs --model FILE")?;
+    let model = Ensemble::load(std::path::Path::new(model_path))?;
+    println!(
+        "model: {} trees, {} nodes, {} outputs, loss = {}",
+        model.n_trees(),
+        model.n_nodes(),
+        model.n_outputs,
+        model.loss.name()
+    );
+    let max_feature = model
+        .trees
+        .iter()
+        .flat_map(|t| t.nodes.iter().map(|n| n.feature as usize))
+        .max()
+        .unwrap_or(0);
+    let top = model.top_features(max_feature + 1, ImportanceKind::TotalGain, 10);
+    let mut t = Table::new(&["feature", "total gain"]);
+    for (f, gain) in top {
+        t.row(&[format!("f{f}"), format!("{gain:.3}")]);
+    }
+    t.print();
+    if !model.trees.is_empty() {
+        println!("\ntree 0:\n{}", model.dump_tree(0));
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let name = args.get_str("profile", "otto");
+    let p = Profile::by_name(&name).ok_or_else(|| format!("unknown profile {name:?}"))?;
+    let rows = args.get_usize("rows", p.rows);
+    let ds = p.generate_sized(rows, args.get_u64("data-seed", 42));
+    let out = args.get_str("out", &format!("{name}.csv"));
+    csv::write_dataset(std::path::Path::new(&out), &ds)?;
+    println!("wrote {rows} rows x {} features ({} outputs) to {out}", p.features, p.outputs);
+    Ok(())
+}
+
+/// Figure-1-style quick scaling run from the CLI.
+fn cmd_bench_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    use sketchboost::data::synthetic::{make_multiclass, FeatureSpec};
+    let rows = args.get_usize("rows", 4000);
+    let m = args.get_usize("features", 50);
+    let rounds = args.get_usize("rounds", 20);
+    let classes = args.get_usize_list("classes", &[5, 10, 25, 50]);
+    let k = args.get_usize("k", 5);
+    let mut table = Table::new(&["classes", "one-vs-all", "single-tree full", "sketch rp k"]);
+    for &d in &classes {
+        let ds = make_multiclass(rows, FeatureSpec::guyon(m), d, 1.6, 1);
+        let mut cfg = GBDTConfig::multiclass(d);
+        cfg.n_rounds = rounds;
+        cfg.max_depth = 6;
+        cfg.max_bins = 64;
+        let (_, t_ova) = time_once(|| fit_one_vs_all(&cfg, &ds, None));
+        let (_, t_full) = time_once(|| GBDT::fit(&cfg, &ds, None));
+        let mut cfg_rp = cfg.clone();
+        cfg_rp.sketch = SketchConfig::RandomProjection { k };
+        let (_, t_rp) = time_once(|| GBDT::fit(&cfg_rp, &ds, None));
+        table.row(&[
+            d.to_string(),
+            fmt_secs(t_ova),
+            fmt_secs(t_full),
+            fmt_secs(t_rp),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_inspect(_args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    use sketchboost::runtime::registry::{artifacts_available, ArtifactRegistry};
+    if !artifacts_available() {
+        return Err("no artifacts found; run `make artifacts`".into());
+    }
+    let reg = ArtifactRegistry::open_default()?;
+    println!("lambda = {}", reg.lambda);
+    let mut t = Table::new(&["artifact", "op", "chunk", "d", "k", "m", "bins", "nodes"]);
+    for name in reg.names() {
+        let s = reg.signature(name).unwrap();
+        t.row(&[
+            name.to_string(),
+            s.op.clone(),
+            s.chunk.to_string(),
+            s.d.to_string(),
+            s.k.to_string(),
+            s.m.to_string(),
+            s.bins.to_string(),
+            s.nodes.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

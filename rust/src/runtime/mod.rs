@@ -1,0 +1,119 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from rust.
+//!
+//! This is the bridge between layer 3 (this crate) and layers 1–2 (the
+//! JAX/Pallas graph lowered by `python/compile/aot.py`). Python never
+//! runs after `make artifacts`: the rust binary loads HLO *text* (the
+//! xla_extension-0.5.1-safe interchange format — see DESIGN.md), compiles
+//! each module once on the PJRT CPU client, memoizes the executable, and
+//! feeds it `Literal`s on the hot path.
+
+pub mod registry;
+
+pub use registry::{ArtifactRegistry, Signature};
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> anyhow::Result<Runtime> {
+        Ok(Runtime { client: PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile_file(&self, path: &std::path::Path) -> anyhow::Result<Executable> {
+        let proto = HloModuleProto::from_text_file(path)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled artifact, executable with concrete literals.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute; artifacts are lowered with `return_tuple=True`, so the
+    /// result is always a tuple — returned here as a Vec of Literals.
+    pub fn run(&self, inputs: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        let result = self.exe.execute::<Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and read a single f32 output tensor.
+    pub fn run_f32(&self, inputs: &[Literal]) -> anyhow::Result<Vec<f32>> {
+        let outs = self.run(inputs)?;
+        anyhow::ensure!(outs.len() == 1, "{}: expected 1 output, got {}", self.name, outs.len());
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat buffer.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(expect as usize == data.len(), "literal shape mismatch");
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat buffer.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(expect as usize == data.len(), "literal shape mismatch");
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn literal_helpers_validate_shape() {
+        assert!(literal_f32(&[1.0, 2.0], &[2, 2]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(literal_i32(&[1, 2, 3], &[3]).is_ok());
+    }
+
+    #[test]
+    fn compile_and_run_grad_mse_artifact() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::new().unwrap();
+        let exe = rt.compile_file(&dir.join("grad_mse_test.hlo.txt")).unwrap();
+        // grad_mse_test: chunk=256, d=4; g = preds - targets, h = 1
+        let n = 256 * 4;
+        let preds: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+        let targets: Vec<f32> = (0..n).map(|i| i as f32 * 0.005).collect();
+        let outs = exe
+            .run(&[
+                literal_f32(&preds, &[256, 4]).unwrap(),
+                literal_f32(&targets, &[256, 4]).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        let g = outs[0].to_vec::<f32>().unwrap();
+        let h = outs[1].to_vec::<f32>().unwrap();
+        for i in 0..n {
+            assert!((g[i] - (preds[i] - targets[i])).abs() < 1e-6);
+            assert_eq!(h[i], 1.0);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Artifact registry: discovers available HLO artifacts from the
+//! manifest.json that `python/compile/aot.py` writes, compiles lazily,
+//! and memoizes compiled executables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::{Executable, Runtime};
+
+/// Shape signature of one artifact (fields mirror the aot.py manifest).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Signature {
+    pub op: String,
+    pub file: String,
+    pub chunk: usize,
+    pub d: usize,
+    pub k: usize,
+    pub k1: usize,
+    pub m: usize,
+    pub bins: usize,
+    pub nodes: usize,
+    pub lam: f32,
+}
+
+/// Lazily-compiling artifact registry.
+pub struct ArtifactRegistry {
+    runtime: Runtime,
+    dir: PathBuf,
+    /// manifest lambda baked into gain artifacts
+    pub lambda: f32,
+    sigs: HashMap<String, Signature>,
+    compiled: HashMap<String, Executable>,
+}
+
+impl ArtifactRegistry {
+    /// Open a registry over an artifacts directory (reads manifest.json).
+    pub fn open(dir: &Path) -> anyhow::Result<ArtifactRegistry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let lambda = j
+            .get("lambda")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing lambda"))? as f32;
+        let mut sigs = HashMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+        for (name, meta) in arts {
+            let gu = |key: &str| meta.get(key).and_then(|v| v.as_usize()).unwrap_or(0);
+            sigs.insert(
+                name.clone(),
+                Signature {
+                    op: meta
+                        .get("op")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    file: meta
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    chunk: gu("chunk"),
+                    d: gu("d"),
+                    k: gu("k"),
+                    k1: gu("k1"),
+                    m: gu("m"),
+                    bins: gu("bins"),
+                    nodes: gu("nodes"),
+                    lam: meta.get("lam").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
+                },
+            );
+        }
+        Ok(ArtifactRegistry {
+            runtime: Runtime::new()?,
+            dir: dir.to_path_buf(),
+            lambda,
+            sigs,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Default location: `<crate root>/artifacts`.
+    pub fn open_default() -> anyhow::Result<ArtifactRegistry> {
+        ArtifactRegistry::open(&default_dir())
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.sigs.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&Signature> {
+        self.sigs.get(name)
+    }
+
+    /// Artifact names for a configuration tag ("e2e", "test").
+    pub fn tagged(&self, op: &str, tag: &str) -> String {
+        format!("{op}_{tag}")
+    }
+
+    /// Get (compiling on first use) an executable by artifact name.
+    pub fn get(&mut self, name: &str) -> anyhow::Result<&Executable> {
+        if !self.compiled.contains_key(name) {
+            let sig = self
+                .sigs
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))?;
+            let exe = self.runtime.compile_file(&self.dir.join(&sig.file))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    pub fn n_compiled(&self) -> usize {
+        self.compiled.len()
+    }
+}
+
+pub fn default_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if artifacts have been built (tests skip gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    default_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_default_and_lookup() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let reg = ArtifactRegistry::open_default().unwrap();
+        assert!(reg.lambda > 0.0);
+        let names = reg.names();
+        assert!(names.contains(&"hist_test"), "{names:?}");
+        let sig = reg.signature("hist_test").unwrap();
+        assert_eq!(sig.op, "hist");
+        assert!(sig.chunk > 0 && sig.bins > 0 && sig.nodes > 0);
+    }
+
+    #[test]
+    fn compile_memoizes() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut reg = ArtifactRegistry::open_default().unwrap();
+        assert_eq!(reg.n_compiled(), 0);
+        reg.get("grad_mse_test").unwrap();
+        assert_eq!(reg.n_compiled(), 1);
+        reg.get("grad_mse_test").unwrap();
+        assert_eq!(reg.n_compiled(), 1);
+        assert!(reg.get("no_such_artifact").is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! Empirical verification of the paper's Appendix-A theory.
+//!
+//! The propositions bound `Error(S_G, S_{G_k}) = sup_R |S_G(R) − S_{G_k}(R)|`
+//! through `‖GGᵀ − G_kG_kᵀ‖` (Lemma A.1) in terms of spectral quantities
+//! of G: dropped column norms (A.3, Top Outputs), `√(sr(G))·‖G‖²/√k`
+//! (A.4/A.5, random sketches), `σ²_{k+1}(G)` (A.2, SVD). This module
+//! computes those quantities on *actual* gradient matrices harvested
+//! during training, plus a Monte-Carlo estimate of the score error over
+//! random leaves, so `benches/sketch_error.rs` can check the theory's
+//! ordering empirically (the paper never plots these; we add it as an
+//! ablation).
+
+use crate::util::rng::Rng;
+
+/// Spectral diagnostics of a gradient matrix.
+#[derive(Clone, Debug)]
+pub struct GradientSpectrum {
+    /// squared spectral norm estimate ‖G‖² (power iteration)
+    pub sq_spectral_norm: f64,
+    /// squared Frobenius norm ‖G‖²_F
+    pub sq_frobenius_norm: f64,
+    /// stable rank sr(G) = ‖G‖²_F / ‖G‖²
+    pub stable_rank: f64,
+    /// column squared norms, descending
+    pub col_sq_norms_sorted: Vec<f64>,
+}
+
+/// Compute the spectrum diagnostics of row-major g [n, d].
+pub fn gradient_spectrum(g: &[f32], n: usize, d: usize, seed: u64) -> GradientSpectrum {
+    let sq_frobenius_norm: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let sq_spectral_norm = top_singular_value_sq(g, n, d, 30, seed);
+    let mut cols = crate::sketch::column_sq_norms(g, n, d);
+    cols.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    GradientSpectrum {
+        sq_spectral_norm,
+        sq_frobenius_norm,
+        stable_rank: sq_frobenius_norm / sq_spectral_norm.max(1e-300),
+        col_sq_norms_sorted: cols,
+    }
+}
+
+/// ‖G‖² via power iteration on GᵀG.
+pub fn top_singular_value_sq(g: &[f32], n: usize, d: usize, iters: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f64; d];
+    for x in v.iter_mut() {
+        *x = rng.next_gaussian();
+    }
+    normalize(&mut v);
+    let mut lambda = 0.0f64;
+    let mut gv = vec![0.0f64; n];
+    for _ in 0..iters {
+        // gv = G v
+        for (i, gvi) in gv.iter_mut().enumerate() {
+            let row = &g[i * d..(i + 1) * d];
+            *gvi = row.iter().zip(v.iter()).map(|(&a, &b)| a as f64 * b).sum();
+        }
+        // v = Gᵀ gv
+        v.iter_mut().for_each(|x| *x = 0.0);
+        for (i, &gvi) in gv.iter().enumerate() {
+            let row = &g[i * d..(i + 1) * d];
+            for (j, &a) in row.iter().enumerate() {
+                v[j] += a as f64 * gvi;
+            }
+        }
+        lambda = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if lambda <= 0.0 {
+            return 0.0;
+        }
+        let inv = 1.0 / lambda;
+        v.iter_mut().for_each(|x| *x *= inv);
+    }
+    lambda // after v normalized, ‖GᵀG v‖ -> top eigenvalue of GᵀG = ‖G‖²
+}
+
+fn normalize(v: &mut [f64]) {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+    v.iter_mut().for_each(|x| *x /= norm);
+}
+
+/// Monte-Carlo estimate of `sup_R |S_G(R) − S_{G_k}(R)|`: sample random
+/// leaves R (random row subsets of several sizes) and take the max score
+/// gap. A lower bound on the true sup, adequate for *comparing*
+/// strategies at fixed trials.
+pub fn score_error_estimate(
+    g: &[f32],
+    gk: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+    lam: f64,
+    trials: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let mut worst = 0.0f64;
+    let sizes = [n / 20, n / 4, n / 2, (3 * n) / 4, n];
+    for t in 0..trials {
+        let size = sizes[t % sizes.len()].max(1);
+        let rows = rng.sample_indices(n, size);
+        let sg = region_score(g, d, &rows, lam);
+        let sk = region_score(gk, k, &rows, lam);
+        worst = worst.max((sg - sk).abs());
+    }
+    worst
+}
+
+/// S(R) = Σ_j (Σ_{i∈R} g_ij)² / (|R| + λ) for an explicit row set.
+pub fn region_score(g: &[f32], d: usize, rows: &[u32], lam: f64) -> f64 {
+    let mut sums = vec![0.0f64; d];
+    for &r in rows {
+        let row = &g[r as usize * d..(r as usize + 1) * d];
+        for (j, &v) in row.iter().enumerate() {
+            sums[j] += v as f64;
+        }
+    }
+    sums.iter().map(|s| s * s).sum::<f64>() / (rows.len() as f64 + lam)
+}
+
+/// The Appendix-A theoretical bounds, for comparison against measured
+/// errors (all are bounds on the *operator-norm* proxy of Lemma A.1).
+pub struct TheoryBounds {
+    /// A.3: Σ_{j>k} ‖g_(j)‖²
+    pub top_outputs: f64,
+    /// A.4/A.5 shape: √(sr(G)) · ‖G‖² / √k (constants dropped)
+    pub random_sketch: f64,
+}
+
+pub fn theory_bounds(spec: &GradientSpectrum, k: usize) -> TheoryBounds {
+    let dropped: f64 = spec.col_sq_norms_sorted.iter().skip(k).sum();
+    TheoryBounds {
+        top_outputs: dropped,
+        random_sketch: spec.stable_rank.sqrt() * spec.sq_spectral_norm
+            / (k as f64).sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::sketch::SketchConfig;
+    use crate::util::proptest::run_prop;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut g = vec![0.0f32; n * d];
+        rng.fill_gaussian(&mut g, 1.0);
+        g
+    }
+
+    #[test]
+    fn spectral_norm_of_rank_one() {
+        // G = u vᵀ has ‖G‖² = ‖u‖²‖v‖², sr = 1
+        let n = 20;
+        let d = 6;
+        let u: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let v: Vec<f64> = (0..d).map(|j| 1.0 + j as f64).collect();
+        let mut g = vec![0.0f32; n * d];
+        for i in 0..n {
+            for j in 0..d {
+                g[i * d + j] = (u[i] * v[j]) as f32;
+            }
+        }
+        let spec = gradient_spectrum(&g, n, d, 1);
+        let want: f64 = u.iter().map(|x| x * x).sum::<f64>() * v.iter().map(|x| x * x).sum::<f64>();
+        assert!(
+            (spec.sq_spectral_norm - want).abs() < 1e-3 * want,
+            "{} vs {want}",
+            spec.sq_spectral_norm
+        );
+        assert!((spec.stable_rank - 1.0).abs() < 1e-3, "sr={}", spec.stable_rank);
+    }
+
+    #[test]
+    fn stable_rank_bounds() {
+        run_prop("1 <= sr <= d", 15, |gen| {
+            let n = gen.usize_in(5, 40);
+            let d = gen.usize_in(2, 10);
+            let g = gen.vec_gaussian(n * d, 1.0);
+            let spec = gradient_spectrum(&g, n, d, gen.seed);
+            assert!(spec.stable_rank >= 0.99, "sr={}", spec.stable_rank);
+            assert!(spec.stable_rank <= d as f64 + 1e-6, "sr={}", spec.stable_rank);
+        });
+    }
+
+    #[test]
+    fn frobenius_equals_column_norm_sum() {
+        let g = gaussian(30, 5, 2);
+        let spec = gradient_spectrum(&g, 30, 5, 3);
+        let col_sum: f64 = spec.col_sq_norms_sorted.iter().sum();
+        assert!((col_sum - spec.sq_frobenius_norm).abs() < 1e-6 * spec.sq_frobenius_norm);
+    }
+
+    #[test]
+    fn region_score_matches_hand_calc() {
+        // two rows, d=2: sums = (4, 6), |R|=2, lam=1 -> (16+36)/3
+        let g = vec![1.0f32, 2.0, 3.0, 4.0];
+        let s = region_score(&g, 2, &[0, 1], 1.0);
+        assert!((s - 52.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn svd_sketch_has_smallest_measured_error_on_low_rank() {
+        // Low-rank G: SVD error ~ 0; random sketches larger; checks the
+        // A.2-vs-A.4 ordering empirically.
+        let n = 60;
+        let d = 12;
+        let r = 2;
+        let mut rng = Rng::new(5);
+        let mut u = vec![0.0f32; n * r];
+        let mut w = vec![0.0f32; r * d];
+        rng.fill_gaussian(&mut u, 1.0);
+        rng.fill_gaussian(&mut w, 1.0);
+        let mut g = vec![0.0f32; n * d];
+        for i in 0..n {
+            for j in 0..d {
+                for t in 0..r {
+                    g[i * d + j] += u[i * r + t] * w[t * d + j];
+                }
+            }
+        }
+        let mut eng = NativeEngine::new();
+        let k = 2;
+        let mut errs = std::collections::BTreeMap::new();
+        for sketch in [
+            SketchConfig::TruncatedSvd { k, iters: 10 },
+            SketchConfig::RandomSampling { k },
+            SketchConfig::TopOutputs { k },
+        ] {
+            let mut srng = Rng::new(7);
+            let (gk, kk) = sketch.apply(&g, n, d, &mut srng, &mut eng).unwrap();
+            let mut erng = Rng::new(9);
+            let e = score_error_estimate(&g, &gk, n, d, kk, 1.0, 100, &mut erng);
+            errs.insert(sketch.name().to_string(), e);
+        }
+        let svd = errs["truncated-svd"];
+        assert!(
+            svd <= errs["random-sampling"] + 1e-6 && svd <= errs["top-outputs"] + 1e-6,
+            "svd {svd} not smallest: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn theory_bounds_shrink_with_k() {
+        let g = gaussian(50, 10, 11);
+        let spec = gradient_spectrum(&g, 50, 10, 13);
+        let b2 = theory_bounds(&spec, 2);
+        let b5 = theory_bounds(&spec, 5);
+        assert!(b5.top_outputs <= b2.top_outputs);
+        assert!(b5.random_sketch < b2.random_sketch);
+    }
+}

@@ -1,0 +1,335 @@
+//! Sketched split scoring (paper section 3 + Appendix A).
+//!
+//! A sketch replaces the n x d gradient matrix G with an n x k matrix G_k
+//! (k << d) *for split search only*; leaf values always use the full G/H.
+//! The approximation error `sup_R |S_G(R) - S_{G_k}(R)|` is bounded by
+//! `||G Gᵀ - G_k G_kᵀ||` (Lemma A.1), which each strategy controls:
+//!
+//! * [`SketchConfig::TopOutputs`]       — error ≤ Σ_{j>k} ‖g_(j)‖²  (Prop. A.3)
+//! * [`SketchConfig::RandomSampling`]   — ≲ √(sr(G)·log)·‖G‖²/√k    (Prop. A.4)
+//! * [`SketchConfig::RandomProjection`] — ≲ √(sr(G))·‖G‖²/√k        (Prop. A.5)
+//! * [`SketchConfig::TruncatedSvd`]     — ≤ σ²_{k+1}(G), optimal    (Prop. A.2)
+
+use crate::engine::ComputeEngine;
+use crate::util::rng::Rng;
+
+pub mod analysis;
+pub mod svd;
+
+/// Which sketch to apply before the split search.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SketchConfig {
+    /// No sketch ("SketchBoost Full" — the CatBoost single-tree regime).
+    None,
+    /// Keep the k columns of G with largest Euclidean norm (section 3.1).
+    TopOutputs { k: usize },
+    /// Sample k columns i.i.d. with p_i ∝ ‖g_i‖², scaled by 1/√(k·p_i)
+    /// (section 3.2).
+    RandomSampling { k: usize },
+    /// G_k = G·Π with Π ~ N(0, 1/k) entries (section 3.3).
+    RandomProjection { k: usize },
+    /// Best rank-k sketch via truncated SVD (Appendix A.1; O(nd·k·iters),
+    /// implemented with subspace power iteration). Ablation baseline.
+    TruncatedSvd { k: usize, iters: usize },
+}
+
+impl SketchConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SketchConfig::None => "full",
+            SketchConfig::TopOutputs { .. } => "top-outputs",
+            SketchConfig::RandomSampling { .. } => "random-sampling",
+            SketchConfig::RandomProjection { .. } => "random-projection",
+            SketchConfig::TruncatedSvd { .. } => "truncated-svd",
+        }
+    }
+
+    pub fn parse(s: &str, k: usize) -> Option<SketchConfig> {
+        match s {
+            "full" | "none" => Some(SketchConfig::None),
+            "top" | "top-outputs" | "topk" => Some(SketchConfig::TopOutputs { k }),
+            "sampling" | "random-sampling" | "rs" => Some(SketchConfig::RandomSampling { k }),
+            "projection" | "random-projection" | "rp" => {
+                Some(SketchConfig::RandomProjection { k })
+            }
+            "svd" | "truncated-svd" => Some(SketchConfig::TruncatedSvd { k, iters: 8 }),
+            _ => None,
+        }
+    }
+
+    /// Effective number of scoring columns for output dimension d.
+    pub fn k_effective(&self, d: usize) -> usize {
+        match self {
+            SketchConfig::None => d,
+            SketchConfig::TopOutputs { k }
+            | SketchConfig::RandomSampling { k }
+            | SketchConfig::RandomProjection { k }
+            | SketchConfig::TruncatedSvd { k, .. } => (*k).min(d).max(1),
+        }
+    }
+
+    /// Build the sketch of row-major `g` [n, d].
+    ///
+    /// Returns `None` when the sketch is the identity (Full, or k >= d for
+    /// the column-selection sketches), so the caller can use `g` directly
+    /// without a copy. `Some((g_k, k))` otherwise, `g_k` row-major [n, k].
+    pub fn apply(
+        &self,
+        g: &[f32],
+        n: usize,
+        d: usize,
+        rng: &mut Rng,
+        engine: &mut dyn ComputeEngine,
+    ) -> Option<(Vec<f32>, usize)> {
+        let k = self.k_effective(d);
+        match self {
+            SketchConfig::None => None,
+            _ if k >= d && !matches!(self, SketchConfig::RandomProjection { .. }) => None,
+            SketchConfig::TopOutputs { .. } => {
+                let norms = column_sq_norms(g, n, d);
+                let mut idx: Vec<usize> = (0..d).collect();
+                idx.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+                idx.truncate(k);
+                Some((gather_columns(g, n, d, &idx, None), k))
+            }
+            SketchConfig::RandomSampling { .. } => {
+                let norms = column_sq_norms(g, n, d);
+                let total: f64 = norms.iter().sum();
+                if total <= 0.0 {
+                    // all-zero gradients: any sketch works; take first k
+                    let idx: Vec<usize> = (0..k).collect();
+                    return Some((gather_columns(g, n, d, &idx, None), k));
+                }
+                let mut cumsum = Vec::with_capacity(d);
+                let mut acc = 0.0f64;
+                for &w in &norms {
+                    acc += w;
+                    cumsum.push(acc);
+                }
+                // i.i.d. with replacement, as in the paper
+                let idx: Vec<usize> = (0..k).map(|_| rng.next_categorical(&cumsum)).collect();
+                // scale column i by 1/sqrt(k * p_i) for unbiasedness
+                let scales: Vec<f32> = idx
+                    .iter()
+                    .map(|&i| {
+                        let p = norms[i] / total;
+                        (1.0 / (k as f64 * p).sqrt()) as f32
+                    })
+                    .collect();
+                Some((gather_columns(g, n, d, &idx, Some(&scales)), k))
+            }
+            SketchConfig::RandomProjection { .. } => {
+                let sigma = 1.0 / (k as f64).sqrt();
+                let mut proj = vec![0.0f32; d * k];
+                rng.fill_gaussian(&mut proj, sigma);
+                let mut out = vec![0.0f32; n * k];
+                engine.sketch_project(g, n, d, &proj, k, &mut out);
+                Some((out, k))
+            }
+            SketchConfig::TruncatedSvd { iters, .. } => {
+                Some((svd::truncated_svd_sketch(g, n, d, k, *iters, rng), k))
+            }
+        }
+    }
+}
+
+/// Squared Euclidean norm of each of the d columns of row-major g [n, d].
+pub fn column_sq_norms(g: &[f32], n: usize, d: usize) -> Vec<f64> {
+    let mut norms = vec![0.0f64; d];
+    for i in 0..n {
+        let row = &g[i * d..(i + 1) * d];
+        for (j, &v) in row.iter().enumerate() {
+            norms[j] += (v as f64) * (v as f64);
+        }
+    }
+    norms
+}
+
+/// Gather columns `idx` (with optional per-column scaling) into a new
+/// row-major [n, idx.len()] matrix.
+pub fn gather_columns(
+    g: &[f32],
+    n: usize,
+    d: usize,
+    idx: &[usize],
+    scales: Option<&[f32]>,
+) -> Vec<f32> {
+    let k = idx.len();
+    let mut out = vec![0.0f32; n * k];
+    for i in 0..n {
+        let row = &g[i * d..(i + 1) * d];
+        let dst = &mut out[i * k..(i + 1) * k];
+        match scales {
+            None => {
+                for (c, &j) in idx.iter().enumerate() {
+                    dst[c] = row[j];
+                }
+            }
+            Some(s) => {
+                for (c, &j) in idx.iter().enumerate() {
+                    dst[c] = row[j] * s[c];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::util::proptest::run_prop;
+
+    fn toy_g(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut g = vec![0.0f32; n * d];
+        rng.fill_gaussian(&mut g, 1.0);
+        // give columns very different norms
+        for i in 0..n {
+            for j in 0..d {
+                g[i * d + j] *= (j + 1) as f32;
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn column_norms_correct() {
+        let g = vec![1.0f32, 2.0, 3.0, 4.0]; // [[1,2],[3,4]]
+        let n = column_sq_norms(&g, 2, 2);
+        assert!((n[0] - 10.0).abs() < 1e-9);
+        assert!((n[1] - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top_outputs_selects_largest() {
+        let n = 50;
+        let d = 6;
+        let g = toy_g(n, d, 1);
+        let mut rng = Rng::new(0);
+        let mut eng = NativeEngine::new();
+        let (gk, k) = SketchConfig::TopOutputs { k: 2 }
+            .apply(&g, n, d, &mut rng, &mut eng)
+            .unwrap();
+        assert_eq!(k, 2);
+        // largest-norm columns are d-1 and d-2 by construction
+        for i in 0..n {
+            assert_eq!(gk[i * 2], g[i * d + d - 1]);
+            assert_eq!(gk[i * 2 + 1], g[i * d + d - 2]);
+        }
+    }
+
+    #[test]
+    fn full_and_oversized_k_are_identity() {
+        let g = toy_g(10, 3, 2);
+        let mut rng = Rng::new(0);
+        let mut eng = NativeEngine::new();
+        assert!(SketchConfig::None.apply(&g, 10, 3, &mut rng, &mut eng).is_none());
+        assert!(SketchConfig::TopOutputs { k: 5 }
+            .apply(&g, 10, 3, &mut rng, &mut eng)
+            .is_none());
+    }
+
+    #[test]
+    fn random_sampling_prefers_heavy_columns() {
+        let n = 30;
+        let d = 10;
+        // column d-1 carries almost all mass
+        let mut g = vec![0.01f32; n * d];
+        for i in 0..n {
+            g[i * d + d - 1] = 10.0;
+        }
+        let mut eng = NativeEngine::new();
+        let mut heavy = 0usize;
+        let mut draws = 0usize;
+        for seed in 0..50 {
+            let mut rng = Rng::new(seed);
+            let (gk, k) = SketchConfig::RandomSampling { k: 2 }
+                .apply(&g, n, d, &mut rng, &mut eng)
+                .unwrap();
+            draws += k;
+            for c in 0..k {
+                // the heavy column scaled by 1/sqrt(k p) is still >> 0.01
+                if gk[c].abs() > 1.0 {
+                    heavy += 1;
+                }
+            }
+        }
+        assert!(heavy as f64 / draws as f64 > 0.9, "{heavy}/{draws}");
+    }
+
+    #[test]
+    fn random_sampling_unbiased_gram() {
+        // E[G_k G_kᵀ] = G Gᵀ: check one diagonal entry across many seeds
+        let n = 8;
+        let d = 12;
+        let g = toy_g(n, d, 3);
+        let mut eng = NativeEngine::new();
+        let true_norm: f64 = g[0..d].iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let mut est = 0.0f64;
+        let trials = 600;
+        for seed in 0..trials {
+            let mut rng = Rng::new(seed);
+            let (gk, k) = SketchConfig::RandomSampling { k: 4 }
+                .apply(&g, n, d, &mut rng, &mut eng)
+                .unwrap();
+            est += gk[0..k].iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        }
+        est /= trials as f64;
+        assert!(
+            (est - true_norm).abs() / true_norm < 0.15,
+            "estimate {est} vs true {true_norm}"
+        );
+    }
+
+    #[test]
+    fn random_projection_shape_and_scale() {
+        run_prop("rp preserves norms in expectation-ish", 10, |gen| {
+            let n = gen.usize_in(5, 40);
+            let d = gen.usize_in(8, 30);
+            let k = 6;
+            let g = gen.vec_gaussian(n * d, 1.0);
+            let mut rng = Rng::new(gen.seed);
+            let mut eng = NativeEngine::new();
+            let (gk, kk) = SketchConfig::RandomProjection { k }
+                .apply(&g, n, d, &mut rng, &mut eng)
+                .unwrap();
+            assert_eq!(kk, k);
+            assert_eq!(gk.len(), n * k);
+            // JL: squared row norms preserved within a loose factor
+            for i in 0..n.min(5) {
+                let orig: f64 = g[i * d..(i + 1) * d]
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum();
+                let proj: f64 = gk[i * k..(i + 1) * k]
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum();
+                if orig > 1.0 {
+                    assert!(proj / orig > 0.05 && proj / orig < 20.0, "{proj} vs {orig}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn zero_gradients_dont_crash_sampling() {
+        let g = vec![0.0f32; 20 * 5];
+        let mut rng = Rng::new(1);
+        let mut eng = NativeEngine::new();
+        let (gk, k) = SketchConfig::RandomSampling { k: 2 }
+            .apply(&g, 20, 5, &mut rng, &mut eng)
+            .unwrap();
+        assert_eq!(k, 2);
+        assert!(gk.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn parse_strategies() {
+        assert_eq!(SketchConfig::parse("rp", 5), Some(SketchConfig::RandomProjection { k: 5 }));
+        assert_eq!(SketchConfig::parse("full", 5), Some(SketchConfig::None));
+        assert!(SketchConfig::parse("bogus", 5).is_none());
+    }
+}

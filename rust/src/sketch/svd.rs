@@ -1,0 +1,227 @@
+//! Truncated-SVD sketch via subspace (block power) iteration
+//! (Appendix A.1: the optimal deterministic sketch, error ≤ σ²_{k+1}(G)).
+//!
+//! The paper excludes SVD from the main method set because exact SVD is
+//! O(min(nd², n²d)); we implement the randomized subspace-iteration
+//! variant at O(nd·k·iters) as an *ablation* so the bench suite can show
+//! where the quality/cost trade-off sits relative to the three cheap
+//! sketches.
+
+use crate::util::rng::Rng;
+
+/// Rank-k sketch G_k = G·V_k where V_k approximates the top-k right
+/// singular subspace of row-major `g` [n, d].
+pub fn truncated_svd_sketch(
+    g: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let k = k.min(d).max(1);
+    // V: d x k orthonormal basis, randomly initialized
+    let mut v = vec![0.0f32; d * k];
+    rng.fill_gaussian(&mut v, 1.0);
+    orthonormalize(&mut v, d, k);
+    let mut gv = vec![0.0f32; n * k];
+    for _ in 0..iters.max(1) {
+        // GV: n x k
+        matmul(g, n, d, &v, k, &mut gv);
+        // V <- Gᵀ(GV): d x k, then re-orthonormalize
+        matmul_t(g, n, d, &gv, k, &mut v);
+        orthonormalize(&mut v, d, k);
+    }
+    matmul(g, n, d, &v, k, &mut gv);
+    gv
+}
+
+/// out[n,k] = a[n,d] @ b[d,k]
+fn matmul(a: &[f32], n: usize, d: usize, b: &[f32], k: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..n {
+        let ai = &a[i * d..(i + 1) * d];
+        let oi = &mut out[i * k..(i + 1) * k];
+        for (j, &av) in ai.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let bj = &b[j * k..(j + 1) * k];
+            for c in 0..k {
+                oi[c] += av * bj[c];
+            }
+        }
+    }
+}
+
+/// out[d,k] = aᵀ[d,n] @ b[n,k]  (a given row-major [n,d])
+fn matmul_t(a: &[f32], n: usize, d: usize, b: &[f32], k: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..n {
+        let ai = &a[i * d..(i + 1) * d];
+        let bi = &b[i * k..(i + 1) * k];
+        for (j, &av) in ai.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let oj = &mut out[j * k..(j + 1) * k];
+            for c in 0..k {
+                oj[c] += av * bi[c];
+            }
+        }
+    }
+}
+
+/// Modified Gram–Schmidt on the k columns of row-major v [d, k].
+fn orthonormalize(v: &mut [f32], d: usize, k: usize) {
+    for c in 0..k {
+        // subtract projections on previous columns
+        for p in 0..c {
+            let mut dot = 0.0f64;
+            for j in 0..d {
+                dot += v[j * k + c] as f64 * v[j * k + p] as f64;
+            }
+            for j in 0..d {
+                v[j * k + c] -= (dot as f32) * v[j * k + p];
+            }
+        }
+        let mut norm = 0.0f64;
+        for j in 0..d {
+            norm += (v[j * k + c] as f64).powi(2);
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-12 {
+            // degenerate column: re-randomize deterministically
+            for j in 0..d {
+                v[j * k + c] = if (j + c) % 2 == 0 { 1.0 } else { -1.0 };
+            }
+            orthonormalize_col(v, d, k, c);
+        } else {
+            let inv = (1.0 / norm) as f32;
+            for j in 0..d {
+                v[j * k + c] *= inv;
+            }
+        }
+    }
+}
+
+fn orthonormalize_col(v: &mut [f32], d: usize, k: usize, c: usize) {
+    for p in 0..c {
+        let mut dot = 0.0f64;
+        for j in 0..d {
+            dot += v[j * k + c] as f64 * v[j * k + p] as f64;
+        }
+        for j in 0..d {
+            v[j * k + c] -= (dot as f32) * v[j * k + p];
+        }
+    }
+    let mut norm = 0.0f64;
+    for j in 0..d {
+        norm += (v[j * k + c] as f64).powi(2);
+    }
+    let inv = (1.0 / norm.sqrt().max(1e-12)) as f32;
+    for j in 0..d {
+        v[j * k + c] *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Frobenius norm of G Gᵀ - G_k G_kᵀ (the Lemma A.1 quantity, upper
+    /// bounds the operator norm).
+    fn gram_error(g: &[f32], gk: &[f32], n: usize, d: usize, k: usize) -> f64 {
+        let mut err = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let mut gij = 0.0f64;
+                for c in 0..d {
+                    gij += g[i * d + c] as f64 * g[j * d + c] as f64;
+                }
+                let mut kij = 0.0f64;
+                for c in 0..k {
+                    kij += gk[i * k + c] as f64 * gk[j * k + c] as f64;
+                }
+                err += (gij - kij) * (gij - kij);
+            }
+        }
+        err.sqrt()
+    }
+
+    fn low_rank_matrix(n: usize, d: usize, r: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut u = vec![0.0f32; n * r];
+        let mut w = vec![0.0f32; r * d];
+        rng.fill_gaussian(&mut u, 1.0);
+        rng.fill_gaussian(&mut w, 1.0);
+        let mut g = vec![0.0f32; n * d];
+        for i in 0..n {
+            for j in 0..d {
+                let mut s = 0.0f32;
+                for t in 0..r {
+                    s += u[i * r + t] * w[t * d + j];
+                }
+                g[i * d + j] = s;
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn exact_recovery_of_low_rank() {
+        // rank-2 matrix, k=2 sketch: gram error must be ~0
+        let (n, d) = (20, 10);
+        let g = low_rank_matrix(n, d, 2, 1);
+        let mut rng = Rng::new(0);
+        let gk = truncated_svd_sketch(&g, n, d, 2, 12, &mut rng);
+        let gnorm: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum::<f64>();
+        let err = gram_error(&g, &gk, n, d, 2);
+        assert!(err < 1e-2 * gnorm, "err={err} gnorm={gnorm}");
+    }
+
+    #[test]
+    fn svd_beats_random_columns_on_low_rank() {
+        let (n, d, k) = (30, 15, 3);
+        let g = low_rank_matrix(n, d, 3, 5);
+        let mut rng = Rng::new(2);
+        let gk = truncated_svd_sketch(&g, n, d, k, 10, &mut rng);
+        let svd_err = gram_error(&g, &gk, n, d, k);
+        // naive: first k columns
+        let mut naive = vec![0.0f32; n * k];
+        for i in 0..n {
+            for c in 0..k {
+                naive[i * k + c] = g[i * d + c];
+            }
+        }
+        let naive_err = gram_error(&g, &naive, n, d, k);
+        assert!(svd_err < naive_err, "svd {svd_err} vs naive {naive_err}");
+    }
+
+    #[test]
+    fn basis_is_orthonormal() {
+        let mut rng = Rng::new(3);
+        let (d, k) = (12, 4);
+        let mut v = vec![0.0f32; d * k];
+        rng.fill_gaussian(&mut v, 2.0);
+        orthonormalize(&mut v, d, k);
+        for a in 0..k {
+            for b in 0..k {
+                let mut dot = 0.0f64;
+                for j in 0..d {
+                    dot += v[j * k + a] as f64 * v[j * k + b] as f64;
+                }
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn handles_zero_matrix() {
+        let g = vec![0.0f32; 10 * 4];
+        let mut rng = Rng::new(4);
+        let gk = truncated_svd_sketch(&g, 10, 4, 2, 5, &mut rng);
+        assert!(gk.iter().all(|&x| x.abs() < 1e-6));
+    }
+}

@@ -1,0 +1,10 @@
+//! Multivariate decision trees: representation, depth-wise builder with
+//! sketched split scoring + sibling subtraction, and split selection.
+
+pub mod builder;
+pub mod splitter;
+#[allow(clippy::module_inception)]
+pub mod tree;
+
+pub use builder::{build_tree, BuildParams, SENTINEL};
+pub use tree::{Tree, TreeNode};

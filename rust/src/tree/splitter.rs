@@ -1,0 +1,210 @@
+//! Best-split selection from histograms + gain tensors (paper eq. 4).
+
+use crate::engine::ScoreMode;
+
+/// A chosen split for one frontier node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SplitDecision {
+    pub feature: usize,
+    /// left = codes <= bin
+    pub bin: u8,
+    /// S(left) + S(right) - S(parent): the (unhalved) information gain
+    pub gain: f32,
+    pub count_left: usize,
+    pub count_right: usize,
+}
+
+/// S(R) and |R| (or Σh in HessL2 mode) for one frontier slot, computed
+/// from its histogram totals over feature 0 (every feature's bins
+/// partition the same node, so any feature gives the same totals).
+pub fn node_score(
+    hist: &[f32],
+    slot: usize,
+    m: usize,
+    bins: usize,
+    k1: usize,
+    lam: f32,
+    mode: ScoreMode,
+) -> (f64, f64) {
+    let k = scoring_k(k1, mode);
+    let base = slot * m * bins * k1; // feature 0
+    let mut gsum = vec![0.0f64; k];
+    let mut denom = 0.0f64;
+    let mut count = 0.0f64;
+    for b in 0..bins {
+        let cell = &hist[base + b * k1..base + (b + 1) * k1];
+        for c in 0..k {
+            gsum[c] += cell[c] as f64;
+        }
+        count += cell[k1 - 1] as f64;
+        denom += match mode {
+            ScoreMode::CountL2 => cell[k1 - 1] as f64,
+            ScoreMode::HessL2 => (k..2 * k).map(|c| cell[c] as f64).sum::<f64>(),
+        };
+    }
+    let s: f64 = gsum.iter().map(|g| g * g).sum::<f64>() / (denom + lam as f64);
+    (s, count)
+}
+
+#[inline]
+pub fn scoring_k(k1: usize, mode: ScoreMode) -> usize {
+    match mode {
+        ScoreMode::CountL2 => k1 - 1,
+        ScoreMode::HessL2 => (k1 - 1) / 2,
+    }
+}
+
+/// Pick the best admissible split for `slot` from the engine's gain
+/// tensor, enforcing `min_data_in_leaf` on both children and requiring
+/// `gain - parent_score > min_gain`.
+#[allow(clippy::too_many_arguments)]
+pub fn best_split(
+    gains: &[f32],
+    hist: &[f32],
+    slot: usize,
+    m: usize,
+    bins: usize,
+    k1: usize,
+    parent_score: f64,
+    parent_count: f64,
+    min_data: usize,
+    min_gain: f32,
+    feature_mask: Option<&[bool]>,
+) -> Option<SplitDecision> {
+    let mut best: Option<SplitDecision> = None;
+    for f in 0..m {
+        if let Some(mask) = feature_mask {
+            if !mask[f] {
+                continue;
+            }
+        }
+        let hbase = (slot * m + f) * bins * k1;
+        let gbase = (slot * m + f) * bins;
+        let mut cum_count = 0.0f64;
+        // last bin is the degenerate all-left split: excluded by the
+        // count_right >= min_data check below.
+        for b in 0..bins {
+            cum_count += hist[hbase + b * k1 + (k1 - 1)] as f64;
+            let count_left = cum_count;
+            let count_right = parent_count - cum_count;
+            if count_left < min_data as f64 || count_right < min_data as f64 {
+                continue;
+            }
+            let gain = gains[gbase + b] as f64 - parent_score;
+            if gain <= min_gain as f64 {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some(prev) => gain > prev.gain as f64,
+            };
+            if better {
+                best = Some(SplitDecision {
+                    feature: f,
+                    bin: b as u8,
+                    gain: gain as f32,
+                    count_left: count_left as usize,
+                    count_right: count_right as usize,
+                });
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ComputeEngine, NativeEngine};
+
+    /// hist with one feature, 4 bins, k=1 (+count): bins carry gradient
+    /// +2, +2, -2, -2 with 5 rows each -> perfect split at bin 1.
+    fn separable_hist() -> Vec<f32> {
+        let k1 = 2;
+        let mut h = vec![0.0f32; 4 * k1];
+        let g = [2.0f32, 2.0, -2.0, -2.0];
+        for b in 0..4 {
+            h[b * k1] = g[b];
+            h[b * k1 + 1] = 5.0;
+        }
+        h
+    }
+
+    #[test]
+    fn node_score_totals() {
+        let h = separable_hist();
+        let (s, count) = node_score(&h, 0, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        assert!((count - 20.0).abs() < 1e-9);
+        // total gradient = 0 -> S(R) = 0
+        assert!(s.abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_split_finds_boundary() {
+        let h = separable_hist();
+        let gains =
+            NativeEngine::new().split_gains(&h, 1, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        let dec = best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 1, 0.0, None).unwrap();
+        assert_eq!(dec.feature, 0);
+        assert_eq!(dec.bin, 1);
+        assert_eq!(dec.count_left, 10);
+        assert_eq!(dec.count_right, 10);
+        // gain = 16/11 + 16/11
+        assert!((dec.gain as f64 - 2.0 * 16.0 / 11.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn min_data_blocks_unbalanced() {
+        let h = separable_hist();
+        let gains =
+            NativeEngine::new().split_gains(&h, 1, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        // min_data 11 > any achievable side
+        assert!(best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 11, 0.0, None).is_none());
+        // min_data 10: only the middle split remains admissible
+        let dec = best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 10, 0.0, None).unwrap();
+        assert_eq!(dec.bin, 1);
+    }
+
+    #[test]
+    fn min_gain_blocks_weak_splits() {
+        let h = separable_hist();
+        let gains =
+            NativeEngine::new().split_gains(&h, 1, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        assert!(best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 1, 100.0, None).is_none());
+    }
+
+    #[test]
+    fn feature_mask_excludes() {
+        let h = separable_hist();
+        let gains =
+            NativeEngine::new().split_gains(&h, 1, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        let mask = vec![false];
+        assert!(best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 1, 0.0, Some(&mask)).is_none());
+    }
+
+    #[test]
+    fn degenerate_last_bin_never_chosen() {
+        // all mass in bin 0: no split leaves the right side populated
+        let k1 = 2;
+        let mut h = vec![0.0f32; 4 * k1];
+        h[0] = 3.0;
+        h[1] = 10.0;
+        let gains =
+            NativeEngine::new().split_gains(&h, 1, 1, 4, k1, 1.0, ScoreMode::CountL2);
+        assert!(best_split(&gains, &h, 0, 1, 4, k1, 0.0, 10.0, 1, 0.0, None).is_none());
+    }
+
+    #[test]
+    fn hess_mode_node_score() {
+        // k=1 HessL2: channels [g, h, count]
+        let k1 = 3;
+        let h = vec![
+            2.0, 4.0, 10.0, // bin 0
+            1.0, 2.0, 5.0, // bin 1
+        ];
+        let (s, count) = node_score(&h, 0, 1, 2, k1, 1.0, ScoreMode::HessL2);
+        assert!((count - 15.0).abs() < 1e-9);
+        // (2+1)^2 / (4+2+1)
+        assert!((s - 9.0 / 7.0).abs() < 1e-6, "s={s}");
+    }
+}

@@ -1,0 +1,284 @@
+//! Multivariate decision tree representation (the paper's single-tree
+//! strategy: one tree predicts all `d` outputs; each leaf holds a vector
+//! value v_j in R^d, eq. 3).
+
+use crate::data::binning::BinnedDataset;
+
+/// Internal split node. Children encode either another internal node
+/// (index >= 0 into `Tree::nodes`) or a leaf (`!leaf_id`, i.e. negative).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreeNode {
+    pub feature: u32,
+    /// split on quantized codes: left iff code <= bin
+    pub bin: u8,
+    /// equivalent raw-value threshold: left iff x <= threshold (NaN left)
+    pub threshold: f32,
+    pub left: i32,
+    pub right: i32,
+    /// impurity improvement this split achieved (for diagnostics)
+    pub gain: f32,
+}
+
+/// A fitted multivariate decision tree.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Tree {
+    pub n_outputs: usize,
+    /// empty iff the tree is a single leaf
+    pub nodes: Vec<TreeNode>,
+    /// row-major [n_leaves, n_outputs]
+    pub leaf_values: Vec<f32>,
+    pub n_leaves: usize,
+}
+
+#[inline]
+pub fn is_leaf(child: i32) -> bool {
+    child < 0
+}
+
+#[inline]
+pub fn leaf_id(child: i32) -> usize {
+    !child as usize
+}
+
+#[inline]
+pub fn encode_leaf(id: usize) -> i32 {
+    !(id as i32)
+}
+
+impl Tree {
+    /// Leaf index for a row of the *binned* training matrix.
+    pub fn leaf_for_binned(&self, binned: &BinnedDataset, row: usize) -> usize {
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let mut node = 0i32;
+        loop {
+            let nd = &self.nodes[node as usize];
+            let code = binned.codes[nd.feature as usize * binned.n_rows + row];
+            let child = if code <= nd.bin { nd.left } else { nd.right };
+            if is_leaf(child) {
+                return leaf_id(child);
+            }
+            node = child;
+        }
+    }
+
+    /// Leaf index for a raw (unbinned) feature row.
+    /// NaN goes left, matching the binning policy (NaN -> bin 0).
+    pub fn leaf_for_raw(&self, row: &[f32]) -> usize {
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let mut node = 0i32;
+        loop {
+            let nd = &self.nodes[node as usize];
+            let x = row[nd.feature as usize];
+            let go_left = x.is_nan() || x <= nd.threshold;
+            let child = if go_left { nd.left } else { nd.right };
+            if is_leaf(child) {
+                return leaf_id(child);
+            }
+            node = child;
+        }
+    }
+
+    /// Add this tree's contribution for a raw feature row into `out`.
+    #[inline]
+    pub fn predict_into(&self, row: &[f32], out: &mut [f32]) {
+        let leaf = self.leaf_for_raw(row);
+        let v = &self.leaf_values[leaf * self.n_outputs..(leaf + 1) * self.n_outputs];
+        for (o, &lv) in out.iter_mut().zip(v.iter()) {
+            *o += lv;
+        }
+    }
+
+    /// Scale all leaf values (the trainer applies the learning rate here).
+    pub fn scale_leaves(&mut self, factor: f32) {
+        for v in self.leaf_values.iter_mut() {
+            *v *= factor;
+        }
+    }
+
+    /// Tree depth (0 for a single-leaf tree).
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[TreeNode], node: i32) -> usize {
+            if is_leaf(node) {
+                return 0;
+            }
+            let nd = &nodes[node as usize];
+            1 + walk(nodes, nd.left).max(walk(nodes, nd.right))
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            walk(&self.nodes, 0)
+        }
+    }
+
+    /// Structural invariants; used by tests and debug assertions.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.leaf_values.len() != self.n_leaves * self.n_outputs {
+            return Err(format!(
+                "leaf buffer {} != {} * {}",
+                self.leaf_values.len(),
+                self.n_leaves,
+                self.n_outputs
+            ));
+        }
+        if self.nodes.is_empty() {
+            if self.n_leaves != 1 {
+                return Err("stump must have exactly one leaf".into());
+            }
+            return Ok(());
+        }
+        // every node reachable exactly once; every leaf id used exactly once
+        let mut node_seen = vec![false; self.nodes.len()];
+        let mut leaf_seen = vec![false; self.n_leaves];
+        let mut stack = vec![0i32];
+        while let Some(c) = stack.pop() {
+            if is_leaf(c) {
+                let l = leaf_id(c);
+                if l >= self.n_leaves {
+                    return Err(format!("leaf id {l} out of range"));
+                }
+                if leaf_seen[l] {
+                    return Err(format!("leaf {l} reached twice"));
+                }
+                leaf_seen[l] = true;
+            } else {
+                let i = c as usize;
+                if i >= self.nodes.len() {
+                    return Err(format!("node id {i} out of range"));
+                }
+                if node_seen[i] {
+                    return Err(format!("node {i} reached twice"));
+                }
+                node_seen[i] = true;
+                stack.push(self.nodes[i].left);
+                stack.push(self.nodes[i].right);
+            }
+        }
+        if !node_seen.iter().all(|&s| s) {
+            return Err("unreachable internal node".into());
+        }
+        if !leaf_seen.iter().all(|&s| s) {
+            return Err("unused leaf id".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{Dataset, Targets};
+
+    /// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2)
+    fn toy_tree() -> Tree {
+        Tree {
+            n_outputs: 2,
+            nodes: vec![
+                TreeNode { feature: 0, bin: 3, threshold: 0.5, left: encode_leaf(0), right: 1, gain: 1.0 },
+                TreeNode { feature: 1, bin: 1, threshold: 2.0, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
+            ],
+            leaf_values: vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0],
+            n_leaves: 3,
+        }
+    }
+
+    #[test]
+    fn leaf_encoding_roundtrip() {
+        for id in [0usize, 1, 5, 1000] {
+            assert!(is_leaf(encode_leaf(id)));
+            assert_eq!(leaf_id(encode_leaf(id)), id);
+        }
+        assert!(!is_leaf(0));
+        assert!(!is_leaf(7));
+    }
+
+    #[test]
+    fn raw_routing() {
+        let t = toy_tree();
+        assert_eq!(t.leaf_for_raw(&[0.0, 0.0]), 0);
+        assert_eq!(t.leaf_for_raw(&[1.0, 1.0]), 1);
+        assert_eq!(t.leaf_for_raw(&[1.0, 5.0]), 2);
+        // boundary goes left
+        assert_eq!(t.leaf_for_raw(&[0.5, 9.0]), 0);
+        // NaN goes left at every node
+        assert_eq!(t.leaf_for_raw(&[f32::NAN, 9.0]), 0);
+        assert_eq!(t.leaf_for_raw(&[1.0, f32::NAN]), 1);
+    }
+
+    #[test]
+    fn predict_accumulates() {
+        let t = toy_tree();
+        let mut out = vec![10.0f32, 20.0];
+        t.predict_into(&[1.0, 5.0], &mut out);
+        assert_eq!(out, vec![13.0, 17.0]);
+    }
+
+    #[test]
+    fn binned_routing_matches_bins() {
+        // one feature, codes: [0, 2, 4]; split at bin 1
+        let ds = Dataset::new(
+            3,
+            1,
+            vec![0.0, 2.0, 4.0],
+            Targets::Regression { values: vec![0.0; 3], n_targets: 1 },
+        );
+        let binned = BinnedDataset::from_dataset(&ds, 8);
+        let t = Tree {
+            n_outputs: 1,
+            nodes: vec![TreeNode {
+                feature: 0,
+                bin: binned.column(0)[0],
+                threshold: 0.0,
+                left: encode_leaf(0),
+                right: encode_leaf(1),
+                gain: 0.0,
+            }],
+            leaf_values: vec![-5.0, 5.0],
+            n_leaves: 2,
+        };
+        assert_eq!(t.leaf_for_binned(&binned, 0), 0);
+        assert_eq!(t.leaf_for_binned(&binned, 1), 1);
+        assert_eq!(t.leaf_for_binned(&binned, 2), 1);
+    }
+
+    #[test]
+    fn stump_routes_to_leaf_zero() {
+        let t = Tree { n_outputs: 1, nodes: vec![], leaf_values: vec![7.0], n_leaves: 1 };
+        assert_eq!(t.leaf_for_raw(&[1.0, 2.0]), 0);
+        assert_eq!(t.depth(), 0);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn depth_and_validate() {
+        let t = toy_tree();
+        assert_eq!(t.depth(), 2);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_duplicate_leaf() {
+        let mut t = toy_tree();
+        t.nodes[1].right = encode_leaf(1); // leaf 1 twice, leaf 2 unused
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_buffer() {
+        let mut t = toy_tree();
+        t.leaf_values.pop();
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn scale_leaves_applies_lr() {
+        let mut t = toy_tree();
+        t.scale_leaves(0.1);
+        assert!((t.leaf_values[0] - 0.1).abs() < 1e-7);
+        assert!((t.leaf_values[5] + 0.3).abs() < 1e-7);
+    }
+}

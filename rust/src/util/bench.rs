@@ -1,0 +1,214 @@
+//! Micro/macro benchmark harness (offline build: no `criterion`).
+//!
+//! `benches/*.rs` are `harness = false` binaries built on this module:
+//! warmup + timed repetitions, robust summary statistics, and aligned
+//! markdown table rendering so every bench prints the same rows/series
+//! the paper's tables and figures report. Results can also be dumped to
+//! JSON under `results/` for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Summary of repeated timed runs, in seconds.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub label: String,
+    pub reps: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub median: f64,
+}
+
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("label", Json::Str(self.label.clone()));
+        o.set("reps", Json::Num(self.reps as f64));
+        o.set("mean_s", Json::Num(self.mean));
+        o.set("std_s", Json::Num(self.std));
+        o.set("min_s", Json::Num(self.min));
+        o.set("median_s", Json::Num(self.median));
+        o
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `reps` measured repetitions.
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(label, &times)
+}
+
+/// Time a single run (for end-to-end training cells where reps are too
+/// expensive; the paper's Table 2/4 are single-fold timings too).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+pub fn summarize(label: &str, times: &[f64]) -> Measurement {
+    let reps = times.len();
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    let var = if reps > 1 {
+        times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / (reps - 1) as f64
+    } else {
+        0.0
+    };
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement {
+        label: label.to_string(),
+        reps,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        median: sorted[reps / 2],
+    }
+}
+
+/// Human-scale duration formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+/// Aligned markdown-style table printer for bench reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for c in 0..ncol {
+            w[c] = self.header[c].len();
+            for r in &self.rows {
+                w[c] = w[c].max(r[c].len());
+            }
+        }
+        let mut s = String::new();
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut l = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                l.push_str(&format!(" {:<width$} |", cell, width = w[c]));
+            }
+            l.push('\n');
+            l
+        };
+        s.push_str(&line(&self.header, &w));
+        let mut sep = String::from("|");
+        for width in &w {
+            sep.push_str(&format!("{}-|", "-".repeat(width + 2 - 1)));
+        }
+        sep.push('\n');
+        s.push_str(&sep);
+        for r in &self.rows {
+            s.push_str(&line(r, &w));
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Write a bench-result JSON file under `results/` (created on demand).
+pub fn write_results(name: &str, value: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_reps() {
+        let mut n = 0usize;
+        let m = bench("x", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(m.reps, 5);
+        assert!(m.mean >= 0.0 && m.min <= m.median);
+    }
+
+    #[test]
+    fn summarize_stats() {
+        let m = summarize("s", &[1.0, 2.0, 3.0]);
+        assert!((m.mean - 2.0).abs() < 1e-12);
+        assert!((m.std - 1.0).abs() < 1e-12);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.median, 2.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(3e-9).ends_with("ns"));
+        assert!(fmt_secs(3e-5).ends_with("µs"));
+        assert!(fmt_secs(3e-2).ends_with("ms"));
+        assert!(fmt_secs(3.0).ends_with('s'));
+        assert!(fmt_secs(300.0).ends_with("min"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "time"]);
+        t.row(&["a".into(), "1.0s".into()]);
+        t.row(&["longer".into(), "2.0s".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn measurement_json() {
+        let m = summarize("lbl", &[0.5]);
+        let j = m.to_json();
+        assert_eq!(j.get("label").unwrap().as_str().unwrap(), "lbl");
+        assert_eq!(j.get("reps").unwrap().as_usize().unwrap(), 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Tiny CLI argument parser (offline build: no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed getters with defaults keep call sites short; `usage()` renders a
+//! help block from the registered option descriptions.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` if next token isn't another option,
+                    // otherwise a bare flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            a.opts.insert(body.to_string(), v);
+                        }
+                        _ => a.flags.push(body.to_string()),
+                    }
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .opts
+                .get(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--ks 1,2,5,10`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render a usage block from (option, description) pairs.
+pub fn usage(cmd: &str, summary: &str, opts: &[(&str, &str)]) -> String {
+    let mut s = format!("{summary}\n\nUsage: {cmd}\n\nOptions:\n");
+    let w = opts.iter().map(|(o, _)| o.len()).max().unwrap_or(0);
+    for (o, d) in opts {
+        s.push_str(&format!("  {o:<w$}  {d}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("train --rounds 50 data.csv --lr=0.1");
+        assert_eq!(a.positional, vec!["train", "data.csv"]);
+        assert_eq!(a.get_usize("rounds", 0), 50);
+        assert_eq!(a.get_f32("lr", 0.0), 0.1);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse("--verbose --out x.json");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_usize("depth", 6), 6);
+        assert_eq!(a.get_str("loss", "ce"), "ce");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--ks 1,2,5");
+        assert_eq!(a.get_usize_list("ks", &[9]), vec![1, 2, 5]);
+        assert_eq!(a.get_usize_list("other", &[9]), vec![9]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        parse("--rounds abc").get_usize("rounds", 1);
+    }
+}

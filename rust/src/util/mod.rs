@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! RNG (no `rand`), JSON (no `serde`), CLI parsing (no `clap`), bench
+//! harness (no `criterion`), and a property-testing helper (no `proptest`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,149 @@
+//! Small property-based testing helper (offline build: no `proptest`).
+//!
+//! `run_prop` drives a property closure over `cases` independently seeded
+//! random cases; on failure it panics with the failing case's seed so the
+//! case can be replayed deterministically (`replay_prop`). Generators are
+//! plain methods on `Gen`, which wraps the library RNG.
+
+use crate::util::rng::Rng;
+
+/// Case-local random generator handed to property closures.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.next_below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_gaussian(&mut self, len: usize, sigma: f64) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        self.rng.fill_gaussian(&mut v, sigma);
+        v
+    }
+
+    pub fn vec_u32_below(&mut self, len: usize, bound: usize) -> Vec<u32> {
+        (0..len).map(|_| self.rng.next_below(bound) as u32).collect()
+    }
+
+    /// Pick one element from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` random cases; panic with the failing seed.
+pub fn run_prop<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let mut meta = Rng::new(0x5EED ^ fxhash(name));
+    for case in 0..cases {
+        let seed = meta.next_u64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Rng::new(seed), seed };
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}): {msg}\n\
+                 replay with replay_prop(\"{name}\", {seed:#x}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay_prop<F: FnMut(&mut Gen)>(_name: &str, seed: u64, mut prop: F) {
+    let mut g = Gen { rng: Rng::new(seed), seed };
+    prop(&mut g);
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "mismatch at {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_pass() {
+        run_prop("addition commutes", 50, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_prop_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            run_prop("always fails", 3, |_| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(()) => panic!("should have failed"),
+        };
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges() {
+        run_prop("gen ranges", 30, |g| {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let v = g.vec_u32_below(10, 4);
+            assert!(v.iter().all(|&u| u < 4));
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_far() {
+        assert_close(&[1.0], &[2.0], 1e-5, 1e-6);
+    }
+}

@@ -1,0 +1,276 @@
+//! Property-based tests on the paper's mathematical invariants, driven
+//! by the in-repo prop-test harness (util::proptest).
+
+use sketchboost::data::binning::BinnedDataset;
+use sketchboost::data::dataset::{Dataset, Targets};
+use sketchboost::data::synthetic::{make_multiclass, FeatureSpec};
+use sketchboost::engine::{ComputeEngine, NativeEngine, ScoreMode};
+use sketchboost::prelude::*;
+use sketchboost::sketch::{column_sq_norms, SketchConfig};
+use sketchboost::tree::builder::{build_tree, BuildParams};
+use sketchboost::util::proptest::{run_prop, Gen};
+use sketchboost::util::rng::Rng;
+
+fn random_binned(g: &mut Gen, n: usize, m: usize, bins: usize) -> BinnedDataset {
+    let feats = g.vec_gaussian(n * m, 1.5);
+    let ds = Dataset::new(
+        n,
+        m,
+        feats,
+        Targets::Regression { values: vec![0.0; n], n_targets: 1 },
+    );
+    BinnedDataset::from_dataset(&ds, bins)
+}
+
+/// Lemma A.1 quantity: ||G Gᵀ - G_k G_kᵀ||_F (upper-bounds the operator
+/// norm the propositions bound).
+fn gram_fro_error(gm: &[f32], gk: &[f32], n: usize, d: usize, k: usize) -> f64 {
+    let mut err = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let mut a = 0.0f64;
+            for c in 0..d {
+                a += gm[i * d + c] as f64 * gm[j * d + c] as f64;
+            }
+            let mut b = 0.0f64;
+            for c in 0..k {
+                b += gk[i * k + c] as f64 * gk[j * k + c] as f64;
+            }
+            err += (a - b) * (a - b);
+        }
+    }
+    err.sqrt()
+}
+
+#[test]
+fn prop_top_outputs_error_bound_a3() {
+    // Prop A.3: ||GGᵀ - G_kG_kᵀ|| <= sum of dropped column sq-norms.
+    // (We check the Frobenius form against sqrt(n)*bound, a valid
+    // relaxation since ||.||_F <= sqrt(rank)*||.||_2.)
+    run_prop("prop A.3 bound", 15, |g| {
+        let n = g.usize_in(5, 25);
+        let d = g.usize_in(3, 12);
+        let k = g.usize_in(1, d - 1);
+        let gm = g.vec_gaussian(n * d, 1.0);
+        let mut rng = Rng::new(g.seed);
+        let mut eng = NativeEngine::new();
+        let Some((gk, kk)) =
+            SketchConfig::TopOutputs { k }.apply(&gm, n, d, &mut rng, &mut eng)
+        else {
+            return;
+        };
+        let norms = column_sq_norms(&gm, n, d);
+        let mut sorted = norms.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let dropped: f64 = sorted[k..].iter().sum();
+        let err = gram_fro_error(&gm, &gk, n, d, kk);
+        assert!(
+            err <= (n as f64).sqrt() * dropped + 1e-3,
+            "A.3 violated: err {err} > sqrt(n)*dropped {dropped}"
+        );
+    });
+}
+
+#[test]
+fn prop_random_sampling_unbiased_diag() {
+    // E[G_k G_kᵀ] = G Gᵀ: check the trace (= total sq norm) across seeds.
+    run_prop("RS unbiasedness", 5, |g| {
+        let n = g.usize_in(4, 12);
+        let d = g.usize_in(4, 10);
+        let gm = g.vec_gaussian(n * d, 1.0);
+        let total: f64 = gm.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let mut eng = NativeEngine::new();
+        let mut est = 0.0f64;
+        let trials = 400;
+        for s in 0..trials {
+            let mut rng = Rng::new(g.seed ^ s);
+            let (gk, k) = SketchConfig::RandomSampling { k: 3 }
+                .apply(&gm, n, d, &mut rng, &mut eng)
+                .unwrap();
+            est += gk[..n * k].iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        }
+        est /= trials as f64;
+        assert!(
+            (est - total).abs() < 0.25 * total,
+            "RS trace biased: {est} vs {total}"
+        );
+    });
+}
+
+#[test]
+fn prop_histogram_mass_conservation() {
+    // sum over (node, bin) of any histogram channel = sum over rows of
+    // that channel, for every feature.
+    run_prop("hist mass conservation", 15, |g| {
+        let n = g.usize_in(20, 300);
+        let m = g.usize_in(1, 4);
+        let bins = *g.choose(&[8usize, 32]);
+        let slots = g.usize_in(1, 6);
+        let binned = random_binned(g, n, m, bins);
+        let k1 = g.usize_in(2, 5);
+        let chan = g.vec_gaussian(n * k1, 1.0);
+        let slot_of_row = g.vec_u32_below(n, slots);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut out = vec![0.0f32; slots * m * bins * k1];
+        NativeEngine::new().histograms(&binned, &rows, &slot_of_row, &chan, k1, slots, &mut out);
+        for f in 0..m {
+            for c in 0..k1 {
+                let mut total = 0.0f64;
+                for s in 0..slots {
+                    for b in 0..bins {
+                        total += out[((s * m + f) * bins + b) * k1 + c] as f64;
+                    }
+                }
+                let want: f64 = (0..n).map(|i| chan[i * k1 + c] as f64).sum();
+                assert!(
+                    (total - want).abs() < 1e-2 + 1e-4 * want.abs(),
+                    "feature {f} channel {c}: {total} vs {want}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_split_gain_superadditive_at_small_lambda() {
+    // At lambda -> 0 (and non-empty children), Cauchy-Schwarz gives
+    // (u+v)^2/(a+b) <= u^2/a + v^2/b per output, so S(L)+S(R) >= S(parent)
+    // for every candidate. (With a real lambda > 0 this can fail — the
+    // regularizer penalizes small leaves — which is exactly why the
+    // splitter filters on `gain - parent_score > min_gain`.)
+    run_prop("gain superadditivity (lambda->0)", 20, |g| {
+        let bins = *g.choose(&[4usize, 16]);
+        let k = g.usize_in(1, 4);
+        let k1 = k + 1;
+        let m = 1usize;
+        let mut hist = g.vec_gaussian(m * bins * k1, 1.0);
+        for b in 0..bins {
+            hist[b * k1 + k] = g.usize_in(1, 20) as f32; // every bin non-empty
+        }
+        let lam = 1e-4f32;
+        let mut eng = NativeEngine::new();
+        let gains = eng.split_gains(&hist, 1, m, bins, k1, lam, ScoreMode::CountL2);
+        let (pscore, _) = sketchboost::tree::splitter::node_score(
+            &hist, 0, m, bins, k1, lam, ScoreMode::CountL2,
+        );
+        // candidates with both children non-empty: all b < bins-1 here
+        for b in 0..bins - 1 {
+            let gain = gains[b] as f64;
+            assert!(
+                gain >= pscore - 1e-3 * pscore.abs() - 1e-3,
+                "candidate b={b}: gain {gain} < parent {pscore}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_tree_partitions_and_depth_bounded() {
+    run_prop("tree partition invariants", 10, |g| {
+        let n = g.usize_in(60, 400);
+        let m = g.usize_in(1, 4);
+        let binned = random_binned(g, n, m, 16);
+        let grad = g.vec_gaussian(n, 1.0);
+        let h = vec![1.0f32; n];
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let depth = g.usize_in(1, 5);
+        let min_data = g.usize_in(1, 10);
+        let p = BuildParams {
+            binned: &binned,
+            rows: &rows,
+            g: &grad,
+            h: &h,
+            d: 1,
+            score_g: &grad,
+            kc: 1,
+            score_h: None,
+            mode: ScoreMode::CountL2,
+            max_depth: depth,
+            lambda: 1.0,
+            min_data_in_leaf: min_data,
+            min_gain: 0.0,
+            feature_mask: None,
+            sparse_topk: None,
+            row_weights: None,
+        };
+        let mut eng = NativeEngine::new();
+        let (tree, leaf_of_row) = build_tree(&p, &mut eng);
+        tree.validate().unwrap();
+        assert!(tree.depth() <= depth);
+        // each leaf holds >= min_data rows and the leaves partition rows
+        let mut counts = vec![0usize; tree.n_leaves];
+        for r in 0..n {
+            counts[leaf_of_row[r] as usize] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), n);
+        if tree.n_leaves > 1 {
+            assert!(
+                counts.iter().all(|&c| c >= min_data),
+                "leaf below min_data: {counts:?}"
+            );
+        }
+        // binned routing agrees with raw-value routing on training data
+        for r in (0..n).step_by(7) {
+            let raw: Vec<f32> = (0..m).map(|f| binned.codes[f * n + r] as f32).collect();
+            let _ = raw; // raw-value recheck happens in tree unit tests
+            assert_eq!(tree.leaf_for_binned(&binned, r), leaf_of_row[r] as usize);
+        }
+    });
+}
+
+#[test]
+fn prop_leaf_values_shrink_with_lambda() {
+    // larger lambda => smaller |leaf value| (eq. 3 regularization)
+    run_prop("lambda shrinkage", 10, |g| {
+        let ds = make_multiclass(200, FeatureSpec::guyon(6), 3, 2.0, g.seed);
+        let mut cfg = GBDTConfig::multiclass(3);
+        cfg.n_rounds = 1;
+        cfg.max_depth = 2;
+        cfg.max_bins = 16;
+        let small = GBDT::fit(&cfg, &ds, None);
+        cfg.lambda_l2 = 100.0;
+        let large = GBDT::fit(&cfg, &ds, None);
+        let max_abs = |m: &Ensemble| {
+            m.trees[0]
+                .leaf_values
+                .iter()
+                .fold(0.0f32, |a, &v| a.max(v.abs()))
+        };
+        assert!(
+            max_abs(&large) <= max_abs(&small) + 1e-6,
+            "lambda=100 leaves larger than lambda=1"
+        );
+    });
+}
+
+#[test]
+fn prop_predictions_finite_everywhere() {
+    run_prop("finite predictions", 8, |g| {
+        let d = g.usize_in(2, 6);
+        let ds = make_multiclass(300, FeatureSpec::guyon(8), d, 1.5, g.seed);
+        let mut cfg = GBDTConfig::multiclass(d);
+        cfg.n_rounds = 10;
+        cfg.max_bins = 16;
+        cfg.learning_rate = 0.5;
+        cfg.sketch = *g.choose(&[
+            SketchConfig::None,
+            SketchConfig::RandomProjection { k: 2 },
+            SketchConfig::RandomSampling { k: 2 },
+        ]);
+        let model = GBDT::fit(&cfg, &ds, None);
+        // also probe far outside the training distribution (and NaN)
+        let probe = Dataset::new(
+            3,
+            8,
+            vec![
+                1e6, -1e6, f32::NAN, 0.0, 1e6, -1e6, f32::NAN, 0.0,
+                0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+                -1e6, 1e6, 1e-30, -1e-30, f32::NAN, f32::NAN, 1.0, -1.0,
+            ],
+            Targets::Multiclass { labels: vec![0, 0, 0], n_classes: d },
+        );
+        for v in model.predict(&probe) {
+            assert!(v.is_finite(), "non-finite prediction");
+        }
+    });
+}

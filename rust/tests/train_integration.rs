@@ -1,0 +1,177 @@
+//! Integration tests over the full training stack: every task family,
+//! every sketch strategy, CV, serialization round-trips, baselines, and
+//! generalization sanity on held-out data.
+
+use sketchboost::baselines::one_vs_all::fit_one_vs_all;
+use sketchboost::baselines::{gbdt_mo_full_config, gbdt_mo_sparse_config};
+use sketchboost::data::profiles::Profile;
+use sketchboost::data::synthetic::{make_multiclass, make_multilabel, make_multitask, FeatureSpec};
+use sketchboost::prelude::*;
+
+fn fast(mut cfg: GBDTConfig) -> GBDTConfig {
+    cfg.n_rounds = 30;
+    cfg.learning_rate = 0.25;
+    cfg.max_depth = 4;
+    cfg.max_bins = 32;
+    cfg
+}
+
+#[test]
+fn multiclass_generalizes_on_holdout() {
+    let ds = make_multiclass(
+        1500,
+        FeatureSpec { n_informative: 6, n_linear: 3, n_redundant: 3 },
+        5,
+        2.0,
+        1,
+    );
+    let (train, test) = split::train_test_split(&ds, 0.25, 0);
+    let mut cfg = fast(GBDTConfig::multiclass(5));
+    cfg.n_rounds = 60;
+    let model = GBDT::fit(&cfg, &train, Some(&test));
+    let acc = Metric::Accuracy.eval(&model.predict_raw(&test), &test.targets);
+    assert!(acc > 0.75, "holdout accuracy {acc}");
+}
+
+#[test]
+fn every_sketch_strategy_generalizes() {
+    let ds = make_multiclass(1200, FeatureSpec::guyon(12), 8, 2.0, 2);
+    let (train, test) = split::train_test_split(&ds, 0.25, 0);
+    let uniform_ce = (8.0f64).ln();
+    for sketch in [
+        SketchConfig::None,
+        SketchConfig::TopOutputs { k: 3 },
+        SketchConfig::RandomSampling { k: 3 },
+        SketchConfig::RandomProjection { k: 3 },
+        SketchConfig::TruncatedSvd { k: 3, iters: 5 },
+    ] {
+        let mut cfg = fast(GBDTConfig::multiclass(8));
+        cfg.sketch = sketch;
+        let model = GBDT::fit(&cfg, &train, Some(&test));
+        let ce = Metric::CrossEntropy.eval(&model.predict_raw(&test), &test.targets);
+        assert!(
+            ce < uniform_ce * 0.7,
+            "{}: holdout ce {ce} vs uniform {uniform_ce}",
+            sketch.name()
+        );
+    }
+}
+
+#[test]
+fn multilabel_beats_base_rate() {
+    let ds = make_multilabel(1000, FeatureSpec::guyon(10), 10, 3, 3);
+    let (train, test) = split::train_test_split(&ds, 0.25, 0);
+    let mut cfg = fast(GBDTConfig::multilabel(10));
+    cfg.sketch = SketchConfig::RandomProjection { k: 3 };
+    let model = GBDT::fit(&cfg, &train, Some(&test));
+    // base-rate-only model = BCE at the base scores; trained must beat it
+    let base_model = Ensemble {
+        loss: model.loss,
+        n_outputs: model.n_outputs,
+        base_score: model.base_score.clone(),
+        trees: vec![],
+        history: Default::default(),
+    };
+    let bce_model = Metric::BceLogLoss.eval(&model.predict_raw(&test), &test.targets);
+    let bce_base = Metric::BceLogLoss.eval(&base_model.predict_raw(&test), &test.targets);
+    assert!(bce_model < bce_base * 0.95, "model {bce_model} vs base {bce_base}");
+}
+
+#[test]
+fn multitask_r2_on_holdout() {
+    let ds = make_multitask(1500, FeatureSpec::guyon(10), 6, 2, 0.2, 4);
+    let (train, test) = split::train_test_split(&ds, 0.25, 0);
+    let mut cfg = fast(GBDTConfig::multitask(6));
+    cfg.n_rounds = 60;
+    cfg.sketch = SketchConfig::RandomSampling { k: 2 };
+    let model = GBDT::fit(&cfg, &train, Some(&test));
+    let r2 = Metric::R2.eval(&model.predict_raw(&test), &test.targets);
+    assert!(r2 > 0.5, "holdout r2 {r2}");
+}
+
+#[test]
+fn serialization_preserves_predictions() {
+    let ds = make_multiclass(500, FeatureSpec::guyon(8), 4, 2.0, 5);
+    let mut cfg = fast(GBDTConfig::multiclass(4));
+    cfg.sketch = SketchConfig::RandomProjection { k: 2 };
+    let model = GBDT::fit(&cfg, &ds, None);
+    let dir = std::env::temp_dir().join("sb_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    model.save(&path).unwrap();
+    let back = Ensemble::load(&path).unwrap();
+    assert_eq!(model.predict_raw(&ds), back.predict_raw(&ds));
+}
+
+#[test]
+fn cv_losses_are_consistent() {
+    let ds = make_multiclass(600, FeatureSpec::guyon(8), 3, 2.0, 6);
+    let mut cfg = fast(GBDTConfig::multiclass(3));
+    cfg.n_rounds = 15;
+    let folds = GBDT::fit_cv(&cfg, &ds, 5);
+    assert_eq!(folds.len(), 5);
+    let losses: Vec<f64> = folds.iter().map(|(_, l)| *l).collect();
+    let mean = losses.iter().sum::<f64>() / 5.0;
+    for l in &losses {
+        assert!((l - mean).abs() < mean, "fold loss {l} far from mean {mean}");
+        assert!(*l < (3.0f64).ln(), "fold loss {l} worse than uniform");
+    }
+}
+
+#[test]
+fn ova_vs_single_tree_quality_comparable() {
+    let ds = make_multiclass(1000, FeatureSpec::guyon(10), 4, 2.0, 7);
+    let (train, test) = split::train_test_split(&ds, 0.25, 0);
+    let cfg = fast(GBDTConfig::multiclass(4));
+    let st = GBDT::fit(&cfg, &train, Some(&test));
+    let ova = fit_one_vs_all(&cfg, &train, Some(&test));
+    let ce_st = Metric::CrossEntropy.eval(&st.predict_raw(&test), &test.targets);
+    let ce_ova = Metric::CrossEntropy.eval(&ova.predict_raw(&test), &test.targets);
+    // both learn; neither degenerates (paper: single-tree usually wins)
+    assert!(ce_st < 1.0 && ce_ova < 1.0, "st {ce_st} ova {ce_ova}");
+}
+
+#[test]
+fn gbdt_mo_baselines_behave() {
+    let ds = make_multitask(800, FeatureSpec::guyon(8), 6, 2, 0.2, 8);
+    let (train, test) = split::train_test_split(&ds, 0.25, 0);
+    let mut full_cfg = fast(gbdt_mo_full_config(&train));
+    full_cfg.n_rounds = 40;
+    let full = GBDT::fit(&full_cfg, &train, Some(&test));
+    let mut sparse_cfg = fast(gbdt_mo_sparse_config(&train, 3));
+    sparse_cfg.n_rounds = 40;
+    let sparse = GBDT::fit(&sparse_cfg, &train, Some(&test));
+    let r_full = Metric::R2.eval(&full.predict_raw(&test), &test.targets);
+    let r_sparse = Metric::R2.eval(&sparse.predict_raw(&test), &test.targets);
+    assert!(r_full > 0.4, "gbdt-mo full r2 {r_full}");
+    assert!(r_sparse > 0.2, "gbdt-mo sparse r2 {r_sparse}");
+}
+
+#[test]
+fn profile_workloads_train_end_to_end() {
+    // every profile must be trainable out of the box (tiny row budget)
+    for name in ["otto", "sf-crime", "rf1", "mnist"] {
+        let p = Profile::by_name(name).unwrap();
+        let ds = p.generate_sized(300, 9);
+        let mut cfg = fast(GBDTConfig::for_dataset(&ds));
+        cfg.n_rounds = 5;
+        cfg.sketch = SketchConfig::RandomProjection { k: 2 };
+        let model = GBDT::fit(&cfg, &ds, None);
+        assert_eq!(model.n_trees(), 5, "{name}");
+        let h = &model.history.train_loss;
+        assert!(h.first().unwrap() >= h.last().unwrap(), "{name} did not improve");
+    }
+}
+
+#[test]
+fn subsampled_training_still_learns() {
+    let ds = make_multiclass(1000, FeatureSpec::guyon(10), 4, 2.0, 10);
+    let (train, test) = split::train_test_split(&ds, 0.25, 0);
+    let mut cfg = fast(GBDTConfig::multiclass(4));
+    cfg.subsample = 0.6;
+    cfg.colsample = 0.7;
+    cfg.sketch = SketchConfig::RandomSampling { k: 2 };
+    let model = GBDT::fit(&cfg, &train, Some(&test));
+    let acc = Metric::Accuracy.eval(&model.predict_raw(&test), &test.targets);
+    assert!(acc > 0.7, "subsampled holdout accuracy {acc}");
+}
