@@ -104,6 +104,50 @@ fn main() {
     results.set("native_ce_s", Json::Num(meas.median));
     t.print();
 
+    // --- thread scaling: histogram build + split scan ----------------------
+    // The tentpole parallel path (engine/native.rs): row-sharded histogram
+    // accumulation with deterministic reduction + the (slot, feature)
+    // split-scan queue. Bit-identical results across thread counts are
+    // asserted in rust/tests/parallel_determinism.rs; here we record the
+    // throughput trajectory. Target: >= 2x hist+scan at 4 threads.
+    println!("\n== thread scaling (histogram k1={k1} + split scan, n = {n}) ==\n");
+    let mut tsw = Table::new(&["threads", "hist", "split scan", "hist+scan", "speedup vs 1"]);
+    let mut sweep = Json::obj();
+    let mut chan6 = vec![0.0f32; n * k1];
+    rng.fill_gaussian(&mut chan6, 1.0);
+    for i in 0..n {
+        chan6[i * k1 + k1 - 1] = 1.0;
+    }
+    let mut base_combined = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let mut eng_t = NativeEngine::with_threads(threads);
+        let mut out = vec![0.0f32; n_slots * m * bins * k1];
+        let mh = bench(&format!("hist t={threads}"), 1, 5, || {
+            out.fill(0.0);
+            eng_t.histograms(&binned, &rows, &slot_of_row, &chan6, k1, n_slots, &mut out);
+        });
+        let mg = bench(&format!("gains t={threads}"), 1, 10, || {
+            let _ = eng_t.split_gains(&hist, n_slots, m, bins, k1, 1.0, ScoreMode::CountL2);
+        });
+        let combined = mh.median + mg.median;
+        if threads == 1 {
+            base_combined = combined;
+        }
+        tsw.row(&[
+            threads.to_string(),
+            fmt_secs(mh.median),
+            fmt_secs(mg.median),
+            fmt_secs(combined),
+            format!("{:.2}x", base_combined / combined),
+        ]);
+        let mut o = Json::obj();
+        o.set("hist_s", Json::Num(mh.median));
+        o.set("gains_s", Json::Num(mg.median));
+        sweep.set(&format!("t{threads}"), o);
+    }
+    tsw.print();
+    results.set("thread_sweep", sweep);
+
     // --- end-to-end per-tree cost: full vs sketched ------------------------
     println!("\n== per-tree training cost (single-tree, depth 5) ==\n");
     let mut t2 = Table::new(&["config", "time/tree", "speedup vs full"]);
@@ -134,7 +178,9 @@ fn main() {
     results.set("per_tree", per_tree);
 
     // --- engine ablation: native vs PJRT/XLA ops ---------------------------
-    if artifacts_available() {
+    // needs both the compiled artifacts and the real PJRT backend (the
+    // default build compiles the stub runtime, whose engine cannot open)
+    if artifacts_available() && cfg!(feature = "pjrt") {
         println!("\n== engine ablation: native vs xla artifacts (e2e shapes) ==\n");
         let mut xeng = XlaEngine::new("e2e").expect("open e2e artifacts");
         let mut t3 = Table::new(&["op", "native", "xla (pjrt)", "ratio"]);
@@ -189,7 +235,7 @@ fn main() {
         println!("\n(the xla column runs interpret-mode-lowered Pallas kernels on a");
         println!("CPU PJRT client — the structural TPU analysis is in EXPERIMENTS.md)");
     } else {
-        println!("\n(xla ablation skipped: run `make artifacts` first)");
+        println!("\n(xla ablation skipped: needs `make artifacts` and --features pjrt)");
     }
 
     let path = write_results("hot_paths", &results).unwrap();

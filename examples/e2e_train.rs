@@ -21,7 +21,14 @@ use sketchboost::prelude::*;
 use sketchboost::util::bench::{fmt_secs, time_once, write_results, Table};
 use sketchboost::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!(
+            "e2e_train executes PJRT artifacts and needs the real backend: \
+             rebuild with `--features pjrt` (see DESIGN.md, \"Build features\")"
+        );
+        return Ok(());
+    }
     let rows = std::env::var("SB_E2E_ROWS").ok().and_then(|v| v.parse().ok()).unwrap_or(4000);
     let rounds = std::env::var("SB_E2E_ROUNDS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
     // The interpret-mode-lowered Pallas histograms run ~1000x slower than

@@ -9,6 +9,9 @@
 //!     `sparse_leaves`.
 //! Both are native features of the trainer; this module packages them as
 //! named baseline configurations so the benches read like the paper.
+//! The configs inherit every shared knob — including `n_threads`, which
+//! `GBDT::fit` forwards to the engine as [`crate::engine::EngineOpts`] —
+//! so baseline timings parallelize exactly like SketchBoost's.
 
 use crate::boosting::trainer::GBDTConfig;
 use crate::data::dataset::Dataset;

@@ -13,7 +13,7 @@ use crate::boosting::metrics::Metric;
 use crate::boosting::trainer::GBDTConfig;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Dataset;
-use crate::engine::{ComputeEngine, NativeEngine, ScoreMode};
+use crate::engine::{ComputeEngine, EngineOpts, NativeEngine, ScoreMode};
 use crate::tree::builder::{build_tree, BuildParams, SENTINEL};
 use crate::tree::tree::Tree;
 use crate::util::rng::Rng;
@@ -57,7 +57,9 @@ impl OvaModel {
 /// meaningless at d = 1 — the paper's point is that one-vs-all pays the
 /// d-factor in trees instead).
 pub fn fit_one_vs_all(cfg: &GBDTConfig, train: &Dataset, valid: Option<&Dataset>) -> OvaModel {
-    let mut engine = NativeEngine::new();
+    // the baselines honor `cfg.n_threads` exactly like the trainer, so
+    // the Figure-1 strategy comparison stays apples-to-apples
+    let mut engine = NativeEngine::with_opts(EngineOpts::threads(cfg.n_threads));
     fit_one_vs_all_with_engine(cfg, train, valid, &mut engine)
 }
 

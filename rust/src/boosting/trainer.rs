@@ -7,7 +7,7 @@ use crate::boosting::sampling::{row_grad_norms, RowSampling};
 use crate::boosting::metrics::Metric;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Dataset;
-use crate::engine::{ComputeEngine, NativeEngine, ScoreMode};
+use crate::engine::{ComputeEngine, EngineOpts, NativeEngine, ScoreMode};
 use crate::sketch::SketchConfig;
 use crate::tree::builder::{build_tree, BuildParams, SENTINEL};
 use crate::util::rng::Rng;
@@ -40,6 +40,10 @@ pub struct GBDTConfig {
     pub use_hess_split: bool,
     /// GBDT-MO (sparse): keep top-K outputs per leaf
     pub sparse_leaves: Option<usize>,
+    /// worker threads for the engine's parallel histogram build and split
+    /// scan (`0` = all cores, `1` = serial). Results are bit-identical
+    /// for every value — see the determinism contract in `engine/`.
+    pub n_threads: usize,
     pub verbose: bool,
     /// record the train metric every round (costs an O(n*d) softmax
     /// pass; timing benches disable it — the paper tracks valid only)
@@ -66,6 +70,7 @@ impl GBDTConfig {
             early_stopping_rounds: 0,
             use_hess_split: false,
             sparse_leaves: None,
+            n_threads: 1,
             verbose: false,
             eval_train: true,
         }
@@ -122,9 +127,9 @@ impl GBDTConfig {
 pub struct GBDT;
 
 impl GBDT {
-    /// Train with the pure-rust engine.
+    /// Train with the pure-rust engine (threaded per `cfg.n_threads`).
     pub fn fit(cfg: &GBDTConfig, train: &Dataset, valid: Option<&Dataset>) -> Ensemble {
-        let mut engine = NativeEngine::new();
+        let mut engine = NativeEngine::with_opts(EngineOpts::threads(cfg.n_threads));
         GBDT::fit_with_engine(cfg, train, valid, &mut engine)
     }
 

@@ -22,6 +22,7 @@ pub fn config_to_json(cfg: &GBDTConfig) -> Json {
     o.set("colsample", Json::Num(cfg.colsample as f64));
     o.set("max_bins", Json::Num(cfg.max_bins as f64));
     o.set("seed", Json::Num(cfg.seed as f64));
+    o.set("n_threads", Json::Num(cfg.n_threads as f64));
     o.set("early_stopping_rounds", Json::Num(cfg.early_stopping_rounds as f64));
     o.set("use_hess_split", Json::Bool(cfg.use_hess_split));
     o.set("eval_train", Json::Bool(cfg.eval_train));
@@ -83,6 +84,7 @@ pub fn config_from_json(j: &Json) -> Result<GBDTConfig, String> {
     cfg.colsample = num("colsample", cfg.colsample as f64) as f32;
     cfg.max_bins = num("max_bins", cfg.max_bins as f64) as usize;
     cfg.seed = num("seed", cfg.seed as f64) as u64;
+    cfg.n_threads = num("n_threads", cfg.n_threads as f64) as usize;
     cfg.early_stopping_rounds =
         num("early_stopping_rounds", cfg.early_stopping_rounds as f64) as usize;
     cfg.use_hess_split = j
@@ -144,7 +146,9 @@ mod tests {
         cfg.use_hess_split = true;
         cfg.subsample = 0.8;
         cfg.eval_train = false;
+        cfg.n_threads = 4;
         let back = config_from_json(&config_to_json(&cfg)).unwrap();
+        assert_eq!(back.n_threads, 4);
         assert_eq!(back.sketch, cfg.sketch);
         assert_eq!(back.row_sampling, cfg.row_sampling);
         assert_eq!(back.sparse_leaves, Some(2));

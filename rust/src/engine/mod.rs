@@ -17,12 +17,45 @@
 //! tree level's frontier nodes, `f` the feature, `b` the bin, and `c` the
 //! channel. Channels are `[g_0..g_k)` sketched-gradient sums, then (in
 //! `HessL2` mode) `[h_0..h_k)` hessian sums, then one count channel.
+//!
+//! ## Threading and determinism
+//!
+//! Engines are constructed with [`EngineOpts`] and may execute the hot
+//! ops (histogram accumulation, split scan) on an internal thread pool.
+//! The contract is strict: **results must be a pure function of the
+//! inputs — bit-identical for every thread count** — so the tree builder
+//! and trainer stay oblivious to parallelism and `seed`-reproducibility
+//! is preserved. `NativeEngine` achieves this with a fixed row-shard
+//! partition and an ascending-shard-order reduction (DESIGN.md, section
+//! "Threading model"); `rust/tests/parallel_determinism.rs` enforces it.
 
 pub mod native;
 pub mod xla;
 
-pub use native::NativeEngine;
-pub use xla::XlaEngine;
+pub use self::native::NativeEngine;
+pub use self::xla::XlaEngine;
+
+/// Engine construction options, shared by every [`ComputeEngine`] backend
+/// (and by the baselines, which build engines internally).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineOpts {
+    /// Worker threads for the parallel ops; `0` = all available cores,
+    /// `1` (the default) = the serial path.
+    pub n_threads: usize,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { n_threads: 1 }
+    }
+}
+
+impl EngineOpts {
+    /// Options with an explicit thread count (`0` = all cores).
+    pub fn threads(n_threads: usize) -> EngineOpts {
+        EngineOpts { n_threads }
+    }
+}
 
 use crate::boosting::losses::LossKind;
 use crate::data::binning::BinnedDataset;
@@ -133,5 +166,11 @@ mod tests {
         assert_eq!(ScoreMode::CountL2.channels(5), 6);
         assert_eq!(ScoreMode::HessL2.channels(5), 11);
         assert_eq!(ScoreMode::CountL2.channels(1), 2);
+    }
+
+    #[test]
+    fn engine_opts_default_is_serial() {
+        assert_eq!(EngineOpts::default().n_threads, 1);
+        assert_eq!(EngineOpts::threads(4), EngineOpts { n_threads: 4 });
     }
 }

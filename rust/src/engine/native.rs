@@ -4,23 +4,81 @@
 //! reimplements them with cache-conscious loops. The integration tests
 //! cross-check every op against the XLA artifacts compiled from the JAX
 //! reference, so drift is caught mechanically.
+//!
+//! ## Parallel execution
+//!
+//! The two dominant per-level costs — histogram accumulation and the
+//! split-gain scan (`benches/hot_paths.rs`) — run on an internal
+//! [`ThreadPool`]:
+//!
+//! * **Histograms** partition the active rows into *shards* whose count
+//!   and boundaries depend only on the row count and histogram shape
+//!   ([`hist_shards`], [`shard_bounds`]) — never on the thread count.
+//!   Workers accumulate each shard into a thread-local buffer, then
+//!   [`reduce_shards`] adds the shards into the output in ascending shard
+//!   order, parallel across cells. Because both the partition and the
+//!   per-cell addition order are fixed, the result is bit-identical for
+//!   any `n_threads` (f32 addition is non-associative, so this is the
+//!   property that keeps `seed`-reproducibility intact).
+//! * **Split scan** fans `(slot, feature)` pairs out over a chunked work
+//!   queue; each pair writes its own disjoint `bins`-wide gain range and
+//!   is a pure function of the histogram, so determinism is free.
+//!
+//! Everything else (derivatives, gemm, leaf sums) stays serial — those
+//! ops are O(n·d) streams that the trainer amortizes, and the profile in
+//! EXPERIMENTS.md §Perf shows them off the critical path.
 
 use crate::boosting::losses::LossKind;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Targets;
+use crate::util::threading::{reduce_shards, shard_bounds, DisjointSlice, ThreadPool};
 
-use super::{ComputeEngine, LeafSums, ScoreMode};
+use super::{ComputeEngine, EngineOpts, LeafSums, ScoreMode};
+
+/// Rows per histogram shard (below 2·this, the build stays serial).
+const SHARD_TARGET_ROWS: usize = 2048;
+/// Upper bound on shards, i.e. on usable histogram parallelism.
+const MAX_SHARDS: usize = 16;
+
+/// Number of histogram shards for `nr` active rows and a per-slot scan
+/// width of `slots_bins = n_slots * bins` cells. Pure in its inputs (and
+/// in particular independent of the thread count — see module docs):
+/// bounded so each shard keeps >= [`SHARD_TARGET_ROWS`] rows and so the
+/// deterministic reduction costs at most ~25% of the accumulation pass.
+fn hist_shards(nr: usize, slots_bins: usize) -> usize {
+    let by_rows = nr / SHARD_TARGET_ROWS;
+    let by_reduce = nr / (4 * slots_bins).max(1);
+    by_rows.min(by_reduce).clamp(1, MAX_SHARDS)
+}
 
 /// Pure-rust engine. Stateless apart from scratch reuse.
 #[derive(Default)]
 pub struct NativeEngine {
+    pool: ThreadPool,
     /// scratch: per-level gathered channel rows (see `histograms`)
     scratch_chan: Vec<f32>,
+    /// scratch: thread-local histogram shards, reduced deterministically
+    scratch_shards: Vec<f32>,
 }
 
 impl NativeEngine {
+    /// Serial engine (`EngineOpts::default()`).
     pub fn new() -> Self {
         NativeEngine::default()
+    }
+
+    /// Engine with explicit options (thread count).
+    pub fn with_opts(opts: EngineOpts) -> Self {
+        NativeEngine { pool: ThreadPool::new(opts.n_threads), ..NativeEngine::default() }
+    }
+
+    /// Engine with an explicit thread count (`0` = all cores).
+    pub fn with_threads(n_threads: usize) -> Self {
+        NativeEngine::with_opts(EngineOpts::threads(n_threads))
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.pool.n_threads()
     }
 }
 
@@ -142,18 +200,41 @@ impl ComputeEngine for NativeEngine {
                 .copy_from_slice(&chan[r * k1..(r + 1) * k1]);
             slot_base.push(slot_of_row[r] as usize * slice);
         }
-        let chan_g = &self.scratch_chan;
-
-        // monomorphize the common channel widths so the inner
-        // accumulation unrolls and vectorizes (k=1 scoring -> k1=2;
-        // k=5 default -> k1=6; HessL2 k=5 -> k1=11)
-        match k1 {
-            2 => hist_pass::<2>(binned, rows, &slot_base, chan_g, out),
-            3 => hist_pass::<3>(binned, rows, &slot_base, chan_g, out),
-            6 => hist_pass::<6>(binned, rows, &slot_base, chan_g, out),
-            11 => hist_pass::<11>(binned, rows, &slot_base, chan_g, out),
-            _ => hist_pass_dyn(binned, rows, &slot_base, chan_g, k1, out),
+        let n_shards = hist_shards(nr, n_slots * bins);
+        if n_shards == 1 {
+            // small level: one serial pass straight into `out` (also the
+            // historical path — sharding only ever changes results when
+            // it actually splits the rows)
+            hist_dispatch(binned, rows, &slot_base, &self.scratch_chan, k1, out);
+            return;
         }
+
+        // Thread-local shards over a fixed row partition, then a
+        // deterministic ascending-order reduction (module docs).
+        let total = out.len();
+        self.scratch_shards.clear();
+        self.scratch_shards.resize(n_shards * total, 0.0);
+        let pool = &self.pool;
+        let chan_g = &self.scratch_chan;
+        let shard_bufs = DisjointSlice::new(&mut self.scratch_shards);
+        pool.for_each_chunk(n_shards, 1, |shard_range| {
+            for s in shard_range {
+                // Safety: shard `s`'s buffer is written by exactly one
+                // worker (the queue hands out each shard index once).
+                let buf = unsafe { shard_bufs.range_mut(s * total..(s + 1) * total) };
+                buf.fill(0.0);
+                let (j0, j1) = shard_bounds(nr, n_shards, s);
+                hist_dispatch(
+                    binned,
+                    &rows[j0..j1],
+                    &slot_base[j0..j1],
+                    &chan_g[j0 * k1..j1 * k1],
+                    k1,
+                    buf,
+                );
+            }
+        });
+        reduce_shards(pool, &self.scratch_shards, n_shards, out);
     }
 
     fn split_gains(
@@ -171,44 +252,31 @@ impl ComputeEngine for NativeEngine {
             ScoreMode::HessL2 => (k1 - 1) / 2,
         };
         let mut gains = vec![0.0f32; n_slots * m * bins];
-        let mut acc_g = vec![0.0f64; k];
-        let mut acc_d: f64; // running denominator accumulator
-        for slot in 0..n_slots {
-            for f in 0..m {
-                let base = ((slot * m) + f) * bins * k1;
-                // totals
-                let mut tot_g = vec![0.0f64; k];
-                let mut tot_d = 0.0f64;
-                for b in 0..bins {
-                    let cell = &hist[base + b * k1..base + (b + 1) * k1];
-                    for c in 0..k {
-                        tot_g[c] += cell[c] as f64;
-                    }
-                    tot_d += denom_of(cell, k, k1, mode);
-                }
-                acc_g.iter_mut().for_each(|v| *v = 0.0);
-                acc_d = 0.0;
-                let gbase = (slot * m + f) * bins;
-                for b in 0..bins {
-                    let cell = &hist[base + b * k1..base + (b + 1) * k1];
-                    for c in 0..k {
-                        acc_g[c] += cell[c] as f64;
-                    }
-                    acc_d += denom_of(cell, k, k1, mode);
-                    let mut s_left = 0.0f64;
-                    let mut s_right = 0.0f64;
-                    for c in 0..k {
-                        let l = acc_g[c];
-                        let r = tot_g[c] - l;
-                        s_left += l * l;
-                        s_right += r * r;
-                    }
-                    s_left /= acc_d + lam as f64;
-                    s_right /= (tot_d - acc_d) + lam as f64;
-                    gains[gbase + b] = (s_left + s_right) as f32;
-                }
-            }
+        let n_pairs = n_slots * m;
+        if n_pairs == 0 || bins == 0 {
+            return gains;
         }
+        // Chunked queue over (slot, feature) pairs. Each pair is a pure
+        // function of `hist` writing its own disjoint `bins`-wide range,
+        // so the scan is deterministic for any thread count; the queue
+        // only balances load. A whole-scan chunk routes tiny frontiers
+        // (deep levels, small datasets) through the pool's inline serial
+        // path — thread spawns would cost more than the scan itself.
+        const PAIR_CHUNK: usize = 8;
+        let chunk = if hist.len() < 16 * 1024 { n_pairs } else { PAIR_CHUNK };
+        let out = DisjointSlice::new(&mut gains);
+        self.pool.for_each_chunk(n_pairs, chunk, |pairs| {
+            // per-chunk f64 scratch: k <= ~2d+1, negligible next to the
+            // bins-wide scans it serves
+            let mut tot_g = vec![0.0f64; k];
+            let mut acc_g = vec![0.0f64; k];
+            for pair in pairs {
+                // Safety: pair ranges are disjoint and the queue hands
+                // each pair index to exactly one worker.
+                let dst = unsafe { out.range_mut(pair * bins..(pair + 1) * bins) };
+                scan_pair(hist, pair, bins, k1, k, lam, mode, &mut tot_g, &mut acc_g, dst);
+            }
+        });
         gains
     }
 
@@ -275,6 +343,77 @@ fn gemm_dyn(g_mat: &[f32], n: usize, d: usize, proj: &[f32], k: usize, out: &mut
                 *o += gv * p;
             }
         }
+    }
+}
+
+/// Accumulate one (slot, feature) pair's candidate scores into `out`
+/// (`bins` entries). The hoisted body of the historical serial scan: a
+/// totals pass, then the prefix scan emitting S(left) + S(right) per
+/// split candidate. `tot_g`/`acc_g` are caller-owned k-wide scratch.
+#[allow(clippy::too_many_arguments)]
+fn scan_pair(
+    hist: &[f32],
+    pair: usize,
+    bins: usize,
+    k1: usize,
+    k: usize,
+    lam: f32,
+    mode: ScoreMode,
+    tot_g: &mut [f64],
+    acc_g: &mut [f64],
+    out: &mut [f32],
+) {
+    let base = pair * bins * k1;
+    tot_g.fill(0.0);
+    let mut tot_d = 0.0f64;
+    for b in 0..bins {
+        let cell = &hist[base + b * k1..base + (b + 1) * k1];
+        for c in 0..k {
+            tot_g[c] += cell[c] as f64;
+        }
+        tot_d += denom_of(cell, k, k1, mode);
+    }
+    acc_g.fill(0.0);
+    let mut acc_d = 0.0f64;
+    for b in 0..bins {
+        let cell = &hist[base + b * k1..base + (b + 1) * k1];
+        for c in 0..k {
+            acc_g[c] += cell[c] as f64;
+        }
+        acc_d += denom_of(cell, k, k1, mode);
+        let mut s_left = 0.0f64;
+        let mut s_right = 0.0f64;
+        for c in 0..k {
+            let l = acc_g[c];
+            let r = tot_g[c] - l;
+            s_left += l * l;
+            s_right += r * r;
+        }
+        s_left /= acc_d + lam as f64;
+        s_right /= (tot_d - acc_d) + lam as f64;
+        out[b] = (s_left + s_right) as f32;
+    }
+}
+
+/// Histogram pass dispatch: monomorphize the common channel widths so the
+/// inner accumulation unrolls and vectorizes (k=1 scoring -> k1=2; k=5
+/// default -> k1=6; HessL2 k=5 -> k1=11). `rows`/`slot_base`/`chan_g` may
+/// be shard sub-slices; `slot_base` entries stay absolute offsets into
+/// `out`, which is always a full `[n_slots, m, bins, k1]` buffer.
+fn hist_dispatch(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    slot_base: &[usize],
+    chan_g: &[f32],
+    k1: usize,
+    out: &mut [f32],
+) {
+    match k1 {
+        2 => hist_pass::<2>(binned, rows, slot_base, chan_g, out),
+        3 => hist_pass::<3>(binned, rows, slot_base, chan_g, out),
+        6 => hist_pass::<6>(binned, rows, slot_base, chan_g, out),
+        11 => hist_pass::<11>(binned, rows, slot_base, chan_g, out),
+        _ => hist_pass_dyn(binned, rows, slot_base, chan_g, k1, out),
     }
 }
 
@@ -607,6 +746,79 @@ mod tests {
         // split at b=0: left g=1 h=2 -> 1/(2+1); right g=3 h=4 -> 9/(4+1)
         let want0 = 1.0 / 3.0 + 9.0 / 5.0;
         assert!((gains[0] - want0).abs() < 1e-5, "{} vs {want0}", gains[0]);
+    }
+
+    #[test]
+    fn sharded_histograms_bit_identical_across_thread_counts() {
+        // enough rows that hist_shards() actually splits the work
+        let n = 3 * SHARD_TARGET_ROWS;
+        let (m, bins, slots, k1) = (3usize, 16usize, 2usize, 3usize);
+        let binned = tiny_binned(n, m, bins, 5);
+        let mut rng = Rng::new(9);
+        let slot_of_row: Vec<u32> = (0..n).map(|_| rng.next_below(slots) as u32).collect();
+        let mut chan = vec![0.0f32; n * k1];
+        rng.fill_gaussian(&mut chan, 1.0);
+        for i in 0..n {
+            chan[i * k1 + k1 - 1] = 1.0;
+        }
+        let rows: Vec<u32> = (0..n as u32).filter(|&r| r % 7 != 6).collect();
+        assert!(hist_shards(rows.len(), slots * bins) >= 2, "test must exercise sharding");
+
+        let size = slots * m * bins * k1;
+        let mut base = vec![0.0f32; size];
+        NativeEngine::with_threads(1)
+            .histograms(&binned, &rows, &slot_of_row, &chan, k1, slots, &mut base);
+        for t in [2usize, 4, 8] {
+            let mut out = vec![0.0f32; size];
+            NativeEngine::with_threads(t)
+                .histograms(&binned, &rows, &slot_of_row, &chan, k1, slots, &mut out);
+            assert_eq!(out, base, "threads = {t}"); // bitwise, not approximate
+        }
+
+        // the sharded result is still the right histogram
+        let mut want = vec![0.0f32; size];
+        for &r in &rows {
+            let r = r as usize;
+            let slot = slot_of_row[r] as usize;
+            for f in 0..m {
+                let b = binned.column(f)[r] as usize;
+                let cell = ((slot * m + f) * bins + b) * k1;
+                for c in 0..k1 {
+                    want[cell + c] += chan[r * k1 + c];
+                }
+            }
+        }
+        assert_close(&base, &want, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn split_gains_bit_identical_across_thread_counts() {
+        // big enough (hist.len() >= 16k) to take the parallel branch
+        let (slots, m, bins, k1) = (8usize, 8usize, 64usize, 4usize);
+        let mut rng = Rng::new(11);
+        let mut hist = vec![0.0f32; slots * m * bins * k1];
+        rng.fill_gaussian(&mut hist, 1.0);
+        for cell in 0..slots * m * bins {
+            hist[cell * k1 + k1 - 1] = rng.next_below(30) as f32;
+        }
+        let base = NativeEngine::with_threads(1)
+            .split_gains(&hist, slots, m, bins, k1, 1.0, ScoreMode::CountL2);
+        for t in [2usize, 4] {
+            let got = NativeEngine::with_threads(t)
+                .split_gains(&hist, slots, m, bins, k1, 1.0, ScoreMode::CountL2);
+            assert_eq!(got, base, "threads = {t}");
+        }
+    }
+
+    #[test]
+    fn hist_shards_ignores_thread_count_and_caps_reduction() {
+        // pure in (rows, shape): small inputs stay serial
+        assert_eq!(hist_shards(100, 64), 1);
+        assert_eq!(hist_shards(2 * SHARD_TARGET_ROWS, 8), 2);
+        // wide frontiers bound the shard count to keep reduction cheap
+        assert!(hist_shards(20_000, 32 * 64) <= 20_000 / (4 * 32 * 64) + 1);
+        // and the cap holds
+        assert!(hist_shards(10_000_000, 8) <= MAX_SHARDS);
     }
 
     #[test]

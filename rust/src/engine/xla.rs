@@ -12,14 +12,20 @@
 //! One documented exception: `ScoreMode::HessL2` (the GBDT-MO baseline)
 //! has no gain artifact — only the native engine supports it — so
 //! `split_gains` delegates to native in that mode.
+//!
+//! Requires the `pjrt` build feature (see `runtime/` and DESIGN.md
+//! section "Build features"); without it, construction fails with an
+//! error pointing at the feature — callers surface that error (there is
+//! no silent fallback; pick the default [`NativeEngine`] explicitly).
 
 use crate::boosting::losses::LossKind;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Targets;
 use crate::runtime::registry::{ArtifactRegistry, Signature};
 use crate::runtime::{literal_f32, literal_i32};
+use crate::util::error::Result;
 
-use super::{ComputeEngine, LeafSums, NativeEngine, ScoreMode};
+use super::{ComputeEngine, EngineOpts, LeafSums, NativeEngine, ScoreMode};
 
 /// Engine executing PJRT artifacts; see module docs.
 pub struct XlaEngine {
@@ -31,19 +37,27 @@ pub struct XlaEngine {
 }
 
 impl XlaEngine {
-    /// Open the default artifact directory with the given shape tag.
-    pub fn new(tag: &str) -> anyhow::Result<XlaEngine> {
+    /// Open the default artifact directory with the given shape tag and
+    /// default [`EngineOpts`].
+    pub fn new(tag: &str) -> Result<XlaEngine> {
+        XlaEngine::with_opts(tag, EngineOpts::default())
+    }
+
+    /// Open with explicit engine options. The thread count applies to the
+    /// host-side native fallback (HessL2 split gains); artifact execution
+    /// itself is scheduled by the PJRT client.
+    pub fn with_opts(tag: &str, opts: EngineOpts) -> Result<XlaEngine> {
         let reg = ArtifactRegistry::open_default()?;
         let eng = XlaEngine {
             reg,
             tag: tag.to_string(),
-            native_fallback: NativeEngine::new(),
+            native_fallback: NativeEngine::with_opts(opts),
             n_executions: 0,
         };
         // fail fast if the family is incomplete
         for op in ["grad_ce", "grad_bce", "grad_mse", "sketch_rp", "hist", "gain", "leaf_sums"] {
             let name = format!("{op}_{tag}");
-            anyhow::ensure!(
+            crate::ensure!(
                 eng.reg.signature(&name).is_some(),
                 "artifact {name} missing from manifest"
             );

@@ -20,8 +20,11 @@
 //! training system); layer 2 is the per-round JAX compute graph; layer 1
 //! is the Pallas kernels inside it. Layers 1–2 are AOT-lowered to HLO
 //! text at build time and executed from rust via PJRT ([`runtime`],
-//! [`engine::XlaEngine`]); the pure-rust [`engine::NativeEngine`] is the
-//! numerically identical fast path.
+//! [`engine::XlaEngine`], build feature `pjrt`); the pure-rust
+//! [`engine::NativeEngine`] is the numerically identical fast path, and
+//! runs the histogram build + split scan on a thread pool
+//! ([`util::threading`]) with bit-deterministic results for any
+//! `n_threads`.
 //!
 //! ```no_run
 //! use sketchboost::prelude::*;
@@ -31,8 +34,10 @@
 //! let mut cfg = GBDTConfig::multiclass(9);
 //! cfg.sketch = SketchConfig::RandomProjection { k: 5 };
 //! cfg.n_rounds = 100;
+//! cfg.n_threads = 4; // parallel histograms + split scan; same bits as 1
 //! let model = GBDT::fit(&cfg, &train, Some(&test));
-//! let preds = model.predict(&test);
+//! let probs = model.predict(&test);
+//! assert_eq!(probs.len(), test.n_rows * 9);
 //! ```
 
 pub mod baselines;

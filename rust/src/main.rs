@@ -17,7 +17,7 @@ use sketchboost::boosting::trainer::{GBDTConfig, GBDT};
 use sketchboost::data::csv;
 use sketchboost::data::profiles::Profile;
 use sketchboost::data::split::train_test_split;
-use sketchboost::engine::XlaEngine;
+use sketchboost::engine::{EngineOpts, XlaEngine};
 use sketchboost::prelude::*;
 use sketchboost::util::bench::{fmt_secs, time_once, Table};
 use sketchboost::util::cli::{usage, Args};
@@ -85,6 +85,7 @@ fn config_from_args(args: &Args, ds: &Dataset) -> GBDTConfig {
             "--config outputs != dataset outputs"
         );
         cfg.verbose = args.flag("verbose") || cfg.verbose;
+        cfg.n_threads = args.get_usize("threads", cfg.n_threads);
         return cfg;
     }
     let mut cfg = GBDTConfig::for_dataset(ds);
@@ -98,6 +99,7 @@ fn config_from_args(args: &Args, ds: &Dataset) -> GBDTConfig {
     cfg.max_bins = args.get_usize("bins", 64);
     cfg.seed = args.get_u64("seed", 42);
     cfg.early_stopping_rounds = args.get_usize("early-stop", 0);
+    cfg.n_threads = args.get_usize("threads", 1);
     cfg.verbose = args.flag("verbose");
     let k = args.get_usize("k", 5);
     let sk = args.get_str("sketch", "full");
@@ -123,6 +125,7 @@ fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                     ("--lr F", "learning rate (default 0.05)"),
                     ("--depth N", "max tree depth (default 6)"),
                     ("--bins N", "max histogram bins (default 64)"),
+                    ("--threads N", "engine worker threads; 0 = all cores (default 1)"),
                     ("--early-stop N", "early stopping patience (default off)"),
                     ("--strategy S", "single-tree | one-vs-all (default single-tree)"),
                     ("--engine E", "native | xla (default native)"),
@@ -156,7 +159,10 @@ fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let (model, secs) = match engine.as_str() {
         "native" => time_once(|| GBDT::fit(&cfg, &train, Some(&test))),
         "xla" => {
-            let mut eng = XlaEngine::new(&args.get_str("tag", "e2e"))?;
+            let mut eng = XlaEngine::with_opts(
+                &args.get_str("tag", "e2e"),
+                EngineOpts::threads(cfg.n_threads),
+            )?;
             println!("xla engine: {}", eng.describe());
             time_once(|| GBDT::fit_with_engine(&cfg, &train, Some(&test), &mut eng))
         }
@@ -269,6 +275,7 @@ fn cmd_bench_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let rounds = args.get_usize("rounds", 20);
     let classes = args.get_usize_list("classes", &[5, 10, 25, 50]);
     let k = args.get_usize("k", 5);
+    let threads = args.get_usize("threads", 1);
     let mut table = Table::new(&["classes", "one-vs-all", "single-tree full", "sketch rp k"]);
     for &d in &classes {
         let ds = make_multiclass(rows, FeatureSpec::guyon(m), d, 1.6, 1);
@@ -276,6 +283,7 @@ fn cmd_bench_synth(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         cfg.n_rounds = rounds;
         cfg.max_depth = 6;
         cfg.max_bins = 64;
+        cfg.n_threads = threads;
         let (_, t_ova) = time_once(|| fit_one_vs_all(&cfg, &ds, None));
         let (_, t_full) = time_once(|| GBDT::fit(&cfg, &ds, None));
         let mut cfg_rp = cfg.clone();

@@ -1,0 +1,72 @@
+//! Real PJRT backend (feature `pjrt`): compiles HLO-text artifacts on the
+//! PJRT CPU client and executes them with `Literal` buffers.
+//!
+//! This module needs the vendored `xla` crate (xla_extension 0.5.1 — see
+//! DESIGN.md section "Build features"); the default build compiles the
+//! API-compatible stub in `runtime/stub.rs` instead, so the crate has no
+//! external dependencies.
+
+use crate::util::error::{Error, Result};
+
+pub use xla::Literal;
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        Ok(Runtime { client: PjRtClient::cpu().map_err(Error::msg)? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile_file(&self, path: &std::path::Path) -> Result<Executable> {
+        let proto = HloModuleProto::from_text_file(path).map_err(Error::msg)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(Error::msg)?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled artifact, executable with concrete literals.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute; artifacts are lowered with `return_tuple=True`, so the
+    /// result is always a tuple — returned here as a Vec of Literals.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self.exe.execute::<Literal>(inputs).map_err(Error::msg)?;
+        let lit = result[0][0].to_literal_sync().map_err(Error::msg)?;
+        lit.to_tuple().map_err(Error::msg)
+    }
+
+    /// Execute and read a single f32 output tensor.
+    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+        let outs = self.run(inputs)?;
+        crate::ensure!(outs.len() == 1, "{}: expected 1 output, got {}", self.name, outs.len());
+        outs[0].to_vec::<f32>().map_err(Error::msg)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat buffer.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let expect: i64 = dims.iter().product();
+    crate::ensure!(expect as usize == data.len(), "literal shape mismatch");
+    Literal::vec1(data).reshape(dims).map_err(Error::msg)
+}
+
+/// Build an i32 literal of the given shape from a flat buffer.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let expect: i64 = dims.iter().product();
+    crate::ensure!(expect as usize == data.len(), "literal shape mismatch");
+    Literal::vec1(data).reshape(dims).map_err(Error::msg)
+}

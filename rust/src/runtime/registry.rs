@@ -5,6 +5,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
 use super::{Executable, Runtime};
@@ -36,24 +37,24 @@ pub struct ArtifactRegistry {
 
 impl ArtifactRegistry {
     /// Open a registry over an artifacts directory (reads manifest.json).
-    pub fn open(dir: &Path) -> anyhow::Result<ArtifactRegistry> {
+    pub fn open(dir: &Path) -> Result<ArtifactRegistry> {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
-            anyhow::anyhow!(
+            Error::msg(format!(
                 "cannot read {} (run `make artifacts` first): {e}",
                 manifest_path.display()
-            )
+            ))
         })?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| Error::msg(format!("manifest: {e}")))?;
         let lambda = j
             .get("lambda")
             .and_then(|v| v.as_f64())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing lambda"))? as f32;
+            .ok_or_else(|| Error::msg("manifest missing lambda"))? as f32;
         let mut sigs = HashMap::new();
         let arts = j
             .get("artifacts")
             .and_then(|v| v.as_obj())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+            .ok_or_else(|| Error::msg("manifest missing artifacts"))?;
         for (name, meta) in arts {
             let gu = |key: &str| meta.get(key).and_then(|v| v.as_usize()).unwrap_or(0);
             sigs.insert(
@@ -90,7 +91,7 @@ impl ArtifactRegistry {
     }
 
     /// Default location: `<crate root>/artifacts`.
-    pub fn open_default() -> anyhow::Result<ArtifactRegistry> {
+    pub fn open_default() -> Result<ArtifactRegistry> {
         ArtifactRegistry::open(&default_dir())
     }
 
@@ -110,12 +111,12 @@ impl ArtifactRegistry {
     }
 
     /// Get (compiling on first use) an executable by artifact name.
-    pub fn get(&mut self, name: &str) -> anyhow::Result<&Executable> {
+    pub fn get(&mut self, name: &str) -> Result<&Executable> {
         if !self.compiled.contains_key(name) {
             let sig = self
                 .sigs
                 .get(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))?;
+                .ok_or_else(|| Error::msg(format!("unknown artifact {name:?}")))?;
             let exe = self.runtime.compile_file(&self.dir.join(&sig.file))?;
             self.compiled.insert(name.to_string(), exe);
         }
@@ -142,8 +143,8 @@ mod tests {
 
     #[test]
     fn open_default_and_lookup() {
-        if !artifacts_available() {
-            eprintln!("skipping: run `make artifacts` first");
+        if !artifacts_available() || cfg!(not(feature = "pjrt")) {
+            eprintln!("skipping: needs `make artifacts` and --features pjrt");
             return;
         }
         let reg = ArtifactRegistry::open_default().unwrap();
@@ -157,7 +158,7 @@ mod tests {
 
     #[test]
     fn compile_memoizes() {
-        if !artifacts_available() {
+        if !artifacts_available() || cfg!(not(feature = "pjrt")) {
             return;
         }
         let mut reg = ArtifactRegistry::open_default().unwrap();

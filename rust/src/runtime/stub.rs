@@ -1,0 +1,126 @@
+//! Dependency-free stand-in for the PJRT backend, compiled when the
+//! `pjrt` feature is off (the default — this repo builds offline with no
+//! external crates).
+//!
+//! The stub keeps the exact API surface of `runtime/pjrt.rs` so the
+//! artifact registry and [`crate::engine::XlaEngine`] type-check
+//! unchanged: `Literal` is a real shape-checked container (the literal
+//! helpers and their tests behave identically in both builds), while
+//! `Runtime::new()` fails with a clear message, which every execution
+//! path hits before it could touch an `Executable`.
+
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+
+fn unavailable() -> Error {
+    Error::msg(
+        "SketchBoost was built without the `pjrt` feature, so the XLA/PJRT \
+         runtime (and XlaEngine) is unavailable. Rebuild with `--features \
+         pjrt` and the vendored `xla` crate (DESIGN.md, \"Build \
+         features\"); NativeEngine covers every op natively.",
+    )
+}
+
+/// Stub PJRT client: construction reports the missing feature.
+pub struct Runtime;
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the pjrt feature)".to_string()
+    }
+
+    pub fn compile_file(&self, _path: &Path) -> Result<Executable> {
+        Err(unavailable())
+    }
+}
+
+/// Stub compiled artifact; unreachable in practice (see module docs).
+pub struct Executable {
+    pub name: String,
+}
+
+impl Executable {
+    pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn run_f32(&self, _inputs: &[Literal]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+}
+
+/// In-memory literal: a shape-checked host buffer mirroring the parts of
+/// the xla crate's `Literal` API this codebase uses.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Literal {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let len = match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        };
+        crate::ensure!(want as usize == len, "reshape: {len} elements into {dims:?}");
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+}
+
+/// Element types a stub literal can hold.
+pub trait Element: Sized {
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(Error::msg("literal holds i32, asked for f32")),
+        }
+    }
+}
+
+impl Element for i32 {
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error::msg("literal holds f32, asked for i32")),
+        }
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat buffer.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let expect: i64 = dims.iter().product();
+    crate::ensure!(expect as usize == data.len(), "literal shape mismatch");
+    Ok(Literal { data: Data::F32(data.to_vec()), dims: dims.to_vec() })
+}
+
+/// Build an i32 literal of the given shape from a flat buffer.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let expect: i64 = dims.iter().product();
+    crate::ensure!(expect as usize == data.len(), "literal shape mismatch");
+    Ok(Literal { data: Data::I32(data.to_vec()), dims: dims.to_vec() })
+}

@@ -17,19 +17,52 @@ pub mod analysis;
 pub mod svd;
 
 /// Which sketch to apply before the split search.
+///
+/// Besides the approximation error (module docs), the choice sets the
+/// histogram channel width `k1 = k + 1` that the engine's parallel
+/// histogram path accumulates per row: each thread-local shard buffer is
+/// `n_slots * m * bins * k1` floats, so smaller `k` means cheaper shards
+/// *and* a cheaper deterministic reduction — sketching and threading
+/// compound. The shard partition depends only on the row count and
+/// histogram shape, so every variant is bit-identical across thread
+/// counts (`rust/tests/parallel_determinism.rs`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SketchConfig {
     /// No sketch ("SketchBoost Full" — the CatBoost single-tree regime).
+    ///
+    /// Parallel path: scoring histograms are `d + 1` channels wide — the
+    /// widest shards and the only variant that routinely hits the
+    /// dynamic-width accumulation kernel (`hist_pass_dyn`), so it gains
+    /// the most wall-clock from threading and pays the largest shard
+    /// memory (bounded by the engine's reduction-cost cap).
     None,
     /// Keep the k columns of G with largest Euclidean norm (section 3.1).
+    ///
+    /// Parallel path: a column gather feeds `k + 1`-channel histograms;
+    /// `k = 1`/`k = 5` hit the unrolled `k1 = 2`/`k1 = 6` kernels.
+    /// Deterministic for any thread count (ties break by column index).
     TopOutputs { k: usize },
     /// Sample k columns i.i.d. with p_i ∝ ‖g_i‖², scaled by 1/√(k·p_i)
     /// (section 3.2).
+    ///
+    /// Parallel path: same gathered `k + 1`-channel histograms as
+    /// `TopOutputs`; the sampling randomness comes from the per-round
+    /// seeded RNG, not from scheduling, so threads never change it.
     RandomSampling { k: usize },
     /// G_k = G·Π with Π ~ N(0, 1/k) entries (section 3.3).
+    ///
+    /// Parallel path: the projection gemm stays serial (it is off the
+    /// critical path — EXPERIMENTS.md §Perf); the resulting `k + 1`
+    /// channels then flow through the sharded histogram build. The
+    /// paper-default `k = 5` uses the unrolled `k1 = 6` kernel.
     RandomProjection { k: usize },
     /// Best rank-k sketch via truncated SVD (Appendix A.1; O(nd·k·iters),
     /// implemented with subspace power iteration). Ablation baseline.
+    ///
+    /// Parallel path: the power iteration is serial and dominates for
+    /// large `iters`; histogram threading only speeds up the per-level
+    /// accumulation that follows, so expect smaller end-to-end gains
+    /// than the section-3 sketches.
     TruncatedSvd { k: usize, iters: usize },
 }
 

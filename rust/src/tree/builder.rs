@@ -8,6 +8,13 @@
 //! the larger one is parent − sibling). Leaf values are computed exactly
 //! from the full gradient/hessian matrices (paper: the sketch is used
 //! "only in building histograms and finding the tree structure").
+//!
+//! The builder itself is single-threaded and engine-agnostic: data
+//! parallelism lives inside the [`ComputeEngine`] ops, whose contract
+//! (see `engine/`) guarantees bit-identical results for every thread
+//! count. That is what lets the sibling subtraction below — an exact
+//! f32 cancellation against the parent histogram — stay valid when the
+//! engine builds histograms on multiple threads.
 
 use crate::data::binning::BinnedDataset;
 use crate::engine::{ComputeEngine, ScoreMode};

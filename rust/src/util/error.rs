@@ -1,0 +1,81 @@
+//! Minimal error type for the runtime/engine plumbing (offline build: no
+//! `anyhow`). A string-backed error that implements `std::error::Error`,
+//! so `?` converts it into `Box<dyn Error>` at the CLI boundary.
+
+use std::fmt;
+
+/// String-backed error used across [`crate::runtime`] and
+/// [`crate::engine::XlaEngine`].
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Result alias used by the runtime layer.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `ensure!(cond, "format", args...)` — early-return an [`Error`] when the
+/// condition fails (the `anyhow::ensure!` shape the runtime code uses).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)+)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message_and_boxes() {
+        let e = Error::msg(format!("bad {}", 7));
+        assert_eq!(e.to_string(), "bad 7");
+        let b: Box<dyn std::error::Error> = Box::new(e);
+        assert_eq!(b.to_string(), "bad 7");
+    }
+
+    fn ensured(x: usize) -> Result<usize> {
+        crate::ensure!(x < 10, "x too big: {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn ensure_macro_early_returns() {
+        assert_eq!(ensured(3).unwrap(), 3);
+        assert!(ensured(30).is_err());
+    }
+}

@@ -1,9 +1,12 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! RNG (no `rand`), JSON (no `serde`), CLI parsing (no `clap`), bench
-//! harness (no `criterion`), and a property-testing helper (no `proptest`).
+//! harness (no `criterion`), a property-testing helper (no `proptest`),
+//! a scoped thread pool (no `rayon`), and a string error (no `anyhow`).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod threading;

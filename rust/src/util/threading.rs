@@ -1,0 +1,313 @@
+//! Dependency-free data parallelism (offline build: no `rayon`).
+//!
+//! A [`ThreadPool`] of scoped workers plus a chunked work queue, built on
+//! `std::thread::scope` and one atomic cursor. Workers are spawned per
+//! top-level call and borrow the caller's data directly — no `'static`
+//! bounds, no channels, no unsafe lifetime erasure. A pool of one thread
+//! runs every job inline on the caller, so the single-thread path pays no
+//! synchronization or spawn cost at all.
+//!
+//! ## Determinism contract
+//!
+//! The pool intentionally exposes only primitives whose *numeric result*
+//! cannot depend on the number of workers or on scheduling order:
+//!
+//! * [`ThreadPool::for_each_chunk`] — a dynamic queue over item chunks.
+//!   Which worker runs a chunk is non-deterministic; callers must make
+//!   each chunk's effect independent of every other chunk (disjoint
+//!   writes). Chunk *boundaries* are a pure function of `(n_items,
+//!   chunk)`, never of the thread count.
+//! * [`shard_bounds`] — the fixed partition the engine uses for
+//!   thread-local histogram shards. It depends only on the item count and
+//!   shard count, so the shards (and therefore the per-shard f32
+//!   accumulation order) are identical for any pool size.
+//! * [`reduce_shards`] — deterministic reduction: every output cell sums
+//!   its shard cells in ascending shard order. Parallelism is across
+//!   *cells*, which never reorders the per-cell additions.
+//!
+//! Together these make `n_threads = 1` and `n_threads = N` produce
+//! bit-identical results (`rust/tests/parallel_determinism.rs` enforces
+//! this end-to-end).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A fixed-width pool of scoped workers (see module docs).
+#[derive(Clone, Debug)]
+pub struct ThreadPool {
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `n_threads` workers; `0` means "all available cores".
+    pub fn new(n_threads: usize) -> ThreadPool {
+        let n = match n_threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
+        ThreadPool { n_threads: n.max(1) }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Run `f(worker_id)` once per worker, concurrently. Worker 0 runs on
+    /// the calling thread; a pool of one thread calls `f(0)` inline.
+    pub fn broadcast<F>(&self, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.n_threads == 1 {
+            f(0);
+            return;
+        }
+        std::thread::scope(|s| {
+            let fr = &f;
+            for t in 1..self.n_threads {
+                s.spawn(move || fr(t));
+            }
+            fr(0);
+        });
+    }
+
+    /// Chunked dynamic work queue: split `0..n_items` into chunks of
+    /// `chunk` items (last one may be short) and have workers pull chunks
+    /// from a shared cursor, calling `f(start..end)` per chunk.
+    ///
+    /// Chunk boundaries depend only on `(n_items, chunk)`; worker
+    /// assignment is dynamic, so `f`'s effects must be independent across
+    /// chunks (e.g. writes to disjoint output ranges).
+    pub fn for_each_chunk<F>(&self, n_items: usize, chunk: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        if n_items == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        if self.n_threads == 1 || n_items <= chunk {
+            let mut start = 0;
+            while start < n_items {
+                let end = (start + chunk).min(n_items);
+                f(start..end);
+                start = end;
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        self.broadcast(|_worker| loop {
+            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n_items {
+                break;
+            }
+            f(start..(start + chunk).min(n_items));
+        });
+    }
+}
+
+impl Default for ThreadPool {
+    fn default() -> Self {
+        ThreadPool::new(1)
+    }
+}
+
+/// The fixed contiguous partition of `0..n_items` into `n_shards` ranges:
+/// shard `s` is `[start, end)` with sizes differing by at most one (the
+/// first `n_items % n_shards` shards are one longer). Pure in its inputs,
+/// so the partition is identical for every thread count.
+pub fn shard_bounds(n_items: usize, n_shards: usize, s: usize) -> (usize, usize) {
+    debug_assert!(s < n_shards);
+    let base = n_items / n_shards;
+    let rem = n_items % n_shards;
+    let start = s * base + s.min(rem);
+    let end = start + base + usize::from(s < rem);
+    (start, end)
+}
+
+/// Deterministically accumulate `n_shards` equal-length shard buffers
+/// (concatenated in `shards`) into `out` (`out[c] += Σ_s shard_s[c]`).
+///
+/// Every cell adds its shard values in ascending shard order — the same
+/// order a single thread would use — and the pool parallelizes across
+/// cell ranges only, so the result is bit-identical for any pool size.
+pub fn reduce_shards(pool: &ThreadPool, shards: &[f32], n_shards: usize, out: &mut [f32]) {
+    let len = out.len();
+    assert_eq!(shards.len(), n_shards * len, "shards must be n_shards * out.len()");
+    if n_shards == 0 || len == 0 {
+        return;
+    }
+    let out_cells = DisjointSlice::new(out);
+    pool.for_each_chunk(len, 16 * 1024, |r| {
+        // Safety: chunk ranges from the queue are disjoint sub-ranges of
+        // `0..len`, so every cell is written by exactly one worker.
+        let dst = unsafe { out_cells.range_mut(r.clone()) };
+        for s in 0..n_shards {
+            let src = &shards[s * len + r.start..s * len + r.end];
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d += v;
+            }
+        }
+    });
+}
+
+/// A shared view of a mutable slice for *disjoint* parallel writes.
+///
+/// The pool's queue hands each worker distinct ranges; this wrapper lets
+/// those workers write their ranges without locking. All safety rests on
+/// the caller's disjointness guarantee (see [`DisjointSlice::range_mut`]).
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> DisjointSlice<'a, T> {
+        DisjointSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _borrow: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `range`.
+    ///
+    /// # Safety
+    ///
+    /// Concurrent callers must pass pairwise-disjoint ranges; `range`
+    /// must lie within `0..self.len()` (checked with `debug_assert`).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn broadcast_runs_every_worker_once() {
+        for n in [1usize, 2, 4, 7] {
+            let pool = ThreadPool::new(n);
+            assert_eq!(pool.n_threads(), n);
+            let seen = Mutex::new(vec![0usize; n]);
+            pool.broadcast(|w| {
+                seen.lock().unwrap()[w] += 1;
+            });
+            assert_eq!(*seen.lock().unwrap(), vec![1usize; n]);
+        }
+    }
+
+    #[test]
+    fn zero_threads_means_auto() {
+        assert!(ThreadPool::new(0).n_threads() >= 1);
+    }
+
+    #[test]
+    fn chunk_boundaries_are_thread_count_independent() {
+        // The set of chunk ranges must be exactly the serial partition of
+        // 0..n into `chunk`-sized pieces, for every pool width.
+        let n = 103;
+        let chunk = 8;
+        let want: Vec<(usize, usize)> =
+            (0..n).step_by(chunk).map(|s| (s, (s + chunk).min(n))).collect();
+        for threads in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let got = Mutex::new(Vec::new());
+            pool.for_each_chunk(n, chunk, |r| {
+                got.lock().unwrap().push((r.start, r.end));
+            });
+            let mut got = got.into_inner().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_covers_every_item_exactly_once() {
+        let n = 1000;
+        let mut hits = vec![0u8; n];
+        let pool = ThreadPool::new(4);
+        let cells = DisjointSlice::new(&mut hits);
+        pool.for_each_chunk(n, 13, |r| {
+            let dst = unsafe { cells.range_mut(r) };
+            for v in dst {
+                *v += 1;
+            }
+        });
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn shard_bounds_partition() {
+        for (n, s) in [(10usize, 3usize), (7, 7), (2048, 5), (5, 1), (0, 2)] {
+            let mut covered = 0usize;
+            let mut prev_end = 0usize;
+            for i in 0..s {
+                let (a, b) = shard_bounds(n, s, i);
+                assert_eq!(a, prev_end, "shards must be contiguous");
+                assert!(b >= a);
+                // balanced: sizes differ by at most one
+                assert!(b - a <= n / s + 1);
+                covered += b - a;
+                prev_end = b;
+            }
+            assert_eq!(covered, n);
+            assert_eq!(prev_end, n);
+        }
+    }
+
+    /// The reduction must add shards in ascending shard order per cell —
+    /// checked with values whose f32 sum is order-sensitive, against a
+    /// serial left-to-right reference, for several pool widths.
+    #[test]
+    fn reduce_shards_is_order_deterministic() {
+        let len = 37;
+        let n_shards = 5;
+        // adversarial magnitudes: reordering these changes the f32 sum
+        let mut shards = vec![0.0f32; n_shards * len];
+        for s in 0..n_shards {
+            for c in 0..len {
+                shards[s * len + c] =
+                    (1.0 + c as f32) * 10f32.powi(s as i32 - 2) * if s % 2 == 0 { 1.0 } else { -1.0 };
+            }
+        }
+        let mut want = vec![0.5f32; len];
+        for s in 0..n_shards {
+            for c in 0..len {
+                want[c] += shards[s * len + c];
+            }
+        }
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut out = vec![0.5f32; len];
+            reduce_shards(&pool, &shards, n_shards, &mut out);
+            // bitwise equality, not approximate
+            assert_eq!(out, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn reduce_shards_rejects_length_mismatch() {
+        let pool = ThreadPool::new(1);
+        let shards = vec![0.0f32; 7];
+        let mut out = vec![0.0f32; 3];
+        reduce_shards(&pool, &shards, 2, &mut out);
+    }
+}

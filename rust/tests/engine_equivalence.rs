@@ -23,8 +23,8 @@ const M: usize = 6;
 const BINS: usize = 16;
 
 fn xla() -> Option<XlaEngine> {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts` first");
+    if !artifacts_available() || cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: needs `make artifacts` and --features pjrt");
         return None;
     }
     Some(XlaEngine::new("test").expect("open test artifacts"))

@@ -1,0 +1,120 @@
+//! The parallel engine's determinism contract, end to end: training with
+//! `n_threads > 1` must produce **bit-identical** ensembles to the
+//! single-thread path — same splits, same leaf values, same predictions —
+//! because the engine's histogram sharding and reduction order are fixed
+//! functions of the data shape, never of the thread count (see
+//! `engine/native.rs` module docs and DESIGN.md "Threading model").
+//!
+//! These tests use row counts large enough to actually exercise the
+//! sharded histogram path (>= 2 shards at the root level).
+
+use sketchboost::data::profiles::Profile;
+use sketchboost::engine::{ComputeEngine, NativeEngine};
+use sketchboost::prelude::*;
+
+/// A synthetic profile big enough to shard (otto: 9 classes, 93
+/// features; 6000 rows ≈ 3 histogram shards at the root).
+fn workload() -> Dataset {
+    Profile::by_name("otto").expect("otto profile").generate_sized(6000, 9)
+}
+
+fn assert_ensembles_identical(a: &Ensemble, b: &Ensemble, label: &str) {
+    assert_eq!(a.n_trees(), b.n_trees(), "{label}: tree count");
+    for (i, (ta, tb)) in a.trees.iter().zip(&b.trees).enumerate() {
+        assert_eq!(ta.nodes.len(), tb.nodes.len(), "{label}: tree {i} node count");
+        for (na, nb) in ta.nodes.iter().zip(&tb.nodes) {
+            assert_eq!(na.feature, nb.feature, "{label}: tree {i} split feature");
+            assert_eq!(na.bin, nb.bin, "{label}: tree {i} split bin");
+            assert_eq!(na.left, nb.left, "{label}: tree {i} topology");
+            assert_eq!(na.right, nb.right, "{label}: tree {i} topology");
+        }
+        // bitwise: no tolerance
+        assert_eq!(ta.leaf_values, tb.leaf_values, "{label}: tree {i} leaf values");
+    }
+}
+
+#[test]
+fn ensembles_bit_identical_across_thread_counts() {
+    let ds = workload();
+    let mut cfg = GBDTConfig::for_dataset(&ds);
+    cfg.n_rounds = 6;
+    cfg.learning_rate = 0.3;
+    cfg.max_depth = 5;
+    cfg.max_bins = 32;
+    cfg.sketch = SketchConfig::RandomProjection { k: 3 };
+
+    cfg.n_threads = 1;
+    let serial = GBDT::fit(&cfg, &ds, None);
+    let serial_preds = serial.predict_raw(&ds);
+
+    for threads in [2usize, 4] {
+        cfg.n_threads = threads;
+        let parallel = GBDT::fit(&cfg, &ds, None);
+        assert_ensembles_identical(&serial, &parallel, &format!("n_threads={threads}"));
+        assert_eq!(
+            serial_preds,
+            parallel.predict_raw(&ds),
+            "n_threads={threads}: predictions must be bit-identical"
+        );
+        assert_eq!(serial.history.train_loss, parallel.history.train_loss);
+    }
+}
+
+#[test]
+fn every_sketch_strategy_is_thread_invariant() {
+    // One round each: the sketches feed different channel widths (k1)
+    // through the parallel histogram path, including the dyn fallback.
+    let ds = workload();
+    for sketch in [
+        SketchConfig::None,
+        SketchConfig::TopOutputs { k: 2 },
+        SketchConfig::RandomSampling { k: 2 },
+        SketchConfig::RandomProjection { k: 5 },
+        SketchConfig::TruncatedSvd { k: 2, iters: 4 },
+    ] {
+        let mut cfg = GBDTConfig::for_dataset(&ds);
+        cfg.n_rounds = 2;
+        cfg.max_depth = 4;
+        cfg.max_bins = 32;
+        cfg.sketch = sketch;
+        cfg.n_threads = 1;
+        let a = GBDT::fit(&cfg, &ds, None);
+        cfg.n_threads = 4;
+        let b = GBDT::fit(&cfg, &ds, None);
+        assert_eq!(
+            a.predict_raw(&ds),
+            b.predict_raw(&ds),
+            "sketch {} must be thread-invariant",
+            sketch.name()
+        );
+    }
+}
+
+#[test]
+fn engine_histograms_thread_invariant_on_training_shapes() {
+    // Engine-level check on a realistic shape: the builder's root-level
+    // call (one slot, every row) is the biggest sharded histogram.
+    use sketchboost::data::binning::BinnedDataset;
+
+    let ds = workload();
+    let binned = BinnedDataset::from_dataset(&ds, 64);
+    let n = ds.n_rows;
+    let k1 = 4usize;
+    let mut chan = vec![0.0f32; n * k1];
+    for (i, v) in chan.iter_mut().enumerate() {
+        // deterministic, sign-alternating channel values
+        *v = ((i * 2654435761) % 1000) as f32 / 500.0 - 1.0;
+    }
+    let rows: Vec<u32> = (0..n as u32).collect();
+    let slot_of_row = vec![0u32; n];
+    let size = binned.n_features * binned.max_bins * k1;
+
+    let mut base = vec![0.0f32; size];
+    NativeEngine::with_threads(1).histograms(&binned, &rows, &slot_of_row, &chan, k1, 1, &mut base);
+    for threads in [2usize, 4, 8] {
+        let mut out = vec![0.0f32; size];
+        NativeEngine::with_threads(threads)
+            .histograms(&binned, &rows, &slot_of_row, &chan, k1, 1, &mut out);
+        assert_eq!(out, base, "histograms differ at n_threads={threads}");
+    }
+}
