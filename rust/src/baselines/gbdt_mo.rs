@@ -11,7 +11,11 @@
 //! named baseline configurations so the benches read like the paper.
 //! The configs inherit every shared knob — including `n_threads`, which
 //! `GBDT::fit` forwards to the engine as [`crate::engine::EngineOpts`] —
-//! so baseline timings parallelize exactly like SketchBoost's.
+//! so baseline timings parallelize exactly like SketchBoost's, and they
+//! run through the same pooled [`crate::tree::TreeWorkspace`] training
+//! core (range-partitioned rows, reused histogram buffers), so the
+//! GBDT-MO comparison measures the hessian-histogram cost difference,
+//! not allocator noise.
 
 use crate::boosting::trainer::GBDTConfig;
 use crate::data::dataset::Dataset;

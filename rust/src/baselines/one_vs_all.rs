@@ -14,8 +14,9 @@ use crate::boosting::trainer::GBDTConfig;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Dataset;
 use crate::engine::{ComputeEngine, EngineOpts, NativeEngine, ScoreMode};
-use crate::tree::builder::{build_tree, BuildParams, SENTINEL};
+use crate::tree::builder::{build_tree_in, BuildParams, SENTINEL};
 use crate::tree::tree::Tree;
+use crate::tree::workspace::TreeWorkspace;
 use crate::util::rng::Rng;
 
 /// One-vs-all model: per round, one univariate tree per output.
@@ -97,6 +98,10 @@ pub fn fit_one_vs_all_with_engine(
     let mut gcol = vec![0.0f32; n];
     let mut hcol = vec![0.0f32; n];
     let all_rows: Vec<u32> = (0..n as u32).collect();
+    // pooled across all d trees of every round, exactly like the
+    // single-tree trainer (tree/workspace.rs) — the Figure-1 strategy
+    // comparison keeps both code paths allocation-free in steady state
+    let mut ws = TreeWorkspace::new();
 
     let mut trees: Vec<(u32, Tree)> = Vec::new();
     let mut history = TrainHistory::default();
@@ -107,14 +112,15 @@ pub fn fit_one_vs_all_with_engine(
         engine.grad_hess(cfg.loss, &preds, &train.targets, &mut g, &mut h);
         let mut round_rng = rng.fork(round as u64);
 
-        let rows: Vec<u32> = if cfg.subsample < 1.0 {
+        let sampled: Option<Vec<u32>> = if cfg.subsample < 1.0 {
             let keep = ((n as f64) * cfg.subsample as f64).round().max(1.0) as usize;
             let mut idx = round_rng.sample_indices(n, keep);
             idx.sort_unstable();
-            idx
+            Some(idx)
         } else {
-            all_rows.clone()
+            None
         };
+        let rows: &[u32] = sampled.as_deref().unwrap_or(&all_rows);
 
         for j in 0..d {
             for r in 0..n {
@@ -123,7 +129,7 @@ pub fn fit_one_vs_all_with_engine(
             }
             let params = BuildParams {
                 binned: &binned,
-                rows: &rows,
+                rows,
                 g: &gcol,
                 h: &hcol,
                 d: 1,
@@ -139,8 +145,9 @@ pub fn fit_one_vs_all_with_engine(
                 sparse_topk: None,
                 row_weights: None,
             };
-            let (mut tree, leaf_of_row) = build_tree(&params, engine);
+            let mut tree = build_tree_in(&params, engine, &mut ws);
             tree.scale_leaves(cfg.learning_rate);
+            let leaf_of_row = ws.leaf_of_row();
             for r in 0..n {
                 let leaf = if leaf_of_row[r] != SENTINEL {
                     leaf_of_row[r] as usize

@@ -9,7 +9,8 @@ use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Dataset;
 use crate::engine::{ComputeEngine, EngineOpts, NativeEngine, ScoreMode};
 use crate::sketch::SketchConfig;
-use crate::tree::builder::{build_tree, BuildParams, SENTINEL};
+use crate::tree::builder::{build_tree_in, BuildParams, SENTINEL};
+use crate::tree::workspace::TreeWorkspace;
 use crate::util::rng::Rng;
 
 /// Training configuration. Defaults follow the paper's Table 7 defaults
@@ -166,6 +167,12 @@ impl GBDT {
         let mut h = vec![0.0f32; n * d];
         let mode = if cfg.use_hess_split { ScoreMode::HessL2 } else { ScoreMode::CountL2 };
         let all_rows: Vec<u32> = (0..n as u32).collect();
+        // one pooled workspace across every tree: the per-level buffers
+        // (partitioned rows, channel matrix, histogram ping-pong, gains)
+        // reach their high-water mark on the first tree and are reused —
+        // steady-state tree building allocates only the tree itself
+        // (tree/workspace.rs, rust/tests/alloc_free.rs)
+        let mut ws = TreeWorkspace::new();
 
         let mut trees = Vec::with_capacity(cfg.n_rounds);
         let mut history = TrainHistory::default();
@@ -185,22 +192,27 @@ impl GBDT {
             let score_h: Option<&[f32]> = if cfg.use_hess_split { Some(&h) } else { None };
 
             // row sampling: gradient-aware (GOSS/MVS) takes precedence,
-            // then plain uniform subsampling, then all rows
-            let (rows, row_weights): (Vec<u32>, Option<Vec<f32>>) =
+            // then plain uniform subsampling, then all rows (borrowed —
+            // no per-round copy of the full index list)
+            let sampled: Option<(Vec<u32>, Option<Vec<f32>>)> =
                 if cfg.row_sampling != RowSampling::None {
                     let norms = row_grad_norms(&g, n, d);
                     let s = cfg.row_sampling.sample(&norms, &mut round_rng);
                     let w = if s.weighted { Some(s.weights) } else { None };
-                    (s.rows, w)
+                    Some((s.rows, w))
                 } else if cfg.subsample < 1.0 {
                     let keep =
                         ((n as f64) * cfg.subsample as f64).round().max(1.0) as usize;
                     let mut idx = round_rng.sample_indices(n, keep);
                     idx.sort_unstable();
-                    (idx, None)
+                    Some((idx, None))
                 } else {
-                    (all_rows.clone(), None)
+                    None
                 };
+            let (rows, row_weights): (&[u32], Option<&[f32]>) = match &sampled {
+                Some((r, w)) => (r, w.as_deref()),
+                None => (&all_rows, None),
+            };
 
             // feature subsample
             let feature_mask: Option<Vec<bool>> = if cfg.colsample < 1.0 {
@@ -218,7 +230,7 @@ impl GBDT {
 
             let params = BuildParams {
                 binned: &binned,
-                rows: &rows,
+                rows,
                 g: &g,
                 h: &h,
                 d,
@@ -232,13 +244,14 @@ impl GBDT {
                 min_gain: cfg.min_gain,
                 feature_mask: feature_mask.as_deref(),
                 sparse_topk: cfg.sparse_leaves,
-                row_weights: row_weights.as_deref(),
+                row_weights,
             };
-            let (mut tree, leaf_of_row) = build_tree(&params, engine);
+            let mut tree = build_tree_in(&params, engine, &mut ws);
             tree.scale_leaves(cfg.learning_rate);
 
             // update train predictions (leaf_of_row for sampled rows;
             // route the rest through the binned tree)
+            let leaf_of_row = ws.leaf_of_row();
             for r in 0..n {
                 let leaf = if leaf_of_row[r] != SENTINEL {
                     leaf_of_row[r] as usize

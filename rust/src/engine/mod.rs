@@ -18,6 +18,18 @@
 //! channel. Channels are `[g_0..g_k)` sketched-gradient sums, then (in
 //! `HessL2` mode) `[h_0..h_k)` hessian sums, then one count channel.
 //!
+//! ## Row partitioning
+//!
+//! The tree builder keeps the active rows **stably partitioned into
+//! contiguous per-node segments** (see `tree/workspace.rs` and DESIGN.md
+//! "Memory model & row partitioning"): every frontier node owns a
+//! `[start, end)` range of one shared row-index buffer, with the gathered
+//! channel matrix kept in the same partition order alongside it.
+//! [`ComputeEngine::histograms`] therefore takes a list of [`SlotRange`]
+//! segments instead of a per-row `slot_of_row` map — the accumulation
+//! streams each segment sequentially with a constant output base, with no
+//! per-row slot lookup and no per-level re-gather of channel rows.
+//!
 //! ## Threading and determinism
 //!
 //! Engines are constructed with [`EngineOpts`] and may execute the hot
@@ -27,13 +39,53 @@
 //! and trainer stay oblivious to parallelism and `seed`-reproducibility
 //! is preserved. `NativeEngine` achieves this with a fixed row-shard
 //! partition and an ascending-shard-order reduction (DESIGN.md, section
-//! "Threading model"); `rust/tests/parallel_determinism.rs` enforces it.
+//! "Threading model"); `rust/tests/parallel_determinism.rs` enforces it,
+//! and `rust/tests/partition_equivalence.rs` pins the result bits to the
+//! pre-partitioning implementation preserved in [`reference`].
 
 pub mod native;
+#[doc(hidden)]
+pub mod reference;
 pub mod xla;
 
 pub use self::native::NativeEngine;
 pub use self::xla::XlaEngine;
+
+/// A contiguous segment of the partition-ordered row buffer belonging to
+/// one frontier slot: rows `rows[start..end]` (and the channel rows
+/// `chan[start*k1..end*k1]` parallel to them) all fall in histogram slot
+/// `slot`. Produced by the builder's stable partition
+/// (`tree/workspace.rs`); consumed by [`ComputeEngine::histograms`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotRange {
+    /// Frontier slot (histogram slice index into `out`).
+    pub slot: u32,
+    /// First row position (into the `rows`/`chan` buffers).
+    pub start: u32,
+    /// One past the last row position.
+    pub end: u32,
+}
+
+impl SlotRange {
+    pub fn new(slot: u32, start: u32, end: u32) -> SlotRange {
+        debug_assert!(start <= end);
+        SlotRange { slot, start, end }
+    }
+
+    /// Number of rows in the segment.
+    pub fn len(&self) -> usize {
+        (self.end - self.start) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    /// The segment as a `usize` position range.
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.start as usize..self.end as usize
+    }
+}
 
 /// Engine construction options, shared by every [`ComputeEngine`] backend
 /// (and by the baselines, which build engines internally).
@@ -83,11 +135,31 @@ impl ScoreMode {
 }
 
 /// Per-leaf sums of full-dimensional derivatives, for exact leaf values.
+/// Pooled by the caller (the tree workspace) and refilled via
+/// [`LeafSums::reset`] so steady-state training reuses the buffers.
+#[derive(Default)]
 pub struct LeafSums {
     /// row-major [n_leaves, d]
     pub gsum: Vec<f32>,
     pub hsum: Vec<f32>,
     pub count: Vec<f32>,
+}
+
+impl LeafSums {
+    pub fn new() -> LeafSums {
+        LeafSums::default()
+    }
+
+    /// Resize for `n_leaves` leaves of `d` outputs and zero the contents
+    /// (allocation-free once capacity has grown to the high-water mark).
+    pub fn reset(&mut self, n_leaves: usize, d: usize) {
+        self.gsum.clear();
+        self.gsum.resize(n_leaves * d, 0.0);
+        self.hsum.clear();
+        self.hsum.resize(n_leaves * d, 0.0);
+        self.count.clear();
+        self.count.resize(n_leaves, 0.0);
+    }
 }
 
 /// The numeric core of one boosting round. Implementations may keep
@@ -117,23 +189,37 @@ pub trait ComputeEngine {
         out: &mut [f32],
     );
 
-    /// Accumulate histograms for `rows` into `out` (layout above).
-    /// `slot_of_row` maps *global* row index -> frontier slot; `chan` is
-    /// the row-major [n, k1] channel matrix (trailing channel must be the
-    /// valid/count indicator).
+    /// Accumulate histograms for the requested row segments into `out`
+    /// (layout above; `out` holds `n_slots` slices and the caller zeroes
+    /// it — accumulate-into semantics).
+    ///
+    /// `rows` is the partition-ordered row-index buffer (*global* row ids
+    /// into `binned`); `chan` is the `[rows.len(), k1]` channel matrix
+    /// **parallel to `rows` by position** (trailing channel must be the
+    /// valid/count indicator). Each [`SlotRange`] in `segs` names one
+    /// contiguous run of `rows` and the frontier slot it belongs to;
+    /// segments must be pairwise disjoint. With sibling subtraction only
+    /// the smaller child of each split appears in `segs`, while `n_slots`
+    /// stays the full frontier width (it sizes `out` and the deterministic
+    /// shard partition).
+    #[allow(clippy::too_many_arguments)]
     fn histograms(
         &mut self,
         binned: &BinnedDataset,
         rows: &[u32],
-        slot_of_row: &[u32],
         chan: &[f32],
         k1: usize,
+        segs: &[SlotRange],
         n_slots: usize,
         out: &mut [f32],
     );
 
-    /// Split scores S(left)+S(right) for every (slot, feature, bin).
-    /// Returns [n_slots * m * bins]; candidate b means "left = bins <= b".
+    /// Split scores S(left)+S(right) for every (slot, feature, bin),
+    /// written into `out` (cleared and resized to `n_slots * m * bins`;
+    /// candidate b means "left = bins <= b"). The caller owns the buffer
+    /// so steady-state training reuses its capacity across levels and
+    /// trees (see `tree/workspace.rs`).
+    #[allow(clippy::too_many_arguments)]
     fn split_gains(
         &mut self,
         hist: &[f32],
@@ -143,9 +229,12 @@ pub trait ComputeEngine {
         k1: usize,
         lam: f32,
         mode: ScoreMode,
-    ) -> Vec<f32>;
+        out: &mut Vec<f32>,
+    );
 
-    /// Per-leaf sums of the full gradient/hessian matrices over `rows`.
+    /// Per-leaf sums of the full gradient/hessian matrices over `rows`,
+    /// written into `out` (reset to `[n_leaves, d]` by the callee).
+    #[allow(clippy::too_many_arguments)]
     fn leaf_sums(
         &mut self,
         rows: &[u32],
@@ -154,7 +243,8 @@ pub trait ComputeEngine {
         h: &[f32],
         d: usize,
         n_leaves: usize,
-    ) -> LeafSums;
+        out: &mut LeafSums,
+    );
 }
 
 #[cfg(test)]
@@ -172,5 +262,26 @@ mod tests {
     fn engine_opts_default_is_serial() {
         assert_eq!(EngineOpts::default().n_threads, 1);
         assert_eq!(EngineOpts::threads(4), EngineOpts { n_threads: 4 });
+    }
+
+    #[test]
+    fn slot_range_len_and_range() {
+        let s = SlotRange::new(3, 10, 25);
+        assert_eq!(s.len(), 15);
+        assert!(!s.is_empty());
+        assert_eq!(s.range(), 10..25);
+        assert!(SlotRange::new(0, 7, 7).is_empty());
+    }
+
+    #[test]
+    fn leaf_sums_reset_zeroes() {
+        let mut s = LeafSums::new();
+        s.reset(2, 3);
+        s.gsum[0] = 5.0;
+        s.count[1] = 2.0;
+        s.reset(2, 3);
+        assert!(s.gsum.iter().all(|&v| v == 0.0));
+        assert!(s.count.iter().all(|&v| v == 0.0));
+        assert_eq!(s.hsum.len(), 6);
     }
 }

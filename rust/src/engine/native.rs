@@ -27,38 +27,61 @@
 //! Everything else (derivatives, gemm, leaf sums) stays serial — those
 //! ops are O(n·d) streams that the trainer amortizes, and the profile in
 //! EXPERIMENTS.md §Perf shows them off the critical path.
+//!
+//! ## Range-based accumulation and shard alignment
+//!
+//! `histograms` receives the builder's partition-ordered row buffer and a
+//! list of [`SlotRange`] segments (DESIGN.md "Memory model & row
+//! partitioning"), so each segment streams with a constant output base —
+//! no per-row slot lookup and no channel re-gather. To stay bit-identical
+//! to the historical implementation (which sharded the *globally
+//! ascending interleaved* row list), the shard boundaries are aligned to
+//! **merged ranks**: shard `s` covers the rows whose rank in the
+//! ascending merge of all segments falls in `shard_bounds(nr, S, s)`.
+//! Segments are ascending (stable partition of an ascending input), so
+//! each shard cuts every segment at one position, found by binary search
+//! on the global row id ([`align_shard_cuts`]). Every histogram cell is
+//! slot-local, so per-cell f32 addition order — and therefore every bit
+//! of the result — matches the pre-partitioning engine exactly
+//! (`rust/tests/partition_equivalence.rs` enforces this against
+//! [`super::reference::ReferenceEngine`]).
 
 use crate::boosting::losses::LossKind;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Targets;
 use crate::util::threading::{reduce_shards, shard_bounds, DisjointSlice, ThreadPool};
 
-use super::{ComputeEngine, EngineOpts, LeafSums, ScoreMode};
+use super::{ComputeEngine, EngineOpts, LeafSums, ScoreMode, SlotRange};
 
 /// Rows per histogram shard (below 2·this, the build stays serial).
-const SHARD_TARGET_ROWS: usize = 2048;
+pub(crate) const SHARD_TARGET_ROWS: usize = 2048;
 /// Upper bound on shards, i.e. on usable histogram parallelism.
-const MAX_SHARDS: usize = 16;
+pub(crate) const MAX_SHARDS: usize = 16;
 
 /// Number of histogram shards for `nr` active rows and a per-slot scan
 /// width of `slots_bins = n_slots * bins` cells. Pure in its inputs (and
 /// in particular independent of the thread count — see module docs):
 /// bounded so each shard keeps >= [`SHARD_TARGET_ROWS`] rows and so the
 /// deterministic reduction costs at most ~25% of the accumulation pass.
-fn hist_shards(nr: usize, slots_bins: usize) -> usize {
+pub(crate) fn hist_shards(nr: usize, slots_bins: usize) -> usize {
     let by_rows = nr / SHARD_TARGET_ROWS;
     let by_reduce = nr / (4 * slots_bins).max(1);
     by_rows.min(by_reduce).clamp(1, MAX_SHARDS)
 }
 
-/// Pure-rust engine. Stateless apart from scratch reuse.
+/// Pure-rust engine. Stateless apart from scratch reuse: every scratch
+/// buffer below is grown once to its high-water mark and reused, so
+/// steady-state training performs no heap allocation in the histogram /
+/// split-scan hot loop (`rust/tests/alloc_free.rs`).
 #[derive(Default)]
 pub struct NativeEngine {
     pool: ThreadPool,
-    /// scratch: per-level gathered channel rows (see `histograms`)
-    scratch_chan: Vec<f32>,
     /// scratch: thread-local histogram shards, reduced deterministically
     scratch_shards: Vec<f32>,
+    /// scratch: per-(shard boundary, segment) cut positions
+    scratch_cuts: Vec<u32>,
+    /// scratch: per-worker f64 accumulators for the split scan
+    scratch_gain: Vec<f64>,
 }
 
 impl NativeEngine {
@@ -173,49 +196,58 @@ impl ComputeEngine for NativeEngine {
         &mut self,
         binned: &BinnedDataset,
         rows: &[u32],
-        slot_of_row: &[u32],
         chan: &[f32],
         k1: usize,
+        segs: &[SlotRange],
         n_slots: usize,
         out: &mut [f32],
     ) {
-        let n = binned.n_rows;
         let m = binned.n_features;
         let bins = binned.max_bins;
-        debug_assert_eq!(out.len(), n_slots * m * bins * k1);
-        debug_assert_eq!(chan.len(), n * k1);
-
-        // Gather channel rows and the per-row histogram slice base once
-        // into compact buffers so the per-feature pass streams
-        // sequentially instead of chasing `rows` indirection through the
-        // full [n, k1] matrix m times (perf log in EXPERIMENTS.md §Perf).
-        let nr = rows.len();
-        self.scratch_chan.clear();
-        self.scratch_chan.resize(nr * k1, 0.0);
-        let mut slot_base = Vec::with_capacity(nr);
         let slice = m * bins * k1;
-        for (j, &r) in rows.iter().enumerate() {
-            let r = r as usize;
-            self.scratch_chan[j * k1..(j + 1) * k1]
-                .copy_from_slice(&chan[r * k1..(r + 1) * k1]);
-            slot_base.push(slot_of_row[r] as usize * slice);
-        }
-        let n_shards = hist_shards(nr, n_slots * bins);
-        if n_shards == 1 {
-            // small level: one serial pass straight into `out` (also the
-            // historical path — sharding only ever changes results when
-            // it actually splits the rows)
-            hist_dispatch(binned, rows, &slot_base, &self.scratch_chan, k1, out);
+        debug_assert_eq!(out.len(), n_slots * slice);
+        debug_assert_eq!(chan.len(), rows.len() * k1);
+        debug_assert!(segs.iter().all(|s| (s.slot as usize) < n_slots
+            && s.start <= s.end
+            && (s.end as usize) <= rows.len()));
+        let nr: usize = segs.iter().map(|s| s.len()).sum();
+        if nr == 0 {
             return;
         }
 
-        // Thread-local shards over a fixed row partition, then a
-        // deterministic ascending-order reduction (module docs).
+        let n_shards = hist_shards(nr, n_slots * bins);
+        if n_shards == 1 {
+            // small level: one serial pass straight into `out`, segment by
+            // segment with a constant slot base (sharding only ever
+            // changes results when it actually splits the rows)
+            for seg in segs {
+                let (a, b) = (seg.start as usize, seg.end as usize);
+                hist_dispatch(
+                    binned,
+                    &rows[a..b],
+                    &chan[a * k1..b * k1],
+                    k1,
+                    seg.slot as usize * slice,
+                    out,
+                );
+            }
+            return;
+        }
+
+        // Merged-rank shard alignment (module docs): shard s covers, in
+        // every segment, the rows whose rank in the ascending merge of
+        // all segments lies in shard_bounds(nr, S, s). Pure in the inputs
+        // and independent of the thread count.
+        let ns = segs.len();
+        align_shard_cuts(rows, segs, nr, n_shards, &mut self.scratch_cuts);
+        let cuts = &self.scratch_cuts;
+
+        // Thread-local shards over the fixed partition, then a
+        // deterministic ascending-order reduction.
         let total = out.len();
         self.scratch_shards.clear();
         self.scratch_shards.resize(n_shards * total, 0.0);
         let pool = &self.pool;
-        let chan_g = &self.scratch_chan;
         let shard_bufs = DisjointSlice::new(&mut self.scratch_shards);
         pool.for_each_chunk(n_shards, 1, |shard_range| {
             for s in shard_range {
@@ -223,15 +255,20 @@ impl ComputeEngine for NativeEngine {
                 // worker (the queue hands out each shard index once).
                 let buf = unsafe { shard_bufs.range_mut(s * total..(s + 1) * total) };
                 buf.fill(0.0);
-                let (j0, j1) = shard_bounds(nr, n_shards, s);
-                hist_dispatch(
-                    binned,
-                    &rows[j0..j1],
-                    &slot_base[j0..j1],
-                    &chan_g[j0 * k1..j1 * k1],
-                    k1,
-                    buf,
-                );
+                for (t, seg) in segs.iter().enumerate() {
+                    let a = cuts[s * ns + t] as usize;
+                    let b = cuts[(s + 1) * ns + t] as usize;
+                    if a < b {
+                        hist_dispatch(
+                            binned,
+                            &rows[a..b],
+                            &chan[a * k1..b * k1],
+                            k1,
+                            seg.slot as usize * slice,
+                            buf,
+                        );
+                    }
+                }
             }
         });
         reduce_shards(pool, &self.scratch_shards, n_shards, out);
@@ -246,38 +283,60 @@ impl ComputeEngine for NativeEngine {
         k1: usize,
         lam: f32,
         mode: ScoreMode,
-    ) -> Vec<f32> {
+        out: &mut Vec<f32>,
+    ) {
         let k = match mode {
             ScoreMode::CountL2 => k1 - 1,
             ScoreMode::HessL2 => (k1 - 1) / 2,
         };
-        let mut gains = vec![0.0f32; n_slots * m * bins];
+        out.clear();
+        out.resize(n_slots * m * bins, 0.0);
         let n_pairs = n_slots * m;
         if n_pairs == 0 || bins == 0 {
-            return gains;
+            return;
+        }
+        // Per-worker f64 accumulators, pooled on the engine: k <= ~2d+1
+        // per worker, reused across levels and trees.
+        let nw = self.pool.n_threads();
+        self.scratch_gain.clear();
+        self.scratch_gain.resize(nw.max(1) * 2 * k, 0.0);
+        const PAIR_CHUNK: usize = 8;
+        // Tiny frontiers (deep levels, small datasets) run serially on
+        // the caller — thread spawns would cost more than the scan.
+        if nw == 1 || hist.len() < 16 * 1024 || n_pairs <= PAIR_CHUNK {
+            let (tot_g, acc_g) = self.scratch_gain[..2 * k].split_at_mut(k);
+            for pair in 0..n_pairs {
+                let dst = &mut out[pair * bins..(pair + 1) * bins];
+                scan_pair(hist, pair, bins, k1, k, lam, mode, tot_g, acc_g, dst);
+            }
+            return;
         }
         // Chunked queue over (slot, feature) pairs. Each pair is a pure
         // function of `hist` writing its own disjoint `bins`-wide range,
         // so the scan is deterministic for any thread count; the queue
-        // only balances load. A whole-scan chunk routes tiny frontiers
-        // (deep levels, small datasets) through the pool's inline serial
-        // path — thread spawns would cost more than the scan itself.
-        const PAIR_CHUNK: usize = 8;
-        let chunk = if hist.len() < 16 * 1024 { n_pairs } else { PAIR_CHUNK };
-        let out = DisjointSlice::new(&mut gains);
-        self.pool.for_each_chunk(n_pairs, chunk, |pairs| {
-            // per-chunk f64 scratch: k <= ~2d+1, negligible next to the
-            // bins-wide scans it serves
-            let mut tot_g = vec![0.0f64; k];
-            let mut acc_g = vec![0.0f64; k];
-            for pair in pairs {
-                // Safety: pair ranges are disjoint and the queue hands
-                // each pair index to exactly one worker.
-                let dst = unsafe { out.range_mut(pair * bins..(pair + 1) * bins) };
-                scan_pair(hist, pair, bins, k1, k, lam, mode, &mut tot_g, &mut acc_g, dst);
+        // only balances load.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cursor = AtomicUsize::new(0);
+        let dst_all = DisjointSlice::new(out.as_mut_slice());
+        let scratch = DisjointSlice::new(&mut self.scratch_gain);
+        self.pool.broadcast(|w| {
+            // Safety: each worker id is handed out once per broadcast, so
+            // the per-worker scratch ranges are disjoint.
+            let ws = unsafe { scratch.range_mut(w * 2 * k..(w + 1) * 2 * k) };
+            let (tot_g, acc_g) = ws.split_at_mut(k);
+            loop {
+                let start = cursor.fetch_add(PAIR_CHUNK, Ordering::Relaxed);
+                if start >= n_pairs {
+                    break;
+                }
+                for pair in start..(start + PAIR_CHUNK).min(n_pairs) {
+                    // Safety: pair ranges are disjoint and the cursor
+                    // hands each pair index to exactly one worker.
+                    let dst = unsafe { dst_all.range_mut(pair * bins..(pair + 1) * bins) };
+                    scan_pair(hist, pair, bins, k1, k, lam, mode, tot_g, acc_g, dst);
+                }
             }
         });
-        gains
     }
 
     fn leaf_sums(
@@ -288,27 +347,75 @@ impl ComputeEngine for NativeEngine {
         h: &[f32],
         d: usize,
         n_leaves: usize,
-    ) -> LeafSums {
-        let mut gsum = vec![0.0f32; n_leaves * d];
-        let mut hsum = vec![0.0f32; n_leaves * d];
-        let mut count = vec![0.0f32; n_leaves];
+        out: &mut LeafSums,
+    ) {
+        out.reset(n_leaves, d);
         for &r in rows {
             let r = r as usize;
             let leaf = leaf_of_row[r] as usize;
             debug_assert!(leaf < n_leaves);
-            count[leaf] += 1.0;
-            let gs = &mut gsum[leaf * d..(leaf + 1) * d];
+            out.count[leaf] += 1.0;
+            let gs = &mut out.gsum[leaf * d..(leaf + 1) * d];
             let gr = &g[r * d..(r + 1) * d];
             for c in 0..d {
                 gs[c] += gr[c];
             }
-            let hs = &mut hsum[leaf * d..(leaf + 1) * d];
+            let hs = &mut out.hsum[leaf * d..(leaf + 1) * d];
             let hr = &h[r * d..(r + 1) * d];
             for c in 0..d {
                 hs[c] += hr[c];
             }
         }
-        LeafSums { gsum, hsum, count }
+    }
+}
+
+/// Compute the merged-rank shard cut positions for range-based
+/// accumulation (module docs). On return `cuts` holds `(n_shards + 1) *
+/// segs.len()` absolute positions into `rows`: shard `s` covers
+/// `rows[cuts[s * ns + t] .. cuts[(s + 1) * ns + t]]` of segment `t`.
+///
+/// Row ids are unique and every segment is ascending (the builder's
+/// stable partition preserves the ascending order of the sampled row
+/// list), so the rank-`j` boundary of the merged list is found by binary
+/// searching the smallest row id `v` with `count(<= v) == j`; each
+/// segment's cut is then its partition point at `v`.
+fn align_shard_cuts(
+    rows: &[u32],
+    segs: &[SlotRange],
+    nr: usize,
+    n_shards: usize,
+    cuts: &mut Vec<u32>,
+) {
+    let ns = segs.len();
+    cuts.clear();
+    cuts.resize((n_shards + 1) * ns, 0);
+    for (t, seg) in segs.iter().enumerate() {
+        cuts[t] = seg.start;
+        cuts[n_shards * ns + t] = seg.end;
+        debug_assert!(rows[seg.range()].windows(2).all(|w| w[0] < w[1]),
+            "segments must be ascending for merged-rank shard alignment");
+    }
+    for s in 1..n_shards {
+        let (rank, _) = shard_bounds(nr, n_shards, s);
+        // binary search over the row-id domain for the rank-th boundary
+        let mut lo = 0u32;
+        let mut hi = u32::MAX;
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let cnt: usize = segs
+                .iter()
+                .map(|seg| rows[seg.range()].partition_point(|&r| r <= mid))
+                .sum();
+            if cnt >= rank {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        for (t, seg) in segs.iter().enumerate() {
+            let p = rows[seg.range()].partition_point(|&r| r <= lo);
+            cuts[s * ns + t] = seg.start + p as u32;
+        }
     }
 }
 
@@ -397,23 +504,25 @@ fn scan_pair(
 
 /// Histogram pass dispatch: monomorphize the common channel widths so the
 /// inner accumulation unrolls and vectorizes (k=1 scoring -> k1=2; k=5
-/// default -> k1=6; HessL2 k=5 -> k1=11). `rows`/`slot_base`/`chan_g` may
-/// be shard sub-slices; `slot_base` entries stay absolute offsets into
-/// `out`, which is always a full `[n_slots, m, bins, k1]` buffer.
-fn hist_dispatch(
+/// default -> k1=6; HessL2 k=5 -> k1=11). `rows`/`chan_g` are one
+/// segment (or a shard cut of one segment); `base` is the segment slot's
+/// absolute slice offset into `out` — constant across the whole pass,
+/// which is the payoff of range-based partitioning over the historical
+/// per-row `slot_base` lookup.
+pub(crate) fn hist_dispatch(
     binned: &BinnedDataset,
     rows: &[u32],
-    slot_base: &[usize],
     chan_g: &[f32],
     k1: usize,
+    base: usize,
     out: &mut [f32],
 ) {
     match k1 {
-        2 => hist_pass::<2>(binned, rows, slot_base, chan_g, out),
-        3 => hist_pass::<3>(binned, rows, slot_base, chan_g, out),
-        6 => hist_pass::<6>(binned, rows, slot_base, chan_g, out),
-        11 => hist_pass::<11>(binned, rows, slot_base, chan_g, out),
-        _ => hist_pass_dyn(binned, rows, slot_base, chan_g, k1, out),
+        2 => hist_pass::<2>(binned, rows, chan_g, base, out),
+        3 => hist_pass::<3>(binned, rows, chan_g, base, out),
+        6 => hist_pass::<6>(binned, rows, chan_g, base, out),
+        11 => hist_pass::<11>(binned, rows, chan_g, base, out),
+        _ => hist_pass_dyn(binned, rows, chan_g, k1, base, out),
     }
 }
 
@@ -421,18 +530,18 @@ fn hist_dispatch(
 fn hist_pass<const K1: usize>(
     binned: &BinnedDataset,
     rows: &[u32],
-    slot_base: &[usize],
     chan_g: &[f32],
+    base: usize,
     out: &mut [f32],
 ) {
     let m = binned.n_features;
     let bins = binned.max_bins;
     for f in 0..m {
         let col = binned.column(f);
-        let fbase = f * bins * K1;
+        let fbase = base + f * bins * K1;
         for (j, &r) in rows.iter().enumerate() {
             let b = unsafe { *col.get_unchecked(r as usize) } as usize;
-            let dst = slot_base[j] + fbase + b * K1;
+            let dst = fbase + b * K1;
             let src = &chan_g[j * K1..j * K1 + K1];
             let out_s = &mut out[dst..dst + K1];
             for c in 0..K1 {
@@ -449,19 +558,19 @@ fn hist_pass<const K1: usize>(
 fn hist_pass_dyn(
     binned: &BinnedDataset,
     rows: &[u32],
-    slot_base: &[usize],
     chan_g: &[f32],
     k1: usize,
+    base: usize,
     out: &mut [f32],
 ) {
     let m = binned.n_features;
     let bins = binned.max_bins;
     for f in 0..m {
         let col = binned.column(f);
-        let fbase = f * bins * k1;
+        let fbase = base + f * bins * k1;
         for (j, &r) in rows.iter().enumerate() {
             let b = col[r as usize] as usize;
-            let dst = slot_base[j] + fbase + b * k1;
+            let dst = fbase + b * k1;
             let src = &chan_g[j * k1..(j + 1) * k1];
             let out_s = &mut out[dst..dst + k1];
             for (o, &s) in out_s.iter_mut().zip(src.iter()) {
@@ -630,10 +739,10 @@ mod tests {
                 chan[i * k1 + k1 - 1] = 1.0;
             }
             let rows: Vec<u32> = (0..n as u32).filter(|&r| r % 3 != 2).collect();
+            let (prows, pchan, segs) =
+                crate::engine::reference::partition_inputs(&rows, &slot_of_row, &chan, k1, slots);
             let mut out = vec![0.0f32; slots * m * bins * k1];
-            NativeEngine::new().histograms(
-                &binned, &rows, &slot_of_row, &chan, k1, slots, &mut out,
-            );
+            NativeEngine::new().histograms(&binned, &prows, &pchan, k1, &segs, slots, &mut out);
             let mut want = vec![0.0f32; slots * m * bins * k1];
             for &r in &rows {
                 let r = r as usize;
@@ -654,18 +763,64 @@ mod tests {
     fn histogram_count_channel_totals_rows() {
         let n = 100;
         let binned = tiny_binned(n, 2, 8, 1);
-        let slot_of_row = vec![0u32; n];
         let k1 = 3;
         let mut chan = vec![0.5f32; n * k1];
         for i in 0..n {
             chan[i * k1 + 2] = 1.0;
         }
         let rows: Vec<u32> = (0..n as u32).collect();
+        let segs = [SlotRange::new(0, 0, n as u32)];
         let mut out = vec![0.0f32; 2 * 8 * k1];
-        NativeEngine::new().histograms(&binned, &rows, &slot_of_row, &chan, k1, 1, &mut out);
+        NativeEngine::new().histograms(&binned, &rows, &chan, k1, &segs, 1, &mut out);
         for f in 0..2 {
             let total: f32 = (0..8).map(|b| out[(f * 8 + b) * k1 + 2]).sum();
             assert!((total - n as f32).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn histogram_skips_slots_outside_segments() {
+        // sibling subtraction passes only the small children: untouched
+        // slots must stay exactly zero
+        let n = 60;
+        let binned = tiny_binned(n, 2, 8, 3);
+        let k1 = 2;
+        let chan = vec![1.0f32; n * k1];
+        let rows: Vec<u32> = (0..n as u32).collect();
+        // only slot 1 of 3 gets accumulated, from rows 10..40
+        let segs = [SlotRange::new(1, 10, 40)];
+        let slice = 2 * 8 * k1;
+        let mut out = vec![0.0f32; 3 * slice];
+        NativeEngine::new().histograms(&binned, &rows, &chan, k1, &segs, 3, &mut out);
+        assert!(out[..slice].iter().all(|&v| v == 0.0), "slot 0 untouched");
+        assert!(out[2 * slice..].iter().all(|&v| v == 0.0), "slot 2 untouched");
+        let total: f32 = (0..8).map(|b| out[slice + b * k1 + 1]).sum();
+        assert!((total - 30.0).abs() < 1e-4, "slot 1 holds its 30 rows");
+    }
+
+    #[test]
+    fn align_shard_cuts_partitions_by_merged_rank() {
+        // two ascending segments with interleaved row ids
+        let rows: Vec<u32> = vec![0, 2, 4, 6, 8, 10, 1, 3, 5, 7, 9, 11];
+        let segs = [SlotRange::new(0, 0, 6), SlotRange::new(1, 6, 12)];
+        let nr = 12;
+        let n_shards = 3;
+        let mut cuts = Vec::new();
+        align_shard_cuts(&rows, &segs, nr, n_shards, &mut cuts);
+        // shard boundaries at merged ranks 4 and 8 = row-id thresholds 4, 8
+        // segment 0 (evens): ids 0,2 < 4 -> cut at pos 2; 0,2,4,6 < 8 -> 4
+        // segment 1 (odds):  ids 1,3 < 4 -> cut at pos 8; 1,3,5,7 < 8 -> 10
+        assert_eq!(&cuts[0..2], &[0, 6]); // shard 0 starts
+        assert_eq!(&cuts[2..4], &[2, 8]); // shard 1 starts
+        assert_eq!(&cuts[4..6], &[4, 10]); // shard 2 starts
+        assert_eq!(&cuts[6..8], &[6, 12]); // ends
+        // every shard covers shard_bounds-many rows in total
+        for s in 0..n_shards {
+            let (a, b) = shard_bounds(nr, n_shards, s);
+            let covered: usize = (0..2)
+                .map(|t| (cuts[(s + 1) * 2 + t] - cuts[s * 2 + t]) as usize)
+                .sum();
+            assert_eq!(covered, b - a, "shard {s}");
         }
     }
 
@@ -688,8 +843,9 @@ mod tests {
                     }
                 }
             }
-            let gains = NativeEngine::new().split_gains(
-                &hist, slots, m, bins, k1, lam, ScoreMode::CountL2,
+            let mut gains = Vec::new();
+            NativeEngine::new().split_gains(
+                &hist, slots, m, bins, k1, lam, ScoreMode::CountL2, &mut gains,
             );
             // scalar reference
             for s in 0..slots {
@@ -742,7 +898,8 @@ mod tests {
             1.0, 2.0, 10.0, // bin 0: g=1 h=2 count=10
             3.0, 4.0, 10.0, // bin 1
         ];
-        let gains = NativeEngine::new().split_gains(&hist, 1, 1, 2, k1, 1.0, ScoreMode::HessL2);
+        let mut gains = Vec::new();
+        NativeEngine::new().split_gains(&hist, 1, 1, 2, k1, 1.0, ScoreMode::HessL2, &mut gains);
         // split at b=0: left g=1 h=2 -> 1/(2+1); right g=3 h=4 -> 9/(4+1)
         let want0 = 1.0 / 3.0 + 9.0 / 5.0;
         assert!((gains[0] - want0).abs() < 1e-5, "{} vs {want0}", gains[0]);
@@ -763,15 +920,17 @@ mod tests {
         }
         let rows: Vec<u32> = (0..n as u32).filter(|&r| r % 7 != 6).collect();
         assert!(hist_shards(rows.len(), slots * bins) >= 2, "test must exercise sharding");
+        let (prows, pchan, segs) =
+            crate::engine::reference::partition_inputs(&rows, &slot_of_row, &chan, k1, slots);
 
         let size = slots * m * bins * k1;
         let mut base = vec![0.0f32; size];
         NativeEngine::with_threads(1)
-            .histograms(&binned, &rows, &slot_of_row, &chan, k1, slots, &mut base);
+            .histograms(&binned, &prows, &pchan, k1, &segs, slots, &mut base);
         for t in [2usize, 4, 8] {
             let mut out = vec![0.0f32; size];
             NativeEngine::with_threads(t)
-                .histograms(&binned, &rows, &slot_of_row, &chan, k1, slots, &mut out);
+                .histograms(&binned, &prows, &pchan, k1, &segs, slots, &mut out);
             assert_eq!(out, base, "threads = {t}"); // bitwise, not approximate
         }
 
@@ -801,11 +960,13 @@ mod tests {
         for cell in 0..slots * m * bins {
             hist[cell * k1 + k1 - 1] = rng.next_below(30) as f32;
         }
-        let base = NativeEngine::with_threads(1)
-            .split_gains(&hist, slots, m, bins, k1, 1.0, ScoreMode::CountL2);
+        let mut base = Vec::new();
+        NativeEngine::with_threads(1)
+            .split_gains(&hist, slots, m, bins, k1, 1.0, ScoreMode::CountL2, &mut base);
         for t in [2usize, 4] {
-            let got = NativeEngine::with_threads(t)
-                .split_gains(&hist, slots, m, bins, k1, 1.0, ScoreMode::CountL2);
+            let mut got = Vec::new();
+            NativeEngine::with_threads(t)
+                .split_gains(&hist, slots, m, bins, k1, 1.0, ScoreMode::CountL2, &mut got);
             assert_eq!(got, base, "threads = {t}");
         }
     }
@@ -827,7 +988,8 @@ mod tests {
         let leaf_of_row = vec![1u32, 0, 1, 0];
         let g = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]; // d=2
         let h = vec![0.1f32; 8];
-        let s = NativeEngine::new().leaf_sums(&rows, &leaf_of_row, &g, &h, 2, 2);
+        let mut s = LeafSums::new();
+        NativeEngine::new().leaf_sums(&rows, &leaf_of_row, &g, &h, 2, 2, &mut s);
         assert_close(&s.gsum, &[3.0 + 7.0, 4.0 + 8.0, 1.0 + 5.0, 2.0 + 6.0], 1e-6, 1e-6);
         assert_close(&s.count, &[2.0, 2.0], 1e-6, 1e-6);
         assert!((s.hsum[0] - 0.2).abs() < 1e-6);

@@ -1,0 +1,381 @@
+//! Pre-partitioning reference engine — the historical numerics, pinned.
+//!
+//! The range-based [`NativeEngine`](super::NativeEngine) (see
+//! `engine/native.rs` "Range-based accumulation and shard alignment")
+//! claims bit-identity with the engine that preceded it, which took an
+//! *interleaved, globally ascending* row list plus a per-row
+//! `slot_of_row` map, gathered channel rows into a scratch buffer every
+//! level, and sharded the interleaved list directly. This module keeps
+//! that implementation — verbatim, including its thread-sharded
+//! accumulation and deterministic reduction — so the claim stays
+//! mechanically checkable:
+//!
+//! * [`histograms_flagged`] is the old accumulation path, byte for byte,
+//!   callable with old-style inputs (used by `benches/hot_paths.rs` for
+//!   the before/after measurement);
+//! * [`ReferenceEngine`] adapts the old path to the new range-based
+//!   [`ComputeEngine`] contract by merging the segments back into the
+//!   historical ascending order, so full training runs can be compared
+//!   bit-for-bit (`rust/tests/partition_equivalence.rs`);
+//! * [`partition_inputs`] converts old-style `(rows, slot_of_row)`
+//!   fixtures into partition order for tests and benches.
+//!
+//! This module is test/bench support, not a training backend — hence
+//! `#[doc(hidden)]` on the module. It allocates per call and should
+//! never sit on a hot path.
+
+use crate::boosting::losses::LossKind;
+use crate::data::binning::BinnedDataset;
+use crate::data::dataset::Targets;
+use crate::util::threading::{reduce_shards, shard_bounds, DisjointSlice, ThreadPool};
+
+use super::native::hist_shards;
+use super::{ComputeEngine, EngineOpts, LeafSums, NativeEngine, ScoreMode, SlotRange};
+
+/// The historical histogram path: gather channel rows and per-row slice
+/// bases into compact buffers, shard the (interleaved) row list with
+/// [`hist_shards`]/[`shard_bounds`], accumulate thread-locally, and
+/// reduce in ascending shard order. `slot_of_row` maps *global* row
+/// index -> frontier slot and `chan` is the row-major `[n, k1]` channel
+/// matrix — exactly the pre-refactor `ComputeEngine::histograms`
+/// contract.
+#[allow(clippy::too_many_arguments)]
+pub fn histograms_flagged(
+    pool: &ThreadPool,
+    binned: &BinnedDataset,
+    rows: &[u32],
+    slot_of_row: &[u32],
+    chan: &[f32],
+    k1: usize,
+    n_slots: usize,
+    out: &mut [f32],
+) {
+    let n = binned.n_rows;
+    let m = binned.n_features;
+    let bins = binned.max_bins;
+    debug_assert_eq!(out.len(), n_slots * m * bins * k1);
+    debug_assert_eq!(chan.len(), n * k1);
+
+    let nr = rows.len();
+    let mut scratch_chan = vec![0.0f32; nr * k1];
+    let mut slot_base = Vec::with_capacity(nr);
+    let slice = m * bins * k1;
+    for (j, &r) in rows.iter().enumerate() {
+        let r = r as usize;
+        scratch_chan[j * k1..(j + 1) * k1].copy_from_slice(&chan[r * k1..(r + 1) * k1]);
+        slot_base.push(slot_of_row[r] as usize * slice);
+    }
+    let n_shards = hist_shards(nr, n_slots * bins);
+    if n_shards == 1 {
+        hist_dispatch_flagged(binned, rows, &slot_base, &scratch_chan, k1, out);
+        return;
+    }
+
+    let total = out.len();
+    let mut scratch_shards = vec![0.0f32; n_shards * total];
+    let chan_g = &scratch_chan;
+    let shard_bufs = DisjointSlice::new(&mut scratch_shards);
+    pool.for_each_chunk(n_shards, 1, |shard_range| {
+        for s in shard_range {
+            // Safety: shard `s`'s buffer is written by exactly one
+            // worker (the queue hands out each shard index once).
+            let buf = unsafe { shard_bufs.range_mut(s * total..(s + 1) * total) };
+            buf.fill(0.0);
+            let (j0, j1) = shard_bounds(nr, n_shards, s);
+            hist_dispatch_flagged(
+                binned,
+                &rows[j0..j1],
+                &slot_base[j0..j1],
+                &chan_g[j0 * k1..j1 * k1],
+                k1,
+                buf,
+            );
+        }
+    });
+    reduce_shards(pool, &scratch_shards, n_shards, out);
+}
+
+/// The historical per-row-slot-base pass dispatch (pre-refactor
+/// `hist_dispatch`).
+fn hist_dispatch_flagged(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    slot_base: &[usize],
+    chan_g: &[f32],
+    k1: usize,
+    out: &mut [f32],
+) {
+    match k1 {
+        2 => hist_pass_flagged::<2>(binned, rows, slot_base, chan_g, out),
+        3 => hist_pass_flagged::<3>(binned, rows, slot_base, chan_g, out),
+        6 => hist_pass_flagged::<6>(binned, rows, slot_base, chan_g, out),
+        11 => hist_pass_flagged::<11>(binned, rows, slot_base, chan_g, out),
+        _ => hist_pass_flagged_dyn(binned, rows, slot_base, chan_g, k1, out),
+    }
+}
+
+fn hist_pass_flagged<const K1: usize>(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    slot_base: &[usize],
+    chan_g: &[f32],
+    out: &mut [f32],
+) {
+    let m = binned.n_features;
+    let bins = binned.max_bins;
+    for f in 0..m {
+        let col = binned.column(f);
+        let fbase = f * bins * K1;
+        for (j, &r) in rows.iter().enumerate() {
+            let b = col[r as usize] as usize;
+            let dst = slot_base[j] + fbase + b * K1;
+            let src = &chan_g[j * K1..j * K1 + K1];
+            let out_s = &mut out[dst..dst + K1];
+            for c in 0..K1 {
+                out_s[c] += src[c];
+            }
+        }
+    }
+}
+
+fn hist_pass_flagged_dyn(
+    binned: &BinnedDataset,
+    rows: &[u32],
+    slot_base: &[usize],
+    chan_g: &[f32],
+    k1: usize,
+    out: &mut [f32],
+) {
+    let m = binned.n_features;
+    let bins = binned.max_bins;
+    for f in 0..m {
+        let col = binned.column(f);
+        let fbase = f * bins * k1;
+        for (j, &r) in rows.iter().enumerate() {
+            let b = col[r as usize] as usize;
+            let dst = slot_base[j] + fbase + b * k1;
+            let src = &chan_g[j * k1..(j + 1) * k1];
+            let out_s = &mut out[dst..dst + k1];
+            for (o, &s) in out_s.iter_mut().zip(src.iter()) {
+                *o += s;
+            }
+        }
+    }
+}
+
+/// Convert old-style `(rows, slot_of_row, chan_by_global_row)` fixtures
+/// into the partition-ordered `(rows, chan_by_position, segs)` inputs of
+/// the range-based contract. Rows are grouped by slot in ascending slot
+/// order, preserving their relative order within each slot (exactly what
+/// the builder's stable partition produces from an ascending row list).
+pub fn partition_inputs(
+    rows: &[u32],
+    slot_of_row: &[u32],
+    chan: &[f32],
+    k1: usize,
+    n_slots: usize,
+) -> (Vec<u32>, Vec<f32>, Vec<SlotRange>) {
+    let mut prows = Vec::with_capacity(rows.len());
+    let mut pchan = Vec::with_capacity(rows.len() * k1);
+    let mut segs = Vec::with_capacity(n_slots);
+    for slot in 0..n_slots as u32 {
+        let start = prows.len() as u32;
+        for &r in rows {
+            if slot_of_row[r as usize] == slot {
+                prows.push(r);
+                let r = r as usize;
+                pchan.extend_from_slice(&chan[r * k1..(r + 1) * k1]);
+            }
+        }
+        segs.push(SlotRange::new(slot, start, prows.len() as u32));
+    }
+    (prows, pchan, segs)
+}
+
+/// A [`ComputeEngine`] whose `histograms` reproduces the pre-refactor
+/// bits by merging the range-based inputs back into the historical
+/// globally ascending interleaved order and running
+/// [`histograms_flagged`]. Every other op delegates to a normal
+/// [`NativeEngine`] (those ops did not change in the refactor).
+pub struct ReferenceEngine {
+    pool: ThreadPool,
+    inner: NativeEngine,
+}
+
+impl ReferenceEngine {
+    pub fn new() -> ReferenceEngine {
+        ReferenceEngine::with_threads(1)
+    }
+
+    pub fn with_threads(n_threads: usize) -> ReferenceEngine {
+        ReferenceEngine {
+            pool: ThreadPool::new(n_threads),
+            inner: NativeEngine::with_opts(EngineOpts::threads(n_threads)),
+        }
+    }
+}
+
+impl Default for ReferenceEngine {
+    fn default() -> Self {
+        ReferenceEngine::new()
+    }
+}
+
+impl ComputeEngine for ReferenceEngine {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn grad_hess(
+        &mut self,
+        loss: LossKind,
+        preds: &[f32],
+        targets: &Targets,
+        g: &mut [f32],
+        h: &mut [f32],
+    ) {
+        self.inner.grad_hess(loss, preds, targets, g, h);
+    }
+
+    fn sketch_project(
+        &mut self,
+        g_mat: &[f32],
+        n: usize,
+        d: usize,
+        proj: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        self.inner.sketch_project(g_mat, n, d, proj, k, out);
+    }
+
+    fn histograms(
+        &mut self,
+        binned: &BinnedDataset,
+        rows: &[u32],
+        chan: &[f32],
+        k1: usize,
+        segs: &[SlotRange],
+        n_slots: usize,
+        out: &mut [f32],
+    ) {
+        // Reconstruct the historical inputs: the globally ascending
+        // interleaved row list, the per-global-row slot map, and the
+        // [n, k1] channel matrix indexed by global row.
+        let n = binned.n_rows;
+        let mut triples: Vec<(u32, u32, u32)> = Vec::new(); // (row, slot, pos)
+        for seg in segs {
+            for pos in seg.range() {
+                triples.push((rows[pos], seg.slot, pos as u32));
+            }
+        }
+        triples.sort_unstable_by_key(|t| t.0);
+        let mut merged_rows = Vec::with_capacity(triples.len());
+        let mut slot_of_row = vec![0u32; n];
+        let mut chan_by_row = vec![0.0f32; n * k1];
+        for &(r, slot, pos) in &triples {
+            merged_rows.push(r);
+            slot_of_row[r as usize] = slot;
+            let (r, pos) = (r as usize, pos as usize);
+            chan_by_row[r * k1..(r + 1) * k1]
+                .copy_from_slice(&chan[pos * k1..(pos + 1) * k1]);
+        }
+        histograms_flagged(
+            &self.pool,
+            binned,
+            &merged_rows,
+            &slot_of_row,
+            &chan_by_row,
+            k1,
+            n_slots,
+            out,
+        );
+    }
+
+    fn split_gains(
+        &mut self,
+        hist: &[f32],
+        n_slots: usize,
+        m: usize,
+        bins: usize,
+        k1: usize,
+        lam: f32,
+        mode: ScoreMode,
+        out: &mut Vec<f32>,
+    ) {
+        self.inner.split_gains(hist, n_slots, m, bins, k1, lam, mode, out);
+    }
+
+    fn leaf_sums(
+        &mut self,
+        rows: &[u32],
+        leaf_of_row: &[u32],
+        g: &[f32],
+        h: &[f32],
+        d: usize,
+        n_leaves: usize,
+        out: &mut LeafSums,
+    ) {
+        self.inner.leaf_sums(rows, leaf_of_row, g, h, d, n_leaves, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::util::rng::Rng;
+
+    fn tiny_binned(n: usize, m: usize, bins: usize, seed: u64) -> BinnedDataset {
+        let mut rng = Rng::new(seed);
+        let mut feats = vec![0.0f32; n * m];
+        rng.fill_gaussian(&mut feats, 1.0);
+        let ds = Dataset::new(
+            n,
+            m,
+            feats,
+            Targets::Regression { values: vec![0.0; n], n_targets: 1 },
+        );
+        BinnedDataset::from_dataset(&ds, bins)
+    }
+
+    #[test]
+    fn partition_inputs_groups_by_slot_stably() {
+        let rows = vec![0u32, 1, 2, 3, 4];
+        let slot_of_row = vec![1u32, 0, 1, 0, 0];
+        let k1 = 2;
+        let chan: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let (pr, pc, segs) = partition_inputs(&rows, &slot_of_row, &chan, k1, 2);
+        assert_eq!(pr, vec![1, 3, 4, 0, 2]);
+        assert_eq!(segs, vec![SlotRange::new(0, 0, 3), SlotRange::new(1, 3, 5)]);
+        // channel rows follow their rows
+        assert_eq!(&pc[0..2], &chan[2..4]); // row 1
+        assert_eq!(&pc[6..8], &chan[0..2]); // row 0
+    }
+
+    /// The range-based NativeEngine must agree with the pinned historical
+    /// path bit-for-bit — including on shapes large enough to shard.
+    #[test]
+    fn native_matches_reference_bitwise() {
+        let n = 3 * crate::engine::native::SHARD_TARGET_ROWS;
+        let (m, bins, n_slots, k1) = (3usize, 16usize, 4usize, 3usize);
+        let binned = tiny_binned(n, m, bins, 21);
+        let mut rng = Rng::new(22);
+        let slot_of_row: Vec<u32> = (0..n).map(|_| rng.next_below(n_slots) as u32).collect();
+        let mut chan = vec![0.0f32; n * k1];
+        rng.fill_gaussian(&mut chan, 1.0);
+        let rows: Vec<u32> = (0..n as u32).filter(|&r| r % 5 != 3).collect();
+        let (prows, pchan, segs) = partition_inputs(&rows, &slot_of_row, &chan, k1, n_slots);
+
+        let size = n_slots * m * bins * k1;
+        for threads in [1usize, 2, 4] {
+            let mut want = vec![0.0f32; size];
+            ReferenceEngine::with_threads(threads)
+                .histograms(&binned, &prows, &pchan, k1, &segs, n_slots, &mut want);
+            let mut got = vec![0.0f32; size];
+            NativeEngine::with_threads(threads)
+                .histograms(&binned, &prows, &pchan, k1, &segs, n_slots, &mut got);
+            assert_eq!(got, want, "threads = {threads}"); // bitwise
+        }
+    }
+}

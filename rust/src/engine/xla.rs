@@ -25,7 +25,7 @@ use crate::runtime::registry::{ArtifactRegistry, Signature};
 use crate::runtime::{literal_f32, literal_i32};
 use crate::util::error::Result;
 
-use super::{ComputeEngine, EngineOpts, LeafSums, NativeEngine, ScoreMode};
+use super::{ComputeEngine, EngineOpts, LeafSums, NativeEngine, ScoreMode, SlotRange};
 
 /// Engine executing PJRT artifacts; see module docs.
 pub struct XlaEngine {
@@ -187,9 +187,9 @@ impl ComputeEngine for XlaEngine {
         &mut self,
         binned: &BinnedDataset,
         rows: &[u32],
-        slot_of_row: &[u32],
         chan: &[f32],
         k1: usize,
+        segs: &[SlotRange],
         n_slots: usize,
         out: &mut [f32],
     ) {
@@ -208,31 +208,36 @@ impl ComputeEngine for XlaEngine {
         let nodes = sig.nodes;
         let name = self.name_of("hist");
 
+        // Pack fixed-size chunks from the virtual concatenation of the
+        // requested segments. Each row's slot comes from its segment —
+        // the partition-ordered contract removes the per-row map lookup
+        // here too (the channel rows are parallel to `rows` by position).
         let mut bin_buf = vec![0i32; chunk * m];
         let mut node_buf = vec![0i32; chunk];
         let mut chan_buf = vec![0.0f32; chunk * k1];
-        for start in (0..rows.len()).step_by(chunk) {
-            let len = chunk.min(rows.len() - start);
-            bin_buf.fill(0);
-            node_buf.fill(0);
-            chan_buf.fill(0.0); // padding rows: zero channels => no-ops
-            for i in 0..len {
-                let r = rows[start + i] as usize;
-                for f in 0..m {
-                    bin_buf[i * m + f] = binned.codes[f * binned.n_rows + r] as i32;
-                }
-                node_buf[i] = slot_of_row[r] as i32;
-                chan_buf[i * k1..(i + 1) * k1].copy_from_slice(&chan[r * k1..(r + 1) * k1]);
+        let mut fill = 0usize;
+        let mut flush = |fill: usize,
+                         bin_buf: &mut [i32],
+                         node_buf: &mut [i32],
+                         chan_buf: &mut [f32],
+                         n_exec: &mut usize,
+                         out: &mut [f32]| {
+            if fill == 0 {
+                return;
             }
+            // padding rows: zero channels => no-ops
+            bin_buf[fill * m..].fill(0);
+            node_buf[fill..].fill(0);
+            chan_buf[fill * k1..].fill(0.0);
             let exe = self.reg.get(&name).expect("compile hist");
             let hist = exe
                 .run_f32(&[
-                    literal_i32(&bin_buf, &[chunk as i64, m as i64]).unwrap(),
-                    literal_i32(&node_buf, &[chunk as i64]).unwrap(),
-                    literal_f32(&chan_buf, &[chunk as i64, k1 as i64]).unwrap(),
+                    literal_i32(bin_buf, &[chunk as i64, m as i64]).unwrap(),
+                    literal_i32(node_buf, &[chunk as i64]).unwrap(),
+                    literal_f32(chan_buf, &[chunk as i64, k1 as i64]).unwrap(),
                 ])
                 .expect("execute hist");
-            self.n_executions += 1;
+            *n_exec += 1;
             // artifact layout: [m, nodes * bins, k1] -> ours: [slot, f, bin, k1]
             for f in 0..m {
                 for slot in 0..n_slots {
@@ -243,7 +248,26 @@ impl ComputeEngine for XlaEngine {
                     }
                 }
             }
+        };
+        let mut n_exec = 0usize;
+        for seg in segs {
+            for pos in seg.range() {
+                let r = rows[pos] as usize;
+                for f in 0..m {
+                    bin_buf[fill * m + f] = binned.codes[f * binned.n_rows + r] as i32;
+                }
+                node_buf[fill] = seg.slot as i32;
+                chan_buf[fill * k1..(fill + 1) * k1]
+                    .copy_from_slice(&chan[pos * k1..(pos + 1) * k1]);
+                fill += 1;
+                if fill == chunk {
+                    flush(fill, &mut bin_buf, &mut node_buf, &mut chan_buf, &mut n_exec, out);
+                    fill = 0;
+                }
+            }
         }
+        flush(fill, &mut bin_buf, &mut node_buf, &mut chan_buf, &mut n_exec, out);
+        self.n_executions += n_exec;
     }
 
     fn split_gains(
@@ -255,12 +279,13 @@ impl ComputeEngine for XlaEngine {
         k1: usize,
         lam: f32,
         mode: ScoreMode,
-    ) -> Vec<f32> {
+        out: &mut Vec<f32>,
+    ) {
         if mode == ScoreMode::HessL2 {
             // documented fallback: no HessL2 gain artifact
-            return self
-                .native_fallback
-                .split_gains(hist, n_slots, m, bins, k1, lam, mode);
+            self.native_fallback
+                .split_gains(hist, n_slots, m, bins, k1, lam, mode, out);
+            return;
         }
         let sig = self.sig("gain");
         assert_eq!(m, sig.m, "gain artifact m={} vs {}", sig.m, m);
@@ -294,15 +319,15 @@ impl ComputeEngine for XlaEngine {
             .expect("execute gain");
         self.n_executions += 1;
         // artifact [m, nodes, bins] -> ours [slot, f, bin]
-        let mut gains = vec![0.0f32; n_slots * m * bins];
+        out.clear();
+        out.resize(n_slots * m * bins, 0.0);
         for slot in 0..n_slots {
             for f in 0..m {
                 let src = (f * nodes + slot) * bins;
                 let dst = (slot * m + f) * bins;
-                gains[dst..dst + bins].copy_from_slice(&gains_art[src..src + bins]);
+                out[dst..dst + bins].copy_from_slice(&gains_art[src..src + bins]);
             }
         }
-        gains
     }
 
     fn leaf_sums(
@@ -313,7 +338,8 @@ impl ComputeEngine for XlaEngine {
         h: &[f32],
         d: usize,
         n_leaves: usize,
-    ) -> LeafSums {
+        out: &mut LeafSums,
+    ) {
         let sig = self.sig("leaf_sums");
         assert_eq!(d, sig.d, "leaf_sums artifact d={} vs {}", sig.d, d);
         assert!(n_leaves <= sig.nodes, "leaf_sums artifact nodes={}", sig.nodes);
@@ -349,16 +375,11 @@ impl ComputeEngine for XlaEngine {
                 acc[i] += sums[i];
             }
         }
-        let mut out = LeafSums {
-            gsum: vec![0.0f32; n_leaves * d],
-            hsum: vec![0.0f32; n_leaves * d],
-            count: vec![0.0f32; n_leaves],
-        };
+        out.reset(n_leaves, d);
         for l in 0..n_leaves {
             out.gsum[l * d..(l + 1) * d].copy_from_slice(&acc[l * c..l * c + d]);
             out.hsum[l * d..(l + 1) * d].copy_from_slice(&acc[l * c + d..l * c + 2 * d]);
             out.count[l] = acc[l * c + c - 1];
         }
-        out
     }
 }

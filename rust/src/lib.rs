@@ -24,7 +24,10 @@
 //! [`engine::NativeEngine`] is the numerically identical fast path, and
 //! runs the histogram build + split scan on a thread pool
 //! ([`util::threading`]) with bit-deterministic results for any
-//! `n_threads`.
+//! `n_threads`. The training core keeps rows stably partitioned into
+//! contiguous per-node ranges and pools all per-level buffers in a
+//! reusable [`tree::TreeWorkspace`], so steady-state tree building is
+//! allocation-free (DESIGN.md "Memory model & row partitioning").
 //!
 //! ```no_run
 //! use sketchboost::prelude::*;

@@ -3,23 +3,35 @@
 //!
 //! Per level: engine accumulates histograms over the *sketched* scoring
 //! channels, the splitter picks the best (feature, bin) per frontier
-//! node, rows are routed to children, and the next level's histograms use
-//! the sibling-subtraction trick (only the smaller child is accumulated;
-//! the larger one is parent − sibling). Leaf values are computed exactly
-//! from the full gradient/hessian matrices (paper: the sketch is used
-//! "only in building histograms and finding the tree structure").
+//! node, rows are routed to children by a **stable in-place partition**
+//! of one shared row buffer (every frontier node owns a contiguous
+//! `[start, end)` range — see `tree/workspace.rs`), and the next level's
+//! histograms use the sibling-subtraction trick (only the smaller child
+//! is accumulated; the larger one is parent − sibling, both plain
+//! ranges). Leaf values are computed exactly from the full
+//! gradient/hessian matrices (paper: the sketch is used "only in
+//! building histograms and finding the tree structure").
+//!
+//! All per-level state lives in a caller-owned [`TreeWorkspace`] so
+//! steady-state training reuses every buffer across levels and trees;
+//! [`build_tree_in`] is the pooled entry point and [`build_tree`] a
+//! convenience wrapper that allocates a fresh workspace.
 //!
 //! The builder itself is single-threaded and engine-agnostic: data
 //! parallelism lives inside the [`ComputeEngine`] ops, whose contract
 //! (see `engine/`) guarantees bit-identical results for every thread
 //! count. That is what lets the sibling subtraction below — an exact
 //! f32 cancellation against the parent histogram — stay valid when the
-//! engine builds histograms on multiple threads.
+//! engine builds histograms on multiple threads. The stable partition
+//! preserves the ascending row order inside every node, so per-cell
+//! accumulation order (and therefore every result bit) matches the
+//! historical flag-routed builder (`rust/tests/partition_equivalence.rs`).
 
 use crate::data::binning::BinnedDataset;
-use crate::engine::{ComputeEngine, ScoreMode};
+use crate::engine::{ComputeEngine, ScoreMode, SlotRange};
 use crate::tree::splitter::{best_split, node_score, SplitDecision};
 use crate::tree::tree::{encode_leaf, Tree, TreeNode};
+use crate::tree::workspace::{Outcome, Parent, SplitInfo, TreeWorkspace};
 
 pub const SENTINEL: u32 = u32::MAX;
 
@@ -53,22 +65,27 @@ pub struct BuildParams<'a> {
     pub row_weights: Option<&'a [f32]>,
 }
 
-/// Where a frontier slot hangs in the partially-built tree.
-#[derive(Clone, Copy)]
-enum Parent {
-    Root,
-    Child { node: usize, is_left: bool },
-}
-
-enum Outcome {
-    Leaf(usize),
-    Split { feature: usize, bin: u8, left_slot: u32, right_slot: u32 },
-}
-
-/// Build one tree. Also returns `leaf_of_row` (global row -> leaf id,
-/// SENTINEL for rows outside `rows`) so the trainer can update
-/// predictions without re-routing.
+/// Build one tree with a freshly allocated [`TreeWorkspace`]. Also
+/// returns `leaf_of_row` (global row -> leaf id, SENTINEL for rows
+/// outside `rows`) so the caller can update predictions without
+/// re-routing. Training loops should prefer [`build_tree_in`] with a
+/// pooled workspace.
 pub fn build_tree(p: &BuildParams, engine: &mut dyn ComputeEngine) -> (Tree, Vec<u32>) {
+    let mut ws = TreeWorkspace::new();
+    let tree = build_tree_in(p, engine, &mut ws);
+    let leaf_of_row = ws.take_leaf_of_row();
+    (tree, leaf_of_row)
+}
+
+/// Build one tree reusing the caller's [`TreeWorkspace`]; the leaf map
+/// of this build stays readable via [`TreeWorkspace::leaf_of_row`].
+/// After the workspace buffers have grown to their high-water mark, the
+/// per-level loop performs no heap allocation (see `tree/workspace.rs`).
+pub fn build_tree_in(
+    p: &BuildParams,
+    engine: &mut dyn ComputeEngine,
+    ws: &mut TreeWorkspace,
+) -> Tree {
     let n = p.binned.n_rows;
     let m = p.binned.n_features;
     let bins = p.binned.max_bins;
@@ -78,16 +95,30 @@ pub fn build_tree(p: &BuildParams, engine: &mut dyn ComputeEngine) -> (Tree, Vec
     if p.mode == ScoreMode::HessL2 {
         assert!(p.score_h.is_some(), "HessL2 scoring needs hessian channels");
     }
-
-    // Per-row channel matrix [n, k1]: scoring grads (+ hessians) + valid.
+    // the stable partition keeps each node's rows in the input order;
+    // ascending input keeps the merged-rank shard alignment exact
+    // (engine/native.rs) — every sampler in boosting/sampling.rs sorts
+    debug_assert!(
+        p.rows.windows(2).all(|w| w[0] < w[1]),
+        "rows must be strictly ascending"
+    );
     if let Some(w) = p.row_weights {
         assert_eq!(w.len(), p.rows.len(), "row_weights parallel to rows");
     }
-    let mut chan = vec![0.0f32; n * k1];
+
+    // Gather rows and the compact [nr, k1] channel matrix in partition
+    // order: scoring grads (+ hessians) + valid/count channel. From here
+    // on, channel rows travel with their row ids through every split —
+    // the engine never re-gathers them.
+    let nr = p.rows.len();
+    ws.rows.clear();
+    ws.rows.extend_from_slice(p.rows);
+    ws.chan.clear();
+    ws.chan.resize(nr * k1, 0.0);
     for (j, &r) in p.rows.iter().enumerate() {
         let r = r as usize;
         let w = p.row_weights.map(|w| w[j]).unwrap_or(1.0);
-        let dst = &mut chan[r * k1..(r + 1) * k1];
+        let dst = &mut ws.chan[j * k1..(j + 1) * k1];
         dst[..p.kc].copy_from_slice(&p.score_g[r * p.kc..(r + 1) * p.kc]);
         if let (ScoreMode::HessL2, Some(sh)) = (p.mode, p.score_h) {
             dst[p.kc..2 * p.kc].copy_from_slice(&sh[r * p.kc..(r + 1) * p.kc]);
@@ -99,22 +130,27 @@ pub fn build_tree(p: &BuildParams, engine: &mut dyn ComputeEngine) -> (Tree, Vec
             }
         }
     }
+    ws.rows_next.clear();
+    ws.rows_next.resize(nr, 0);
+    ws.chan_next.clear();
+    ws.chan_next.resize(nr * k1, 0.0);
+    ws.leaf_of_row.clear();
+    ws.leaf_of_row.resize(n, SENTINEL);
 
-    let mut node_of_row = vec![SENTINEL; n];
-    for &r in p.rows {
-        node_of_row[r as usize] = 0;
-    }
-    let mut leaf_of_row = vec![SENTINEL; n];
+    // root: one segment covering every sampled row
+    ws.segs.clear();
+    ws.segs.push(SlotRange::new(0, 0, nr as u32));
+    ws.frontier.clear();
+    ws.frontier.push(Parent::Root);
+
+    let slice_sz = m * bins * k1;
+    ws.hist.clear();
+    ws.hist.resize(slice_sz, 0.0);
+    engine.histograms(p.binned, &ws.rows, &ws.chan, k1, &ws.segs, 1, &mut ws.hist);
 
     let mut nodes: Vec<TreeNode> = Vec::new();
     let mut n_leaves = 0usize;
-    let mut frontier: Vec<Parent> = vec![Parent::Root];
-    let mut rows_cur: Vec<u32> = p.rows.to_vec();
     let mut is_root_leaf = false;
-
-    let slice_sz = m * bins * k1;
-    let mut hist = vec![0.0f32; slice_sz];
-    engine.histograms(p.binned, &rows_cur, &node_of_row, &chan, k1, 1, &mut hist);
 
     let settle_leaf =
         |parent: Parent,
@@ -139,21 +175,30 @@ pub fn build_tree(p: &BuildParams, engine: &mut dyn ComputeEngine) -> (Tree, Vec
         };
 
     for depth in 0..p.max_depth {
-        let n_slots = frontier.len();
-        let gains = engine.split_gains(&hist, n_slots, m, bins, k1, p.lambda, p.mode);
+        let n_slots = ws.frontier.len();
+        engine.split_gains(&ws.hist, n_slots, m, bins, k1, p.lambda, p.mode, &mut ws.gains);
 
         // decide each slot
-        let mut outcomes: Vec<Outcome> = Vec::with_capacity(n_slots);
-        let mut new_frontier: Vec<Parent> = Vec::new();
-        let mut split_info: Vec<(usize, u32, u32, usize, usize)> = Vec::new(); // (parent_slot, l, r, cl, cr)
-        for (slot, &parent) in frontier.iter().enumerate() {
-            let (pscore, pcount) = node_score(&hist, slot, m, bins, k1, p.lambda, p.mode);
+        ws.outcomes.clear();
+        ws.new_frontier.clear();
+        ws.split_info.clear();
+        for (slot, &parent) in ws.frontier.iter().enumerate() {
+            let (pscore, pcount) = node_score(
+                &ws.hist,
+                slot,
+                m,
+                bins,
+                k1,
+                p.lambda,
+                p.mode,
+                &mut ws.score_scratch,
+            );
             let dec: Option<SplitDecision> = if pcount < (2 * p.min_data_in_leaf) as f64 {
                 None
             } else {
                 best_split(
-                    &gains,
-                    &hist,
+                    &ws.gains,
+                    &ws.hist,
                     slot,
                     m,
                     bins,
@@ -168,7 +213,7 @@ pub fn build_tree(p: &BuildParams, engine: &mut dyn ComputeEngine) -> (Tree, Vec
             match dec {
                 None => {
                     let id = settle_leaf(parent, &mut nodes, &mut n_leaves, &mut is_root_leaf);
-                    outcomes.push(Outcome::Leaf(id));
+                    ws.outcomes.push(Outcome::Leaf(id as u32));
                 }
                 Some(d) => {
                     let node_idx = nodes.len();
@@ -190,13 +235,19 @@ pub fn build_tree(p: &BuildParams, engine: &mut dyn ComputeEngine) -> (Tree, Vec
                             }
                         }
                     }
-                    let left_slot = new_frontier.len() as u32;
-                    new_frontier.push(Parent::Child { node: node_idx, is_left: true });
-                    let right_slot = new_frontier.len() as u32;
-                    new_frontier.push(Parent::Child { node: node_idx, is_left: false });
-                    split_info.push((slot, left_slot, right_slot, d.count_left, d.count_right));
-                    outcomes.push(Outcome::Split {
-                        feature: d.feature,
+                    let left_slot = ws.new_frontier.len() as u32;
+                    ws.new_frontier.push(Parent::Child { node: node_idx, is_left: true });
+                    let right_slot = ws.new_frontier.len() as u32;
+                    ws.new_frontier.push(Parent::Child { node: node_idx, is_left: false });
+                    ws.split_info.push(SplitInfo {
+                        parent_slot: slot as u32,
+                        left: left_slot,
+                        right: right_slot,
+                        count_left: d.count_left,
+                        count_right: d.count_right,
+                    });
+                    ws.outcomes.push(Outcome::Split {
+                        feature: d.feature as u32,
                         bin: d.bin,
                         left_slot,
                         right_slot,
@@ -205,88 +256,118 @@ pub fn build_tree(p: &BuildParams, engine: &mut dyn ComputeEngine) -> (Tree, Vec
             }
         }
 
-        // route rows to children / settle leaves
-        let mut next_rows: Vec<u32> = Vec::with_capacity(rows_cur.len());
-        for &r in &rows_cur {
-            let slot = node_of_row[r as usize] as usize;
-            match &outcomes[slot] {
+        // route: stable in-place partition of every split slot's range
+        // (lefts stream to the ping-pong buffer, rights stage in a
+        // scratch run appended after — both children keep ascending
+        // order); leaf slots settle their rows and drop out
+        let mut write = 0usize;
+        ws.segs_next.clear();
+        for (slot, outcome) in ws.outcomes.iter().enumerate() {
+            let seg = ws.segs[slot];
+            match outcome {
                 Outcome::Leaf(id) => {
-                    leaf_of_row[r as usize] = *id as u32;
-                    node_of_row[r as usize] = SENTINEL;
+                    for pos in seg.range() {
+                        ws.leaf_of_row[ws.rows[pos] as usize] = *id;
+                    }
                 }
                 Outcome::Split { feature, bin, left_slot, right_slot } => {
-                    let code = p.binned.codes[feature * n + r as usize];
-                    let ns = if code <= *bin { *left_slot } else { *right_slot };
-                    node_of_row[r as usize] = ns;
-                    next_rows.push(r);
+                    let col = p.binned.column(*feature as usize);
+                    ws.right_rows.clear();
+                    ws.right_chan.clear();
+                    let start = write;
+                    for pos in seg.range() {
+                        let r = ws.rows[pos];
+                        let crow = &ws.chan[pos * k1..(pos + 1) * k1];
+                        if col[r as usize] <= *bin {
+                            ws.rows_next[write] = r;
+                            ws.chan_next[write * k1..(write + 1) * k1].copy_from_slice(crow);
+                            write += 1;
+                        } else {
+                            ws.right_rows.push(r);
+                            ws.right_chan.extend_from_slice(crow);
+                        }
+                    }
+                    let mid = write;
+                    let nright = ws.right_rows.len();
+                    ws.rows_next[write..write + nright].copy_from_slice(&ws.right_rows);
+                    ws.chan_next[write * k1..(write + nright) * k1]
+                        .copy_from_slice(&ws.right_chan);
+                    write += nright;
+                    ws.segs_next.push(SlotRange::new(*left_slot, start as u32, mid as u32));
+                    ws.segs_next.push(SlotRange::new(*right_slot, mid as u32, write as u32));
                 }
             }
         }
-        rows_cur = next_rows;
+        std::mem::swap(&mut ws.rows, &mut ws.rows_next);
+        std::mem::swap(&mut ws.chan, &mut ws.chan_next);
+        std::mem::swap(&mut ws.segs, &mut ws.segs_next);
 
-        if new_frontier.is_empty() {
-            frontier = new_frontier;
+        if ws.new_frontier.is_empty() {
+            ws.frontier.clear();
             break;
         }
-        frontier = new_frontier;
+        std::mem::swap(&mut ws.frontier, &mut ws.new_frontier);
         if depth + 1 == p.max_depth {
             break; // children become leaves below; skip their histograms
         }
 
-        // next-level histograms with sibling subtraction
-        let n_new = frontier.len();
-        let mut small_flag = vec![false; n_new];
-        for &(_, l, r, cl, cr) in &split_info {
-            if cl <= cr {
-                small_flag[l as usize] = true;
-            } else {
-                small_flag[r as usize] = true;
-            }
+        // next-level histograms with sibling subtraction: accumulate only
+        // the smaller child of every split (its contiguous range), then
+        // big = parent − small
+        let n_new = ws.frontier.len();
+        ws.small_segs.clear();
+        for si in &ws.split_info {
+            let small = if si.count_left <= si.count_right { si.left } else { si.right };
+            debug_assert_eq!(ws.segs[small as usize].slot, small);
+            ws.small_segs.push(ws.segs[small as usize]);
         }
-        let small_rows: Vec<u32> = rows_cur
-            .iter()
-            .copied()
-            .filter(|&r| small_flag[node_of_row[r as usize] as usize])
-            .collect();
-        let mut new_hist = vec![0.0f32; n_new * slice_sz];
+        ws.hist_next.clear();
+        ws.hist_next.resize(n_new * slice_sz, 0.0);
         engine.histograms(
             p.binned,
-            &small_rows,
-            &node_of_row,
-            &chan,
+            &ws.rows,
+            &ws.chan,
             k1,
+            &ws.small_segs,
             n_new,
-            &mut new_hist,
+            &mut ws.hist_next,
         );
-        for &(parent_slot, l, r, cl, cr) in &split_info {
-            let (small, big) = if cl <= cr { (l, r) } else { (r, l) };
-            let pbase = parent_slot * slice_sz;
+        for si in &ws.split_info {
+            let (small, big) = if si.count_left <= si.count_right {
+                (si.left, si.right)
+            } else {
+                (si.right, si.left)
+            };
+            let pbase = si.parent_slot as usize * slice_sz;
             let sbase = small as usize * slice_sz;
             let bbase = big as usize * slice_sz;
             for i in 0..slice_sz {
-                new_hist[bbase + i] = hist[pbase + i] - new_hist[sbase + i];
+                ws.hist_next[bbase + i] = ws.hist[pbase + i] - ws.hist_next[sbase + i];
             }
         }
-        hist = new_hist;
+        std::mem::swap(&mut ws.hist, &mut ws.hist_next);
     }
 
     // remaining frontier slots become leaves
-    let mut slot_leaf: Vec<u32> = Vec::with_capacity(frontier.len());
-    for &parent in &frontier {
+    ws.slot_leaf.clear();
+    for &parent in &ws.frontier {
         let id = settle_leaf(parent, &mut nodes, &mut n_leaves, &mut is_root_leaf);
-        slot_leaf.push(id as u32);
+        ws.slot_leaf.push(id as u32);
     }
-    for &r in &rows_cur {
-        leaf_of_row[r as usize] = slot_leaf[node_of_row[r as usize] as usize];
+    for seg in &ws.segs {
+        let id = ws.slot_leaf[seg.slot as usize];
+        for pos in seg.range() {
+            ws.leaf_of_row[ws.rows[pos] as usize] = id;
+        }
     }
 
     // exact leaf values from the full derivative matrices (eq. 3)
-    let sums = engine.leaf_sums(p.rows, &leaf_of_row, p.g, p.h, p.d, n_leaves);
+    engine.leaf_sums(p.rows, &ws.leaf_of_row, p.g, p.h, p.d, n_leaves, &mut ws.sums);
     let mut leaf_values = vec![0.0f32; n_leaves * p.d];
     for l in 0..n_leaves {
         for j in 0..p.d {
-            let gs = sums.gsum[l * p.d + j];
-            let hs = sums.hsum[l * p.d + j];
+            let gs = ws.sums.gsum[l * p.d + j];
+            let hs = ws.sums.hsum[l * p.d + j];
             leaf_values[l * p.d + j] = -gs / (hs + p.lambda);
         }
     }
@@ -301,7 +382,7 @@ pub fn build_tree(p: &BuildParams, engine: &mut dyn ComputeEngine) -> (Tree, Vec
         n_leaves,
     };
     debug_assert!(tree.validate().is_ok(), "{:?}", tree.validate());
-    (tree, leaf_of_row)
+    tree
 }
 
 /// GBDT-MO (sparse): keep only the top-K outputs by |v| per leaf.

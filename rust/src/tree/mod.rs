@@ -1,10 +1,13 @@
 //! Multivariate decision trees: representation, depth-wise builder with
-//! sketched split scoring + sibling subtraction, and split selection.
+//! sketched split scoring + sibling subtraction over a stably
+//! partitioned row buffer, pooled build workspace, and split selection.
 
 pub mod builder;
 pub mod splitter;
 #[allow(clippy::module_inception)]
 pub mod tree;
+pub mod workspace;
 
-pub use builder::{build_tree, BuildParams, SENTINEL};
+pub use builder::{build_tree, build_tree_in, BuildParams, SENTINEL};
 pub use tree::{Tree, TreeNode};
+pub use workspace::TreeWorkspace;

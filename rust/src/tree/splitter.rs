@@ -17,6 +17,9 @@ pub struct SplitDecision {
 /// S(R) and |R| (or Σh in HessL2 mode) for one frontier slot, computed
 /// from its histogram totals over feature 0 (every feature's bins
 /// partition the same node, so any feature gives the same totals).
+/// `scratch` is a caller-pooled k-wide f64 buffer (resized here), so the
+/// per-level decide loop stays allocation-free.
+#[allow(clippy::too_many_arguments)]
 pub fn node_score(
     hist: &[f32],
     slot: usize,
@@ -25,10 +28,13 @@ pub fn node_score(
     k1: usize,
     lam: f32,
     mode: ScoreMode,
+    scratch: &mut Vec<f64>,
 ) -> (f64, f64) {
     let k = scoring_k(k1, mode);
     let base = slot * m * bins * k1; // feature 0
-    let mut gsum = vec![0.0f64; k];
+    scratch.clear();
+    scratch.resize(k, 0.0);
+    let gsum = scratch;
     let mut denom = 0.0f64;
     let mut count = 0.0f64;
     for b in 0..bins {
@@ -130,10 +136,17 @@ mod tests {
         h
     }
 
+    fn gains_of(hist: &[f32], bins: usize, k1: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        NativeEngine::new().split_gains(hist, 1, 1, bins, k1, 1.0, ScoreMode::CountL2, &mut out);
+        out
+    }
+
     #[test]
     fn node_score_totals() {
         let h = separable_hist();
-        let (s, count) = node_score(&h, 0, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        let (s, count) =
+            node_score(&h, 0, 1, 4, 2, 1.0, ScoreMode::CountL2, &mut Vec::new());
         assert!((count - 20.0).abs() < 1e-9);
         // total gradient = 0 -> S(R) = 0
         assert!(s.abs() < 1e-9);
@@ -142,8 +155,7 @@ mod tests {
     #[test]
     fn best_split_finds_boundary() {
         let h = separable_hist();
-        let gains =
-            NativeEngine::new().split_gains(&h, 1, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        let gains = gains_of(&h, 4, 2);
         let dec = best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 1, 0.0, None).unwrap();
         assert_eq!(dec.feature, 0);
         assert_eq!(dec.bin, 1);
@@ -156,8 +168,7 @@ mod tests {
     #[test]
     fn min_data_blocks_unbalanced() {
         let h = separable_hist();
-        let gains =
-            NativeEngine::new().split_gains(&h, 1, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        let gains = gains_of(&h, 4, 2);
         // min_data 11 > any achievable side
         assert!(best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 11, 0.0, None).is_none());
         // min_data 10: only the middle split remains admissible
@@ -168,16 +179,14 @@ mod tests {
     #[test]
     fn min_gain_blocks_weak_splits() {
         let h = separable_hist();
-        let gains =
-            NativeEngine::new().split_gains(&h, 1, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        let gains = gains_of(&h, 4, 2);
         assert!(best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 1, 100.0, None).is_none());
     }
 
     #[test]
     fn feature_mask_excludes() {
         let h = separable_hist();
-        let gains =
-            NativeEngine::new().split_gains(&h, 1, 1, 4, 2, 1.0, ScoreMode::CountL2);
+        let gains = gains_of(&h, 4, 2);
         let mask = vec![false];
         assert!(best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 1, 0.0, Some(&mask)).is_none());
     }
@@ -189,8 +198,7 @@ mod tests {
         let mut h = vec![0.0f32; 4 * k1];
         h[0] = 3.0;
         h[1] = 10.0;
-        let gains =
-            NativeEngine::new().split_gains(&h, 1, 1, 4, k1, 1.0, ScoreMode::CountL2);
+        let gains = gains_of(&h, 4, k1);
         assert!(best_split(&gains, &h, 0, 1, 4, k1, 0.0, 10.0, 1, 0.0, None).is_none());
     }
 
@@ -202,7 +210,8 @@ mod tests {
             2.0, 4.0, 10.0, // bin 0
             1.0, 2.0, 5.0, // bin 1
         ];
-        let (s, count) = node_score(&h, 0, 1, 2, k1, 1.0, ScoreMode::HessL2);
+        let (s, count) =
+            node_score(&h, 0, 1, 2, k1, 1.0, ScoreMode::HessL2, &mut Vec::new());
         assert!((count - 15.0).abs() < 1e-9);
         // (2+1)^2 / (4+2+1)
         assert!((s - 9.0 / 7.0).abs() < 1e-6, "s={s}");

@@ -1,0 +1,138 @@
+//! Pooled, reusable buffers for the depth-wise tree builder — the
+//! allocation-free training core (DESIGN.md "Memory model & row
+//! partitioning").
+//!
+//! ## Row partitioning
+//!
+//! Instead of a per-global-row `node_of_row` map plus a filter scan at
+//! every level, the builder keeps the active rows in one buffer that is
+//! **stably partitioned in place at each split**: every frontier node
+//! owns a contiguous `[start, end)` range ([`SlotRange`]), and the
+//! gathered `[nr, k1]` channel matrix is kept in the same partition
+//! order alongside it. The payoff:
+//!
+//! * histogram accumulation streams each node's rows sequentially with a
+//!   constant output base — no per-row slot lookup, and no per-level
+//!   re-gather of channel rows inside the engine;
+//! * sibling subtraction selects the smaller child as a *range*, not by
+//!   re-scanning the full row list against a flag array;
+//! * the stable partition preserves the relative (ascending) row order
+//!   inside every node, so per-histogram-cell f32 accumulation order is
+//!   unchanged and ensembles stay bit-identical to the pre-partitioning
+//!   implementation (`rust/tests/partition_equivalence.rs`).
+//!
+//! ## Pooling
+//!
+//! One `TreeWorkspace` lives across every tree of a training run (the
+//! trainer and both baselines hold one next to their engine). Every
+//! buffer below is `clear()`ed and `resize()`d per tree/level, which
+//! reuses capacity — after buffers have grown to their high-water mark
+//! (typically the first tree), steady-state tree building performs **no
+//! heap allocation** in the per-level loop (`rust/tests/alloc_free.rs`
+//! counts allocations to enforce this; the returned [`Tree`] itself and
+//! its leaf values are the only per-tree allocations left).
+//!
+//! [`Tree`]: crate::tree::Tree
+
+use crate::engine::{LeafSums, SlotRange};
+
+/// Where a frontier slot hangs in the partially-built tree.
+#[derive(Clone, Copy)]
+pub(crate) enum Parent {
+    Root,
+    Child { node: usize, is_left: bool },
+}
+
+/// Per-slot decision of one level.
+pub(crate) enum Outcome {
+    Leaf(u32),
+    Split { feature: u32, bin: u8, left_slot: u32, right_slot: u32 },
+}
+
+/// Bookkeeping for one split: which new slots it produced and the
+/// histogram-count sizes that pick the smaller child for sibling
+/// subtraction (weighted counts when `row_weights` are in play — the
+/// same tie-breaking the historical builder used).
+#[derive(Clone, Copy)]
+pub(crate) struct SplitInfo {
+    pub parent_slot: u32,
+    pub left: u32,
+    pub right: u32,
+    pub count_left: usize,
+    pub count_right: usize,
+}
+
+/// Reusable buffers for [`build_tree_in`](crate::tree::builder::build_tree_in).
+///
+/// Construct once (cheap: every buffer starts empty) and pass to every
+/// build; see the module docs for the pooling contract.
+#[derive(Default)]
+pub struct TreeWorkspace {
+    /// Active row ids, stably partitioned: slot `s` of the current
+    /// frontier owns `rows[segs[s].range()]`, each segment ascending.
+    pub(crate) rows: Vec<u32>,
+    /// `[nr, k1]` channel matrix parallel to `rows` by position.
+    pub(crate) chan: Vec<f32>,
+    /// Partition targets for the next level (ping-pong with `rows`/`chan`).
+    pub(crate) rows_next: Vec<u32>,
+    pub(crate) chan_next: Vec<f32>,
+    /// Right-child staging for the single-pass stable partition.
+    pub(crate) right_rows: Vec<u32>,
+    pub(crate) right_chan: Vec<f32>,
+    /// Per-frontier-slot row ranges (and the next level's).
+    pub(crate) segs: Vec<SlotRange>,
+    pub(crate) segs_next: Vec<SlotRange>,
+    /// Sibling subtraction: the smaller child of every split.
+    pub(crate) small_segs: Vec<SlotRange>,
+    /// Histogram ping-pong: current level and next level.
+    pub(crate) hist: Vec<f32>,
+    pub(crate) hist_next: Vec<f32>,
+    /// Split-gain output, filled by `ComputeEngine::split_gains`.
+    pub(crate) gains: Vec<f32>,
+    /// f64 scratch for `node_score`.
+    pub(crate) score_scratch: Vec<f64>,
+    /// Global row -> leaf id (SENTINEL outside the sampled rows).
+    pub(crate) leaf_of_row: Vec<u32>,
+    /// Exact per-leaf derivative sums, filled by `ComputeEngine::leaf_sums`.
+    pub(crate) sums: LeafSums,
+    /// Frontier bookkeeping.
+    pub(crate) frontier: Vec<Parent>,
+    pub(crate) new_frontier: Vec<Parent>,
+    pub(crate) outcomes: Vec<Outcome>,
+    pub(crate) split_info: Vec<SplitInfo>,
+    pub(crate) slot_leaf: Vec<u32>,
+}
+
+impl TreeWorkspace {
+    pub fn new() -> TreeWorkspace {
+        TreeWorkspace::default()
+    }
+
+    /// Global row -> leaf id of the most recent build (`SENTINEL` for
+    /// rows outside the sampled set). Valid until the next build.
+    pub fn leaf_of_row(&self) -> &[u32] {
+        &self.leaf_of_row
+    }
+
+    /// Move the leaf map out (used by the convenience wrapper
+    /// [`build_tree`](crate::tree::builder::build_tree); pooled callers
+    /// should borrow [`leaf_of_row`](Self::leaf_of_row) instead).
+    pub fn take_leaf_of_row(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.leaf_of_row)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_starts_empty_and_returns_leaf_map() {
+        let mut ws = TreeWorkspace::new();
+        assert!(ws.leaf_of_row().is_empty());
+        ws.leaf_of_row = vec![1, 2, 3];
+        let taken = ws.take_leaf_of_row();
+        assert_eq!(taken, vec![1, 2, 3]);
+        assert!(ws.leaf_of_row().is_empty());
+    }
+}

@@ -155,6 +155,37 @@ pub fn write_results(name: &str, value: &Json) -> std::io::Result<std::path::Pat
     Ok(path)
 }
 
+/// Write a machine-readable bench-result JSON at the *workspace root*
+/// (the committed `BENCH_*.json` perf trajectory; CI uploads it as a
+/// workflow artifact).
+///
+/// The root is resolved at runtime by walking up from the current
+/// directory to the first ancestor containing both `Cargo.toml` and the
+/// `rust/` package dir (cargo runs benches with the package dir as cwd,
+/// so this is normally one level up). Only if no ancestor matches —
+/// e.g. the binary is run outside any checkout — does it fall back to
+/// the compile-time `CARGO_MANIFEST_DIR`, which may not exist on a
+/// machine other than the build host.
+pub fn write_results_at_root(
+    file_name: &str,
+    value: &Json,
+) -> std::io::Result<std::path::PathBuf> {
+    let runtime_root = std::env::current_dir().ok().and_then(|cwd| {
+        cwd.ancestors()
+            .find(|a| a.join("Cargo.toml").is_file() && a.join("rust").is_dir())
+            .map(|a| a.to_path_buf())
+    });
+    let root = runtime_root.unwrap_or_else(|| {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap_or_else(|| std::path::Path::new("."))
+            .to_path_buf()
+    });
+    let path = root.join(file_name);
+    std::fs::write(&path, value.to_pretty())?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -120,11 +120,13 @@ fn histograms_match_native() {
         chan[i * k1 + k1 - 1] = 1.0;
     }
     let rows: Vec<u32> = (0..n as u32).filter(|&r| r % 5 != 4).collect();
+    let (prows, pchan, segs) =
+        sketchboost::engine::reference::partition_inputs(&rows, &slot_of_row, &chan, k1, n_slots);
     let size = 8 * M * BINS * k1; // artifact supports 8 slots
     let mut h1 = vec![0.0f32; size];
     let mut h2 = vec![0.0f32; size];
-    neng.histograms(&binned, &rows, &slot_of_row, &chan, k1, 8, &mut h1);
-    xeng.histograms(&binned, &rows, &slot_of_row, &chan, k1, 8, &mut h2);
+    neng.histograms(&binned, &prows, &pchan, k1, &segs, 8, &mut h1);
+    xeng.histograms(&binned, &prows, &pchan, k1, &segs, 8, &mut h2);
     assert_close(&h1, &h2, 1e-3, 1e-3);
 }
 
@@ -147,8 +149,10 @@ fn split_gains_match_native() {
         }
     }
     let lam = 1.0; // must match the lambda baked into the artifact
-    let g1 = neng.split_gains(&hist, n_slots, M, BINS, k1, lam, ScoreMode::CountL2);
-    let g2 = xeng.split_gains(&hist, n_slots, M, BINS, k1, lam, ScoreMode::CountL2);
+    let mut g1 = Vec::new();
+    let mut g2 = Vec::new();
+    neng.split_gains(&hist, n_slots, M, BINS, k1, lam, ScoreMode::CountL2, &mut g1);
+    xeng.split_gains(&hist, n_slots, M, BINS, k1, lam, ScoreMode::CountL2, &mut g2);
     assert_close(&g1, &g2, 2e-3, 2e-3);
 }
 
@@ -168,8 +172,10 @@ fn leaf_sums_match_native() {
         *v = v.abs();
     }
     let rows: Vec<u32> = (0..n as u32).collect();
-    let s1 = neng.leaf_sums(&rows, &leaf_of_row, &g, &h, D, n_leaves);
-    let s2 = xeng.leaf_sums(&rows, &leaf_of_row, &g, &h, D, n_leaves);
+    let mut s1 = sketchboost::engine::LeafSums::new();
+    let mut s2 = sketchboost::engine::LeafSums::new();
+    neng.leaf_sums(&rows, &leaf_of_row, &g, &h, D, n_leaves, &mut s1);
+    xeng.leaf_sums(&rows, &leaf_of_row, &g, &h, D, n_leaves, &mut s2);
     assert_close(&s1.gsum, &s2.gsum, 1e-3, 1e-3);
     assert_close(&s1.hsum, &s2.hsum, 1e-3, 1e-3);
     assert_close(&s1.count, &s2.count, 1e-6, 1e-6);

@@ -93,8 +93,9 @@ fn every_sketch_strategy_is_thread_invariant() {
 #[test]
 fn engine_histograms_thread_invariant_on_training_shapes() {
     // Engine-level check on a realistic shape: the builder's root-level
-    // call (one slot, every row) is the biggest sharded histogram.
+    // call (one segment, every row) is the biggest sharded histogram.
     use sketchboost::data::binning::BinnedDataset;
+    use sketchboost::engine::SlotRange;
 
     let ds = workload();
     let binned = BinnedDataset::from_dataset(&ds, 64);
@@ -106,15 +107,15 @@ fn engine_histograms_thread_invariant_on_training_shapes() {
         *v = ((i * 2654435761) % 1000) as f32 / 500.0 - 1.0;
     }
     let rows: Vec<u32> = (0..n as u32).collect();
-    let slot_of_row = vec![0u32; n];
+    let segs = [SlotRange::new(0, 0, n as u32)];
     let size = binned.n_features * binned.max_bins * k1;
 
     let mut base = vec![0.0f32; size];
-    NativeEngine::with_threads(1).histograms(&binned, &rows, &slot_of_row, &chan, k1, 1, &mut base);
+    NativeEngine::with_threads(1).histograms(&binned, &rows, &chan, k1, &segs, 1, &mut base);
     for threads in [2usize, 4, 8] {
         let mut out = vec![0.0f32; size];
         NativeEngine::with_threads(threads)
-            .histograms(&binned, &rows, &slot_of_row, &chan, k1, 1, &mut out);
+            .histograms(&binned, &rows, &chan, k1, &segs, 1, &mut out);
         assert_eq!(out, base, "histograms differ at n_threads={threads}");
     }
 }

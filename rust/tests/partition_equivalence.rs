@@ -1,0 +1,127 @@
+//! Pre/post-refactor equivalence for the row-partition training core.
+//!
+//! The range-partitioned builder + engine (PR 2) must produce ensembles
+//! **bit-identical** to the historical flag-routed implementation, whose
+//! numerics are pinned verbatim in `engine/reference.rs`
+//! ([`ReferenceEngine`]): the stable partition preserves each node's
+//! ascending row order (so per-histogram-cell f32 accumulation order is
+//! unchanged), and the engine's merged-rank shard alignment reproduces
+//! the historical shard grouping exactly. These tests train full
+//! ensembles through both implementations — across tree depths 1–6,
+//! 1/2/4 engine threads, and all five sketch strategies — and compare
+//! every split, every leaf value, and every prediction bitwise.
+
+use sketchboost::data::profiles::Profile;
+use sketchboost::engine::reference::ReferenceEngine;
+use sketchboost::prelude::*;
+
+/// A synthetic profile big enough to shard (otto: 9 classes, 93
+/// features; 6000 rows ≈ 3 histogram shards at the root), matching the
+/// parallel-determinism workload.
+fn workload() -> Dataset {
+    Profile::by_name("otto").expect("otto profile").generate_sized(6000, 9)
+}
+
+fn assert_ensembles_identical(a: &Ensemble, b: &Ensemble, label: &str) {
+    assert_eq!(a.n_trees(), b.n_trees(), "{label}: tree count");
+    for (i, (ta, tb)) in a.trees.iter().zip(&b.trees).enumerate() {
+        assert_eq!(ta.nodes.len(), tb.nodes.len(), "{label}: tree {i} node count");
+        for (na, nb) in ta.nodes.iter().zip(&tb.nodes) {
+            assert_eq!(na.feature, nb.feature, "{label}: tree {i} split feature");
+            assert_eq!(na.bin, nb.bin, "{label}: tree {i} split bin");
+            assert_eq!(na.left, nb.left, "{label}: tree {i} topology");
+            assert_eq!(na.right, nb.right, "{label}: tree {i} topology");
+        }
+        // bitwise: no tolerance
+        assert_eq!(ta.leaf_values, tb.leaf_values, "{label}: tree {i} leaf values");
+    }
+}
+
+fn fit_reference(cfg: &GBDTConfig, ds: &Dataset) -> Ensemble {
+    let mut eng = ReferenceEngine::with_threads(1);
+    GBDT::fit_with_engine(cfg, ds, None, &mut eng)
+}
+
+#[test]
+fn bit_identical_to_prerefactor_across_depths() {
+    let ds = workload();
+    for depth in 1..=6usize {
+        let mut cfg = GBDTConfig::for_dataset(&ds);
+        cfg.n_rounds = 1;
+        cfg.learning_rate = 0.3;
+        cfg.max_depth = depth;
+        cfg.max_bins = 32;
+        cfg.sketch = SketchConfig::RandomProjection { k: 3 };
+
+        let reference = fit_reference(&cfg, &ds);
+        for threads in [1usize, 4] {
+            cfg.n_threads = threads;
+            let model = GBDT::fit(&cfg, &ds, None);
+            let label = format!("depth={depth} threads={threads}");
+            assert_ensembles_identical(&reference, &model, &label);
+            assert_eq!(
+                reference.predict_raw(&ds),
+                model.predict_raw(&ds),
+                "{label}: predictions"
+            );
+        }
+    }
+}
+
+#[test]
+fn bit_identical_to_prerefactor_across_sketches_and_threads() {
+    let ds = workload();
+    for sketch in [
+        SketchConfig::None,
+        SketchConfig::TopOutputs { k: 2 },
+        SketchConfig::RandomSampling { k: 2 },
+        SketchConfig::RandomProjection { k: 5 },
+        SketchConfig::TruncatedSvd { k: 2, iters: 4 },
+    ] {
+        let mut cfg = GBDTConfig::for_dataset(&ds);
+        cfg.n_rounds = 1;
+        cfg.max_depth = 4;
+        cfg.max_bins = 32;
+        cfg.sketch = sketch;
+
+        let reference = fit_reference(&cfg, &ds);
+        for threads in [1usize, 2, 4] {
+            cfg.n_threads = threads;
+            let model = GBDT::fit(&cfg, &ds, None);
+            let label = format!("sketch={} threads={threads}", sketch.name());
+            assert_ensembles_identical(&reference, &model, &label);
+        }
+    }
+}
+
+#[test]
+fn bit_identical_under_row_sampling_and_weights() {
+    // GOSS/MVS up-weighting routes weighted channel rows through the
+    // stable partition; plain subsampling shrinks the sampled set. Both
+    // must stay bit-identical to the historical path.
+    let ds = workload();
+    for (label, set) in [
+        ("subsample", (|c: &mut GBDTConfig| c.subsample = 0.7) as fn(&mut GBDTConfig)),
+        ("mvs", |c: &mut GBDTConfig| {
+            c.row_sampling = sketchboost::boosting::sampling::RowSampling::Mvs { rate: 0.5 }
+        }),
+        ("goss", |c: &mut GBDTConfig| {
+            c.row_sampling = sketchboost::boosting::sampling::RowSampling::Goss {
+                top_rate: 0.2,
+                other_rate: 0.3,
+            }
+        }),
+    ] {
+        let mut cfg = GBDTConfig::for_dataset(&ds);
+        cfg.n_rounds = 2;
+        cfg.max_depth = 4;
+        cfg.max_bins = 32;
+        cfg.sketch = SketchConfig::TopOutputs { k: 3 };
+        set(&mut cfg);
+
+        let reference = fit_reference(&cfg, &ds);
+        cfg.n_threads = 4;
+        let model = GBDT::fit(&cfg, &ds, None);
+        assert_ensembles_identical(&reference, &model, label);
+    }
+}

@@ -111,8 +111,15 @@ fn prop_histogram_mass_conservation() {
         let chan = g.vec_gaussian(n * k1, 1.0);
         let slot_of_row = g.vec_u32_below(n, slots);
         let rows: Vec<u32> = (0..n as u32).collect();
+        let (prows, pchan, segs) = sketchboost::engine::reference::partition_inputs(
+            &rows,
+            &slot_of_row,
+            &chan,
+            k1,
+            slots,
+        );
         let mut out = vec![0.0f32; slots * m * bins * k1];
-        NativeEngine::new().histograms(&binned, &rows, &slot_of_row, &chan, k1, slots, &mut out);
+        NativeEngine::new().histograms(&binned, &prows, &pchan, k1, &segs, slots, &mut out);
         for f in 0..m {
             for c in 0..k1 {
                 let mut total = 0.0f64;
@@ -149,9 +156,17 @@ fn prop_split_gain_superadditive_at_small_lambda() {
         }
         let lam = 1e-4f32;
         let mut eng = NativeEngine::new();
-        let gains = eng.split_gains(&hist, 1, m, bins, k1, lam, ScoreMode::CountL2);
+        let mut gains = Vec::new();
+        eng.split_gains(&hist, 1, m, bins, k1, lam, ScoreMode::CountL2, &mut gains);
         let (pscore, _) = sketchboost::tree::splitter::node_score(
-            &hist, 0, m, bins, k1, lam, ScoreMode::CountL2,
+            &hist,
+            0,
+            m,
+            bins,
+            k1,
+            lam,
+            ScoreMode::CountL2,
+            &mut Vec::new(),
         );
         // candidates with both children non-empty: all b < bins-1 here
         for b in 0..bins - 1 {
