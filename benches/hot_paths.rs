@@ -124,7 +124,45 @@ fn main() {
     // Both accumulate only the smaller child of every split (sibling
     // subtraction) and are asserted bit-identical before timing.
     println!("\n== routing + histograms, depth-6 level, d = 64 (before/after) ==\n");
-    results.set("partition_core", bench_partition_core(&binned, n, m, bins));
+    let partition_core = bench_partition_core(&binned, n, m, bins);
+    // surface the tracked before/after claim as real measurements — the
+    // CI bench-integrity step rejects any trajectory that still carries
+    // a pending-measurement placeholder after regeneration
+    let claim_t1 = partition_core
+        .get("t1")
+        .and_then(|o| o.get("speedup"))
+        .and_then(|v| v.as_f64());
+    let claim_t4 = partition_core
+        .get("t4")
+        .and_then(|o| o.get("speedup"))
+        .and_then(|v| v.as_f64());
+    let mut claim = Json::obj();
+    claim.set(
+        "metric",
+        Json::Str("partition_core.t1.speedup and partition_core.t4.speedup".into()),
+    );
+    claim.set(
+        "description",
+        Json::Str(
+            "combined routing + histogram accumulation at one simulated depth-6 \
+             level (32 parents -> 64 children, smaller-child accumulation) with \
+             d = 64 full scoring channels: pinned pre-refactor flag-routed path \
+             vs the stable range partition + range-based NativeEngine::histograms; \
+             both asserted bit-identical before timing"
+                .into(),
+        ),
+    );
+    claim.set("target", Json::Str(">= 1.3x".into()));
+    claim.set(
+        "measured",
+        match (claim_t1, claim_t4) {
+            (Some(a), Some(b)) => Json::from_f64_slice(&[a, b]),
+            _ => Json::Null,
+        },
+    );
+    results.set("speedup_claim", claim);
+    results.set("status", Json::Str("measured".into()));
+    results.set("partition_core", partition_core);
 
     // --- thread scaling: histogram build + split scan ----------------------
     // The PR-1 parallel path (engine/native.rs): row-sharded histogram

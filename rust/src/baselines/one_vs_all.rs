@@ -14,6 +14,7 @@ use crate::boosting::trainer::GBDTConfig;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Dataset;
 use crate::engine::{ComputeEngine, EngineOpts, NativeEngine, ScoreMode};
+use crate::predict::{FlatForest, PredictOptions};
 use crate::tree::builder::{build_tree_in, BuildParams, SENTINEL};
 use crate::tree::tree::Tree;
 use crate::tree::workspace::TreeWorkspace;
@@ -31,7 +32,21 @@ pub struct OvaModel {
 }
 
 impl OvaModel {
+    /// Raw scores through the batched [`FlatForest`] path (univariate
+    /// trees compiled with their output column; bit-identical to
+    /// [`OvaModel::predict_raw_naive`] for every thread count).
     pub fn predict_raw(&self, ds: &Dataset) -> Vec<f32> {
+        self.predict_raw_with(ds, &PredictOptions::default())
+    }
+
+    /// [`OvaModel::predict_raw`] with explicit batching/threading knobs.
+    pub fn predict_raw_with(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<f32> {
+        FlatForest::from_ova(self).predict_raw(ds, opts)
+    }
+
+    /// Reference per-row walker, kept as the equivalence-test oracle
+    /// (`rust/tests/predict_equivalence.rs`).
+    pub fn predict_raw_naive(&self, ds: &Dataset) -> Vec<f32> {
         let d = self.n_outputs;
         let mut out = vec![0.0f32; ds.n_rows * d];
         let mut row = vec![0.0f32; ds.n_features];
@@ -212,6 +227,20 @@ mod tests {
         assert!(acc > 0.8, "acc {acc}");
         let hist = &model.history.train_loss;
         assert!(hist.first().unwrap() > hist.last().unwrap());
+    }
+
+    #[test]
+    fn ova_flat_path_matches_naive() {
+        let ds = make_multiclass(300, FeatureSpec::guyon(8), 3, 2.0, 4);
+        let mut cfg = GBDTConfig::multiclass(3);
+        cfg.n_rounds = 5;
+        cfg.max_bins = 16;
+        let model = fit_one_vs_all(&cfg, &ds, None);
+        let naive = model.predict_raw_naive(&ds);
+        for threads in [1usize, 2, 4] {
+            let opts = PredictOptions { n_threads: threads, block_rows: 64 };
+            assert_eq!(model.predict_raw_with(&ds, &opts), naive, "threads {threads}");
+        }
     }
 
     #[test]

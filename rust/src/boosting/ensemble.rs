@@ -4,6 +4,7 @@
 use crate::boosting::losses::LossKind;
 use crate::boosting::metrics::softmax_rows;
 use crate::data::dataset::Dataset;
+use crate::predict::{FlatForest, PredictOptions};
 use crate::tree::tree::{Tree, TreeNode};
 use crate::util::json::Json;
 
@@ -30,7 +31,31 @@ pub struct Ensemble {
 
 impl Ensemble {
     /// Raw scores (logits for classification), row-major [n, d].
+    ///
+    /// Runs the batched [`FlatForest`] path with default options (one
+    /// thread, default block size); [`Ensemble::predict_raw_with`]
+    /// exposes the threading/blocking knobs. Bit-identical to the
+    /// per-row reference walker [`Ensemble::predict_raw_naive`].
     pub fn predict_raw(&self, ds: &Dataset) -> Vec<f32> {
+        self.predict_raw_with(ds, &PredictOptions::default())
+    }
+
+    /// Raw scores through the batched flat path with explicit options.
+    ///
+    /// Repeated scoring of the same model should compile the
+    /// [`FlatForest`] once and call it directly; this convenience
+    /// recompiles per call (O(total nodes), negligible against any
+    /// non-trivial batch).
+    pub fn predict_raw_with(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<f32> {
+        FlatForest::from_ensemble(self).predict_raw(ds, opts)
+    }
+
+    /// Reference per-row walker (pointer-chasing [`Tree`] traversal).
+    ///
+    /// Kept as the oracle the batched path is tested against
+    /// (`rust/tests/predict_equivalence.rs`); prefer
+    /// [`Ensemble::predict_raw`] everywhere else.
+    pub fn predict_raw_naive(&self, ds: &Dataset) -> Vec<f32> {
         let d = self.n_outputs;
         let mut out = vec![0.0f32; ds.n_rows * d];
         let mut row = vec![0.0f32; ds.n_features];
@@ -49,9 +74,21 @@ impl Ensemble {
 
     /// Probabilities for classification losses; identity for MSE.
     pub fn predict(&self, ds: &Dataset) -> Vec<f32> {
-        let mut raw = self.predict_raw(ds);
+        self.predict_with(ds, &PredictOptions::default())
+    }
+
+    /// [`Ensemble::predict`] with explicit batching/threading options.
+    pub fn predict_with(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<f32> {
+        let mut raw = self.predict_raw_with(ds, opts);
+        self.apply_link(&mut raw);
+        raw
+    }
+
+    /// Map raw scores to the loss's output scale in place (softmax for
+    /// multiclass CE, sigmoid for BCE, identity for MSE).
+    pub fn apply_link(&self, raw: &mut [f32]) {
         match self.loss {
-            LossKind::MulticlassCE => softmax_rows(&mut raw, self.n_outputs),
+            LossKind::MulticlassCE => softmax_rows(raw, self.n_outputs),
             LossKind::BCE => {
                 for z in raw.iter_mut() {
                     *z = 1.0 / (1.0 + (-*z).exp());
@@ -59,7 +96,6 @@ impl Ensemble {
             }
             LossKind::MSE => {}
         }
-        raw
     }
 
     pub fn n_trees(&self) -> usize {
@@ -226,6 +262,15 @@ mod tests {
         assert!((raw[1] + 0.6).abs() < 1e-6);
         assert!((raw[2] + 0.4).abs() < 1e-6);
         assert!((raw[3] - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flat_path_matches_naive_walker() {
+        let m = toy_model();
+        let ds = toy_data();
+        assert_eq!(m.predict_raw(&ds), m.predict_raw_naive(&ds));
+        let opts = crate::predict::PredictOptions { n_threads: 2, block_rows: 1 };
+        assert_eq!(m.predict_raw_with(&ds, &opts), m.predict_raw_naive(&ds));
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use crate::boosting::ensemble::Ensemble;
 use crate::boosting::metrics::Metric;
 use crate::data::dataset::Dataset;
+use crate::predict::{FlatForest, PredictOptions};
 use crate::tree::tree::{is_leaf, leaf_id, Tree};
 
 /// How to weight splits when accumulating feature importance.
@@ -70,8 +71,20 @@ impl Ensemble {
     }
 
     /// Leaf index of every row in every tree — the "apply" output used
-    /// for embedding/feature-engineering pipelines.
+    /// for embedding/feature-engineering pipelines. Row-major
+    /// `[n_rows, n_trees]`, via the batched flat path.
     pub fn predict_leaf_indices(&self, ds: &Dataset) -> Vec<u32> {
+        self.predict_leaf_indices_with(ds, &PredictOptions::default())
+    }
+
+    /// [`Ensemble::predict_leaf_indices`] with explicit batching knobs.
+    pub fn predict_leaf_indices_with(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<u32> {
+        FlatForest::from_ensemble(self).predict_leaf_indices(ds, opts)
+    }
+
+    /// Reference per-row walker for the leaf-index output (oracle for
+    /// `rust/tests/predict_equivalence.rs`).
+    pub fn predict_leaf_indices_naive(&self, ds: &Dataset) -> Vec<u32> {
         let mut out = Vec::with_capacity(ds.n_rows * self.trees.len());
         let mut row = vec![0.0f32; ds.n_features];
         for i in 0..ds.n_rows {
@@ -191,6 +204,10 @@ mod tests {
             let tree = &model.trees[i % model.n_trees()];
             assert!((l as usize) < tree.n_leaves);
         }
+        // the batched path must agree with the per-row walker exactly
+        assert_eq!(leaves, model.predict_leaf_indices_naive(&ds));
+        let opts = PredictOptions { n_threads: 4, block_rows: 33 };
+        assert_eq!(model.predict_leaf_indices_with(&ds, &opts), leaves);
     }
 
     #[test]

@@ -126,6 +126,32 @@ pub fn load_dataset(
     Ok(Dataset::from_row_major(t.n_rows, m, &rows, targets))
 }
 
+/// Load a feature-only CSV (no target columns) for scoring with a saved
+/// model (`sketchboost predict`). Every column is a feature; the dataset
+/// carries dummy targets (prediction never reads them).
+pub fn load_features(path: &Path) -> Result<Dataset, Box<dyn std::error::Error>> {
+    let t = read_table(path)?;
+    let targets = Targets::Regression { values: vec![0.0; t.n_rows], n_targets: 1 };
+    Ok(Dataset::from_row_major(t.n_rows, t.n_cols, &t.cells, targets))
+}
+
+/// Write a row-major `[n, d]` prediction matrix to CSV with a
+/// `p0..p{d-1}` header (`sketchboost predict --out`).
+pub fn write_predictions(path: &Path, preds: &[f32], d: usize) -> std::io::Result<()> {
+    assert!(d > 0 && preds.len() % d == 0, "predictions must be [n, {d}]");
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for j in 0..d {
+        write!(w, "p{j}{}", if j + 1 == d { "\n" } else { "," })?;
+    }
+    for row in preds.chunks(d) {
+        for (j, v) in row.iter().enumerate() {
+            write!(w, "{}{}", v, if j + 1 == d { "\n" } else { "," })?;
+        }
+    }
+    w.flush()
+}
+
 /// Write a dataset to CSV (features then targets), for `gen-data`.
 pub fn write_dataset(path: &Path, ds: &Dataset) -> std::io::Result<()> {
     let f = std::fs::File::create(path)?;
@@ -195,6 +221,25 @@ mod tests {
                 assert!((back.value(i, f) - ds.value(i, f)).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn feature_only_load_and_prediction_write() {
+        let dir = std::env::temp_dir().join("sb_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("feat.csv");
+        std::fs::write(&path, "a,b\n1.0,2.0\n3.0,nan\n").unwrap();
+        let ds = load_features(&path).unwrap();
+        assert_eq!((ds.n_rows, ds.n_features), (2, 2));
+        assert!(ds.value(1, 1).is_nan());
+
+        let out = dir.join("preds.csv");
+        write_predictions(&out, &[0.5, 0.5, 0.25, 0.75], 2).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "p0,p1");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[2], "0.25,0.75");
     }
 
     #[test]

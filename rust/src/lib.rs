@@ -28,6 +28,10 @@
 //! contiguous per-node ranges and pools all per-level buffers in a
 //! reusable [`tree::TreeWorkspace`], so steady-state tree building is
 //! allocation-free (DESIGN.md "Memory model & row partitioning").
+//! Inference runs through [`predict::FlatForest`] — the ensemble
+//! compiled into structure-of-arrays node tables, driven block-of-rows
+//! at a time in parallel, bit-identical to the per-row reference walker
+//! for every thread count (DESIGN.md "Inference model").
 //!
 //! ```no_run
 //! use sketchboost::prelude::*;
@@ -48,6 +52,7 @@ pub mod boosting;
 pub mod config;
 pub mod data;
 pub mod engine;
+pub mod predict;
 pub mod runtime;
 pub mod sketch;
 pub mod tree;
@@ -62,5 +67,6 @@ pub mod prelude {
     pub use crate::data::profiles;
     pub use crate::data::split;
     pub use crate::data::{BinnedDataset, Dataset, Targets};
+    pub use crate::predict::{FlatForest, PredictOptions};
     pub use crate::sketch::SketchConfig;
 }

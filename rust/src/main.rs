@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train              train on a dataset profile or CSV file
+//!   predict            batch-score a CSV with a saved model (FlatForest)
 //!   evaluate           load a saved model and score a dataset
 //!   gen-data           write a synthetic profile dataset to CSV
 //!   bench-synth        quick Figure-1-style scaling run
@@ -27,6 +28,7 @@ fn main() -> ExitCode {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let result = match cmd {
         "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
         "evaluate" => cmd_evaluate(&args),
         "cv" => cmd_cv(&args),
         "gen-data" => cmd_gen_data(&args),
@@ -52,6 +54,7 @@ fn top_usage() -> String {
      Usage: sketchboost <command> [options]\n\n\
      Commands:\n\
      \x20 train              train a model (see `train --help`)\n\
+     \x20 predict            batch-score a CSV with a saved model (see `predict --help`)\n\
      \x20 evaluate           score a saved model on a dataset\n\
      \x20 cv                 5-fold cross-validation (paper Appendix B.2)\n\
      \x20 gen-data           write a synthetic profile dataset to CSV\n\
@@ -196,8 +199,97 @@ fn cmd_evaluate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .ok_or("evaluate needs --model FILE (a model saved by train --out)")?;
     let model = Ensemble::load(std::path::Path::new(model_path))?;
     let ds = load_data(args)?;
-    let preds = model.predict_raw(&ds);
-    report_scores("saved-model", &preds, &ds, 0.0);
+    let opts = PredictOptions::threads(args.get_usize("threads", 1));
+    let (preds, secs) = time_once(|| model.predict_raw_with(&ds, &opts));
+    report_scores("saved-model", &preds, &ds, secs);
+    Ok(())
+}
+
+/// Batch inference: load a saved model, score a CSV (or synthetic
+/// profile) through the FlatForest path, report throughput, optionally
+/// write the predictions.
+fn cmd_predict(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "sketchboost predict --model FILE [options]",
+                "Batch-score a dataset with a saved model (batched parallel FlatForest).",
+                &[
+                    ("--model FILE", "model JSON saved by train --out (required)"),
+                    ("--data FILE", "feature-only CSV to score (all columns are features)"),
+                    ("--labeled", "the CSV also has target columns (with --task, --outputs); reports metrics"),
+                    ("--task S", "with --labeled: multiclass | multilabel | regression"),
+                    ("--outputs N", "with --labeled: number of target columns"),
+                    ("--profile NAME", "score a synthetic profile instead of a CSV (implies metrics)"),
+                    ("--threads N", "worker threads over row blocks; 0 = all cores (default 1)"),
+                    ("--block N", "rows per block (default 512)"),
+                    ("--raw", "write raw scores instead of probabilities"),
+                    ("--out FILE", "write predictions CSV (header p0..p{d-1})"),
+                ],
+            )
+        );
+        return Ok(());
+    }
+    let model_path = args
+        .get("model")
+        .ok_or("predict needs --model FILE (a model saved by train --out)")?;
+    let model = Ensemble::load(std::path::Path::new(model_path))?;
+    let opts = PredictOptions {
+        n_threads: args.get_usize("threads", 1),
+        block_rows: args.get_usize("block", 512),
+    };
+    // feature-only CSV by default; --labeled / --profile routes through
+    // the target-aware loader and also reports metrics
+    let labeled = args.flag("labeled") || args.get("data").is_none();
+    let ds = if labeled {
+        load_data(args)?
+    } else {
+        csv::load_features(std::path::Path::new(args.get("data").unwrap()))?
+    };
+    let flat = FlatForest::from_ensemble(&model);
+    if ds.n_features < flat.n_features_required() {
+        return Err(format!(
+            "dataset has {} feature columns but the model splits on feature index {} \
+             (needs >= {} features)",
+            ds.n_features,
+            flat.n_features_required() - 1,
+            flat.n_features_required(),
+        )
+        .into());
+    }
+    let (raw, secs) = time_once(|| flat.predict_raw(&ds, &opts));
+    println!(
+        "predict: n={} m={} d={} trees={} nodes={} threads={} block={} time={} ({:.1}k rows/s)",
+        ds.n_rows,
+        ds.n_features,
+        model.n_outputs,
+        flat.n_trees(),
+        flat.n_nodes(),
+        opts.n_threads,
+        opts.block_rows,
+        fmt_secs(secs),
+        ds.n_rows as f64 / secs.max(1e-12) / 1e3,
+    );
+    if labeled {
+        if ds.n_outputs() == model.n_outputs {
+            report_scores("predict", &raw, &ds, secs);
+        } else {
+            eprintln!(
+                "warning: dataset outputs ({}) != model outputs ({}); skipping metrics",
+                ds.n_outputs(),
+                model.n_outputs
+            );
+        }
+    }
+    if let Some(out) = args.get("out") {
+        let mut preds = raw;
+        if !args.flag("raw") {
+            model.apply_link(&mut preds);
+        }
+        csv::write_predictions(std::path::Path::new(out), &preds, model.n_outputs)?;
+        println!("predictions written to {out}");
+    }
     Ok(())
 }
 

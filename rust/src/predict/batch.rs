@@ -1,0 +1,295 @@
+//! Blocked, parallel batch prediction over a [`FlatForest`].
+//!
+//! The driver splits the input rows into cache-sized **blocks** and, for
+//! each block: gathers the block from the column-major [`Dataset`] into
+//! a row-major scratch tile, seeds the output rows with the base score,
+//! then drives the *whole block* through each tree in turn — so one
+//! tree's node arrays stay hot in cache across all rows of the block
+//! before the next tree is touched (the batch-traversal layout of
+//! Mitchell et al.'s GPU predictor, on CPU).
+//!
+//! ## Determinism contract
+//!
+//! Parallelism is over row blocks only. Block boundaries are a pure
+//! function of `(n_rows, block_rows)` (an atomic cursor advanced in
+//! `block_rows` steps from 0), each block writes a disjoint output
+//! range, and within a row every output cell accumulates its trees in
+//! ascending tree order — exactly the order the per-row reference
+//! walker uses. Results are therefore **bit-identical** to the naive
+//! walker for every thread count and block size
+//! (`rust/tests/predict_equivalence.rs` enforces this).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::data::dataset::Dataset;
+use crate::predict::flat::FlatForest;
+use crate::util::threading::{DisjointSlice, ThreadPool};
+
+/// Default rows per block: with the default feature widths a block tile
+/// stays ~64–128 KiB, inside L2, while amortizing the per-block gather.
+pub const DEFAULT_BLOCK_ROWS: usize = 512;
+
+/// Knobs for batched prediction.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictOptions {
+    /// Worker threads over row blocks; `0` = all cores. Bit-identical
+    /// output for every value (see module docs).
+    pub n_threads: usize,
+    /// Rows per block (the unit of work-stealing and cache blocking).
+    pub block_rows: usize,
+}
+
+impl Default for PredictOptions {
+    fn default() -> Self {
+        PredictOptions { n_threads: 1, block_rows: DEFAULT_BLOCK_ROWS }
+    }
+}
+
+impl PredictOptions {
+    /// Default blocking with an explicit thread count.
+    pub fn threads(n_threads: usize) -> PredictOptions {
+        PredictOptions { n_threads, ..PredictOptions::default() }
+    }
+}
+
+impl FlatForest {
+    /// The one block driver every batched output shares: validate input
+    /// width, split `0..n_rows` into `block_rows`-sized blocks via an
+    /// atomic cursor, gather each block into a row-major tile, and hand
+    /// `(tile, rows_in_block, dst)` to `per_block`, where `dst` is the
+    /// block's disjoint `width`-wide output range.
+    ///
+    /// All of the disjointness reasoning lives here, once: block starts
+    /// are distinct multiples of `block_rows`, so the row ranges — and
+    /// therefore the `out` ranges handed to `per_block` — are pairwise
+    /// disjoint across workers, which is exactly what
+    /// [`DisjointSlice::range_mut`] requires.
+    fn for_each_block<T, F>(
+        &self,
+        ds: &Dataset,
+        opts: &PredictOptions,
+        width: usize,
+        out: &mut [T],
+        per_block: F,
+    ) where
+        T: Send,
+        F: Fn(&[f32], usize, &mut [T]) + Sync,
+    {
+        let n = ds.n_rows;
+        assert_eq!(out.len(), n * width, "output buffer size");
+        assert!(
+            ds.n_features >= self.n_features_required(),
+            "dataset has {} features but the model splits on feature index {}",
+            ds.n_features,
+            self.n_features_required().saturating_sub(1),
+        );
+        if n == 0 || width == 0 {
+            return;
+        }
+        let m = ds.n_features;
+        let block = opts.block_rows.max(1);
+        let pool = ThreadPool::new(opts.n_threads);
+        let out_cells = DisjointSlice::new(out);
+        let cursor = AtomicUsize::new(0);
+        pool.broadcast(|_worker| {
+            let mut tile = vec![0.0f32; block * m];
+            loop {
+                let start = cursor.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + block).min(n);
+                gather_block(ds, start, end, &mut tile);
+                // Safety: pairwise-disjoint block ranges (see above).
+                let dst = unsafe { out_cells.range_mut(start * width..end * width) };
+                per_block(&tile, end - start, dst);
+            }
+        });
+    }
+
+    /// Raw scores, row-major `[n_rows, n_outputs]`, written into `out`.
+    pub fn predict_raw_into(&self, ds: &Dataset, opts: &PredictOptions, out: &mut [f32]) {
+        let d = self.n_outputs;
+        let m = ds.n_features;
+        self.for_each_block(ds, opts, d, out, |tile, rows, dst| {
+            for row in dst.chunks_mut(d) {
+                row.copy_from_slice(&self.base_score);
+            }
+            for t in 0..self.n_trees() {
+                for i in 0..rows {
+                    let leaf = self.leaf_of(t, &tile[i * m..(i + 1) * m]);
+                    self.add_leaf(t, leaf, &mut dst[i * d..(i + 1) * d]);
+                }
+            }
+        });
+    }
+
+    /// Raw scores, row-major `[n_rows, n_outputs]`.
+    pub fn predict_raw(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<f32> {
+        let mut out = vec![0.0f32; ds.n_rows * self.n_outputs];
+        self.predict_raw_into(ds, opts, &mut out);
+        out
+    }
+
+    /// Leaf index of every row in every tree, row-major
+    /// `[n_rows, n_trees]` — the batched "apply" output.
+    pub fn predict_leaf_indices(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<u32> {
+        let nt = self.n_trees();
+        let m = ds.n_features;
+        let mut out = vec![0u32; ds.n_rows * nt];
+        self.for_each_block(ds, opts, nt, &mut out, |tile, rows, dst| {
+            for t in 0..nt {
+                for i in 0..rows {
+                    dst[i * nt + t] = self.leaf_of(t, &tile[i * m..(i + 1) * m]) as u32;
+                }
+            }
+        });
+        out
+    }
+}
+
+/// Gather rows `start..end` of the column-major dataset into the
+/// row-major `tile` (`tile[i * m + f]` = feature `f` of row `start + i`).
+#[inline]
+fn gather_block(ds: &Dataset, start: usize, end: usize, tile: &mut [f32]) {
+    let m = ds.n_features;
+    for f in 0..m {
+        let col = &ds.column(f)[start..end];
+        for (i, &v) in col.iter().enumerate() {
+            tile[i * m + f] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Targets;
+
+    /// Tiny dataset with adversarial block edges: 23 rows, 3 features.
+    fn toy_ds() -> Dataset {
+        let n = 23usize;
+        let mut cols = vec![0.0f32; n * 3];
+        for f in 0..3 {
+            for i in 0..n {
+                cols[f * n + i] = (i as f32) * 0.37 - (f as f32) * 1.1;
+            }
+        }
+        cols[5] = f32::NAN; // feature 0, row 5
+        Dataset::new(n, 3, cols, Targets::Regression { values: vec![0.0; n * 2], n_targets: 2 })
+    }
+
+    fn toy_forest() -> (crate::boosting::ensemble::Ensemble, FlatForest) {
+        use crate::boosting::ensemble::{Ensemble, TrainHistory};
+        use crate::boosting::losses::LossKind;
+        use crate::tree::tree::{encode_leaf, Tree, TreeNode};
+        let t0 = Tree {
+            n_outputs: 2,
+            nodes: vec![
+                TreeNode { feature: 0, bin: 0, threshold: 2.0, left: encode_leaf(0), right: 1, gain: 1.0 },
+                TreeNode { feature: 2, bin: 0, threshold: 1.5, left: encode_leaf(1), right: encode_leaf(2), gain: 0.4 },
+            ],
+            leaf_values: vec![0.1, -0.1, 0.2, -0.2, 0.3, -0.3],
+            n_leaves: 3,
+        };
+        let t1 = Tree {
+            n_outputs: 2,
+            nodes: vec![TreeNode {
+                feature: 1,
+                bin: 0,
+                threshold: 0.0,
+                left: encode_leaf(0),
+                right: encode_leaf(1),
+                gain: 0.2,
+            }],
+            leaf_values: vec![-1.0, 1.0, 1.0, -1.0],
+            n_leaves: 2,
+        };
+        let model = Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 2,
+            base_score: vec![0.5, -0.5],
+            trees: vec![t0, t1],
+            history: TrainHistory::default(),
+        };
+        let ff = FlatForest::from_ensemble(&model);
+        (model, ff)
+    }
+
+    /// Per-row reference: base score + trees in order, one row at a time.
+    fn reference(model: &crate::boosting::ensemble::Ensemble, ds: &Dataset) -> Vec<f32> {
+        let d = model.n_outputs;
+        let mut out = vec![0.0f32; ds.n_rows * d];
+        for i in 0..ds.n_rows {
+            let row = ds.row(i);
+            let o = &mut out[i * d..(i + 1) * d];
+            o.copy_from_slice(&model.base_score);
+            for t in &model.trees {
+                t.predict_into(&row, o);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matches_reference_for_ragged_blocks_and_threads() {
+        let ds = toy_ds();
+        let (model, ff) = toy_forest();
+        let want = reference(&model, &ds);
+        for threads in [1usize, 2, 4] {
+            for block in [1usize, 4, 7, 23, 64] {
+                let got = ff.predict_raw(&ds, &PredictOptions { n_threads: threads, block_rows: block });
+                assert_eq!(got, want, "threads={threads} block={block}");
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_indices_match_per_row_walker() {
+        let ds = toy_ds();
+        let (model, ff) = toy_forest();
+        let got = ff.predict_leaf_indices(&ds, &PredictOptions { n_threads: 2, block_rows: 5 });
+        assert_eq!(got.len(), ds.n_rows * 2);
+        for i in 0..ds.n_rows {
+            let row = ds.row(i);
+            for (t, tree) in model.trees.iter().enumerate() {
+                assert_eq!(got[i * 2 + t] as usize, tree.leaf_for_raw(&row), "row {i} tree {t}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "splits on feature index")]
+    fn too_narrow_dataset_is_rejected_before_any_worker_runs() {
+        let (_, ff) = toy_forest(); // splits reference feature 2
+        let ds = Dataset::new(
+            4,
+            2,
+            vec![0.0; 8],
+            Targets::Regression { values: vec![0.0; 8], n_targets: 2 },
+        );
+        let _ = ff.predict_raw(&ds, &PredictOptions::default());
+    }
+
+    #[test]
+    fn empty_dataset_is_fine() {
+        let (_, ff) = toy_forest();
+        let ds = Dataset::new(0, 3, vec![], Targets::Regression { values: vec![], n_targets: 2 });
+        assert!(ff.predict_raw(&ds, &PredictOptions::default()).is_empty());
+        assert!(ff.predict_leaf_indices(&ds, &PredictOptions::default()).is_empty());
+    }
+
+    #[test]
+    fn gather_block_is_row_major() {
+        let ds = toy_ds();
+        let mut tile = vec![0.0f32; 4 * 3];
+        gather_block(&ds, 2, 6, &mut tile);
+        for i in 0..4 {
+            for f in 0..3 {
+                let want = ds.value(2 + i, f);
+                let got = tile[i * 3 + f];
+                assert!(got == want || (got.is_nan() && want.is_nan()));
+            }
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! The ensemble compiled into structure-of-arrays form.
+//!
+//! [`FlatForest`] is the serving-side twin of the training-side
+//! [`Tree`]/[`Ensemble`] representation: every tree's split nodes are
+//! packed back-to-back into four parallel arrays (feature / threshold /
+//! left / right), the leaf-value matrices are concatenated into one
+//! contiguous buffer, and per-tree offset tables say where each tree's
+//! nodes and values start. Traversal touches four small flat arrays
+//! instead of chasing 24-byte `TreeNode` structs, and the layout is the
+//! stepping stone to an XLA/GPU predict path (the same arrays upload as
+//! device tensors).
+//!
+//! Routing semantics are *identical* to [`Tree::leaf_for_raw`]: go left
+//! iff `x <= threshold` or `x` is NaN (the binning policy sends NaN to
+//! bin 0). `rust/tests/predict_equivalence.rs` pins bitwise equality of
+//! the two paths across sketches, depths, losses, and thread counts.
+
+use crate::baselines::one_vs_all::OvaModel;
+use crate::boosting::ensemble::Ensemble;
+use crate::tree::tree::Tree;
+
+/// A tree ensemble compiled for batched inference (see module docs).
+///
+/// Supports both tree shapes the repo trains: the paper's single-tree
+/// strategy (vector leaves of `n_outputs` values, added to the whole
+/// output row) and the one-vs-all baseline (scalar leaves added to one
+/// output column).
+#[derive(Clone, Debug)]
+pub struct FlatForest {
+    pub n_outputs: usize,
+    pub base_score: Vec<f32>,
+    // --- per-node SoA, all trees packed back-to-back ---------------------
+    feature: Vec<u32>,
+    threshold: Vec<f32>,
+    /// children keep the tree-local encoding: `>= 0` is a node index
+    /// relative to the tree's first node, `< 0` encodes leaf `!child`.
+    left: Vec<i32>,
+    right: Vec<i32>,
+    // --- per-tree offset tables (len n_trees + 1) ------------------------
+    node_offset: Vec<u32>,
+    value_offset: Vec<u32>,
+    /// `-1` = vector leaf (`n_outputs` values per leaf); `j >= 0` =
+    /// scalar leaf added into output column `j` (one-vs-all trees).
+    out_col: Vec<i32>,
+    /// all trees' leaf values, concatenated (`value_offset` indexes in)
+    leaf_values: Vec<f32>,
+    /// 1 + the largest feature index any node references (0 if all
+    /// trees are stumps); prediction validates input width against it
+    n_features_required: usize,
+}
+
+impl FlatForest {
+    fn empty(n_outputs: usize, base_score: Vec<f32>) -> FlatForest {
+        assert_eq!(base_score.len(), n_outputs, "base score width");
+        FlatForest {
+            n_outputs,
+            base_score,
+            feature: Vec::new(),
+            threshold: Vec::new(),
+            left: Vec::new(),
+            right: Vec::new(),
+            node_offset: vec![0],
+            value_offset: vec![0],
+            out_col: Vec::new(),
+            leaf_values: Vec::new(),
+            n_features_required: 0,
+        }
+    }
+
+    fn reserve(&mut self, n_nodes: usize, n_values: usize, n_trees: usize) {
+        self.feature.reserve(n_nodes);
+        self.threshold.reserve(n_nodes);
+        self.left.reserve(n_nodes);
+        self.right.reserve(n_nodes);
+        self.leaf_values.reserve(n_values);
+        self.node_offset.reserve(n_trees);
+        self.value_offset.reserve(n_trees);
+        self.out_col.reserve(n_trees);
+    }
+
+    /// Append one tree. `out_col = None` for a vector-leaf tree (must
+    /// have `tree.n_outputs == self.n_outputs`), `Some(j)` for a
+    /// univariate tree whose scalar leaves add into output column `j`.
+    fn push_tree(&mut self, tree: &Tree, out_col: Option<usize>) {
+        match out_col {
+            None => assert_eq!(tree.n_outputs, self.n_outputs, "vector tree width"),
+            Some(j) => {
+                assert_eq!(tree.n_outputs, 1, "one-vs-all trees are univariate");
+                assert!(j < self.n_outputs, "output column {j} out of range");
+            }
+        }
+        debug_assert!(tree.validate().is_ok());
+        for nd in &tree.nodes {
+            self.feature.push(nd.feature);
+            self.threshold.push(nd.threshold);
+            self.left.push(nd.left);
+            self.right.push(nd.right);
+            self.n_features_required = self.n_features_required.max(nd.feature as usize + 1);
+        }
+        self.leaf_values.extend_from_slice(&tree.leaf_values);
+        self.node_offset.push(self.feature.len() as u32);
+        self.value_offset.push(self.leaf_values.len() as u32);
+        self.out_col.push(out_col.map_or(-1, |j| j as i32));
+    }
+
+    /// Compile a trained single-tree-strategy model.
+    pub fn from_ensemble(model: &Ensemble) -> FlatForest {
+        let mut ff = FlatForest::empty(model.n_outputs, model.base_score.clone());
+        ff.reserve(
+            model.trees.iter().map(|t| t.nodes.len()).sum(),
+            model.trees.iter().map(|t| t.leaf_values.len()).sum(),
+            model.trees.len(),
+        );
+        for tree in &model.trees {
+            ff.push_tree(tree, None);
+        }
+        ff
+    }
+
+    /// Compile a one-vs-all baseline model (univariate trees tagged with
+    /// their output column).
+    pub fn from_ova(model: &OvaModel) -> FlatForest {
+        let mut ff = FlatForest::empty(model.n_outputs, model.base_score.clone());
+        ff.reserve(
+            model.trees.iter().map(|(_, t)| t.nodes.len()).sum(),
+            model.trees.iter().map(|(_, t)| t.leaf_values.len()).sum(),
+            model.trees.len(),
+        );
+        for (j, tree) in &model.trees {
+            ff.push_tree(tree, Some(*j as usize));
+        }
+        ff
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.out_col.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    /// Minimum input feature width any prediction row must have
+    /// (1 + the largest feature index referenced by any split node).
+    pub fn n_features_required(&self) -> usize {
+        self.n_features_required
+    }
+
+    /// Leaf index of `row` (row-major feature values) in tree `t` —
+    /// the flat-array mirror of [`Tree::leaf_for_raw`] (NaN goes left).
+    #[inline]
+    pub fn leaf_of(&self, t: usize, row: &[f32]) -> usize {
+        let base = self.node_offset[t] as usize;
+        if base == self.node_offset[t + 1] as usize {
+            return 0; // stump: single leaf
+        }
+        let mut child: i32 = 0; // tree-local node index
+        loop {
+            let i = base + child as usize;
+            let x = row[self.feature[i] as usize];
+            let next = if x.is_nan() || x <= self.threshold[i] {
+                self.left[i]
+            } else {
+                self.right[i]
+            };
+            if next < 0 {
+                return !next as usize;
+            }
+            child = next;
+        }
+    }
+
+    /// Add tree `t`'s contribution for `leaf` into the output row
+    /// (`out.len() == n_outputs`).
+    #[inline]
+    pub fn add_leaf(&self, t: usize, leaf: usize, out: &mut [f32]) {
+        let vo = self.value_offset[t] as usize;
+        let col = self.out_col[t];
+        if col < 0 {
+            let d = self.n_outputs;
+            let v = &self.leaf_values[vo + leaf * d..vo + (leaf + 1) * d];
+            for (o, &lv) in out.iter_mut().zip(v.iter()) {
+                *o += lv;
+            }
+        } else {
+            out[col as usize] += self.leaf_values[vo + leaf];
+        }
+    }
+
+    /// Number of leaves in tree `t`.
+    pub fn n_leaves(&self, t: usize) -> usize {
+        let values = (self.value_offset[t + 1] - self.value_offset[t]) as usize;
+        let width = if self.out_col[t] < 0 { self.n_outputs } else { 1 };
+        values / width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boosting::ensemble::TrainHistory;
+    use crate::boosting::losses::LossKind;
+    use crate::tree::tree::{encode_leaf, TreeNode};
+
+    /// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2), d = 2
+    fn toy_tree() -> Tree {
+        Tree {
+            n_outputs: 2,
+            nodes: vec![
+                TreeNode { feature: 0, bin: 3, threshold: 0.5, left: encode_leaf(0), right: 1, gain: 1.0 },
+                TreeNode { feature: 1, bin: 1, threshold: 2.0, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
+            ],
+            leaf_values: vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0],
+            n_leaves: 3,
+        }
+    }
+
+    fn toy_model() -> Ensemble {
+        Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 2,
+            base_score: vec![0.25, -0.25],
+            trees: vec![
+                toy_tree(),
+                Tree { n_outputs: 2, nodes: vec![], leaf_values: vec![0.5, 0.5], n_leaves: 1 },
+            ],
+            history: TrainHistory::default(),
+        }
+    }
+
+    #[test]
+    fn routing_matches_per_row_walker() {
+        let model = toy_model();
+        let ff = FlatForest::from_ensemble(&model);
+        assert_eq!(ff.n_trees(), 2);
+        assert_eq!(ff.n_nodes(), 2);
+        assert_eq!(ff.n_leaves(0), 3);
+        assert_eq!(ff.n_leaves(1), 1);
+        for row in [
+            vec![0.0f32, 0.0],
+            vec![1.0, 1.0],
+            vec![1.0, 5.0],
+            vec![0.5, 9.0],          // boundary goes left
+            vec![f32::NAN, 9.0],     // NaN left at the root
+            vec![1.0, f32::NAN],     // NaN left at the inner node
+        ] {
+            for t in 0..2 {
+                assert_eq!(
+                    ff.leaf_of(t, &row),
+                    model.trees[t].leaf_for_raw(&row),
+                    "row {row:?} tree {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tracks_required_feature_width() {
+        let model = toy_model();
+        let ff = FlatForest::from_ensemble(&model);
+        assert_eq!(ff.n_features_required(), 2); // splits on f0 and f1
+        let stump_only = Ensemble {
+            trees: vec![Tree { n_outputs: 2, nodes: vec![], leaf_values: vec![0.0, 0.0], n_leaves: 1 }],
+            ..model
+        };
+        assert_eq!(FlatForest::from_ensemble(&stump_only).n_features_required(), 0);
+    }
+
+    #[test]
+    fn add_leaf_accumulates_vector_values() {
+        let ff = FlatForest::from_ensemble(&toy_model());
+        let mut out = vec![10.0f32, 20.0];
+        ff.add_leaf(0, 2, &mut out); // leaf2 = [3, -3]
+        assert_eq!(out, vec![13.0, 17.0]);
+        ff.add_leaf(1, 0, &mut out); // stump leaf = [0.5, 0.5]
+        assert_eq!(out, vec![13.5, 17.5]);
+    }
+
+    #[test]
+    fn ova_trees_write_one_column() {
+        let uni = Tree {
+            n_outputs: 1,
+            nodes: vec![TreeNode {
+                feature: 0,
+                bin: 0,
+                threshold: 0.0,
+                left: encode_leaf(0),
+                right: encode_leaf(1),
+                gain: 0.0,
+            }],
+            leaf_values: vec![-5.0, 5.0],
+            n_leaves: 2,
+        };
+        let ova = OvaModel {
+            loss: LossKind::MSE,
+            n_outputs: 3,
+            base_score: vec![0.0; 3],
+            trees: vec![(2, uni.clone()), (0, uni)],
+            history: TrainHistory::default(),
+        };
+        let ff = FlatForest::from_ova(&ova);
+        assert_eq!(ff.n_trees(), 2);
+        assert_eq!(ff.n_leaves(0), 2);
+        let mut out = vec![0.0f32; 3];
+        ff.add_leaf(0, ff.leaf_of(0, &[1.0]), &mut out); // right leaf -> col 2
+        ff.add_leaf(1, ff.leaf_of(1, &[-1.0]), &mut out); // left leaf -> col 0
+        assert_eq!(out, vec![-5.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_width_mismatch() {
+        let mut ff = FlatForest::empty(3, vec![0.0; 3]);
+        ff.push_tree(&toy_tree(), None); // d = 2 tree into d = 3 forest
+    }
+}

@@ -1,0 +1,19 @@
+//! Batched parallel inference.
+//!
+//! Training optimizes the *fit* hot path; this module is the serving
+//! half: [`FlatForest`] compiles a trained [`Ensemble`](crate::boosting::Ensemble)
+//! (or one-vs-all baseline) into structure-of-arrays node tables, and
+//! the blocked batch driver ([`FlatForest::predict_raw_into`]) streams
+//! cache-sized row blocks through all trees, parallelized over blocks
+//! with the deterministic [`ThreadPool`](crate::util::threading::ThreadPool).
+//!
+//! Outputs are bit-identical to the per-row reference walker
+//! ([`Ensemble::predict_raw_naive`](crate::boosting::Ensemble::predict_raw_naive))
+//! for every thread count and block size. See DESIGN.md section
+//! "Inference model (FlatForest)".
+
+pub mod batch;
+pub mod flat;
+
+pub use batch::{PredictOptions, DEFAULT_BLOCK_ROWS};
+pub use flat::FlatForest;

@@ -1,0 +1,202 @@
+//! The batched FlatForest inference path must be **bit-identical** to
+//! the per-row reference walker (`predict_raw_naive`) — across every
+//! sketch strategy, tree depth 1–6, 1/2/4 prediction threads, all three
+//! losses, the one-vs-all baseline, the leaf-index output, and a
+//! save→load→predict round trip. NaN routing (left at every node, the
+//! binning policy) is pinned by a handcrafted-tree unit test.
+
+use sketchboost::baselines::one_vs_all::fit_one_vs_all;
+use sketchboost::boosting::ensemble::{Ensemble, TrainHistory};
+use sketchboost::data::dataset::{Dataset, Targets};
+use sketchboost::data::synthetic::{make_multiclass, make_multilabel, make_multitask, FeatureSpec};
+use sketchboost::predict::{FlatForest, PredictOptions};
+use sketchboost::prelude::*;
+use sketchboost::tree::tree::{encode_leaf, Tree, TreeNode};
+
+/// All five sketch strategies (k = 2 keeps them all active at d = 5).
+fn sketches() -> [SketchConfig; 5] {
+    [
+        SketchConfig::None,
+        SketchConfig::TopOutputs { k: 2 },
+        SketchConfig::RandomSampling { k: 2 },
+        SketchConfig::RandomProjection { k: 2 },
+        SketchConfig::TruncatedSvd { k: 2, iters: 4 },
+    ]
+}
+
+fn assert_bits_eq(want: &[f32], got: &[f32], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{ctx}: cell {i} differs ({a:?} vs {b:?})"
+        );
+    }
+}
+
+/// Train at every (sketch, depth) cell and compare flat vs naive at
+/// 1/2/4 threads with a ragged block size plus the default blocking.
+fn check_matrix(mut cfg: GBDTConfig, ds: &Dataset, loss_name: &str) {
+    cfg.n_rounds = 4;
+    cfg.learning_rate = 0.3;
+    cfg.max_bins = 16;
+    for sketch in sketches() {
+        for depth in 1..=6 {
+            let mut c = cfg.clone();
+            c.sketch = sketch;
+            c.max_depth = depth;
+            let model = GBDT::fit(&c, ds, None);
+            let naive = model.predict_raw_naive(ds);
+            let flat = FlatForest::from_ensemble(&model);
+            for threads in [1usize, 2, 4] {
+                for block in [37usize, 512] {
+                    let got = flat.predict_raw(
+                        ds,
+                        &PredictOptions { n_threads: threads, block_rows: block },
+                    );
+                    assert_bits_eq(
+                        &naive,
+                        &got,
+                        &format!(
+                            "{loss_name} sketch={} depth={depth} t={threads} block={block}",
+                            c.sketch.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_matches_naive_multiclass_ce() {
+    let ds = make_multiclass(240, FeatureSpec::guyon(10), 5, 1.5, 11);
+    check_matrix(GBDTConfig::multiclass(5), &ds, "ce");
+}
+
+#[test]
+fn flat_matches_naive_multilabel_bce() {
+    let ds = make_multilabel(240, FeatureSpec::guyon(10), 5, 2, 12);
+    check_matrix(GBDTConfig::multilabel(5), &ds, "bce");
+}
+
+#[test]
+fn flat_matches_naive_multitask_mse() {
+    let ds = make_multitask(240, FeatureSpec::guyon(10), 5, 2, 0.2, 13);
+    check_matrix(GBDTConfig::multitask(5), &ds, "mse");
+}
+
+#[test]
+fn ova_flat_matches_naive_across_threads() {
+    let ds = make_multiclass(300, FeatureSpec::guyon(8), 4, 2.0, 14);
+    let mut cfg = GBDTConfig::multiclass(4);
+    cfg.n_rounds = 6;
+    cfg.max_depth = 4;
+    cfg.max_bins = 16;
+    let model = fit_one_vs_all(&cfg, &ds, None);
+    let naive = model.predict_raw_naive(&ds);
+    for threads in [1usize, 2, 4] {
+        let got = model
+            .predict_raw_with(&ds, &PredictOptions { n_threads: threads, block_rows: 53 });
+        assert_bits_eq(&naive, &got, &format!("ova t={threads}"));
+    }
+}
+
+#[test]
+fn leaf_indices_flat_matches_naive() {
+    let ds = make_multiclass(250, FeatureSpec::guyon(10), 4, 1.5, 15);
+    let mut cfg = GBDTConfig::multiclass(4);
+    cfg.n_rounds = 6;
+    cfg.max_depth = 5;
+    cfg.max_bins = 16;
+    let model = GBDT::fit(&cfg, &ds, None);
+    let naive = model.predict_leaf_indices_naive(&ds);
+    for threads in [1usize, 2, 4] {
+        let got = model
+            .predict_leaf_indices_with(&ds, &PredictOptions { n_threads: threads, block_rows: 41 });
+        assert_eq!(naive, got, "leaf indices t={threads}");
+    }
+}
+
+#[test]
+fn save_load_predict_round_trip_is_bit_identical() {
+    let ds = make_multiclass(260, FeatureSpec::guyon(10), 5, 1.5, 16);
+    let mut cfg = GBDTConfig::multiclass(5);
+    cfg.n_rounds = 8;
+    cfg.max_depth = 4;
+    cfg.max_bins = 16;
+    cfg.sketch = SketchConfig::RandomProjection { k: 2 };
+    let model = GBDT::fit(&cfg, &ds, None);
+    let naive = model.predict_raw_naive(&ds);
+
+    let dir = std::env::temp_dir().join("sb_predict_equiv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    model.save(&path).unwrap();
+    let loaded = Ensemble::load(&path).unwrap();
+
+    // the JSON round trip preserves every f32 bit pattern, so the flat
+    // path over the reloaded model must reproduce the original bits
+    let flat = FlatForest::from_ensemble(&loaded);
+    for threads in [1usize, 4] {
+        let got = flat.predict_raw(&ds, &PredictOptions::threads(threads));
+        assert_bits_eq(&naive, &got, &format!("save/load t={threads}"));
+    }
+    assert_bits_eq(&naive, &loaded.predict_raw_naive(&ds), "save/load naive");
+}
+
+/// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2) — NaN must go left
+/// at *every* node in both paths (matching the NaN -> bin 0 policy).
+#[test]
+fn nan_features_route_left_identically() {
+    let tree = Tree {
+        n_outputs: 2,
+        nodes: vec![
+            TreeNode { feature: 0, bin: 3, threshold: 0.5, left: encode_leaf(0), right: 1, gain: 1.0 },
+            TreeNode { feature: 1, bin: 1, threshold: 2.0, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
+        ],
+        leaf_values: vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0],
+        n_leaves: 3,
+    };
+    let model = Ensemble {
+        loss: LossKind::MSE,
+        n_outputs: 2,
+        base_score: vec![0.0, 0.0],
+        trees: vec![tree],
+        history: TrainHistory::default(),
+    };
+    // column-major features for rows:
+    // [NaN, 9]   -> NaN at the root        -> leaf 0
+    // [1, NaN]   -> NaN at the inner node  -> leaf 1
+    // [NaN, NaN] -> NaN everywhere         -> leaf 0
+    // [1, 5]     -> no NaN                 -> leaf 2
+    let features = vec![
+        f32::NAN, 1.0, f32::NAN, 1.0, // feature 0
+        9.0, f32::NAN, f32::NAN, 5.0, // feature 1
+    ];
+    let ds = Dataset::new(
+        4,
+        2,
+        features,
+        Targets::Regression { values: vec![0.0; 8], n_targets: 2 },
+    );
+
+    let flat = FlatForest::from_ensemble(&model);
+    for (row, want_leaf) in [(0usize, 0usize), (1, 1), (2, 0), (3, 2)] {
+        assert_eq!(model.trees[0].leaf_for_raw(&ds.row(row)), want_leaf, "naive row {row}");
+        assert_eq!(flat.leaf_of(0, &ds.row(row)), want_leaf, "flat row {row}");
+    }
+    for threads in [1usize, 2] {
+        let opts = PredictOptions { n_threads: threads, block_rows: 3 };
+        assert_bits_eq(
+            &model.predict_raw_naive(&ds),
+            &flat.predict_raw(&ds, &opts),
+            &format!("nan t={threads}"),
+        );
+        assert_eq!(
+            model.predict_leaf_indices_naive(&ds),
+            flat.predict_leaf_indices(&ds, &opts),
+            "nan leaf indices t={threads}"
+        );
+    }
+}
