@@ -1,0 +1,175 @@
+//! A user-defined objective + metric, trained through the open
+//! training API — without touching a single file in `src/boosting/`.
+//!
+//! Quantile (pinball) regression is the canonical "GBDT framework
+//! openness" test: the loss has a zero second derivative, an asymmetric
+//! gradient, and a base score that is a per-target quantile rather than
+//! a mean — none of which the built-in `LossKind` enum can express.
+//! Here it is as a plain `impl Objective` handed to the `Booster`
+//! builder, composed with early stopping, periodic logging, and
+//! checkpointing, then saved and re-loaded to show the round trip.
+//!
+//!     cargo run --release --example custom_objective
+
+use sketchboost::data::profiles::Profile;
+use sketchboost::prelude::*;
+
+/// Pinball loss at quantile `tau`: L(y, p) = (y-p)·tau if p <= y,
+/// (p-y)·(1-tau) otherwise. Minimized by the tau-quantile of y | x.
+struct QuantileLoss {
+    tau: f32,
+}
+
+impl Objective for QuantileLoss {
+    fn name(&self) -> &str {
+        "quantile"
+    }
+
+    /// Per-target empirical tau-quantile of the training targets.
+    fn base_score(&self, targets: &Targets, d: usize) -> Vec<f32> {
+        let values = match targets {
+            Targets::Regression { values, n_targets } => {
+                assert_eq!(*n_targets, d);
+                values
+            }
+            _ => panic!("quantile loss needs regression targets"),
+        };
+        let n = values.len() / d;
+        let idx = (((n - 1) as f32) * self.tau).round() as usize;
+        (0..d)
+            .map(|j| {
+                let mut col: Vec<f32> = (0..n).map(|i| values[i * d + j]).collect();
+                col.sort_by(f32::total_cmp);
+                col[idx]
+            })
+            .collect()
+    }
+
+    /// Asymmetric constant gradient; constant hessian (the standard
+    /// convention for zero-curvature losses — the leaf value becomes
+    /// -sum(g)/(count + lambda), a step toward the leaf's quantile).
+    fn grad_hess(
+        &mut self,
+        preds: &[f32],
+        targets: &Targets,
+        _d: usize,
+        g: &mut [f32],
+        h: &mut [f32],
+    ) -> f64 {
+        let values = match targets {
+            Targets::Regression { values, .. } => values,
+            _ => panic!("quantile loss needs regression targets"),
+        };
+        let tau = self.tau;
+        let mut loss = 0.0f64;
+        for i in 0..values.len() {
+            let under = preds[i] <= values[i];
+            g[i] = if under { -tau } else { 1.0 - tau };
+            h[i] = 1.0;
+            let e = (values[i] - preds[i]) as f64;
+            loss += if under { tau as f64 * e } else { (tau as f64 - 1.0) * e };
+        }
+        loss / values.len() as f64
+    }
+
+    // link stays identity (the LossKind::MSE default), which is also
+    // what saved-model JSON will carry for apply_link after load
+
+    fn default_metric(&self) -> Box<dyn EvalMetric> {
+        Box::new(PinballMetric { tau: self.tau })
+    }
+}
+
+/// Mean pinball loss — the matching evaluation metric, also defined
+/// entirely outside the crate core.
+struct PinballMetric {
+    tau: f32,
+}
+
+impl EvalMetric for PinballMetric {
+    fn name(&self) -> &str {
+        "pinball"
+    }
+
+    fn eval(&self, preds: &[f32], targets: &Targets) -> f64 {
+        let values = match targets {
+            Targets::Regression { values, .. } => values,
+            _ => panic!("pinball needs regression targets"),
+        };
+        let tau = self.tau as f64;
+        let mut total = 0.0f64;
+        for i in 0..values.len() {
+            let e = values[i] as f64 - preds[i] as f64;
+            total += if e >= 0.0 { tau * e } else { (tau - 1.0) * e };
+        }
+        total / values.len() as f64
+    }
+}
+
+/// Fraction of target cells at or below the predicted quantile (should
+/// land near tau if the quantile is calibrated).
+fn coverage(preds: &[f32], targets: &Targets) -> f64 {
+    let values = match targets {
+        Targets::Regression { values, .. } => values,
+        _ => unreachable!(),
+    };
+    let hits = values.iter().zip(preds).filter(|(y, p)| *y <= *p).count();
+    hits as f64 / values.len() as f64
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // scm20d-like multitask regression profile, small enough for CI
+    let ds = Profile::by_name("scm20d").unwrap().generate_sized(2500, 3);
+    let (train, valid) = split::train_test_split(&ds, 0.25, 1);
+    let d = ds.n_outputs();
+    println!(
+        "quantile regression on scm20d-like synthetic: {} train rows, {} targets\n",
+        train.n_rows, d
+    );
+
+    let dir = std::env::temp_dir().join("sb_custom_objective");
+    std::fs::create_dir_all(&dir)?;
+
+    for tau in [0.1f32, 0.5, 0.9] {
+        let mut cfg = GBDTConfig::multitask(d);
+        cfg.n_rounds = 80;
+        cfg.learning_rate = 0.15;
+        cfg.max_depth = 4;
+        cfg.sketch = SketchConfig::TopOutputs { k: 4 };
+
+        let ck = dir.join(format!("q{:02}_r{{round}}.json", (tau * 100.0) as u32));
+        let model = Booster::new(&cfg)
+            .objective(QuantileLoss { tau })
+            .metric(PinballMetric { tau })
+            .callback(EarlyStopping::new(15))
+            .callback(EvalLogger::every(40))
+            .callback(Checkpoint::every(ck.to_str().unwrap(), 40))
+            .fit(&train, Some(&valid));
+
+        let preds = model.predict(&valid); // identity link for quantiles
+        let pin = PinballMetric { tau }.eval(&preds, &valid.targets);
+        let cov = coverage(&preds, &valid.targets);
+        println!(
+            "tau = {tau:.1}: {} trees, valid pinball = {pin:.4}, coverage = {cov:.3} \
+             (target {tau:.1})",
+            model.n_trees()
+        );
+
+        // the round trip: saved custom-objective models re-load and
+        // predict identically (the model JSON carries the objective's
+        // link_kind — identity here)
+        let path = dir.join(format!("quantile_{:02}.json", (tau * 100.0) as u32));
+        model.save(&path)?;
+        let back = Ensemble::load(&path)?;
+        assert_eq!(back.predict_raw(&valid), model.predict_raw(&valid));
+
+        // sanity: the learned quantile must order with tau and roughly
+        // calibrate (quantile crossing aside)
+        assert!(
+            (cov - tau as f64).abs() < 0.2,
+            "tau {tau}: coverage {cov} far from target"
+        );
+    }
+    println!("\nOK: custom objective trained, checkpointed, and round-tripped");
+    Ok(())
+}

@@ -15,7 +15,11 @@
 //! run through the same pooled [`crate::tree::TreeWorkspace`] training
 //! core (range-partitioned rows, reused histogram buffers), so the
 //! GBDT-MO comparison measures the hessian-histogram cost difference,
-//! not allocator noise.
+//! not allocator noise. Because these are plain [`GBDTConfig`]s, they
+//! compose with the open training API too: feed one to
+//! [`crate::boosting::booster::Booster`] to train a GBDT-MO baseline
+//! with callbacks (checkpointing, time budgets) — bit-identical to
+//! `GBDT::fit` on the same config, as the test below pins.
 
 use crate::boosting::trainer::GBDTConfig;
 use crate::data::dataset::Dataset;
@@ -84,5 +88,19 @@ mod tests {
         assert!(
             m.history.train_loss.first().unwrap() > m.history.train_loss.last().unwrap()
         );
+    }
+
+    #[test]
+    fn gbdt_mo_config_through_booster_matches_gbdt_fit() {
+        use crate::boosting::booster::Booster;
+        let ds = make_multitask(200, FeatureSpec::guyon(6), 4, 2, 0.1, 3);
+        let mut cfg = gbdt_mo_full_config(&ds);
+        cfg.n_rounds = 6;
+        cfg.max_depth = 3;
+        cfg.max_bins = 16;
+        let a = GBDT::fit(&cfg, &ds, None);
+        let b = Booster::new(&cfg).fit(&ds, None);
+        assert_eq!(a.trees, b.trees);
+        assert_eq!(a.base_score, b.base_score);
     }
 }

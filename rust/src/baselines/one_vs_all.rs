@@ -9,7 +9,6 @@
 
 use crate::boosting::ensemble::TrainHistory;
 use crate::boosting::losses::LossKind;
-use crate::boosting::metrics::Metric;
 use crate::boosting::trainer::GBDTConfig;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Dataset;
@@ -88,11 +87,7 @@ pub fn fit_one_vs_all_with_engine(
     let n = train.n_rows;
     let d = cfg.n_outputs;
     let binned = BinnedDataset::from_dataset(train, cfg.max_bins);
-    let metric = match cfg.loss {
-        LossKind::MulticlassCE => Metric::CrossEntropy,
-        LossKind::BCE => Metric::BceLogLoss,
-        LossKind::MSE => Metric::Rmse,
-    };
+    let metric = cfg.metric();
     let mut rng = Rng::new(cfg.seed);
 
     let base_score = cfg.loss.base_score(&train.targets);
@@ -124,7 +119,10 @@ pub fn fit_one_vs_all_with_engine(
     let mut best_round = 0usize;
 
     for round in 0..cfg.n_rounds {
-        engine.grad_hess(cfg.loss, &preds, &train.targets, &mut g, &mut h);
+        // the fused loss of the pre-update predictions: reused below as
+        // the free train metric in cheap mode (same contract as the
+        // single-tree Booster session — no second O(n*d) evaluation)
+        let grad_loss = engine.grad_hess(cfg.loss, &preds, &train.targets, &mut g, &mut h);
         let mut round_rng = rng.fork(round as u64);
 
         let sampled: Option<Vec<u32>> = if cfg.subsample < 1.0 {
@@ -180,7 +178,16 @@ pub fn fit_one_vs_all_with_engine(
             trees.push((j as u32, tree));
         }
 
-        history.train_loss.push(metric.eval(&preds, &train.targets));
+        // train metric, same contract as the single-tree Booster
+        // session: full evaluation when asked for; with no validation
+        // set, the gradient pass's free loss (one round stale —
+        // measured before this round's d trees); with a validation set
+        // and eval_train off, nothing (valid tracking is what matters)
+        if cfg.eval_train {
+            history.train_loss.push(metric.eval(&preds, &train.targets));
+        } else if valid.is_none() {
+            history.train_loss.push(grad_loss);
+        }
         let mut stop = false;
         if let (Some(v), Some((vp, _))) = (valid, valid_state.as_ref()) {
             let vl = metric.eval(vp, &v.targets);
@@ -211,6 +218,7 @@ pub fn fit_one_vs_all_with_engine(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::boosting::metrics::Metric;
     use crate::data::synthetic::{make_multiclass, FeatureSpec};
 
     #[test]

@@ -1,0 +1,421 @@
+//! The `Booster` builder and its callback-driven training session —
+//! the open training API that `GBDT::fit` is now a thin wrapper over.
+//!
+//! ```no_run
+//! use sketchboost::prelude::*;
+//!
+//! let ds = profiles::Profile::by_name("otto").unwrap().generate(42);
+//! let (train, valid) = split::train_test_split(&ds, 0.2, 0);
+//! let cfg = GBDTConfig::multiclass(9);
+//! let model = Booster::new(&cfg)
+//!     .callback(EarlyStopping::new(20))
+//!     .callback(EvalLogger::every(10))
+//!     .callback(Checkpoint::every("model_r{round}.json", 50))
+//!     .fit(&train, Some(&valid));
+//! # let _ = model;
+//! ```
+//!
+//! The session owns the boosting mechanics — derivative pass, sketch,
+//! row/feature sampling, tree build, prediction update — and delegates
+//! every behavioral decision (history, stopping, logging, snapshots) to
+//! [`Callback`]s. The bit-exactness contract: with the default
+//! objective/metric, the per-round numeric statement order is exactly
+//! the pre-redesign `GBDT::fit` loop (same RNG fork points, same f32
+//! accumulation order), so ensembles are bitwise-identical to it for
+//! every sketch, loss, and thread count (`rust/tests/booster_api.rs`).
+
+use std::ops::ControlFlow;
+use std::time::Instant;
+
+use crate::boosting::callback::{Callback, HistoryRecorder, RoundContext};
+use crate::boosting::ensemble::{Ensemble, TrainHistory};
+use crate::boosting::eval::EvalMetric;
+use crate::boosting::objective::Objective;
+use crate::boosting::sampling::{row_grad_norms, RowSampling};
+use crate::boosting::trainer::GBDTConfig;
+use crate::data::binning::BinnedDataset;
+use crate::data::dataset::Dataset;
+use crate::engine::{ComputeEngine, EngineOpts, NativeEngine, ScoreMode};
+use crate::tree::builder::{build_tree_in, BuildParams, SENTINEL};
+use crate::tree::workspace::TreeWorkspace;
+use crate::util::rng::Rng;
+
+/// Builder for one training session: config + pluggable objective,
+/// metric, and callbacks. Consumed by [`Booster::fit`].
+pub struct Booster {
+    cfg: GBDTConfig,
+    objective: Option<Box<dyn Objective>>,
+    metric: Option<Box<dyn EvalMetric>>,
+    callbacks: Vec<Box<dyn Callback>>,
+}
+
+impl Booster {
+    /// A bare session: built-in objective/metric from `cfg.loss`, no
+    /// callbacks beyond the always-on [`HistoryRecorder`]. The config's
+    /// `early_stopping_rounds`/`verbose` fields are **not** auto-wired
+    /// here — attach [`crate::boosting::callback::EarlyStopping`] /
+    /// [`crate::boosting::callback::EvalLogger`] explicitly, or use
+    /// [`Booster::from_config`] (what `GBDT::fit` does) to get them
+    /// from the config.
+    pub fn new(cfg: &GBDTConfig) -> Booster {
+        Booster { cfg: cfg.clone(), objective: None, metric: None, callbacks: Vec::new() }
+    }
+
+    /// [`Booster::new`] plus the callbacks the config encodes:
+    /// [`crate::boosting::callback::EarlyStopping`] when
+    /// `cfg.early_stopping_rounds > 0` and
+    /// [`crate::boosting::callback::EvalLogger`] (period 10, the
+    /// historical cadence) when `cfg.verbose`.
+    pub fn from_config(cfg: &GBDTConfig) -> Booster {
+        let mut b = Booster::new(cfg);
+        if cfg.early_stopping_rounds > 0 {
+            b = b.callback(crate::boosting::callback::EarlyStopping::new(
+                cfg.early_stopping_rounds,
+            ));
+        }
+        if cfg.verbose {
+            b = b.callback(crate::boosting::callback::EvalLogger::every(10));
+        }
+        b
+    }
+
+    /// Train with a custom [`Objective`] instead of `cfg.loss`.
+    pub fn objective(mut self, o: impl Objective + 'static) -> Booster {
+        self.objective = Some(Box::new(o));
+        self
+    }
+
+    /// Track rounds with a custom [`EvalMetric`] instead of the
+    /// objective's default.
+    pub fn metric(mut self, m: impl EvalMetric + 'static) -> Booster {
+        self.metric = Some(Box::new(m));
+        self
+    }
+
+    /// Attach a [`Callback`]. Callbacks run in attachment order; see
+    /// `boosting/callback.rs` for the dispatch contract.
+    pub fn callback(mut self, c: impl Callback + 'static) -> Booster {
+        self.callbacks.push(Box::new(c));
+        self
+    }
+
+    /// Train with the pure-rust engine (threaded per `cfg.n_threads`).
+    pub fn fit(self, train: &Dataset, valid: Option<&Dataset>) -> Ensemble {
+        let mut engine = NativeEngine::with_opts(EngineOpts::threads(self.cfg.n_threads));
+        self.fit_with_engine(train, valid, &mut engine)
+    }
+
+    /// Train with any [`ComputeEngine`] (e.g. the PJRT-backed
+    /// XlaEngine). This is the training session: the boosting loop of
+    /// the paper's section 2 with sketched split scoring (section 3),
+    /// callback-driven.
+    pub fn fit_with_engine(
+        self,
+        train: &Dataset,
+        valid: Option<&Dataset>,
+        engine: &mut dyn ComputeEngine,
+    ) -> Ensemble {
+        let Booster { cfg, objective, metric, mut callbacks } = self;
+        let mut objective: Box<dyn Objective> =
+            objective.unwrap_or_else(|| Box::new(cfg.loss));
+        let metric: Box<dyn EvalMetric> =
+            metric.unwrap_or_else(|| objective.default_metric());
+        // history is a callback too, but one the session always wants:
+        // registered first so user callbacks observe a consistent order
+        callbacks.insert(0, Box::new(HistoryRecorder::default()));
+
+        cfg.validate(train);
+        let n = train.n_rows;
+        let d = cfg.n_outputs;
+        let binned = BinnedDataset::from_dataset(train, cfg.max_bins);
+        let mut rng = Rng::new(cfg.seed);
+        let t_start = Instant::now();
+
+        let base_score = objective.base_score(&train.targets, d);
+        assert_eq!(base_score.len(), d, "objective base_score must have d values");
+        let mut preds = vec![0.0f32; n * d];
+        for row in preds.chunks_mut(d) {
+            row.copy_from_slice(&base_score);
+        }
+        let mut valid_preds: Option<(Vec<f32>, Vec<Vec<f32>>)> = valid.map(|v| {
+            let mut vp = vec![0.0f32; v.n_rows * d];
+            for row in vp.chunks_mut(d) {
+                row.copy_from_slice(&base_score);
+            }
+            // cache raw rows once: prediction updates touch every tree
+            let rows: Vec<Vec<f32>> = (0..v.n_rows).map(|i| v.row(i)).collect();
+            (vp, rows)
+        });
+
+        let mut g = vec![0.0f32; n * d];
+        let mut h = vec![0.0f32; n * d];
+        let mode = if cfg.use_hess_split { ScoreMode::HessL2 } else { ScoreMode::CountL2 };
+        let all_rows: Vec<u32> = (0..n as u32).collect();
+        // one pooled workspace across every tree: the per-level buffers
+        // (partitioned rows, channel matrix, histogram ping-pong, gains)
+        // reach their high-water mark on the first tree and are reused —
+        // steady-state tree building allocates only the tree itself
+        // (tree/workspace.rs, rust/tests/alloc_free.rs)
+        let mut ws = TreeWorkspace::new();
+
+        // the ensemble is grown in place so callbacks can see (and
+        // checkpoint) the model-so-far each round
+        let mut ensemble = Ensemble {
+            loss: objective.link_kind(),
+            n_outputs: d,
+            base_score,
+            trees: Vec::with_capacity(cfg.n_rounds),
+            history: TrainHistory::default(),
+        };
+
+        for round in 0..cfg.n_rounds {
+            // derivative pass. Built-in objectives route through the
+            // engine so accelerated backends keep serving this op; the
+            // returned loss is the (pre-update) train loss for free.
+            let grad_loss = match objective.builtin() {
+                Some(kind) => engine.grad_hess(kind, &preds, &train.targets, &mut g, &mut h),
+                None => objective.grad_hess(&preds, &train.targets, d, &mut g, &mut h),
+            };
+
+            // sketch the gradient matrix for split scoring (section 3)
+            let mut round_rng = rng.fork(round as u64);
+            let sketched = cfg.sketch.apply(&g, n, d, &mut round_rng, engine);
+            let (score_g, kc): (&[f32], usize) = match &sketched {
+                None => (&g, d),
+                Some((gk, k)) => (gk.as_slice(), *k),
+            };
+            let score_h: Option<&[f32]> = if cfg.use_hess_split { Some(&h) } else { None };
+
+            // row sampling: gradient-aware (GOSS/MVS) takes precedence,
+            // then plain uniform subsampling, then all rows (borrowed —
+            // no per-round copy of the full index list)
+            let sampled: Option<(Vec<u32>, Option<Vec<f32>>)> =
+                if cfg.row_sampling != RowSampling::None {
+                    let norms = row_grad_norms(&g, n, d);
+                    let s = cfg.row_sampling.sample(&norms, &mut round_rng);
+                    let w = if s.weighted { Some(s.weights) } else { None };
+                    Some((s.rows, w))
+                } else if cfg.subsample < 1.0 {
+                    let keep =
+                        ((n as f64) * cfg.subsample as f64).round().max(1.0) as usize;
+                    let mut idx = round_rng.sample_indices(n, keep);
+                    idx.sort_unstable();
+                    Some((idx, None))
+                } else {
+                    None
+                };
+            let (rows, row_weights): (&[u32], Option<&[f32]>) = match &sampled {
+                Some((r, w)) => (r, w.as_deref()),
+                None => (&all_rows, None),
+            };
+
+            // feature subsample
+            let feature_mask: Option<Vec<bool>> = if cfg.colsample < 1.0 {
+                let m = binned.n_features;
+                let keep = ((m as f64) * cfg.colsample as f64).round().max(1.0) as usize;
+                let chosen = round_rng.sample_indices(m, keep);
+                let mut mask = vec![false; m];
+                for &f in &chosen {
+                    mask[f as usize] = true;
+                }
+                Some(mask)
+            } else {
+                None
+            };
+
+            let params = BuildParams {
+                binned: &binned,
+                rows,
+                g: &g,
+                h: &h,
+                d,
+                score_g,
+                kc,
+                score_h,
+                mode,
+                max_depth: cfg.max_depth,
+                lambda: cfg.lambda_l2,
+                min_data_in_leaf: cfg.min_data_in_leaf,
+                min_gain: cfg.min_gain,
+                feature_mask: feature_mask.as_deref(),
+                sparse_topk: cfg.sparse_leaves,
+                row_weights,
+            };
+            let mut tree = build_tree_in(&params, engine, &mut ws);
+            tree.scale_leaves(cfg.learning_rate);
+
+            // update train predictions (leaf_of_row for sampled rows;
+            // route the rest through the binned tree)
+            let leaf_of_row = ws.leaf_of_row();
+            for r in 0..n {
+                let leaf = if leaf_of_row[r] != SENTINEL {
+                    leaf_of_row[r] as usize
+                } else {
+                    tree.leaf_for_binned(&binned, r)
+                };
+                let v = &tree.leaf_values[leaf * d..(leaf + 1) * d];
+                let p = &mut preds[r * d..(r + 1) * d];
+                for j in 0..d {
+                    p[j] += v[j];
+                }
+            }
+
+            // train metric: a full evaluation pass when asked for;
+            // otherwise, with no validation set, the gradient pass's
+            // free loss (pre-update, one round stale) instead of a
+            // second O(n*d) evaluation — see trainer.rs history notes
+            let train_loss = if cfg.eval_train {
+                metric.eval(&preds, &train.targets)
+            } else if valid.is_none() {
+                grad_loss
+            } else {
+                f64::NAN
+            };
+
+            // update valid predictions
+            let valid_score = if let (Some(v), Some((vp, vrows))) =
+                (valid, valid_preds.as_mut())
+            {
+                for i in 0..v.n_rows {
+                    tree.predict_into(&vrows[i], &mut vp[i * d..(i + 1) * d]);
+                }
+                Some(metric.eval(vp, &v.targets))
+            } else {
+                None
+            };
+
+            ensemble.trees.push(tree);
+
+            // round event: every callback sees every round, then — if
+            // any broke — every callback sees the stop
+            let ctx = RoundContext {
+                round,
+                n_rounds: cfg.n_rounds,
+                train_loss,
+                valid_score,
+                elapsed: t_start.elapsed(),
+                metric_name: metric.name(),
+                minimize: metric.minimize(),
+                ensemble: &ensemble,
+            };
+            let mut stop = false;
+            for cb in callbacks.iter_mut() {
+                if let ControlFlow::Break(()) = cb.on_round(&ctx) {
+                    stop = true;
+                }
+            }
+            if stop {
+                for cb in callbacks.iter_mut() {
+                    cb.on_stop(&ctx);
+                }
+                break;
+            }
+        }
+
+        // train-end pass: history lands on the ensemble, early stopping
+        // truncates to its best round, user callbacks get the final say
+        for cb in callbacks.iter_mut() {
+            cb.on_train_end(&mut ensemble);
+        }
+        ensemble
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boosting::callback::{Checkpoint, EarlyStopping, TimeBudget};
+    use crate::boosting::trainer::GBDT;
+    use crate::data::synthetic::{make_multiclass, FeatureSpec};
+    use crate::sketch::SketchConfig;
+
+    fn quick_cfg(mut cfg: GBDTConfig) -> GBDTConfig {
+        cfg.n_rounds = 12;
+        cfg.learning_rate = 0.3;
+        cfg.max_depth = 3;
+        cfg.max_bins = 16;
+        cfg
+    }
+
+    #[test]
+    fn bare_booster_matches_gbdt_fit() {
+        let ds = make_multiclass(300, FeatureSpec::guyon(8), 3, 2.0, 17);
+        let mut cfg = quick_cfg(GBDTConfig::multiclass(3));
+        cfg.sketch = SketchConfig::RandomProjection { k: 2 };
+        let a = GBDT::fit(&cfg, &ds, None);
+        let b = Booster::new(&cfg).fit(&ds, None);
+        assert_eq!(a.trees, b.trees);
+        assert_eq!(a.base_score, b.base_score);
+        assert_eq!(a.history.train_loss, b.history.train_loss);
+    }
+
+    #[test]
+    fn time_budget_zero_trains_exactly_one_round() {
+        let ds = make_multiclass(200, FeatureSpec::guyon(6), 3, 2.0, 5);
+        let cfg = quick_cfg(GBDTConfig::multiclass(3));
+        let m = Booster::new(&cfg)
+            .callback(TimeBudget::new(std::time::Duration::ZERO))
+            .fit(&ds, None);
+        assert_eq!(m.n_trees(), 1);
+        assert_eq!(m.history.train_loss.len(), 1);
+    }
+
+    #[test]
+    fn early_stopping_callback_equals_config_field() {
+        let ds = make_multiclass(500, FeatureSpec::guyon(8), 3, 1.5, 11);
+        let (train, valid) = crate::data::split::train_test_split(&ds, 0.3, 1);
+        let mut cfg = quick_cfg(GBDTConfig::multiclass(3));
+        cfg.n_rounds = 150;
+        cfg.learning_rate = 0.5;
+        cfg.early_stopping_rounds = 5;
+        let via_config = GBDT::fit(&cfg, &train, Some(&valid));
+        let mut cfg_cb = cfg.clone();
+        cfg_cb.early_stopping_rounds = 0;
+        let via_callback = Booster::new(&cfg_cb)
+            .callback(EarlyStopping::new(5))
+            .fit(&train, Some(&valid));
+        assert_eq!(via_config.trees, via_callback.trees);
+        assert_eq!(via_config.history.best_round, via_callback.history.best_round);
+        assert_eq!(via_config.history.valid_loss, via_callback.history.valid_loss);
+    }
+
+    #[test]
+    fn checkpoint_writes_loadable_models() {
+        let ds = make_multiclass(200, FeatureSpec::guyon(6), 3, 2.0, 7);
+        let mut cfg = quick_cfg(GBDTConfig::multiclass(3));
+        cfg.n_rounds = 7;
+        let dir = std::env::temp_dir().join("sb_booster_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let tpl = dir.join("ck_{round}.json");
+        let full = Booster::new(&cfg)
+            .callback(Checkpoint::every(tpl.to_str().unwrap(), 3))
+            .fit(&ds, None);
+        for done in [3usize, 6] {
+            let path = dir.join(format!("ck_{done}.json"));
+            let ck = Ensemble::load(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+            assert_eq!(ck.n_trees(), done);
+            // the checkpoint is the bit-exact prefix of the final model
+            let mut prefix = full.clone();
+            prefix.trees.truncate(done);
+            assert_eq!(ck.predict_raw(&ds), prefix.predict_raw(&ds));
+        }
+    }
+
+    #[test]
+    fn no_valid_cheap_mode_records_grad_loss() {
+        let ds = make_multiclass(300, FeatureSpec::guyon(8), 4, 2.0, 3);
+        let mut cfg = quick_cfg(GBDTConfig::multiclass(4));
+        cfg.eval_train = false; // no eval pass, no valid: free grad loss
+        let m = Booster::new(&cfg).fit(&ds, None);
+        let hist = &m.history.train_loss;
+        assert_eq!(hist.len(), cfg.n_rounds);
+        // round 0 entry is the base-score loss (~ln 4, uniform logits)
+        assert!((hist[0] - (4.0f64).ln()).abs() < 1e-3, "got {}", hist[0]);
+        assert!(hist.first().unwrap() > hist.last().unwrap());
+        // and the trees are bit-identical to the eval_train=true run
+        let mut cfg_eval = cfg.clone();
+        cfg_eval.eval_train = true;
+        let m2 = Booster::new(&cfg_eval).fit(&ds, None);
+        assert_eq!(m.trees, m2.trees);
+    }
+}

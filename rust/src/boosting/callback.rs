@@ -1,0 +1,413 @@
+//! Round-event callbacks: the training session's behavior is composed
+//! from these instead of being hard-coded in one loop.
+//!
+//! Each boosting round the [`crate::boosting::booster::Booster`] session
+//! builds a [`RoundContext`] and offers it to every registered
+//! [`Callback`] **in registration order**. All callbacks see every
+//! round (no short-circuit on the first `Break`); if any returned
+//! `Break`, the session calls [`Callback::on_stop`] on all callbacks
+//! with the same context and ends the loop. After the loop — stopped or
+//! run to completion — [`Callback::on_train_end`] runs once per
+//! callback, again in registration order, with mutable access to the
+//! finished ensemble (this is where [`EarlyStopping`] truncates to the
+//! best round and [`HistoryRecorder`] installs the accumulated
+//! history).
+//!
+//! What used to be fixed trainer behavior is now these built-ins:
+//! [`HistoryRecorder`] (always installed by the session),
+//! [`EarlyStopping`], and [`EvalLogger`]; [`TimeBudget`] and
+//! [`Checkpoint`] open scenarios the old closed loop could not express.
+//!
+//! Callbacks observe training (`&Ensemble` in the context) but cannot
+//! steer the numerics — tree bits stay a pure function of config +
+//! data + seed whatever callbacks are attached. Only `on_train_end`
+//! gets `&mut Ensemble`, after all trees are built.
+
+use std::ops::ControlFlow;
+use std::time::Duration;
+
+use crate::boosting::ensemble::{Ensemble, TrainHistory};
+
+/// Everything a callback may inspect about the round that just
+/// finished.
+pub struct RoundContext<'a> {
+    /// 0-based round index.
+    pub round: usize,
+    /// Configured round budget (`cfg.n_rounds`).
+    pub n_rounds: usize,
+    /// Train metric for this round; `NaN` when not evaluated (valid
+    /// present and `cfg.eval_train` off). With no validation set and
+    /// `eval_train` off this is the gradient pass's free loss, measured
+    /// on the predictions *before* this round's tree (one round stale).
+    pub train_loss: f64,
+    /// Validation metric for this round, when a validation set exists.
+    pub valid_score: Option<f64>,
+    /// Wall-clock time since `fit` started.
+    pub elapsed: Duration,
+    /// Name of the active [`crate::boosting::eval::EvalMetric`].
+    pub metric_name: &'a str,
+    /// Improvement direction of the active metric.
+    pub minimize: bool,
+    /// The ensemble so far, including this round's tree.
+    pub ensemble: &'a Ensemble,
+}
+
+impl RoundContext<'_> {
+    /// `true` when `candidate` beats `incumbent` under the active
+    /// metric's direction.
+    pub fn improved(&self, candidate: f64, incumbent: f64) -> bool {
+        if self.minimize {
+            candidate < incumbent
+        } else {
+            candidate > incumbent
+        }
+    }
+}
+
+/// A training-session observer. See the module docs for the exact
+/// dispatch order.
+pub trait Callback {
+    /// Called after every round. Return `ControlFlow::Break(())` to end
+    /// training after this round.
+    fn on_round(&mut self, ctx: &RoundContext<'_>) -> ControlFlow<()>;
+
+    /// Called on every callback when some callback broke the loop this
+    /// round (so e.g. a logger can print the stopping round even off
+    /// its cadence).
+    fn on_stop(&mut self, _ctx: &RoundContext<'_>) {}
+
+    /// Called once after the loop with the finished ensemble.
+    fn on_train_end(&mut self, _ensemble: &mut Ensemble) {}
+}
+
+// ---------------------------------------------------------------------
+// built-ins
+// ---------------------------------------------------------------------
+
+/// Accumulates [`TrainHistory`] (per-round train/valid metrics + best
+/// round) and installs it on the ensemble at train end. The session
+/// always registers one of these first — history exists whether or not
+/// the user attached callbacks.
+#[derive(Default)]
+pub struct HistoryRecorder {
+    train: Vec<f64>,
+    valid: Vec<f64>,
+    best: Option<f64>,
+    best_round: usize,
+}
+
+impl Callback for HistoryRecorder {
+    fn on_round(&mut self, ctx: &RoundContext<'_>) -> ControlFlow<()> {
+        if !ctx.train_loss.is_nan() {
+            self.train.push(ctx.train_loss);
+        }
+        match ctx.valid_score {
+            Some(v) => {
+                self.valid.push(v);
+                let improved = match self.best {
+                    Some(b) => ctx.improved(v, b),
+                    None => true,
+                };
+                if improved {
+                    self.best = Some(v);
+                    self.best_round = ctx.round;
+                }
+            }
+            // no validation set: the latest round is by definition the
+            // best one (matches the pre-callback trainer)
+            None => self.best_round = ctx.round,
+        }
+        ControlFlow::Continue(())
+    }
+
+    fn on_train_end(&mut self, ensemble: &mut Ensemble) {
+        ensemble.history = TrainHistory {
+            train_loss: std::mem::take(&mut self.train),
+            valid_loss: std::mem::take(&mut self.valid),
+            best_round: self.best_round,
+        };
+    }
+}
+
+/// Stop when the validation score has not improved for `patience`
+/// rounds, and truncate the ensemble to the best round at train end —
+/// byte-for-byte the old `early_stopping_rounds` behavior, now
+/// detachable and composable.
+pub struct EarlyStopping {
+    patience: usize,
+    best: Option<f64>,
+    best_round: usize,
+    saw_valid: bool,
+}
+
+impl EarlyStopping {
+    /// `patience` = rounds without improvement before stopping (>= 1).
+    pub fn new(patience: usize) -> EarlyStopping {
+        assert!(patience >= 1, "early stopping needs patience >= 1");
+        EarlyStopping { patience, best: None, best_round: 0, saw_valid: false }
+    }
+}
+
+impl Callback for EarlyStopping {
+    fn on_round(&mut self, ctx: &RoundContext<'_>) -> ControlFlow<()> {
+        let Some(v) = ctx.valid_score else {
+            // nothing to stop on without a validation set
+            return ControlFlow::Continue(());
+        };
+        self.saw_valid = true;
+        let improved = match self.best {
+            Some(b) => ctx.improved(v, b),
+            None => true,
+        };
+        if improved {
+            self.best = Some(v);
+            self.best_round = ctx.round;
+        } else if ctx.round - self.best_round >= self.patience {
+            return ControlFlow::Break(());
+        }
+        ControlFlow::Continue(())
+    }
+
+    fn on_train_end(&mut self, ensemble: &mut Ensemble) {
+        if self.saw_valid {
+            ensemble.trees.truncate(self.best_round + 1);
+        }
+    }
+}
+
+/// Prints the round's metrics to stderr every `period` rounds, plus the
+/// round that stopped training — the old `cfg.verbose` output, same
+/// format.
+pub struct EvalLogger {
+    period: usize,
+    last_printed: Option<usize>,
+}
+
+impl EvalLogger {
+    /// Log every `period` rounds (>= 1). The old `verbose` flag is
+    /// `EvalLogger::every(10)`.
+    pub fn every(period: usize) -> EvalLogger {
+        assert!(period >= 1, "eval logger needs period >= 1");
+        EvalLogger { period, last_printed: None }
+    }
+
+    fn print(&mut self, ctx: &RoundContext<'_>) {
+        match ctx.valid_score {
+            Some(v) => eprintln!(
+                "[round {}] train {} = {:.5}, valid = {:.5}",
+                ctx.round, ctx.metric_name, ctx.train_loss, v
+            ),
+            None => eprintln!(
+                "[round {}] train {} = {:.5}",
+                ctx.round, ctx.metric_name, ctx.train_loss
+            ),
+        }
+        self.last_printed = Some(ctx.round);
+    }
+}
+
+impl Callback for EvalLogger {
+    fn on_round(&mut self, ctx: &RoundContext<'_>) -> ControlFlow<()> {
+        if ctx.round % self.period == 0 {
+            self.print(ctx);
+        }
+        ControlFlow::Continue(())
+    }
+
+    fn on_stop(&mut self, ctx: &RoundContext<'_>) {
+        if self.last_printed != Some(ctx.round) {
+            self.print(ctx);
+        }
+    }
+}
+
+/// Stop training once the wall clock exceeds a budget. The round in
+/// flight always completes — tree bits are never affected, only how
+/// many trees get built.
+pub struct TimeBudget {
+    budget: Duration,
+}
+
+impl TimeBudget {
+    pub fn new(budget: Duration) -> TimeBudget {
+        TimeBudget { budget }
+    }
+
+    /// Convenience: budget in (possibly fractional) seconds.
+    pub fn seconds(secs: f64) -> TimeBudget {
+        TimeBudget::new(Duration::from_secs_f64(secs.max(0.0)))
+    }
+}
+
+impl Callback for TimeBudget {
+    fn on_round(&mut self, ctx: &RoundContext<'_>) -> ControlFlow<()> {
+        if ctx.elapsed >= self.budget {
+            ControlFlow::Break(())
+        } else {
+            ControlFlow::Continue(())
+        }
+    }
+}
+
+/// Save the ensemble-so-far as model JSON every `every` rounds.
+///
+/// The path may contain the literal `{round}`, replaced by the number
+/// of completed rounds (1-based) so each checkpoint gets its own file;
+/// without it the same file is overwritten (a "latest" checkpoint).
+/// Checkpoints are complete models: [`Ensemble::load`] + predict works
+/// on each one. A failed write logs to stderr and training continues —
+/// a full disk should cost the checkpoint, not the run.
+pub struct Checkpoint {
+    path: String,
+    every: usize,
+}
+
+impl Checkpoint {
+    pub fn every(path: impl Into<String>, every: usize) -> Checkpoint {
+        assert!(every >= 1, "checkpoint needs every >= 1");
+        Checkpoint { path: path.into(), every }
+    }
+}
+
+impl Callback for Checkpoint {
+    fn on_round(&mut self, ctx: &RoundContext<'_>) -> ControlFlow<()> {
+        let done = ctx.round + 1;
+        if done % self.every == 0 {
+            let path = self.path.replace("{round}", &done.to_string());
+            if let Err(e) = ctx.ensemble.save(std::path::Path::new(&path)) {
+                eprintln!("[checkpoint] round {}: failed to write {path}: {e}", ctx.round);
+            }
+        }
+        ControlFlow::Continue(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boosting::losses::LossKind;
+
+    fn empty_ensemble() -> Ensemble {
+        Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 1,
+            base_score: vec![0.0],
+            trees: Vec::new(),
+            history: TrainHistory::default(),
+        }
+    }
+
+    fn ctx(
+        round: usize,
+        train: f64,
+        valid: Option<f64>,
+        ensemble: &Ensemble,
+    ) -> RoundContext<'_> {
+        RoundContext {
+            round,
+            n_rounds: 100,
+            train_loss: train,
+            valid_score: valid,
+            elapsed: Duration::from_millis(round as u64),
+            metric_name: "rmse",
+            minimize: true,
+            ensemble,
+        }
+    }
+
+    #[test]
+    fn history_recorder_tracks_best_round() {
+        let e = empty_ensemble();
+        let mut rec = HistoryRecorder::default();
+        for (r, v) in [(0, 3.0), (1, 2.0), (2, 2.5)] {
+            assert!(rec.on_round(&ctx(r, 1.0, Some(v), &e)).is_continue());
+        }
+        let mut out = empty_ensemble();
+        rec.on_train_end(&mut out);
+        assert_eq!(out.history.best_round, 1);
+        assert_eq!(out.history.valid_loss, vec![3.0, 2.0, 2.5]);
+        assert_eq!(out.history.train_loss.len(), 3);
+    }
+
+    #[test]
+    fn history_recorder_skips_nan_train() {
+        let e = empty_ensemble();
+        let mut rec = HistoryRecorder::default();
+        rec.on_round(&ctx(0, f64::NAN, Some(1.0), &e));
+        let mut out = empty_ensemble();
+        rec.on_train_end(&mut out);
+        assert!(out.history.train_loss.is_empty());
+        assert_eq!(out.history.valid_loss.len(), 1);
+    }
+
+    #[test]
+    fn history_recorder_no_valid_best_is_last() {
+        let e = empty_ensemble();
+        let mut rec = HistoryRecorder::default();
+        for r in 0..4 {
+            rec.on_round(&ctx(r, 1.0, None, &e));
+        }
+        let mut out = empty_ensemble();
+        rec.on_train_end(&mut out);
+        assert_eq!(out.history.best_round, 3);
+    }
+
+    #[test]
+    fn early_stopping_breaks_after_patience() {
+        let e = empty_ensemble();
+        let mut es = EarlyStopping::new(2);
+        assert!(es.on_round(&ctx(0, 1.0, Some(2.0), &e)).is_continue());
+        assert!(es.on_round(&ctx(1, 1.0, Some(2.5), &e)).is_continue());
+        // round 2: 2 rounds since best (round 0) -> break
+        assert!(es.on_round(&ctx(2, 1.0, Some(2.6), &e)).is_break());
+    }
+
+    #[test]
+    fn early_stopping_maximize_direction() {
+        let e = empty_ensemble();
+        let mut es = EarlyStopping::new(1);
+        let mut c = ctx(0, 1.0, Some(0.5), &e);
+        c.minimize = false;
+        assert!(es.on_round(&c).is_continue());
+        let mut c = ctx(1, 1.0, Some(0.9), &e);
+        c.minimize = false;
+        assert!(es.on_round(&c).is_continue()); // improved: accuracy up
+        assert_eq!(es.best_round, 1);
+    }
+
+    #[test]
+    fn early_stopping_ignores_missing_valid() {
+        let e = empty_ensemble();
+        let mut es = EarlyStopping::new(1);
+        for r in 0..10 {
+            assert!(es.on_round(&ctx(r, 1.0, None, &e)).is_continue());
+        }
+        let mut out = empty_ensemble();
+        es.on_train_end(&mut out); // must not truncate: never saw valid
+        assert!(out.trees.is_empty());
+    }
+
+    #[test]
+    fn time_budget_zero_stops_immediately() {
+        let e = empty_ensemble();
+        let mut tb = TimeBudget::new(Duration::ZERO);
+        assert!(tb.on_round(&ctx(0, 1.0, None, &e)).is_break());
+        let mut tb = TimeBudget::seconds(1e9);
+        assert!(tb.on_round(&ctx(0, 1.0, None, &e)).is_continue());
+    }
+
+    #[test]
+    fn logger_prints_on_cadence_and_stop_once() {
+        let e = empty_ensemble();
+        let mut lg = EvalLogger::every(10);
+        lg.on_round(&ctx(0, 1.0, None, &e));
+        assert_eq!(lg.last_printed, Some(0));
+        lg.on_round(&ctx(3, 1.0, None, &e));
+        assert_eq!(lg.last_printed, Some(0)); // off-cadence: no print
+        lg.on_stop(&ctx(3, 1.0, None, &e));
+        assert_eq!(lg.last_printed, Some(3)); // stop prints
+        lg.on_round(&ctx(10, 1.0, None, &e));
+        lg.on_stop(&ctx(10, 1.0, None, &e)); // already printed this round
+        assert_eq!(lg.last_printed, Some(10));
+    }
+}

@@ -2,7 +2,6 @@
 //! (de)serialization.
 
 use crate::boosting::losses::LossKind;
-use crate::boosting::metrics::softmax_rows;
 use crate::data::dataset::Dataset;
 use crate::predict::{FlatForest, PredictOptions};
 use crate::tree::tree::{Tree, TreeNode};
@@ -85,17 +84,12 @@ impl Ensemble {
     }
 
     /// Map raw scores to the loss's output scale in place (softmax for
-    /// multiclass CE, sigmoid for BCE, identity for MSE).
+    /// multiclass CE, sigmoid for BCE, identity for MSE). Models
+    /// trained with a custom [`crate::boosting::objective::Objective`]
+    /// carry that objective's `link_kind` here, so save→load→predict
+    /// keeps the link the objective declared.
     pub fn apply_link(&self, raw: &mut [f32]) {
-        match self.loss {
-            LossKind::MulticlassCE => softmax_rows(raw, self.n_outputs),
-            LossKind::BCE => {
-                for z in raw.iter_mut() {
-                    *z = 1.0 / (1.0 + (-*z).exp());
-                }
-            }
-            LossKind::MSE => {}
-        }
+        crate::boosting::losses::apply_link(self.loss, raw, self.n_outputs);
     }
 
     pub fn n_trees(&self) -> usize {

@@ -1,0 +1,83 @@
+//! Pluggable evaluation metrics for train/valid tracking.
+//!
+//! [`EvalMetric`] is the trait the training session scores rounds with;
+//! the closed [`Metric`] enum stays as the set of built-in instances
+//! (`impl EvalMetric for Metric`), so every existing call site keeps
+//! working while user code can plug in custom metrics (ranking scores,
+//! pinball loss, …) through
+//! [`crate::boosting::booster::Booster::metric`].
+
+use crate::boosting::metrics::Metric;
+use crate::data::dataset::Targets;
+
+/// An evaluation metric over raw model scores (logits for
+/// classification), row-major `[n, d]`.
+///
+/// `eval` must be deterministic: early stopping compares scores across
+/// rounds, and `seed`-reproducibility of the whole training run rests
+/// on every comparison coming out the same way every time.
+pub trait EvalMetric {
+    /// Short name, used in logs and reports.
+    fn name(&self) -> &str;
+
+    /// Lower is better? Drives the improvement direction of early
+    /// stopping and best-round tracking. Defaults to `true` (a loss).
+    fn minimize(&self) -> bool {
+        true
+    }
+
+    /// Score raw predictions against the targets.
+    fn eval(&self, preds: &[f32], targets: &Targets) -> f64;
+}
+
+/// The built-in metrics are built-in `EvalMetric` instances.
+impl EvalMetric for Metric {
+    fn name(&self) -> &str {
+        Metric::name(self)
+    }
+
+    fn minimize(&self) -> bool {
+        Metric::minimize(self)
+    }
+
+    fn eval(&self, preds: &[f32], targets: &Targets) -> f64 {
+        Metric::eval(self, preds, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_metric_delegates() {
+        let t = Targets::Multiclass { labels: vec![0, 1], n_classes: 2 };
+        let preds = vec![0.0f32; 4];
+        let m: Box<dyn EvalMetric> = Box::new(Metric::CrossEntropy);
+        assert_eq!(m.eval(&preds, &t), Metric::CrossEntropy.eval(&preds, &t));
+        assert_eq!(m.name(), "cross-entropy");
+        assert!(m.minimize());
+        let acc: Box<dyn EvalMetric> = Box::new(Metric::Accuracy);
+        assert!(!acc.minimize());
+    }
+
+    #[test]
+    fn custom_metric_compiles_against_the_trait() {
+        struct NegativeLoss;
+        impl EvalMetric for NegativeLoss {
+            fn name(&self) -> &str {
+                "neg-loss"
+            }
+            fn minimize(&self) -> bool {
+                false
+            }
+            fn eval(&self, preds: &[f32], targets: &Targets) -> f64 {
+                -Metric::CrossEntropy.eval(preds, targets)
+            }
+        }
+        let t = Targets::Multiclass { labels: vec![0], n_classes: 2 };
+        let m = NegativeLoss;
+        assert!(m.eval(&[0.0, 0.0], &t) < 0.0);
+        assert!(!m.minimize());
+    }
+}

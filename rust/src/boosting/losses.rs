@@ -32,6 +32,19 @@ impl LossKind {
         }
     }
 
+    /// The primary evaluation metric matching this loss — the single
+    /// source of the loss→metric mapping (used by `GBDTConfig::metric`,
+    /// the `Objective` default metric, and the engines' fused-loss
+    /// scale).
+    pub fn primary_metric(&self) -> crate::boosting::metrics::Metric {
+        use crate::boosting::metrics::Metric;
+        match self {
+            LossKind::MulticlassCE => Metric::CrossEntropy,
+            LossKind::BCE => Metric::BceLogLoss,
+            LossKind::MSE => Metric::Rmse,
+        }
+    }
+
     /// Default loss for a targets kind.
     pub fn for_targets(t: &Targets) -> LossKind {
         match t {
@@ -82,6 +95,114 @@ impl LossKind {
             }
             (l, _) => panic!("base_score: loss {l:?} incompatible with targets"),
         }
+    }
+}
+
+/// Map raw scores to the loss's output scale in place (softmax for
+/// multiclass CE, sigmoid for BCE, identity for MSE). Shared by
+/// [`crate::boosting::ensemble::Ensemble::apply_link`] and the default
+/// [`crate::boosting::objective::Objective::link`].
+pub fn apply_link(kind: LossKind, raw: &mut [f32], d: usize) {
+    match kind {
+        LossKind::MulticlassCE => crate::boosting::metrics::softmax_rows(raw, d),
+        LossKind::BCE => {
+            for z in raw.iter_mut() {
+                *z = 1.0 / (1.0 + (-*z).exp());
+            }
+        }
+        LossKind::MSE => {}
+    }
+}
+
+/// Canonical derivative math for the built-in losses (paper eq. 2,
+/// diagonal hessian), fused with the loss value of the *input*
+/// predictions.
+///
+/// This is the single implementation behind both
+/// [`crate::engine::NativeEngine`]'s `grad_hess` and the built-in
+/// [`crate::boosting::objective::Objective`] instances — the f32
+/// gradient/hessian writes are bit-identical between the two routes.
+/// The returned loss is an f64 accumulation on the default metric's
+/// scale (mean logloss for CE/BCE, RMSE for MSE) and costs nothing
+/// beyond the pass itself; the trainer uses it for free train-loss
+/// tracking when no separate evaluation pass runs.
+pub fn grad_hess_into(
+    kind: LossKind,
+    preds: &[f32],
+    targets: &Targets,
+    g: &mut [f32],
+    h: &mut [f32],
+) -> f64 {
+    match (kind, targets) {
+        (LossKind::MulticlassCE, Targets::Multiclass { labels, n_classes }) => {
+            let d = *n_classes;
+            let n = labels.len();
+            debug_assert_eq!(preds.len(), n * d);
+            let mut loss = 0.0f64;
+            for i in 0..n {
+                let row = &preds[i * d..(i + 1) * d];
+                let gi = &mut g[i * d..(i + 1) * d];
+                let hi = &mut h[i * d..(i + 1) * d];
+                // numerically stable softmax
+                let mut mx = f32::MIN;
+                for &z in row {
+                    mx = mx.max(z);
+                }
+                let mut sum = 0.0f32;
+                for (j, &z) in row.iter().enumerate() {
+                    let e = (z - mx).exp();
+                    gi[j] = e;
+                    sum += e;
+                }
+                let inv = 1.0 / sum;
+                for j in 0..d {
+                    let p = gi[j] * inv;
+                    gi[j] = p;
+                    hi[j] = p * (1.0 - p);
+                }
+                let y = labels[i] as usize;
+                gi[y] -= 1.0;
+                // logloss of this row: lse - z_y, from the f32 softmax
+                // intermediates (sum * e^mx = sum_j e^{z_j})
+                loss += (sum as f64).ln() + mx as f64 - row[y] as f64;
+            }
+            loss / n as f64
+        }
+        (LossKind::BCE, Targets::Multilabel { labels, n_labels }) => {
+            let total = labels.len();
+            debug_assert_eq!(preds.len(), total);
+            debug_assert_eq!(total % n_labels, 0);
+            let mut loss = 0.0f64;
+            for i in 0..total {
+                let p = 1.0 / (1.0 + (-preds[i]).exp());
+                g[i] = p - labels[i];
+                h[i] = p * (1.0 - p);
+                let z = preds[i] as f64;
+                // log(1 + e^-|z|) + max(z, 0) - y*z, numerically stable
+                loss += z.max(0.0) - labels[i] as f64 * z + (-(z.abs())).exp().ln_1p();
+            }
+            loss / total as f64
+        }
+        (LossKind::MSE, Targets::Regression { values, .. }) => {
+            debug_assert_eq!(preds.len(), values.len());
+            let mut sse = 0.0f64;
+            for i in 0..values.len() {
+                g[i] = preds[i] - values[i];
+                h[i] = 1.0;
+                let e = preds[i] as f64 - values[i] as f64;
+                sse += e * e;
+            }
+            (sse / values.len() as f64).sqrt()
+        }
+        (l, t) => panic!("loss {:?} incompatible with targets {:?}", l, target_kind_name(t)),
+    }
+}
+
+fn target_kind_name(t: &Targets) -> &'static str {
+    match t {
+        Targets::Multiclass { .. } => "multiclass",
+        Targets::Multilabel { .. } => "multilabel",
+        Targets::Regression { .. } => "regression",
     }
 }
 

@@ -1,14 +1,30 @@
-//! Boosting layer: losses, metrics, the training loop, and the trained
-//! ensemble model.
+//! Boosting layer: losses, metrics, the training session, and the
+//! trained ensemble model.
+//!
+//! The training API is open (PR 4): [`Objective`], [`EvalMetric`], and
+//! [`Callback`] are the extension traits, [`Booster`] is the
+//! builder/session that composes them, and the closed [`LossKind`] /
+//! [`Metric`] enums remain as the built-in trait instances. `GBDT::fit`
+//! wraps the builder bit-exactly.
 
+pub mod booster;
+pub mod callback;
 pub mod ensemble;
+pub mod eval;
 pub mod inspect;
 pub mod losses;
 pub mod metrics;
+pub mod objective;
 pub mod sampling;
 pub mod trainer;
 
+pub use booster::Booster;
+pub use callback::{
+    Callback, Checkpoint, EarlyStopping, EvalLogger, HistoryRecorder, RoundContext, TimeBudget,
+};
 pub use ensemble::Ensemble;
+pub use eval::EvalMetric;
 pub use losses::LossKind;
 pub use metrics::Metric;
+pub use objective::Objective;
 pub use trainer::{GBDTConfig, GBDT};

@@ -1,0 +1,174 @@
+//! Pluggable training objectives — the open half of the training API.
+//!
+//! [`Objective`] is the trait the [`crate::boosting::booster::Booster`]
+//! session trains against: it supplies the initial prediction, fills the
+//! gradient/hessian buffers each round, and names the link + default
+//! metric. The closed [`LossKind`] enum is re-implemented as the three
+//! built-in instances (`impl Objective for LossKind`), so existing
+//! config JSON and bit-exact training are untouched, while user code can
+//! plug in anything — see `examples/custom_objective.rs` for a
+//! quantile-regression objective defined entirely outside this crate's
+//! core.
+//!
+//! ## Determinism contract for user objectives
+//!
+//! Tree bits are a pure function of the gradient matrix, so a custom
+//! `grad_hess` must itself be a pure function of `(preds, targets)`:
+//! same inputs, same f32 writes, every call. No interior randomness, no
+//! thread-order-dependent accumulation, no uninitialized reads of `g`/
+//! `h` (overwrite every element — the buffers are pooled across rounds
+//! and arrive holding the previous round's values). See DESIGN.md
+//! "Training session & extension points".
+
+use crate::boosting::eval::EvalMetric;
+use crate::boosting::losses::{self, LossKind};
+use crate::data::dataset::Targets;
+
+/// A training objective: base score, per-round derivatives, link, and
+/// default evaluation metric.
+///
+/// Implementations write derivatives **into pooled buffers** owned by
+/// the training session (no per-round allocation) and return the loss
+/// of the input predictions, which the session reuses as a free train
+/// metric when no separate evaluation pass is configured.
+pub trait Objective {
+    /// Short name, used in logs.
+    fn name(&self) -> &str;
+
+    /// The built-in [`LossKind`] this objective is, if any.
+    ///
+    /// When `Some`, the training session routes `grad_hess` through
+    /// [`crate::engine::ComputeEngine::grad_hess`] so accelerated
+    /// backends (the PJRT-executed Pallas kernels of
+    /// [`crate::engine::XlaEngine`]) keep serving the derivative pass;
+    /// the trait implementation below must then be bit-identical to the
+    /// native engine's math (both delegate to
+    /// [`losses::grad_hess_into`]). Custom objectives return `None`
+    /// (the default) and always run their own `grad_hess` on the host.
+    fn builtin(&self) -> Option<LossKind> {
+        None
+    }
+
+    /// Initial prediction F_0, one value per output (`d` values).
+    fn base_score(&self, targets: &Targets, d: usize) -> Vec<f32>;
+
+    /// Write the gradient/hessian of every row into `g`/`h` (row-major
+    /// `[n, d]`, pooled by the caller — overwrite every element) and
+    /// return the loss of `preds` on the objective's default-metric
+    /// scale. Hessians must be positive (they are the leaf-value
+    /// denominator, eq. 3); objectives with zero second derivative
+    /// (quantile, MAE) use the constant-hessian convention `h = 1`.
+    fn grad_hess(
+        &mut self,
+        preds: &[f32],
+        targets: &Targets,
+        d: usize,
+        g: &mut [f32],
+        h: &mut [f32],
+    ) -> f64;
+
+    /// The built-in loss tag stored in saved model JSON. It decides how
+    /// [`crate::boosting::ensemble::Ensemble::apply_link`] maps raw
+    /// scores after a save→load round trip, so pick the built-in whose
+    /// link matches yours: identity = [`LossKind::MSE`] (the default),
+    /// sigmoid = [`LossKind::BCE`], softmax = [`LossKind::MulticlassCE`].
+    fn link_kind(&self) -> LossKind {
+        LossKind::MSE
+    }
+
+    /// Map raw scores to the output scale in place. Defaults to the
+    /// link of [`Objective::link_kind`].
+    fn link(&self, raw: &mut [f32], d: usize) {
+        losses::apply_link(self.link_kind(), raw, d);
+    }
+
+    /// The metric used for train/valid tracking when the session is not
+    /// given an explicit one. Defaults to the primary metric of
+    /// [`Objective::link_kind`].
+    fn default_metric(&self) -> Box<dyn EvalMetric> {
+        Box::new(self.link_kind().primary_metric())
+    }
+}
+
+/// The built-in losses are the built-in objectives: `cfg.loss` *is* the
+/// default objective of a [`crate::boosting::booster::Booster`].
+impl Objective for LossKind {
+    fn name(&self) -> &str {
+        LossKind::name(self)
+    }
+
+    fn builtin(&self) -> Option<LossKind> {
+        Some(*self)
+    }
+
+    fn base_score(&self, targets: &Targets, d: usize) -> Vec<f32> {
+        let base = LossKind::base_score(self, targets);
+        debug_assert_eq!(base.len(), d);
+        base
+    }
+
+    fn grad_hess(
+        &mut self,
+        preds: &[f32],
+        targets: &Targets,
+        _d: usize,
+        g: &mut [f32],
+        h: &mut [f32],
+    ) -> f64 {
+        losses::grad_hess_into(*self, preds, targets, g, h)
+    }
+
+    fn link_kind(&self) -> LossKind {
+        *self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ComputeEngine, NativeEngine};
+
+    #[test]
+    fn builtin_objective_matches_native_engine_bitwise() {
+        let t = Targets::Multiclass { labels: vec![0, 2, 1, 2], n_classes: 3 };
+        let preds: Vec<f32> = (0..12).map(|i| (i as f32 * 0.37).sin()).collect();
+        let (mut g1, mut h1) = (vec![9.0f32; 12], vec![9.0f32; 12]);
+        let (mut g2, mut h2) = (vec![0.0f32; 12], vec![0.0f32; 12]);
+        let l1 = LossKind::MulticlassCE.grad_hess(&preds, &t, 3, &mut g1, &mut h1);
+        let mut eng = NativeEngine::new();
+        let l2 = eng.grad_hess(LossKind::MulticlassCE, &preds, &t, &mut g2, &mut h2);
+        assert_eq!(g1, g2);
+        assert_eq!(h1, h2);
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn builtin_objective_reports_itself() {
+        for kind in [LossKind::MulticlassCE, LossKind::BCE, LossKind::MSE] {
+            assert_eq!(kind.builtin(), Some(kind));
+            assert_eq!(kind.link_kind(), kind);
+        }
+        assert_eq!(Objective::name(&LossKind::BCE), "bce");
+    }
+
+    #[test]
+    fn default_metric_tracks_link_kind() {
+        use crate::boosting::eval::EvalMetric;
+        let m = LossKind::MulticlassCE.default_metric();
+        assert_eq!(m.name(), "cross-entropy");
+        assert!(m.minimize());
+        assert_eq!(LossKind::MSE.default_metric().name(), "rmse");
+    }
+
+    #[test]
+    fn grad_loss_agrees_with_metric_eval() {
+        use crate::boosting::metrics::Metric;
+        let t = Targets::Regression { values: vec![1.0, -2.0, 0.5, 3.0], n_targets: 2 };
+        let preds = vec![0.5f32, -1.0, 0.0, 2.5];
+        let (mut g, mut h) = (vec![0.0f32; 4], vec![0.0f32; 4]);
+        let loss = LossKind::MSE.grad_hess(&preds, &t, 2, &mut g, &mut h);
+        // MSE grad-pass loss is exactly the RMSE metric on the same preds
+        assert_eq!(loss, Metric::Rmse.eval(&preds, &t));
+        assert!(h.iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,17 +1,16 @@
-//! The boosting loop (paper section 2) with sketched split scoring
-//! (section 3) — the coordinator that ties every subsystem together.
+//! Training configuration and the classic `GBDT::fit` entry points —
+//! now thin wrappers over the [`Booster`] builder/session
+//! (`boosting/booster.rs`), which owns the boosting loop and exposes
+//! the pluggable objective/metric/callback surface.
 
-use crate::boosting::ensemble::{Ensemble, TrainHistory};
+use crate::boosting::booster::Booster;
+use crate::boosting::ensemble::Ensemble;
 use crate::boosting::losses::LossKind;
-use crate::boosting::sampling::{row_grad_norms, RowSampling};
 use crate::boosting::metrics::Metric;
-use crate::data::binning::BinnedDataset;
+use crate::boosting::sampling::RowSampling;
 use crate::data::dataset::Dataset;
-use crate::engine::{ComputeEngine, EngineOpts, NativeEngine, ScoreMode};
+use crate::engine::ComputeEngine;
 use crate::sketch::SketchConfig;
-use crate::tree::builder::{build_tree_in, BuildParams, SENTINEL};
-use crate::tree::workspace::TreeWorkspace;
-use crate::util::rng::Rng;
 
 /// Training configuration. Defaults follow the paper's Table 7 defaults
 /// (depth 6, lambda 1, no row/column sampling) with `k = 5` as the
@@ -46,8 +45,12 @@ pub struct GBDTConfig {
     /// for every value — see the determinism contract in `engine/`.
     pub n_threads: usize,
     pub verbose: bool,
-    /// record the train metric every round (costs an O(n*d) softmax
-    /// pass; timing benches disable it — the paper tracks valid only)
+    /// record the train metric every round with a full evaluation pass
+    /// (costs O(n*d); timing benches disable it — the paper tracks
+    /// valid only). When off *and* no validation set is given, history
+    /// still gets a train loss per round: the gradient pass's free
+    /// loss, measured on the predictions before that round's tree (one
+    /// round stale, zero extra cost).
     pub eval_train: bool,
 }
 
@@ -96,14 +99,10 @@ impl GBDTConfig {
 
     /// The metric used for train/valid tracking and early stopping.
     pub fn metric(&self) -> Metric {
-        match self.loss {
-            LossKind::MulticlassCE => Metric::CrossEntropy,
-            LossKind::BCE => Metric::BceLogLoss,
-            LossKind::MSE => Metric::Rmse,
-        }
+        self.loss.primary_metric()
     }
 
-    fn validate(&self, ds: &Dataset) {
+    pub(crate) fn validate(&self, ds: &Dataset) {
         assert_eq!(
             self.n_outputs,
             ds.n_outputs(),
@@ -124,14 +123,17 @@ impl GBDTConfig {
     }
 }
 
-/// Namespace for the training entry points.
+/// Namespace for the classic training entry points. Both are thin
+/// wrappers over [`Booster`]: `GBDT::fit(cfg, ..)` ==
+/// `Booster::from_config(cfg).fit(..)`, bitwise (the builder adds the
+/// early-stopping/logging callbacks the config encodes and nothing
+/// else — pinned by `rust/tests/booster_api.rs`).
 pub struct GBDT;
 
 impl GBDT {
     /// Train with the pure-rust engine (threaded per `cfg.n_threads`).
     pub fn fit(cfg: &GBDTConfig, train: &Dataset, valid: Option<&Dataset>) -> Ensemble {
-        let mut engine = NativeEngine::with_opts(EngineOpts::threads(cfg.n_threads));
-        GBDT::fit_with_engine(cfg, train, valid, &mut engine)
+        Booster::from_config(cfg).fit(train, valid)
     }
 
     /// Train with any [`ComputeEngine`] (e.g. the PJRT-backed XlaEngine).
@@ -141,187 +143,7 @@ impl GBDT {
         valid: Option<&Dataset>,
         engine: &mut dyn ComputeEngine,
     ) -> Ensemble {
-        cfg.validate(train);
-        let n = train.n_rows;
-        let d = cfg.n_outputs;
-        let binned = BinnedDataset::from_dataset(train, cfg.max_bins);
-        let metric = cfg.metric();
-        let mut rng = Rng::new(cfg.seed);
-
-        let base_score = cfg.loss.base_score(&train.targets);
-        let mut preds = vec![0.0f32; n * d];
-        for row in preds.chunks_mut(d) {
-            row.copy_from_slice(&base_score);
-        }
-        let mut valid_preds: Option<(Vec<f32>, Vec<Vec<f32>>)> = valid.map(|v| {
-            let mut vp = vec![0.0f32; v.n_rows * d];
-            for row in vp.chunks_mut(d) {
-                row.copy_from_slice(&base_score);
-            }
-            // cache raw rows once: prediction updates touch every tree
-            let rows: Vec<Vec<f32>> = (0..v.n_rows).map(|i| v.row(i)).collect();
-            (vp, rows)
-        });
-
-        let mut g = vec![0.0f32; n * d];
-        let mut h = vec![0.0f32; n * d];
-        let mode = if cfg.use_hess_split { ScoreMode::HessL2 } else { ScoreMode::CountL2 };
-        let all_rows: Vec<u32> = (0..n as u32).collect();
-        // one pooled workspace across every tree: the per-level buffers
-        // (partitioned rows, channel matrix, histogram ping-pong, gains)
-        // reach their high-water mark on the first tree and are reused —
-        // steady-state tree building allocates only the tree itself
-        // (tree/workspace.rs, rust/tests/alloc_free.rs)
-        let mut ws = TreeWorkspace::new();
-
-        let mut trees = Vec::with_capacity(cfg.n_rounds);
-        let mut history = TrainHistory::default();
-        let mut best_loss = f64::INFINITY;
-        let mut best_round = 0usize;
-
-        for round in 0..cfg.n_rounds {
-            engine.grad_hess(cfg.loss, &preds, &train.targets, &mut g, &mut h);
-
-            // sketch the gradient matrix for split scoring (section 3)
-            let mut round_rng = rng.fork(round as u64);
-            let sketched = cfg.sketch.apply(&g, n, d, &mut round_rng, engine);
-            let (score_g, kc): (&[f32], usize) = match &sketched {
-                None => (&g, d),
-                Some((gk, k)) => (gk.as_slice(), *k),
-            };
-            let score_h: Option<&[f32]> = if cfg.use_hess_split { Some(&h) } else { None };
-
-            // row sampling: gradient-aware (GOSS/MVS) takes precedence,
-            // then plain uniform subsampling, then all rows (borrowed —
-            // no per-round copy of the full index list)
-            let sampled: Option<(Vec<u32>, Option<Vec<f32>>)> =
-                if cfg.row_sampling != RowSampling::None {
-                    let norms = row_grad_norms(&g, n, d);
-                    let s = cfg.row_sampling.sample(&norms, &mut round_rng);
-                    let w = if s.weighted { Some(s.weights) } else { None };
-                    Some((s.rows, w))
-                } else if cfg.subsample < 1.0 {
-                    let keep =
-                        ((n as f64) * cfg.subsample as f64).round().max(1.0) as usize;
-                    let mut idx = round_rng.sample_indices(n, keep);
-                    idx.sort_unstable();
-                    Some((idx, None))
-                } else {
-                    None
-                };
-            let (rows, row_weights): (&[u32], Option<&[f32]>) = match &sampled {
-                Some((r, w)) => (r, w.as_deref()),
-                None => (&all_rows, None),
-            };
-
-            // feature subsample
-            let feature_mask: Option<Vec<bool>> = if cfg.colsample < 1.0 {
-                let m = binned.n_features;
-                let keep = ((m as f64) * cfg.colsample as f64).round().max(1.0) as usize;
-                let chosen = round_rng.sample_indices(m, keep);
-                let mut mask = vec![false; m];
-                for &f in &chosen {
-                    mask[f as usize] = true;
-                }
-                Some(mask)
-            } else {
-                None
-            };
-
-            let params = BuildParams {
-                binned: &binned,
-                rows,
-                g: &g,
-                h: &h,
-                d,
-                score_g,
-                kc,
-                score_h,
-                mode,
-                max_depth: cfg.max_depth,
-                lambda: cfg.lambda_l2,
-                min_data_in_leaf: cfg.min_data_in_leaf,
-                min_gain: cfg.min_gain,
-                feature_mask: feature_mask.as_deref(),
-                sparse_topk: cfg.sparse_leaves,
-                row_weights,
-            };
-            let mut tree = build_tree_in(&params, engine, &mut ws);
-            tree.scale_leaves(cfg.learning_rate);
-
-            // update train predictions (leaf_of_row for sampled rows;
-            // route the rest through the binned tree)
-            let leaf_of_row = ws.leaf_of_row();
-            for r in 0..n {
-                let leaf = if leaf_of_row[r] != SENTINEL {
-                    leaf_of_row[r] as usize
-                } else {
-                    tree.leaf_for_binned(&binned, r)
-                };
-                let v = &tree.leaf_values[leaf * d..(leaf + 1) * d];
-                let p = &mut preds[r * d..(r + 1) * d];
-                for j in 0..d {
-                    p[j] += v[j];
-                }
-            }
-
-            let train_loss = if cfg.eval_train || valid.is_none() {
-                let l = metric.eval(&preds, &train.targets);
-                history.train_loss.push(l);
-                l
-            } else {
-                f64::NAN
-            };
-
-            // update valid predictions + early stopping
-            let mut stop = false;
-            if let (Some(v), Some((vp, vrows))) = (valid, valid_preds.as_mut()) {
-                for i in 0..v.n_rows {
-                    tree.predict_into(&vrows[i], &mut vp[i * d..(i + 1) * d]);
-                }
-                let vl = metric.eval(vp, &v.targets);
-                history.valid_loss.push(vl);
-                let improved = if metric.minimize() { vl < best_loss } else { vl > best_loss };
-                if improved {
-                    best_loss = vl;
-                    best_round = round;
-                } else if cfg.early_stopping_rounds > 0
-                    && round - best_round >= cfg.early_stopping_rounds
-                {
-                    stop = true;
-                }
-                if cfg.verbose && (round % 10 == 0 || stop) {
-                    eprintln!(
-                        "[round {round}] train {} = {train_loss:.5}, valid = {vl:.5}",
-                        metric.name()
-                    );
-                }
-            } else {
-                best_round = round;
-                if cfg.verbose && round % 10 == 0 {
-                    eprintln!("[round {round}] train {} = {train_loss:.5}", metric.name());
-                }
-            }
-
-            trees.push(tree);
-            if stop {
-                break;
-            }
-        }
-
-        // truncate to the best validation round (early-stopping semantics)
-        if valid.is_some() && cfg.early_stopping_rounds > 0 {
-            trees.truncate(best_round + 1);
-        }
-        history.best_round = best_round;
-
-        Ensemble {
-            loss: cfg.loss,
-            n_outputs: d,
-            base_score,
-            trees,
-            history,
-        }
+        Booster::from_config(cfg).fit_with_engine(train, valid, engine)
     }
 
     /// 5-fold CV as in Appendix B.2: returns per-fold (model, valid loss).

@@ -1,6 +1,15 @@
 //! Config-file support: GBDTConfig <-> JSON round-trips so experiments
 //! are reproducible from checked-in config files (`sketchboost train
 //! --config run.json`).
+//!
+//! The JSON surface is exactly the built-in knobs — including `loss`
+//! (the built-in objective), `early_stopping_rounds`, and `eval_train`
+//! — and is unchanged by the open training API:
+//! `Booster::from_config` materializes the callbacks a config encodes,
+//! so a config file trains identically through `GBDT::fit` and the
+//! builder. Custom objectives/metrics/callbacks are code-level
+//! extensions and intentionally have no JSON form (a saved *model*
+//! carries the objective's `link_kind` tag instead).
 
 use crate::boosting::losses::LossKind;
 use crate::boosting::sampling::RowSampling;

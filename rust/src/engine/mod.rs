@@ -169,6 +169,17 @@ pub trait ComputeEngine {
 
     /// Loss derivatives (paper eq. 2, diagonal hessian) for all rows.
     /// `preds` is row-major [n, d]; outputs are written into g/h.
+    ///
+    /// Returns the loss of `preds` (on the loss's default-metric
+    /// scale: mean logloss for CE/BCE, RMSE for MSE), fused into the
+    /// same pass — the trainer reuses it as a free train metric when
+    /// no separate evaluation pass is configured, so implementations
+    /// must not skip it. The g/h writes remain the bit-exactness
+    /// surface; the returned f64 is informational only and never feeds
+    /// tree construction — accordingly, its low decimal places may
+    /// differ between engines (NativeEngine fuses it from the f32
+    /// softmax intermediates; XlaEngine scores the metric in f64), so
+    /// do not diff cheap-mode history across engines bitwise.
     fn grad_hess(
         &mut self,
         loss: LossKind,
@@ -176,7 +187,7 @@ pub trait ComputeEngine {
         targets: &Targets,
         g: &mut [f32],
         h: &mut [f32],
-    );
+    ) -> f64;
 
     /// Random Projection sketch: out = g_mat @ proj, shapes [n,d]@[d,k].
     fn sketch_project(

@@ -117,55 +117,12 @@ impl ComputeEngine for NativeEngine {
         targets: &Targets,
         g: &mut [f32],
         h: &mut [f32],
-    ) {
-        match (loss, targets) {
-            (LossKind::MulticlassCE, Targets::Multiclass { labels, n_classes }) => {
-                let d = *n_classes;
-                let n = labels.len();
-                debug_assert_eq!(preds.len(), n * d);
-                for i in 0..n {
-                    let row = &preds[i * d..(i + 1) * d];
-                    let gi = &mut g[i * d..(i + 1) * d];
-                    let hi = &mut h[i * d..(i + 1) * d];
-                    // numerically stable softmax
-                    let mut mx = f32::MIN;
-                    for &z in row {
-                        mx = mx.max(z);
-                    }
-                    let mut sum = 0.0f32;
-                    for (j, &z) in row.iter().enumerate() {
-                        let e = (z - mx).exp();
-                        gi[j] = e;
-                        sum += e;
-                    }
-                    let inv = 1.0 / sum;
-                    for j in 0..d {
-                        let p = gi[j] * inv;
-                        gi[j] = p;
-                        hi[j] = p * (1.0 - p);
-                    }
-                    gi[labels[i] as usize] -= 1.0;
-                }
-            }
-            (LossKind::BCE, Targets::Multilabel { labels, n_labels }) => {
-                let total = labels.len();
-                debug_assert_eq!(preds.len(), total);
-                debug_assert_eq!(total % n_labels, 0);
-                for i in 0..total {
-                    let p = 1.0 / (1.0 + (-preds[i]).exp());
-                    g[i] = p - labels[i];
-                    h[i] = p * (1.0 - p);
-                }
-            }
-            (LossKind::MSE, Targets::Regression { values, .. }) => {
-                debug_assert_eq!(preds.len(), values.len());
-                for i in 0..values.len() {
-                    g[i] = preds[i] - values[i];
-                    h[i] = 1.0;
-                }
-            }
-            (l, t) => panic!("loss {:?} incompatible with targets {:?}", l, kind_name(t)),
-        }
+    ) -> f64 {
+        // the canonical derivative math lives with the losses (it is
+        // also the built-in Objective implementation); this keeps the
+        // two routes — engine-dispatched builtins and trait-dispatched
+        // custom objectives — bit-identical by construction
+        crate::boosting::losses::grad_hess_into(loss, preds, targets, g, h)
     }
 
     fn sketch_project(
@@ -595,14 +552,6 @@ fn denom_of(cell: &[f32], k: usize, k1: usize, mode: ScoreMode) -> f64 {
             }
             s
         }
-    }
-}
-
-fn kind_name(t: &Targets) -> &'static str {
-    match t {
-        Targets::Multiclass { .. } => "multiclass",
-        Targets::Multilabel { .. } => "multilabel",
-        Targets::Regression { .. } => "regression",
     }
 }
 

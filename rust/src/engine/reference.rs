@@ -233,8 +233,8 @@ impl ComputeEngine for ReferenceEngine {
         targets: &Targets,
         g: &mut [f32],
         h: &mut [f32],
-    ) {
-        self.inner.grad_hess(loss, preds, targets, g, h);
+    ) -> f64 {
+        self.inner.grad_hess(loss, preds, targets, g, h)
     }
 
     fn sketch_project(

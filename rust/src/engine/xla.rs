@@ -104,7 +104,7 @@ impl ComputeEngine for XlaEngine {
         targets: &Targets,
         g: &mut [f32],
         h: &mut [f32],
-    ) {
+    ) -> f64 {
         let op = match loss {
             LossKind::MulticlassCE => "grad_ce",
             LossKind::BCE => "grad_bce",
@@ -151,6 +151,17 @@ impl ComputeEngine for XlaEngine {
             g[start * d..(start + len) * d].copy_from_slice(&gq[..len * d]);
             h[start * d..(start + len) * d].copy_from_slice(&hq[..len * d]);
         }
+        // the grad artifacts return derivatives only; score the loss
+        // host-side so this engine honors the fused-loss contract.
+        // This pass runs unconditionally, though the session consumes
+        // the value only in cheap mode without a validation set — a
+        // known redundancy in every other configuration, accepted
+        // here: one O(n*d) host stream is noise against this engine's
+        // PJRT dispatches, and the performance path (NativeEngine)
+        // computes its loss genuinely fused at zero extra cost. If
+        // this ever matters, thread a want_loss flag through the
+        // trait instead of skipping the computation.
+        loss.primary_metric().eval(preds, targets)
     }
 
     fn sketch_project(

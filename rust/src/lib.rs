@@ -33,6 +33,15 @@
 //! at a time in parallel, bit-identical to the per-row reference walker
 //! for every thread count (DESIGN.md "Inference model").
 //!
+//! The training API is open (DESIGN.md "Training session & extension
+//! points"): losses, metrics, and per-round behavior plug in through
+//! the [`boosting::Objective`], [`boosting::EvalMetric`], and
+//! [`boosting::Callback`] traits, composed by the [`boosting::Booster`]
+//! builder — `GBDT::fit` is a thin, bit-exact wrapper over it, and the
+//! closed `LossKind`/`Metric` enums are the built-in trait instances.
+//! `examples/custom_objective.rs` trains a user-defined quantile loss
+//! without touching any core file.
+//!
 //! ```no_run
 //! use sketchboost::prelude::*;
 //!
@@ -60,9 +69,15 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::boosting::booster::Booster;
+    pub use crate::boosting::callback::{
+        Callback, Checkpoint, EarlyStopping, EvalLogger, RoundContext, TimeBudget,
+    };
     pub use crate::boosting::ensemble::Ensemble;
+    pub use crate::boosting::eval::EvalMetric;
     pub use crate::boosting::losses::LossKind;
     pub use crate::boosting::metrics::Metric;
+    pub use crate::boosting::objective::Objective;
     pub use crate::boosting::trainer::{GBDTConfig, GBDT};
     pub use crate::data::profiles;
     pub use crate::data::split;

@@ -89,6 +89,9 @@ fn config_from_args(args: &Args, ds: &Dataset) -> GBDTConfig {
         );
         cfg.verbose = args.flag("verbose") || cfg.verbose;
         cfg.n_threads = args.get_usize("threads", cfg.n_threads);
+        // run-shape flags stay overridable on top of a config file
+        cfg.early_stopping_rounds =
+            args.get_usize("early-stop", cfg.early_stopping_rounds);
         return cfg;
     }
     let mut cfg = GBDTConfig::for_dataset(ds);
@@ -130,6 +133,10 @@ fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                     ("--bins N", "max histogram bins (default 64)"),
                     ("--threads N", "engine worker threads; 0 = all cores (default 1)"),
                     ("--early-stop N", "early stopping patience (default off)"),
+                    ("--eval-every N", "log train/valid metrics every N rounds"),
+                    ("--checkpoint FILE", "save model JSON during training ({round} in FILE gets the round number)"),
+                    ("--checkpoint-every N", "checkpoint period in rounds (default 10)"),
+                    ("--time-budget SECS", "stop training once the wall clock exceeds SECS"),
                     ("--strategy S", "single-tree | one-vs-all (default single-tree)"),
                     ("--engine E", "native | xla (default native)"),
                     ("--test-frac F", "holdout fraction (default 0.2)"),
@@ -141,7 +148,7 @@ fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     }
     let ds = load_data(args)?;
     let (train, test) = train_test_split(&ds, args.get_f32("test-frac", 0.2) as f64, 7);
-    let cfg = config_from_args(args, &ds);
+    let mut cfg = config_from_args(args, &ds);
     let strategy = args.get_str("strategy", "single-tree");
     let engine = args.get_str("engine", "native");
     println!(
@@ -154,20 +161,53 @@ fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     );
 
     if strategy == "one-vs-all" {
+        // the one-vs-all baseline trains outside the Booster session:
+        // callback flags would be silently dead there, so reject them
+        for flag in ["eval-every", "checkpoint", "checkpoint-every", "time-budget"] {
+            if args.get(flag).is_some() {
+                return Err(format!(
+                    "--{flag} attaches a training-session callback and is not \
+                     supported with --strategy one-vs-all (--early-stop works)"
+                )
+                .into());
+            }
+        }
         let (model, secs) = time_once(|| fit_one_vs_all(&cfg, &train, Some(&test)));
         report_scores("one-vs-all", &model.predict_raw(&test), &test, secs);
         return Ok(());
     }
 
+    // assemble the callback-driven session: Booster::from_config wires
+    // early stopping + the default verbose logger from the config; the
+    // flags below attach the rest
+    let eval_every = args.get_usize("eval-every", 0);
+    if eval_every > 0 {
+        cfg.verbose = false; // --eval-every supersedes the 10-round default
+    }
+    let mut booster = Booster::from_config(&cfg);
+    if eval_every > 0 {
+        booster = booster.callback(EvalLogger::every(eval_every));
+    }
+    if let Some(path) = args.get("checkpoint") {
+        booster = booster
+            .callback(Checkpoint::every(path, args.get_usize("checkpoint-every", 10)));
+    } else if args.get("checkpoint-every").is_some() {
+        return Err("--checkpoint-every needs --checkpoint FILE".into());
+    }
+    let time_budget = args.get_f32("time-budget", 0.0);
+    if time_budget > 0.0 {
+        booster = booster.callback(TimeBudget::seconds(time_budget as f64));
+    }
+
     let (model, secs) = match engine.as_str() {
-        "native" => time_once(|| GBDT::fit(&cfg, &train, Some(&test))),
+        "native" => time_once(|| booster.fit(&train, Some(&test))),
         "xla" => {
             let mut eng = XlaEngine::with_opts(
                 &args.get_str("tag", "e2e"),
                 EngineOpts::threads(cfg.n_threads),
             )?;
             println!("xla engine: {}", eng.describe());
-            time_once(|| GBDT::fit_with_engine(&cfg, &train, Some(&test), &mut eng))
+            time_once(|| booster.fit_with_engine(&train, Some(&test), &mut eng))
         }
         other => return Err(format!("unknown engine {other:?}").into()),
     };
