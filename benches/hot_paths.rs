@@ -19,7 +19,10 @@ use sketchboost::boosting::losses::LossKind;
 use sketchboost::data::binning::BinnedDataset;
 use sketchboost::data::synthetic::{make_multiclass, FeatureSpec};
 use sketchboost::engine::reference::{histograms_flagged, partition_inputs};
-use sketchboost::engine::{ComputeEngine, NativeEngine, ScoreMode, SlotRange, XlaEngine};
+use sketchboost::engine::{
+    ComputeEngine, FeatureKind, MissingPolicy, NativeEngine, ScanSpec, ScoreMode, SlotRange,
+    XlaEngine,
+};
 use sketchboost::prelude::*;
 use sketchboost::runtime::registry::artifacts_available;
 use sketchboost::util::bench::{bench, fmt_secs, write_results, write_results_at_root, Table};
@@ -72,9 +75,22 @@ fn main() {
     let k1 = 6;
     let mut hist = vec![0.0f32; n_slots * m * bins * k1];
     rng.fill_gaussian(&mut hist, 1.0);
+    let kinds = vec![FeatureKind::Numeric; m];
+    let scan_spec = ScanSpec {
+        n_slots,
+        m,
+        bins,
+        k1,
+        lam: 1.0,
+        mode: ScoreMode::CountL2,
+        kinds: &kinds,
+        // the learned-default scan is the training default; bench it
+        missing: MissingPolicy::Learn,
+    };
     let mut gains_buf = Vec::new();
+    let mut defaults_buf = Vec::new();
     let meas = bench("split_gains", 1, 10, || {
-        eng.split_gains(&hist, n_slots, m, bins, k1, 1.0, ScoreMode::CountL2, &mut gains_buf);
+        eng.split_gains(&hist, &scan_spec, &mut gains_buf, &mut defaults_buf);
     });
     t.row(&[meas.label.clone(), fmt_secs(meas.median), format!(
         "{:.1}M cand/s",
@@ -188,8 +204,9 @@ fn main() {
             eng_t.histograms(&binned, &prows6, &pchan6, k1, &segs6, n_slots, &mut out);
         });
         let mut gains_t = Vec::new();
+        let mut defaults_t = Vec::new();
         let mg = bench(&format!("gains t={threads}"), 1, 10, || {
-            eng_t.split_gains(&hist, n_slots, m, bins, k1, 1.0, ScoreMode::CountL2, &mut gains_t);
+            eng_t.split_gains(&hist, &scan_spec, &mut gains_t, &mut defaults_t);
         });
         let combined = mh.median + mg.median;
         if threads == 1 {

@@ -86,7 +86,10 @@ pub fn fit_one_vs_all_with_engine(
 ) -> OvaModel {
     let n = train.n_rows;
     let d = cfg.n_outputs;
-    let binned = BinnedDataset::from_dataset(train, cfg.max_bins);
+    // same feature-kind merge (and its bounds diagnostics) as the
+    // single-tree Booster session
+    let kinds = cfg.merged_kinds(train);
+    let binned = BinnedDataset::from_dataset_with_kinds(train, cfg.max_bins, &kinds);
     let metric = cfg.metric();
     let mut rng = Rng::new(cfg.seed);
 
@@ -157,6 +160,7 @@ pub fn fit_one_vs_all_with_engine(
                 feature_mask: None,
                 sparse_topk: None,
                 row_weights: None,
+                missing: cfg.missing_policy,
             };
             let mut tree = build_tree_in(&params, engine, &mut ws);
             tree.scale_leaves(cfg.learning_rate);

@@ -127,7 +127,8 @@ impl Booster {
         cfg.validate(train);
         let n = train.n_rows;
         let d = cfg.n_outputs;
-        let binned = BinnedDataset::from_dataset(train, cfg.max_bins);
+        let kinds = cfg.merged_kinds(train);
+        let binned = BinnedDataset::from_dataset_with_kinds(train, cfg.max_bins, &kinds);
         let mut rng = Rng::new(cfg.seed);
         let t_start = Instant::now();
 
@@ -240,6 +241,7 @@ impl Booster {
                 feature_mask: feature_mask.as_deref(),
                 sparse_topk: cfg.sparse_leaves,
                 row_weights,
+                missing: cfg.missing_policy,
             };
             let mut tree = build_tree_in(&params, engine, &mut ws);
             tree.scale_leaves(cfg.learning_rate);

@@ -4,7 +4,7 @@
 use crate::boosting::losses::LossKind;
 use crate::data::dataset::Dataset;
 use crate::predict::{FlatForest, PredictOptions};
-use crate::tree::tree::{Tree, TreeNode};
+use crate::tree::tree::{CatSet, Tree, TreeNode};
 use crate::util::json::Json;
 
 /// Per-round evaluation history (Figure 3's learning curves come from
@@ -155,6 +155,12 @@ impl Ensemble {
     }
 }
 
+/// Node arrays: `[feature, bin, threshold, left, right, gain,
+/// default_left]` for numeric splits, plus an 8th element — the
+/// ascending category-id list — for categorical splits. Legacy
+/// 6-element nodes (models saved before learned missing-value routing)
+/// load with `default_left = true`, the behavior they were trained
+/// under.
 fn tree_to_json(t: &Tree) -> Json {
     let mut o = Json::obj();
     o.set("n_outputs", Json::Num(t.n_outputs as f64));
@@ -164,14 +170,21 @@ fn tree_to_json(t: &Tree) -> Json {
         .nodes
         .iter()
         .map(|n| {
-            Json::Arr(vec![
+            let mut a = vec![
                 Json::Num(n.feature as f64),
                 Json::Num(n.bin as f64),
                 Json::Num(n.threshold as f64),
                 Json::Num(n.left as f64),
                 Json::Num(n.right as f64),
                 Json::Num(n.gain as f64),
-            ])
+                Json::Num(f64::from(u8::from(n.default_left))),
+            ];
+            if let Some(cats) = &n.cats {
+                a.push(Json::Arr(
+                    cats.ids().map(|id| Json::Num(id as f64)).collect(),
+                ));
+            }
+            Json::Arr(a)
         })
         .collect();
     o.set("nodes", Json::Arr(nodes));
@@ -192,13 +205,35 @@ fn tree_from_json(j: &Json) -> Result<Tree, String> {
         .iter()
         .map(|n| {
             let a = n.as_arr().ok_or("node must be array")?;
-            if a.len() != 6 {
+            if !(6..=8).contains(&a.len()) {
                 return Err("node arity".to_string());
             }
+            let default_left = match a.get(6) {
+                // legacy 6-element node: trained under missing-left
+                None => true,
+                Some(v) => v.as_f64().ok_or("default_left")? != 0.0,
+            };
+            let cats = match a.get(7) {
+                None => None,
+                Some(v) => {
+                    let ids = v.as_arr().ok_or("cats must be array")?;
+                    let mut set = CatSet::new();
+                    for id in ids {
+                        let id = id.as_f64().ok_or("cat id")?;
+                        if id < 0.0 || id > 255.0 || id.fract() != 0.0 {
+                            return Err(format!("bad cat id {id}"));
+                        }
+                        set.insert(id as u32);
+                    }
+                    Some(set)
+                }
+            };
             Ok(TreeNode {
                 feature: a[0].as_f64().ok_or("feature")? as u32,
                 bin: a[1].as_f64().ok_or("bin")? as u8,
                 threshold: a[2].as_f64().ok_or("threshold")? as f32,
+                default_left,
+                cats,
                 left: a[3].as_f64().ok_or("left")? as i32,
                 right: a[4].as_f64().ok_or("right")? as i32,
                 gain: a[5].as_f64().ok_or("gain")? as f32,
@@ -223,6 +258,8 @@ mod tests {
                 feature: 0,
                 bin: 0,
                 threshold: 0.0,
+                default_left: true,
+                cats: None,
                 left: encode_leaf(0),
                 right: encode_leaf(1),
                 gain: 1.0,
@@ -306,6 +343,61 @@ mod tests {
         m.save(&path).unwrap();
         let back = Ensemble::load(&path).unwrap();
         assert_eq!(back.trees.len(), 1);
+    }
+
+    #[test]
+    fn json_roundtrips_default_direction_and_category_sets() {
+        let mut m = toy_model();
+        m.trees[0].nodes[0].default_left = false;
+        m.trees[0].nodes[0].cats = Some(CatSet::from_ids([0u32, 7, 200]));
+        let back = Ensemble::from_json(&m.to_json()).unwrap();
+        let nd = &back.trees[0].nodes[0];
+        assert!(!nd.default_left);
+        assert_eq!(
+            nd.cats.unwrap().ids().collect::<Vec<_>>(),
+            vec![0, 7, 200]
+        );
+        assert_eq!(back.trees[0], m.trees[0]);
+    }
+
+    #[test]
+    fn legacy_six_element_nodes_load_with_default_left() {
+        // a model saved before learned missing routing: no 7th element
+        let m = toy_model();
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(trees)) = o.get_mut("trees") {
+                if let Json::Obj(t) = &mut trees[0] {
+                    if let Some(Json::Arr(nodes)) = t.get_mut("nodes") {
+                        if let Json::Arr(nd) = &mut nodes[0] {
+                            nd.truncate(6);
+                        }
+                    }
+                }
+            }
+        }
+        let back = Ensemble::from_json(&j).unwrap();
+        assert!(back.trees[0].nodes[0].default_left, "legacy nodes route NaN left");
+        assert!(back.trees[0].nodes[0].cats.is_none());
+    }
+
+    #[test]
+    fn from_json_rejects_bad_category_ids() {
+        let mut m = toy_model();
+        m.trees[0].nodes[0].cats = Some(CatSet::from_ids([3u32]));
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(trees)) = o.get_mut("trees") {
+                if let Json::Obj(t) = &mut trees[0] {
+                    if let Some(Json::Arr(nodes)) = t.get_mut("nodes") {
+                        if let Json::Arr(nd) = &mut nodes[0] {
+                            nd[7] = Json::Arr(vec![Json::Num(300.0)]);
+                        }
+                    }
+                }
+            }
+        }
+        assert!(Ensemble::from_json(&j).is_err());
     }
 
     #[test]

@@ -119,10 +119,15 @@ pub fn dump_tree(tree: &Tree) -> String {
             s.push_str(&format!("{pad}leaf{l}: {:?}\n", head(v, tree.n_outputs)));
         } else {
             let n = &tree.nodes[child as usize];
-            s.push_str(&format!(
-                "{pad}[f{} <= {:.4}] gain={:.3}\n",
-                n.feature, n.threshold, n.gain
-            ));
+            let rule = match &n.cats {
+                Some(cats) => {
+                    let ids: Vec<String> = cats.ids().map(|i| i.to_string()).collect();
+                    format!("f{} in {{{}}}", n.feature, ids.join(","))
+                }
+                None => format!("f{} <= {:.4}", n.feature, n.threshold),
+            };
+            let dfl = if n.default_left { "" } else { " nan->right" };
+            s.push_str(&format!("{pad}[{rule}{dfl}] gain={:.3}\n", n.gain));
             walk(tree, n.left, depth + 1, s);
             walk(tree, n.right, depth + 1, s);
         }

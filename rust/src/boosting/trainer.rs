@@ -9,7 +9,7 @@ use crate::boosting::losses::LossKind;
 use crate::boosting::metrics::Metric;
 use crate::boosting::sampling::RowSampling;
 use crate::data::dataset::Dataset;
-use crate::engine::ComputeEngine;
+use crate::engine::{ComputeEngine, MissingPolicy};
 use crate::sketch::SketchConfig;
 
 /// Training configuration. Defaults follow the paper's Table 7 defaults
@@ -44,6 +44,13 @@ pub struct GBDTConfig {
     /// scan (`0` = all cores, `1` = serial). Results are bit-identical
     /// for every value — see the determinism contract in `engine/`.
     pub n_threads: usize,
+    /// feature columns to treat as categorical (integer category ids;
+    /// merged with any columns the dataset itself marks — see
+    /// `Dataset::mark_categorical`)
+    pub categorical_features: Vec<usize>,
+    /// how split search routes missing values (NaN): learned per-split
+    /// default direction (the default) or the legacy always-left policy
+    pub missing_policy: MissingPolicy,
     pub verbose: bool,
     /// record the train metric every round with a full evaluation pass
     /// (costs O(n*d); timing benches disable it — the paper tracks
@@ -75,6 +82,8 @@ impl GBDTConfig {
             use_hess_split: false,
             sparse_leaves: None,
             n_threads: 1,
+            categorical_features: Vec::new(),
+            missing_policy: MissingPolicy::Learn,
             verbose: false,
             eval_train: true,
         }
@@ -102,12 +111,31 @@ impl GBDTConfig {
         self.loss.primary_metric()
     }
 
+    /// Per-feature kinds for binning: the dataset's own marks with this
+    /// config's `categorical_features` merged in (the one shared path
+    /// the single-tree Booster session and the one-vs-all baseline both
+    /// use, so the semantics cannot drift).
+    pub fn merged_kinds(&self, ds: &Dataset) -> Vec<crate::data::dataset::FeatureKind> {
+        let mut kinds = ds.kinds.clone();
+        for &f in &self.categorical_features {
+            assert!(
+                f < ds.n_features,
+                "categorical_features index {f} out of range (m = {})",
+                ds.n_features
+            );
+            kinds[f] = crate::data::dataset::FeatureKind::Categorical;
+        }
+        kinds
+    }
+
     pub(crate) fn validate(&self, ds: &Dataset) {
         assert_eq!(
             self.n_outputs,
             ds.n_outputs(),
             "config n_outputs != dataset outputs"
         );
+        // categorical_features bounds are checked (with diagnostics) by
+        // merged_kinds, the single path both training loops go through
         assert!(self.n_rounds >= 1);
         assert!(self.learning_rate > 0.0);
         assert!((0.0..=1.0).contains(&self.subsample) && self.subsample > 0.0);

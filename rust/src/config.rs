@@ -14,6 +14,7 @@
 use crate::boosting::losses::LossKind;
 use crate::boosting::sampling::RowSampling;
 use crate::boosting::trainer::GBDTConfig;
+use crate::engine::MissingPolicy;
 use crate::sketch::SketchConfig;
 use crate::util::json::Json;
 
@@ -35,6 +36,16 @@ pub fn config_to_json(cfg: &GBDTConfig) -> Json {
     o.set("early_stopping_rounds", Json::Num(cfg.early_stopping_rounds as f64));
     o.set("use_hess_split", Json::Bool(cfg.use_hess_split));
     o.set("eval_train", Json::Bool(cfg.eval_train));
+    o.set(
+        "categorical_features",
+        Json::Arr(
+            cfg.categorical_features
+                .iter()
+                .map(|&f| Json::Num(f as f64))
+                .collect(),
+        ),
+    );
+    o.set("missing_policy", Json::Str(cfg.missing_policy.name().into()));
     match cfg.sparse_leaves {
         Some(k) => o.set("sparse_leaves", Json::Num(k as f64)),
         None => o.set("sparse_leaves", Json::Null),
@@ -102,6 +113,16 @@ pub fn config_from_json(j: &Json) -> Result<GBDTConfig, String> {
         .unwrap_or(cfg.use_hess_split);
     cfg.eval_train = j.get("eval_train").and_then(|v| v.as_bool()).unwrap_or(true);
     cfg.sparse_leaves = j.get("sparse_leaves").and_then(|v| v.as_usize());
+    if let Some(arr) = j.get("categorical_features").and_then(|v| v.as_arr()) {
+        cfg.categorical_features = arr
+            .iter()
+            .map(|v| v.as_usize().ok_or("bad categorical_features entry"))
+            .collect::<Result<Vec<_>, _>>()?;
+    }
+    if let Some(s) = j.get("missing_policy").and_then(|v| v.as_str()) {
+        cfg.missing_policy =
+            MissingPolicy::parse(s).ok_or_else(|| format!("bad missing_policy {s:?}"))?;
+    }
     if let Some(sk) = j.get("sketch") {
         let strategy = sk.get("strategy").and_then(|v| v.as_str()).unwrap_or("full");
         let k = sk.get("k").and_then(|v| v.as_usize()).unwrap_or(5);
@@ -156,6 +177,8 @@ mod tests {
         cfg.subsample = 0.8;
         cfg.eval_train = false;
         cfg.n_threads = 4;
+        cfg.categorical_features = vec![0, 3, 7];
+        cfg.missing_policy = MissingPolicy::AlwaysLeft;
         let back = config_from_json(&config_to_json(&cfg)).unwrap();
         assert_eq!(back.n_threads, 4);
         assert_eq!(back.sketch, cfg.sketch);
@@ -164,6 +187,19 @@ mod tests {
         assert!(back.use_hess_split);
         assert!(!back.eval_train);
         assert!((back.subsample - 0.8).abs() < 1e-6);
+        assert_eq!(back.categorical_features, vec![0, 3, 7]);
+        assert_eq!(back.missing_policy, MissingPolicy::AlwaysLeft);
+    }
+
+    #[test]
+    fn missing_policy_defaults_to_learn_and_rejects_bad_values() {
+        let cfg = GBDTConfig::multiclass(3);
+        let back = config_from_json(&config_to_json(&cfg)).unwrap();
+        assert_eq!(back.missing_policy, MissingPolicy::Learn);
+        assert!(back.categorical_features.is_empty());
+        let mut j = config_to_json(&cfg);
+        j.set("missing_policy", Json::Str("bogus".into()));
+        assert!(config_from_json(&j).is_err());
     }
 
     #[test]

@@ -1,48 +1,102 @@
-//! Quantile binning: continuous features -> u8 bin codes (histogram
-//! algorithm, max 256 bins — Py-Boost's limit, Appendix B.1).
+//! Quantization: feature columns -> u8 bin codes (histogram algorithm,
+//! max 256 bins — Py-Boost's limit, Appendix B.1), with an explicit
+//! missing bin and native categorical codes.
 //!
-//! Bin semantics: for edges e_0 < e_1 < ... < e_{B-2}, a value x maps to
-//! the number of edges with e < x... precisely `bin(x) = #{j : x > e_j}`,
-//! so bin b contains (e_{b-1}, e_b]. A split "left = bins <= b" therefore
-//! corresponds to the raw-value predicate `x <= e_b`, which is what the
-//! tree stores as its float threshold for inference on unbinned data.
-//! NaN maps to bin 0 (missing-as-smallest policy).
+//! ## Bin layout (DESIGN.md "Missing values & categorical splits")
+//!
+//! **Bin 0 of every feature is the missing bin**: NaN always maps there,
+//! whether the feature is numeric or categorical, and split search
+//! learns a per-split default direction for it instead of hard-coding
+//! "missing is the smallest value".
+//!
+//! * **Numeric** features quantile-bin into *value bins* `1..=E+1` for
+//!   `E` ascending deduplicated edges: `bin(x) = 1 + #{j : x > e_j}`.
+//!   A split "left = value bins <= b" (b >= 1) is exactly the raw-value
+//!   predicate `x <= e_{b-1}`, which is what the tree stores as its
+//!   float threshold for inference on unbinned data.
+//! * **Categorical** features hold integer category ids; `bin(id) =
+//!   id + 1` — codes are category ids shifted past the missing bin, no
+//!   quantile edges. Split search partitions *category sets*
+//!   (LightGBM-style sorted one-vs-rest prefixes), never thresholds.
+//!
+//! Because one bin is reserved for missing, a `max_bins` budget leaves
+//! `max_bins - 1` value bins (i.e. at most `max_bins - 2` numeric edges,
+//! and category ids `0..max_bins-1`).
 
-use crate::data::dataset::Dataset;
+use crate::data::dataset::{Dataset, FeatureKind};
+
+/// The reserved per-feature missing bin (NaN maps here for every
+/// feature kind; split search routes it by a learned default).
+pub const MISSING_BIN: u8 = 0;
 
 /// Per-feature quantization of a dataset.
 #[derive(Clone, Debug)]
 pub struct BinnedDataset {
     pub n_rows: usize,
     pub n_features: usize,
-    /// Column-major bin codes: codes[f * n_rows + i].
+    /// Column-major bin codes: codes[f * n_rows + i]. Code 0 = missing.
     pub codes: Vec<u8>,
-    /// Ascending split-candidate edges per feature; bin b <-> x <= edges[b].
+    /// Ascending split-candidate edges per numeric feature; value bin b
+    /// (>= 1) <-> x <= edges[b - 1]. Empty for categorical features.
     pub edges: Vec<Vec<f32>>,
-    /// Number of distinct bins actually used per feature (= edges.len()+1).
+    /// Number of distinct bins actually used per feature, *including*
+    /// the missing bin (numeric: edges.len() + 2; categorical:
+    /// max category id + 2).
     pub n_bins: Vec<u16>,
     /// The global bin budget histograms are sized to (power of two helps
     /// the kernels; always >= max(n_bins)).
     pub max_bins: usize,
+    /// Per-feature interpretation, copied from the dataset.
+    pub kinds: Vec<FeatureKind>,
 }
 
 impl BinnedDataset {
-    /// Quantile-bin every feature of `ds` into at most `max_bins` bins.
+    /// Bin every feature of `ds` into at most `max_bins` bins (one of
+    /// which is the reserved missing bin). Numeric columns quantile-bin;
+    /// columns marked [`FeatureKind::Categorical`] on the dataset take
+    /// the category-id code path.
     pub fn from_dataset(ds: &Dataset, max_bins: usize) -> BinnedDataset {
+        BinnedDataset::from_dataset_with_kinds(ds, max_bins, &ds.kinds)
+    }
+
+    /// [`BinnedDataset::from_dataset`] with an explicit per-feature kind
+    /// override (the trainer merges `GBDTConfig::categorical_features`
+    /// into the dataset's own marks this way).
+    pub fn from_dataset_with_kinds(
+        ds: &Dataset,
+        max_bins: usize,
+        kinds: &[FeatureKind],
+    ) -> BinnedDataset {
         assert!((2..=256).contains(&max_bins), "max_bins must be in [2, 256]");
+        assert_eq!(kinds.len(), ds.n_features, "kinds per feature");
         let n = ds.n_rows;
         let mut codes = vec![0u8; n * ds.n_features];
         let mut edges_all = Vec::with_capacity(ds.n_features);
         let mut n_bins = Vec::with_capacity(ds.n_features);
         for f in 0..ds.n_features {
             let col = ds.column(f);
-            let edges = quantile_edges(col, max_bins);
             let dst = &mut codes[f * n..(f + 1) * n];
-            for (i, &x) in col.iter().enumerate() {
-                dst[i] = bin_of(&edges, x);
+            match kinds[f] {
+                FeatureKind::Numeric => {
+                    // one bin is reserved for missing: budget E <= max_bins - 2 edges
+                    let edges = quantile_edges(col, max_bins - 1);
+                    for (i, &x) in col.iter().enumerate() {
+                        dst[i] = bin_of(&edges, x);
+                    }
+                    n_bins.push((edges.len() + 2) as u16);
+                    edges_all.push(edges);
+                }
+                FeatureKind::Categorical => {
+                    let mut max_code = 0u8;
+                    for (i, &x) in col.iter().enumerate() {
+                        let code = cat_bin_of(x, max_bins, f);
+                        dst[i] = code;
+                        max_code = max_code.max(code);
+                    }
+                    n_bins.push(max_code as u16 + 1);
+                    edges_all.push(Vec::new());
+                }
             }
-            n_bins.push((edges.len() + 1) as u16);
-            edges_all.push(edges);
         }
         BinnedDataset {
             n_rows: n,
@@ -51,6 +105,7 @@ impl BinnedDataset {
             edges: edges_all,
             n_bins,
             max_bins,
+            kinds: kinds.to_vec(),
         }
     }
 
@@ -59,30 +114,33 @@ impl BinnedDataset {
         &self.codes[f * self.n_rows..(f + 1) * self.n_rows]
     }
 
-    /// Raw-value threshold for split "left = bins <= b" on feature f.
+    /// Raw-value threshold for the numeric split "left = value bins <= b"
+    /// (b >= 1): `x <= edges[b - 1]`.
     pub fn threshold_value(&self, f: usize, b: usize) -> f32 {
+        debug_assert_eq!(self.kinds[f], FeatureKind::Numeric);
         let e = &self.edges[f];
         if e.is_empty() {
             f32::INFINITY // constant feature: degenerate split
         } else {
-            e[b.min(e.len() - 1)]
+            e[b.saturating_sub(1).min(e.len() - 1)]
         }
     }
 }
 
-/// Compute up to `max_bins - 1` ascending, deduplicated quantile edges.
-pub fn quantile_edges(col: &[f32], max_bins: usize) -> Vec<f32> {
+/// Compute up to `budget - 1` ascending, deduplicated quantile edges
+/// (`budget` = number of value bins available to this feature).
+pub fn quantile_edges(col: &[f32], budget: usize) -> Vec<f32> {
     let mut vals: Vec<f32> = col.iter().copied().filter(|x| !x.is_nan()).collect();
     if vals.is_empty() {
         return Vec::new();
     }
     vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = vals.len();
-    let n_edges = max_bins - 1;
+    let n_edges = budget - 1;
     let mut edges = Vec::with_capacity(n_edges);
     for q in 1..=n_edges {
         // midpoint-free plain quantile on the sorted sample
-        let pos = (q as f64 / max_bins as f64 * n as f64) as usize;
+        let pos = (q as f64 / budget as f64 * n as f64) as usize;
         let e = vals[pos.min(n - 1)];
         if edges.last().map(|&last| e > last).unwrap_or(true) {
             edges.push(e);
@@ -96,11 +154,11 @@ pub fn quantile_edges(col: &[f32], max_bins: usize) -> Vec<f32> {
     edges
 }
 
-/// bin(x) = #{j : x > e_j}; NaN -> 0.
+/// Numeric code: `bin(x) = 1 + #{j : x > e_j}`; NaN -> [`MISSING_BIN`].
 #[inline]
 pub fn bin_of(edges: &[f32], x: f32) -> u8 {
     if x.is_nan() {
-        return 0;
+        return MISSING_BIN;
     }
     // binary search for the first edge >= x
     let mut lo = 0usize;
@@ -113,7 +171,30 @@ pub fn bin_of(edges: &[f32], x: f32) -> u8 {
             hi = mid;
         }
     }
-    lo as u8
+    1 + lo as u8
+}
+
+/// Categorical code: `id + 1`; NaN -> [`MISSING_BIN`]. Panics on values
+/// that are not integer category ids in `[0, max_bins - 2]` — with
+/// distinct messages for malformed values vs. ids past the bin budget
+/// (the latter is fixed by raising `max_bins`).
+#[inline]
+pub fn cat_bin_of(x: f32, max_bins: usize, f: usize) -> u8 {
+    if x.is_nan() {
+        return MISSING_BIN;
+    }
+    let id = x as i64;
+    assert!(
+        id >= 0 && id as f32 == x,
+        "categorical feature {f}: value {x} is not an integer category id"
+    );
+    assert!(
+        (id as usize) < max_bins - 1,
+        "categorical feature {f}: category id {id} exceeds the bin budget \
+         ([0, {}] with max_bins = {max_bins}); raise max_bins (`--bins`)",
+        max_bins - 2
+    );
+    id as u8 + 1
 }
 
 #[cfg(test)]
@@ -132,22 +213,28 @@ mod tests {
         )
     }
 
-    #[test]
-    fn bin_of_basics() {
-        let edges = vec![1.0, 2.0, 3.0];
-        assert_eq!(bin_of(&edges, 0.5), 0);
-        assert_eq!(bin_of(&edges, 1.0), 0); // x <= e_0
-        assert_eq!(bin_of(&edges, 1.5), 1);
-        assert_eq!(bin_of(&edges, 3.0), 2);
-        assert_eq!(bin_of(&edges, 9.0), 3);
-        assert_eq!(bin_of(&edges, f32::NAN), 0);
+    fn cat_ds_from_col(col: Vec<f32>) -> Dataset {
+        let mut ds = ds_from_col(col);
+        ds.mark_categorical(&[0]);
+        ds
     }
 
     #[test]
-    fn constant_feature_one_bin() {
+    fn bin_of_basics() {
+        let edges = vec![1.0, 2.0, 3.0];
+        assert_eq!(bin_of(&edges, 0.5), 1);
+        assert_eq!(bin_of(&edges, 1.0), 1); // x <= e_0
+        assert_eq!(bin_of(&edges, 1.5), 2);
+        assert_eq!(bin_of(&edges, 3.0), 3);
+        assert_eq!(bin_of(&edges, 9.0), 4);
+        assert_eq!(bin_of(&edges, f32::NAN), MISSING_BIN);
+    }
+
+    #[test]
+    fn constant_feature_one_value_bin() {
         let b = BinnedDataset::from_dataset(&ds_from_col(vec![5.0; 10]), 16);
-        assert_eq!(b.n_bins[0], 1);
-        assert!(b.column(0).iter().all(|&c| c == 0));
+        assert_eq!(b.n_bins[0], 2); // missing bin + one value bin
+        assert!(b.column(0).iter().all(|&c| c == 1));
     }
 
     #[test]
@@ -155,13 +242,14 @@ mod tests {
         let col: Vec<f32> = (0..1000).map(|i| i as f32).collect();
         let b = BinnedDataset::from_dataset(&ds_from_col(col), 16);
         assert!(b.n_bins[0] >= 15, "n_bins={}", b.n_bins[0]);
-        // roughly balanced occupancy
+        // roughly balanced occupancy over the value bins; missing bin empty
         let mut counts = [0usize; 16];
         for &c in b.column(0) {
             counts[c as usize] += 1;
         }
+        assert_eq!(counts[MISSING_BIN as usize], 0);
         let used = counts.iter().filter(|&&c| c > 0).count();
-        assert!(used >= 15);
+        assert!(used >= 14);
         assert!(counts.iter().filter(|&&c| c > 0).all(|&c| c >= 40));
     }
 
@@ -189,13 +277,13 @@ mod tests {
 
     #[test]
     fn split_predicate_matches_bins() {
-        // For every feature edge b: (bin <= b) == (x <= threshold_value(b))
+        // For every candidate b >= 1: (bin <= b) == (x <= threshold_value(b))
         run_prop("bin/threshold equivalence", 20, |g| {
             let n = g.usize_in(20, 200);
             let col = g.vec_gaussian(n, 2.0);
             let b = BinnedDataset::from_dataset(&ds_from_col(col.clone()), 16);
             let codes = b.column(0);
-            for bin in 0..b.edges[0].len() {
+            for bin in 1..=b.edges[0].len() {
                 let t = b.threshold_value(0, bin);
                 for i in 0..n {
                     assert_eq!(
@@ -210,11 +298,37 @@ mod tests {
     }
 
     #[test]
-    fn nan_goes_to_bin_zero() {
+    fn nan_goes_to_missing_bin_zero() {
         let mut col: Vec<f32> = (0..100).map(|i| i as f32).collect();
         col[7] = f32::NAN;
         let b = BinnedDataset::from_dataset(&ds_from_col(col), 8);
-        assert_eq!(b.column(0)[7], 0);
+        assert_eq!(b.column(0)[7], MISSING_BIN);
+        assert!(b.column(0).iter().enumerate().all(|(i, &c)| i == 7 || c >= 1));
+    }
+
+    #[test]
+    fn categorical_codes_are_shifted_ids() {
+        let b = BinnedDataset::from_dataset(
+            &cat_ds_from_col(vec![0.0, 3.0, 1.0, f32::NAN, 3.0]),
+            16,
+        );
+        assert_eq!(b.kinds[0], FeatureKind::Categorical);
+        assert_eq!(b.column(0), &[1, 4, 2, MISSING_BIN, 4]);
+        assert_eq!(b.n_bins[0], 5); // ids 0..=3 -> codes 1..=4, plus missing
+        assert!(b.edges[0].is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "integer category id")]
+    fn categorical_rejects_non_integer() {
+        BinnedDataset::from_dataset(&cat_ds_from_col(vec![0.0, 1.5]), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the bin budget")]
+    fn categorical_rejects_out_of_budget_ids() {
+        // max_bins = 8 leaves ids 0..=6
+        BinnedDataset::from_dataset(&cat_ds_from_col(vec![7.0]), 8);
     }
 
     #[test]
@@ -222,7 +336,7 @@ mod tests {
         let mut col = vec![0.0f32; 900];
         col.extend(vec![1.0f32; 100]);
         let b = BinnedDataset::from_dataset(&ds_from_col(col), 64);
-        assert!(b.n_bins[0] <= 2, "n_bins={}", b.n_bins[0]);
+        assert!(b.n_bins[0] <= 3, "n_bins={}", b.n_bins[0]);
     }
 
     #[test]

@@ -126,6 +126,44 @@ pub fn load_dataset(
     Ok(Dataset::from_row_major(t.n_rows, m, &rows, targets))
 }
 
+/// [`load_dataset`] plus a categorical-column spec: the listed feature
+/// column indices are marked [`crate::data::FeatureKind::Categorical`]
+/// (cells must then be integer category ids, or NaN/empty for missing).
+/// Prediction on a saved model does not need the spec — the model's
+/// splits carry their category sets.
+pub fn load_dataset_spec(
+    path: &Path,
+    task: &str,
+    n_targets: usize,
+    categorical: &[usize],
+) -> Result<Dataset, Box<dyn std::error::Error>> {
+    let mut ds = load_dataset(path, task, n_targets)?;
+    for &f in categorical {
+        if f >= ds.n_features {
+            return Err(Box::new(CsvError(format!(
+                "categorical column {f} out of range ({} feature columns)",
+                ds.n_features
+            ))));
+        }
+        // Reject malformed category cells (non-integer / negative /
+        // unrepresentable) here, as a load error. Whether the ids also
+        // fit the *training* bin budget depends on `max_bins`, which is
+        // chosen later — ids past the budget are reported by binning
+        // with a message naming the budget (`data/binning.rs::cat_bin_of`).
+        for (i, &x) in ds.column(f).iter().enumerate() {
+            let id = x as i64;
+            if !x.is_nan() && (id < 0 || id > 255 || id as f32 != x) {
+                return Err(Box::new(CsvError(format!(
+                    "categorical column {f}, row {i}: {x} is not an integer \
+                     category id in [0, 255] (or NaN/empty for missing)"
+                ))));
+            }
+        }
+    }
+    ds.mark_categorical(categorical);
+    Ok(ds)
+}
+
 /// Load a feature-only CSV (no target columns) for scoring with a saved
 /// model (`sketchboost predict`). Every column is a feature; the dataset
 /// carries dummy targets (prediction never reads them).
@@ -240,6 +278,30 @@ mod tests {
         assert_eq!(lines[0], "p0,p1");
         assert_eq!(lines.len(), 3);
         assert_eq!(lines[2], "0.25,0.75");
+    }
+
+    #[test]
+    fn categorical_spec_marks_columns() {
+        use crate::data::dataset::FeatureKind;
+        let dir = std::env::temp_dir().join("sb_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cat.csv");
+        std::fs::write(&path, "c,x,y\n2,0.5,1.0\n,1.5,2.0\n0,2.5,3.0\n").unwrap();
+        let ds = load_dataset_spec(&path, "regression", 1, &[0]).unwrap();
+        assert_eq!(ds.kinds[0], FeatureKind::Categorical);
+        assert_eq!(ds.kinds[1], FeatureKind::Numeric);
+        assert!(ds.value(1, 0).is_nan(), "empty cell is missing");
+        assert_eq!(ds.value(0, 0), 2.0);
+        // out-of-range spec is a csv error, not a panic
+        assert!(load_dataset_spec(&path, "regression", 1, &[5]).is_err());
+        // and so is a non-integer cell in a declared categorical column
+        let bad = dir.join("badcat.csv");
+        std::fs::write(&bad, "c,y\n1.5,0.0\n").unwrap();
+        assert!(load_dataset_spec(&bad, "regression", 1, &[0]).is_err());
+        // negative ids too
+        let neg = dir.join("negcat.csv");
+        std::fs::write(&neg, "c,y\n-1,0.0\n").unwrap();
+        assert!(load_dataset_spec(&neg, "regression", 1, &[0]).is_err());
     }
 
     #[test]

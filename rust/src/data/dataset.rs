@@ -70,8 +70,23 @@ impl Targets {
     }
 }
 
-/// Dense numeric dataset (numeric features only — Py-Boost's own stated
-/// limitation, Appendix B.1; NaN is allowed and binned to bin 0).
+/// How a feature column is interpreted by binning, split search, and
+/// routing (DESIGN.md "Missing values & categorical splits").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FeatureKind {
+    /// Ordinal values quantile-binned to threshold candidates.
+    #[default]
+    Numeric,
+    /// Raw values are small non-negative integer category ids; splits
+    /// are category-set partitions, not thresholds. NaN = missing.
+    Categorical,
+}
+
+/// Dense feature matrix (Py-Boost's data model, Appendix B.1, extended
+/// with first-class missing values and categorical columns: NaN in any
+/// column is an explicit *missing* value routed by a per-split learned
+/// default direction, and columns marked [`FeatureKind::Categorical`]
+/// hold integer category ids).
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub n_rows: usize,
@@ -79,13 +94,31 @@ pub struct Dataset {
     /// Column-major: features[f * n_rows + i].
     pub features: Vec<f32>,
     pub targets: Targets,
+    /// Per-feature interpretation; `Numeric` unless marked otherwise
+    /// (see [`Dataset::mark_categorical`]).
+    pub kinds: Vec<FeatureKind>,
 }
 
 impl Dataset {
     pub fn new(n_rows: usize, n_features: usize, features: Vec<f32>, targets: Targets) -> Dataset {
         assert_eq!(features.len(), n_rows * n_features, "feature buffer size");
         assert_eq!(targets.len(), n_rows, "targets/rows mismatch");
-        Dataset { n_rows, n_features, features, targets }
+        Dataset {
+            n_rows,
+            n_features,
+            features,
+            targets,
+            kinds: vec![FeatureKind::Numeric; n_features],
+        }
+    }
+
+    /// Mark feature columns as categorical (raw values must be integer
+    /// category ids in `[0, 255]`, or NaN for missing).
+    pub fn mark_categorical(&mut self, cols: &[usize]) {
+        for &f in cols {
+            assert!(f < self.n_features, "categorical column {f} out of range");
+            self.kinds[f] = FeatureKind::Categorical;
+        }
     }
 
     /// Build from a row-major buffer (as loaded from CSV).
@@ -120,6 +153,7 @@ impl Dataset {
     }
 
     /// Row subset as a new dataset (used by CV and train/test splits).
+    /// Feature kinds carry over.
     pub fn gather(&self, rows: &[u32]) -> Dataset {
         let n = rows.len();
         let mut feats = vec![0.0f32; n * self.n_features];
@@ -130,7 +164,9 @@ impl Dataset {
                 dst[j] = src[i as usize];
             }
         }
-        Dataset::new(n, self.n_features, feats, self.targets.gather(rows))
+        let mut out = Dataset::new(n, self.n_features, feats, self.targets.gather(rows));
+        out.kinds.copy_from_slice(&self.kinds);
+        out
     }
 
     /// One row's feature values (row-major order), for prediction APIs.
@@ -188,6 +224,22 @@ mod tests {
     #[should_panic]
     fn size_mismatch_panics() {
         Dataset::new(3, 2, vec![0.0; 5], Targets::Regression { values: vec![0.0; 3], n_targets: 1 });
+    }
+
+    #[test]
+    fn kinds_default_numeric_and_propagate_through_gather() {
+        let mut d = toy();
+        assert_eq!(d.kinds, vec![FeatureKind::Numeric; 2]);
+        d.mark_categorical(&[1]);
+        assert_eq!(d.kinds[1], FeatureKind::Categorical);
+        let g = d.gather(&[0, 2]);
+        assert_eq!(g.kinds, vec![FeatureKind::Numeric, FeatureKind::Categorical]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mark_categorical_rejects_out_of_range() {
+        toy().mark_categorical(&[5]);
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod split;
 pub mod synthetic;
 
 pub use binning::BinnedDataset;
-pub use dataset::{Dataset, Targets};
+pub use dataset::{Dataset, FeatureKind, Targets};

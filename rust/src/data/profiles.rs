@@ -6,9 +6,18 @@
 //! output dimension `d` exact — d is the variable the paper's claims are
 //! about — and preserve task type and rough n/m ratios. See DESIGN.md
 //! section Substitutions.
+//!
+//! The [`SPARSE`] profiles open the sparse/categorical workload class
+//! the real datasets live in (MoA et al. are sparse and category-heavy):
+//! `missing_rate` injects NaN into feature cells and `n_categorical`
+//! switches the leading columns to integer category ids driven by a
+//! categorical generative rule (`synthetic::make_categorical_multitask`).
 
 use crate::data::dataset::Dataset;
-use crate::data::synthetic::{make_multiclass, make_multilabel, make_multitask, FeatureSpec};
+use crate::data::synthetic::{
+    inject_missing, make_categorical_multitask, make_multiclass, make_multilabel,
+    make_multitask, FeatureSpec,
+};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TaskKind {
@@ -31,32 +40,61 @@ pub struct Profile {
     pub features: usize,
     /// latent rank for multilabel/multitask (inter-output correlation)
     pub rank: usize,
+    /// fraction of feature cells replaced with NaN after generation
+    pub missing_rate: f32,
+    /// leading feature columns generated as categorical ids (0 = none;
+    /// implies a categorical generative rule — Multitask only)
+    pub n_categorical: usize,
+    /// category cardinality of the categorical columns
+    pub cardinality: usize,
 }
 
 /// Table 5 datasets (the paper's main evaluation).
 pub const MAIN: [Profile; 9] = [
-    Profile { name: "otto", task: TaskKind::Multiclass, paper_rows: 61_878, paper_features: 93, outputs: 9, rows: 6000, features: 93, rank: 0 },
-    Profile { name: "sf-crime", task: TaskKind::Multiclass, paper_rows: 878_049, paper_features: 10, outputs: 39, rows: 8000, features: 10, rank: 0 },
-    Profile { name: "helena", task: TaskKind::Multiclass, paper_rows: 65_196, paper_features: 27, outputs: 100, rows: 6000, features: 27, rank: 0 },
-    Profile { name: "dionis", task: TaskKind::Multiclass, paper_rows: 416_188, paper_features: 60, outputs: 355, rows: 6000, features: 60, rank: 0 },
-    Profile { name: "mediamill", task: TaskKind::Multilabel, paper_rows: 43_907, paper_features: 120, outputs: 101, rows: 4000, features: 120, rank: 8 },
-    Profile { name: "moa", task: TaskKind::Multilabel, paper_rows: 23_814, paper_features: 876, outputs: 206, rows: 2000, features: 220, rank: 12 },
-    Profile { name: "delicious", task: TaskKind::Multilabel, paper_rows: 16_105, paper_features: 500, outputs: 983, rows: 1500, features: 125, rank: 16 },
-    Profile { name: "rf1", task: TaskKind::Multitask, paper_rows: 9_125, paper_features: 64, outputs: 8, rows: 4000, features: 64, rank: 3 },
-    Profile { name: "scm20d", task: TaskKind::Multitask, paper_rows: 8_966, paper_features: 61, outputs: 16, rows: 4000, features: 61, rank: 4 },
+    Profile { name: "otto", task: TaskKind::Multiclass, paper_rows: 61_878, paper_features: 93, outputs: 9, rows: 6000, features: 93, rank: 0, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "sf-crime", task: TaskKind::Multiclass, paper_rows: 878_049, paper_features: 10, outputs: 39, rows: 8000, features: 10, rank: 0, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "helena", task: TaskKind::Multiclass, paper_rows: 65_196, paper_features: 27, outputs: 100, rows: 6000, features: 27, rank: 0, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "dionis", task: TaskKind::Multiclass, paper_rows: 416_188, paper_features: 60, outputs: 355, rows: 6000, features: 60, rank: 0, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "mediamill", task: TaskKind::Multilabel, paper_rows: 43_907, paper_features: 120, outputs: 101, rows: 4000, features: 120, rank: 8, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "moa", task: TaskKind::Multilabel, paper_rows: 23_814, paper_features: 876, outputs: 206, rows: 2000, features: 220, rank: 12, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "delicious", task: TaskKind::Multilabel, paper_rows: 16_105, paper_features: 500, outputs: 983, rows: 1500, features: 125, rank: 16, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "rf1", task: TaskKind::Multitask, paper_rows: 9_125, paper_features: 64, outputs: 8, rows: 4000, features: 64, rank: 3, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "scm20d", task: TaskKind::Multitask, paper_rows: 8_966, paper_features: 61, outputs: 16, rows: 4000, features: 61, rank: 4, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
 ];
 
 /// Appendix B.6 datasets (the GBDT-MO comparison).
 pub const GBDTMO: [Profile; 4] = [
-    Profile { name: "mnist", task: TaskKind::Multiclass, paper_rows: 70_000, paper_features: 784, outputs: 10, rows: 4000, features: 196, rank: 0 },
-    Profile { name: "caltech", task: TaskKind::Multiclass, paper_rows: 9_144, paper_features: 324, outputs: 101, rows: 2000, features: 162, rank: 0 },
-    Profile { name: "nus-wide", task: TaskKind::Multilabel, paper_rows: 269_648, paper_features: 128, outputs: 81, rows: 3000, features: 128, rank: 8 },
-    Profile { name: "mnist-reg", task: TaskKind::Multitask, paper_rows: 70_000, paper_features: 392, outputs: 24, rows: 3000, features: 98, rank: 6 },
+    Profile { name: "mnist", task: TaskKind::Multiclass, paper_rows: 70_000, paper_features: 784, outputs: 10, rows: 4000, features: 196, rank: 0, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "caltech", task: TaskKind::Multiclass, paper_rows: 9_144, paper_features: 324, outputs: 101, rows: 2000, features: 162, rank: 0, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "nus-wide", task: TaskKind::Multilabel, paper_rows: 269_648, paper_features: 128, outputs: 81, rows: 3000, features: 128, rank: 8, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+    Profile { name: "mnist-reg", task: TaskKind::Multitask, paper_rows: 70_000, paper_features: 392, outputs: 24, rows: 3000, features: 98, rank: 6, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+];
+
+/// Sparse / categorical workload profiles (the data regime the real
+/// multilabel sets live in; `rust/tests/missing_categorical.rs` and the
+/// CI smoke-train run on these).
+pub const SPARSE: [Profile; 2] = [
+    // MoA-shaped multilabel with a quarter of the cells missing
+    Profile { name: "moa-nan", task: TaskKind::Multilabel, paper_rows: 23_814, paper_features: 876, outputs: 206, rows: 2000, features: 220, rank: 12, missing_rate: 0.25, n_categorical: 0, cardinality: 0 },
+    // multitask regression driven by scattered category subsets, with a
+    // sprinkle of missing cells — native categorical splits must beat
+    // codes-as-ordinal here (acceptance-tested)
+    Profile { name: "cat-rule", task: TaskKind::Multitask, paper_rows: 0, paper_features: 0, outputs: 8, rows: 4000, features: 24, rank: 0, missing_rate: 0.05, n_categorical: 16, cardinality: 12 },
 ];
 
 impl Profile {
     pub fn by_name(name: &str) -> Option<Profile> {
-        MAIN.iter().chain(GBDTMO.iter()).find(|p| p.name == name).copied()
+        MAIN.iter()
+            .chain(GBDTMO.iter())
+            .chain(SPARSE.iter())
+            .find(|p| p.name == name)
+            .copied()
+    }
+
+    /// Feature columns that hold category ids (for CLI / config wiring;
+    /// the generated dataset also carries the marks itself).
+    pub fn categorical_columns(&self) -> Vec<usize> {
+        (0..self.n_categorical).collect()
     }
 
     /// Generate the scaled synthetic dataset for this profile.
@@ -66,30 +104,51 @@ impl Profile {
 
     /// Generate with an explicit row count (benches shrink further).
     pub fn generate_sized(&self, rows: usize, seed: u64) -> Dataset {
-        let spec = FeatureSpec::guyon(self.features);
-        match self.task {
-            TaskKind::Multiclass => make_multiclass(rows, spec, self.outputs, 1.6, seed),
-            TaskKind::Multilabel => make_multilabel(rows, spec, self.outputs, self.rank, seed),
-            TaskKind::Multitask => make_multitask(rows, spec, self.outputs, self.rank, 0.3, seed),
+        let mut ds = if self.n_categorical > 0 {
+            debug_assert_eq!(self.task, TaskKind::Multitask);
+            make_categorical_multitask(
+                rows,
+                self.n_categorical,
+                self.cardinality,
+                self.features - self.n_categorical,
+                self.outputs,
+                0.3,
+                seed,
+            )
+        } else {
+            let spec = FeatureSpec::guyon(self.features);
+            match self.task {
+                TaskKind::Multiclass => make_multiclass(rows, spec, self.outputs, 1.6, seed),
+                TaskKind::Multilabel => make_multilabel(rows, spec, self.outputs, self.rank, seed),
+                TaskKind::Multitask => {
+                    make_multitask(rows, spec, self.outputs, self.rank, 0.3, seed)
+                }
+            }
+        };
+        if self.missing_rate > 0.0 {
+            inject_missing(&mut ds, self.missing_rate, seed);
         }
+        ds
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::dataset::Targets;
+    use crate::data::dataset::{FeatureKind, Targets};
 
     #[test]
     fn lookup_by_name() {
         assert_eq!(Profile::by_name("otto").unwrap().outputs, 9);
         assert_eq!(Profile::by_name("mnist").unwrap().outputs, 10);
+        assert_eq!(Profile::by_name("moa-nan").unwrap().outputs, 206);
+        assert_eq!(Profile::by_name("cat-rule").unwrap().n_categorical, 16);
         assert!(Profile::by_name("nope").is_none());
     }
 
     #[test]
     fn all_profiles_generate() {
-        for p in MAIN.iter().chain(GBDTMO.iter()) {
+        for p in MAIN.iter().chain(GBDTMO.iter()).chain(SPARSE.iter()) {
             let ds = p.generate_sized(200, 1);
             assert_eq!(ds.n_rows, 200, "{}", p.name);
             assert_eq!(ds.n_features, p.features, "{}", p.name);
@@ -102,6 +161,24 @@ mod tests {
             );
             assert!(ok, "task kind mismatch for {}", p.name);
         }
+    }
+
+    #[test]
+    fn sparse_profiles_carry_their_structure() {
+        let nan = Profile::by_name("moa-nan").unwrap().generate_sized(300, 2);
+        let frac = nan.features.iter().filter(|v| v.is_nan()).count() as f64
+            / nan.features.len() as f64;
+        assert!((frac - 0.25).abs() < 0.03, "nan fraction {frac}");
+
+        let cat = Profile::by_name("cat-rule").unwrap();
+        let ds = cat.generate_sized(300, 2);
+        assert_eq!(cat.categorical_columns(), (0..16).collect::<Vec<_>>());
+        for f in 0..ds.n_features {
+            let want = if f < 16 { FeatureKind::Categorical } else { FeatureKind::Numeric };
+            assert_eq!(ds.kinds[f], want, "feature {f}");
+        }
+        // missing cells exist on categorical columns too
+        assert!(ds.column(0).iter().any(|v| v.is_nan()) || ds.column(1).iter().any(|v| v.is_nan()));
     }
 
     #[test]

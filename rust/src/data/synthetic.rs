@@ -195,6 +195,78 @@ pub fn make_multitask(
     Dataset::new(n, spec.total(), cols, Targets::Regression { values, n_targets })
 }
 
+/// Replace a `rate` fraction of feature cells with NaN (missing),
+/// deterministically per seed. Targets are untouched. Works on
+/// categorical columns too — a missing category id is just a missing
+/// value.
+pub fn inject_missing(ds: &mut Dataset, rate: f32, seed: u64) {
+    let mut rng = Rng::new(seed ^ 0x4d49_5353); // "MISS"
+    for v in ds.features.iter_mut() {
+        if rng.next_f32() < rate {
+            *v = f32::NAN;
+        }
+    }
+}
+
+/// Multitask regression whose generative rule is *categorical*: the
+/// first `n_cat` feature columns hold category ids in `[0, cards)`, and
+/// each target is a weighted sum of per-feature subset indicators
+/// `[id ∈ S_f]` for random *scattered* subsets `S_f`, plus Gaussian
+/// noise and `n_noise` pure-noise numeric columns. Because the subsets
+/// are scattered across id order, one category-set split isolates each
+/// rule while an ordinal scan over the ids needs many splits — the
+/// workload where native categorical splits must win
+/// (`rust/tests/missing_categorical.rs` asserts exactly that).
+pub fn make_categorical_multitask(
+    n: usize,
+    n_cat: usize,
+    cards: usize,
+    n_noise: usize,
+    n_targets: usize,
+    noise: f32,
+    seed: u64,
+) -> Dataset {
+    assert!(n_cat >= 1 && (2..=255).contains(&cards));
+    let m = n_cat + n_noise;
+    let mut rng = Rng::new(seed);
+    // one scattered, non-trivial subset per categorical feature
+    let mut member = vec![false; n_cat * cards];
+    for f in 0..n_cat {
+        let row = &mut member[f * cards..(f + 1) * cards];
+        loop {
+            for b in row.iter_mut() {
+                *b = rng.next_u64() & 1 == 1;
+            }
+            if row.iter().any(|&b| b) && row.iter().any(|&b| !b) {
+                break;
+            }
+        }
+    }
+    let mut w = vec![0.0f32; n_cat * n_targets];
+    rng.fill_gaussian(&mut w, 1.0);
+    let mut cols = vec![0.0f32; n * m];
+    let mut values = vec![0.0f32; n * n_targets];
+    for i in 0..n {
+        for f in 0..n_cat {
+            let id = rng.next_below(cards);
+            cols[f * n + i] = id as f32;
+            if member[f * cards + id] {
+                for j in 0..n_targets {
+                    values[i * n_targets + j] += w[f * n_targets + j];
+                }
+            }
+        }
+        for j in 0..n_targets {
+            values[i * n_targets + j] += (rng.next_gaussian() as f32) * noise;
+        }
+    }
+    rng.fill_gaussian(&mut cols[n_cat * n..], 1.0);
+    let mut ds = Dataset::new(n, m, cols, Targets::Regression { values, n_targets });
+    let cat_cols: Vec<usize> = (0..n_cat).collect();
+    ds.mark_categorical(&cat_cols);
+    ds
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,6 +376,66 @@ mod tests {
             sbb += db * db;
         }
         sab / (saa.sqrt() * sbb.sqrt() + 1e-12)
+    }
+
+    #[test]
+    fn inject_missing_hits_roughly_the_rate_and_is_deterministic() {
+        let mut a = make_multiclass(500, FeatureSpec::guyon(10), 3, 1.0, 1);
+        let mut b = a.clone();
+        inject_missing(&mut a, 0.2, 7);
+        inject_missing(&mut b, 0.2, 7);
+        let nan_a: Vec<bool> = a.features.iter().map(|v| v.is_nan()).collect();
+        let nan_b: Vec<bool> = b.features.iter().map(|v| v.is_nan()).collect();
+        assert_eq!(nan_a, nan_b);
+        let frac = nan_a.iter().filter(|&&x| x).count() as f64 / nan_a.len() as f64;
+        assert!((frac - 0.2).abs() < 0.03, "nan fraction {frac}");
+        // targets untouched
+        match (&a.targets, &b.targets) {
+            (Targets::Multiclass { labels: la, .. }, Targets::Multiclass { labels: lb, .. }) => {
+                assert_eq!(la, lb)
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn categorical_multitask_shapes_and_signal() {
+        use crate::data::dataset::FeatureKind;
+        let ds = make_categorical_multitask(800, 4, 8, 3, 5, 0.1, 3);
+        assert_eq!(ds.n_rows, 800);
+        assert_eq!(ds.n_features, 7);
+        assert_eq!(ds.n_outputs(), 5);
+        for f in 0..7 {
+            let want = if f < 4 { FeatureKind::Categorical } else { FeatureKind::Numeric };
+            assert_eq!(ds.kinds[f], want, "feature {f}");
+        }
+        // categorical columns hold integer ids below the cardinality
+        for f in 0..4 {
+            for &x in ds.column(f) {
+                assert!(x >= 0.0 && x < 8.0 && x.fract() == 0.0, "bad id {x}");
+            }
+        }
+        // the rule is real: conditioning target 0 on feature 0's subset
+        // membership must separate the means
+        let values = match &ds.targets {
+            Targets::Regression { values, .. } => values,
+            _ => panic!(),
+        };
+        let col = ds.column(0);
+        let mut by_id = vec![(0.0f64, 0usize); 8];
+        for i in 0..800 {
+            let e = &mut by_id[col[i] as usize];
+            e.0 += values[i * 5] as f64;
+            e.1 += 1;
+        }
+        let means: Vec<f64> = by_id
+            .iter()
+            .filter(|(_, c)| *c > 0)
+            .map(|(s, c)| s / *c as f64)
+            .collect();
+        let spread = means.iter().fold(f64::MIN, |a, &b| a.max(b))
+            - means.iter().fold(f64::MAX, |a, &b| a.min(b));
+        assert!(spread > 0.3, "per-category means not separated: {means:?}");
     }
 
     #[test]

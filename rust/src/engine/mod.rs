@@ -113,6 +113,8 @@ use crate::boosting::losses::LossKind;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Targets;
 
+pub use crate::data::dataset::FeatureKind;
+
 /// Split-scoring denominator (paper section 3 "best practices").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ScoreMode {
@@ -130,6 +132,138 @@ impl ScoreMode {
         match self {
             ScoreMode::CountL2 => k + 1,
             ScoreMode::HessL2 => 2 * k + 1,
+        }
+    }
+
+    /// Number of scoring channels `k` for `k1` histogram channels.
+    pub fn scoring_k(&self, k1: usize) -> usize {
+        match self {
+            ScoreMode::CountL2 => k1 - 1,
+            ScoreMode::HessL2 => (k1 - 1) / 2,
+        }
+    }
+}
+
+/// How split search treats the missing bin (bin 0 of every feature —
+/// `data/binning.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MissingPolicy {
+    /// XGBoost-style sparsity-aware search: every candidate is evaluated
+    /// with missing routed left *and* right, and the winning direction
+    /// is recorded on the split as `default_left`.
+    #[default]
+    Learn,
+    /// Legacy policy: missing always routes left (the historical
+    /// "NaN is the smallest value" behavior, now explicit).
+    AlwaysLeft,
+}
+
+impl MissingPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MissingPolicy::Learn => "learn",
+            MissingPolicy::AlwaysLeft => "left",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MissingPolicy> {
+        match s {
+            "learn" => Some(MissingPolicy::Learn),
+            "left" | "always_left" => Some(MissingPolicy::AlwaysLeft),
+            _ => None,
+        }
+    }
+}
+
+/// Shape + semantics of one split-gain scan, shared by every
+/// [`ComputeEngine::split_gains`] backend and by the splitter that
+/// consumes the gain tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct ScanSpec<'a> {
+    pub n_slots: usize,
+    /// feature count
+    pub m: usize,
+    /// histogram bins per feature (bin 0 = missing)
+    pub bins: usize,
+    /// histogram channels
+    pub k1: usize,
+    /// L2 regularizer in the candidate scores
+    pub lam: f32,
+    pub mode: ScoreMode,
+    /// per-feature interpretation (`spec.kinds.len() == m`)
+    pub kinds: &'a [FeatureKind],
+    pub missing: MissingPolicy,
+}
+
+/// Pooled scratch for [`categorical_order`] (per-bin stats, per-channel
+/// totals, and the output permutation). One lives in every engine worker
+/// and one in the tree workspace, so the categorical scan allocates only
+/// up to its high-water mark.
+#[derive(Default)]
+pub struct CatScratch {
+    stats: Vec<f64>,
+    /// Value bins (codes >= 1) with any mass, in scan order; filled by
+    /// [`categorical_order`].
+    pub order: Vec<u8>,
+}
+
+/// Deterministic category ordering for the LightGBM-style categorical
+/// split scan: the value bins (codes >= 1) of one (slot, feature) pair
+/// that carry any mass, sorted by
+///
+/// `stat(c) = g_c[0] / (denom_c + lam)`
+///
+/// descending (ties broken by ascending bin) — the category's *leading
+/// scoring channel* over its regularized denominator. For a single
+/// scoring channel this is exactly LightGBM's
+/// gradient-over-denominator order; for sketched multi-channel scoring
+/// channel 0 is the sketch's leading direction (largest-norm output
+/// for TopOutputs, leading singular vector for SVD), which keeps the
+/// order scalar and — unlike a projection onto the node's *total*
+/// gradient, which is ~0 at any well-centered node — non-degenerate.
+/// The sorted *prefixes* are the candidate category sets — candidate 0
+/// is the classic one-vs-rest split. Pure in `pair_hist`, so every
+/// engine and the splitter reconstruct the identical order.
+pub fn categorical_order(
+    pair_hist: &[f32], // one (slot, feature): bins * k1 cells
+    bins: usize,
+    k1: usize,
+    mode: ScoreMode,
+    lam: f32,
+    scratch: &mut CatScratch,
+) {
+    debug_assert_eq!(pair_hist.len(), bins * k1);
+    let k = mode.scoring_k(k1);
+    let CatScratch { stats, order, .. } = scratch;
+    stats.clear();
+    stats.resize(bins, 0.0);
+    order.clear();
+    for b in 1..bins {
+        let cell = &pair_hist[b * k1..(b + 1) * k1];
+        if cell[k1 - 1] <= 0.0 {
+            continue; // empty category
+        }
+        stats[b] = cell[0] as f64 / (denom_of(cell, k, k1, mode) + lam as f64);
+        order.push(b as u8);
+    }
+    order.sort_unstable_by(|&a, &b| {
+        stats[b as usize].total_cmp(&stats[a as usize]).then(a.cmp(&b))
+    });
+}
+
+/// Scoring denominator of one histogram cell (count channel in CountL2;
+/// summed hessian channels in HessL2 — GBDT-MO's shared-denominator
+/// formulation).
+#[inline]
+pub(crate) fn denom_of(cell: &[f32], k: usize, k1: usize, mode: ScoreMode) -> f64 {
+    match mode {
+        ScoreMode::CountL2 => cell[k1 - 1] as f64,
+        ScoreMode::HessL2 => {
+            let mut s = 0.0f64;
+            for c in k..2 * k {
+                s += cell[c] as f64;
+            }
+            s
         }
     }
 }
@@ -225,22 +359,32 @@ pub trait ComputeEngine {
         out: &mut [f32],
     );
 
-    /// Split scores S(left)+S(right) for every (slot, feature, bin),
-    /// written into `out` (cleared and resized to `n_slots * m * bins`;
-    /// candidate b means "left = bins <= b"). The caller owns the buffer
-    /// so steady-state training reuses its capacity across levels and
+    /// Split scores S(left)+S(right) for every (slot, feature,
+    /// candidate), written into `out`, with the winning missing-value
+    /// direction per candidate in `defaults` (1 = left). Both buffers
+    /// are cleared and resized to `n_slots * m * bins`; the caller owns
+    /// them so steady-state training reuses capacity across levels and
     /// trees (see `tree/workspace.rs`).
-    #[allow(clippy::too_many_arguments)]
+    ///
+    /// Candidate semantics per feature kind (bin 0 is the missing bin):
+    ///
+    /// * **Numeric**: candidate `b >= 1` means "left = value bins <= b",
+    ///   with the missing bin routed per `defaults` (under
+    ///   [`MissingPolicy::Learn`] both directions are scored and the max
+    ///   wins; ties and NaN-free nodes default left, preserving the
+    ///   legacy behavior bit-for-bit). Candidate 0 (left = missing only)
+    ///   has no representable raw threshold and is never selected by the
+    ///   splitter; under [`MissingPolicy::AlwaysLeft`] the scan is the
+    ///   classic prefix scan over all bins with `defaults` all-left.
+    /// * **Categorical**: candidate `j` means "left = the first `j + 1`
+    ///   categories of [`categorical_order`]", i.e. sorted one-vs-rest
+    ///   prefixes; entries past the number of present categories are 0.
     fn split_gains(
         &mut self,
         hist: &[f32],
-        n_slots: usize,
-        m: usize,
-        bins: usize,
-        k1: usize,
-        lam: f32,
-        mode: ScoreMode,
+        spec: &ScanSpec,
         out: &mut Vec<f32>,
+        defaults: &mut Vec<u8>,
     );
 
     /// Per-leaf sums of the full gradient/hessian matrices over `rows`,
@@ -267,6 +411,49 @@ mod tests {
         assert_eq!(ScoreMode::CountL2.channels(5), 6);
         assert_eq!(ScoreMode::HessL2.channels(5), 11);
         assert_eq!(ScoreMode::CountL2.channels(1), 2);
+        assert_eq!(ScoreMode::CountL2.scoring_k(6), 5);
+        assert_eq!(ScoreMode::HessL2.scoring_k(11), 5);
+    }
+
+    #[test]
+    fn missing_policy_parse_roundtrip() {
+        for p in [MissingPolicy::Learn, MissingPolicy::AlwaysLeft] {
+            assert_eq!(MissingPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(MissingPolicy::parse("always_left"), Some(MissingPolicy::AlwaysLeft));
+        assert!(MissingPolicy::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn categorical_order_sorts_by_leading_channel_stat() {
+        // one pair, 5 bins (bin 0 missing), k1 = 2 (one grad channel +
+        // count). Category gradients: bin1 +4 (cnt 2), bin2 -6 (cnt 2),
+        // bin3 empty, bin4 +1 (cnt 1): stats 4/3, -2, 1/2.
+        let k1 = 2;
+        let hist = vec![
+            0.0, 0.0, // missing
+            4.0, 2.0, // bin 1: stat = 4/3
+            -6.0, 2.0, // bin 2: stat = -2
+            0.0, 0.0, // bin 3: empty, excluded
+            1.0, 1.0, // bin 4: stat = 1/2
+        ];
+        let mut scratch = CatScratch::default();
+        categorical_order(&hist, 5, k1, ScoreMode::CountL2, 1.0, &mut scratch);
+        assert_eq!(scratch.order, vec![1, 4, 2]);
+    }
+
+    #[test]
+    fn categorical_order_breaks_ties_by_bin() {
+        // two identical categories must order by ascending bin id
+        let k1 = 2;
+        let hist = vec![
+            0.0, 0.0, //
+            1.0, 1.0, //
+            1.0, 1.0, //
+        ];
+        let mut scratch = CatScratch::default();
+        categorical_order(&hist, 3, k1, ScoreMode::CountL2, 1.0, &mut scratch);
+        assert_eq!(scratch.order, vec![1, 2]);
     }
 
     #[test]

@@ -48,10 +48,13 @@
 
 use crate::boosting::losses::LossKind;
 use crate::data::binning::BinnedDataset;
-use crate::data::dataset::Targets;
+use crate::data::dataset::{FeatureKind, Targets};
 use crate::util::threading::{reduce_shards, shard_bounds, DisjointSlice, ThreadPool};
 
-use super::{ComputeEngine, EngineOpts, LeafSums, ScoreMode, SlotRange};
+use super::{
+    categorical_order, denom_of, CatScratch, ComputeEngine, EngineOpts, LeafSums,
+    MissingPolicy, ScanSpec, ScoreMode, SlotRange,
+};
 
 /// Rows per histogram shard (below 2·this, the build stays serial).
 pub(crate) const SHARD_TARGET_ROWS: usize = 2048;
@@ -81,7 +84,10 @@ pub struct NativeEngine {
     /// scratch: per-(shard boundary, segment) cut positions
     scratch_cuts: Vec<u32>,
     /// scratch: per-worker f64 accumulators for the split scan
+    /// (layout: [tot_g k][acc_g k][miss_g k] per worker)
     scratch_gain: Vec<f64>,
+    /// scratch: per-worker categorical ordering buffers
+    scratch_cat: Vec<CatScratch>,
 }
 
 impl NativeEngine {
@@ -234,53 +240,60 @@ impl ComputeEngine for NativeEngine {
     fn split_gains(
         &mut self,
         hist: &[f32],
-        n_slots: usize,
-        m: usize,
-        bins: usize,
-        k1: usize,
-        lam: f32,
-        mode: ScoreMode,
+        spec: &ScanSpec,
         out: &mut Vec<f32>,
+        defaults: &mut Vec<u8>,
     ) {
-        let k = match mode {
-            ScoreMode::CountL2 => k1 - 1,
-            ScoreMode::HessL2 => (k1 - 1) / 2,
-        };
+        let (n_slots, m, bins, k1) = (spec.n_slots, spec.m, spec.bins, spec.k1);
+        debug_assert_eq!(spec.kinds.len(), m);
+        let k = spec.mode.scoring_k(k1);
         out.clear();
         out.resize(n_slots * m * bins, 0.0);
+        defaults.clear();
+        defaults.resize(n_slots * m * bins, 1);
         let n_pairs = n_slots * m;
         if n_pairs == 0 || bins == 0 {
             return;
         }
-        // Per-worker f64 accumulators, pooled on the engine: k <= ~2d+1
-        // per worker, reused across levels and trees.
-        let nw = self.pool.n_threads();
+        // Per-worker f64 accumulators + categorical ordering buffers,
+        // pooled on the engine and reused across levels and trees.
+        let nw = self.pool.n_threads().max(1);
         self.scratch_gain.clear();
-        self.scratch_gain.resize(nw.max(1) * 2 * k, 0.0);
+        self.scratch_gain.resize(nw * 3 * k, 0.0);
+        if self.scratch_cat.len() < nw {
+            self.scratch_cat.resize_with(nw, CatScratch::default);
+        }
         const PAIR_CHUNK: usize = 8;
         // Tiny frontiers (deep levels, small datasets) run serially on
         // the caller — thread spawns would cost more than the scan.
         if nw == 1 || hist.len() < 16 * 1024 || n_pairs <= PAIR_CHUNK {
-            let (tot_g, acc_g) = self.scratch_gain[..2 * k].split_at_mut(k);
+            let ws = &mut self.scratch_gain[..3 * k];
+            let cat = &mut self.scratch_cat[0];
             for pair in 0..n_pairs {
-                let dst = &mut out[pair * bins..(pair + 1) * bins];
-                scan_pair(hist, pair, bins, k1, k, lam, mode, tot_g, acc_g, dst);
+                let (dst, dfl) = (
+                    &mut out[pair * bins..(pair + 1) * bins],
+                    &mut defaults[pair * bins..(pair + 1) * bins],
+                );
+                scan_pair(hist, pair, spec, k, ws, cat, dst, dfl);
             }
             return;
         }
         // Chunked queue over (slot, feature) pairs. Each pair is a pure
-        // function of `hist` writing its own disjoint `bins`-wide range,
-        // so the scan is deterministic for any thread count; the queue
-        // only balances load.
+        // function of `hist` writing its own disjoint `bins`-wide gain +
+        // default range, so the scan is deterministic for any thread
+        // count; the queue only balances load.
         use std::sync::atomic::{AtomicUsize, Ordering};
         let cursor = AtomicUsize::new(0);
         let dst_all = DisjointSlice::new(out.as_mut_slice());
+        let dfl_all = DisjointSlice::new(defaults.as_mut_slice());
         let scratch = DisjointSlice::new(&mut self.scratch_gain);
+        let cat_all = DisjointSlice::new(&mut self.scratch_cat);
         self.pool.broadcast(|w| {
             // Safety: each worker id is handed out once per broadcast, so
             // the per-worker scratch ranges are disjoint.
-            let ws = unsafe { scratch.range_mut(w * 2 * k..(w + 1) * 2 * k) };
-            let (tot_g, acc_g) = ws.split_at_mut(k);
+            let ws = unsafe { scratch.range_mut(w * 3 * k..(w + 1) * 3 * k) };
+            let cats = unsafe { cat_all.range_mut(w..w + 1) };
+            let cat = &mut cats[0];
             loop {
                 let start = cursor.fetch_add(PAIR_CHUNK, Ordering::Relaxed);
                 if start >= n_pairs {
@@ -290,7 +303,8 @@ impl ComputeEngine for NativeEngine {
                     // Safety: pair ranges are disjoint and the cursor
                     // hands each pair index to exactly one worker.
                     let dst = unsafe { dst_all.range_mut(pair * bins..(pair + 1) * bins) };
-                    scan_pair(hist, pair, bins, k1, k, lam, mode, tot_g, acc_g, dst);
+                    let dfl = unsafe { dfl_all.range_mut(pair * bins..(pair + 1) * bins) };
+                    scan_pair(hist, pair, spec, k, ws, cat, dst, dfl);
                 }
             }
         });
@@ -410,28 +424,58 @@ fn gemm_dyn(g_mat: &[f32], n: usize, d: usize, proj: &[f32], k: usize, out: &mut
     }
 }
 
-/// Accumulate one (slot, feature) pair's candidate scores into `out`
-/// (`bins` entries). The hoisted body of the historical serial scan: a
-/// totals pass, then the prefix scan emitting S(left) + S(right) per
-/// split candidate. `tot_g`/`acc_g` are caller-owned k-wide scratch.
+/// Scan one (slot, feature) pair's candidates into `out`/`dfl` (`bins`
+/// entries each), dispatching on the feature kind and missing policy
+/// (see the `ComputeEngine::split_gains` contract). `ws` is a
+/// caller-owned `3k`-wide f64 scratch (`[tot_g][acc_g][miss_g]`), `cat`
+/// the caller-owned categorical ordering scratch.
 #[allow(clippy::too_many_arguments)]
 fn scan_pair(
     hist: &[f32],
     pair: usize,
-    bins: usize,
-    k1: usize,
+    spec: &ScanSpec,
     k: usize,
-    lam: f32,
-    mode: ScoreMode,
+    ws: &mut [f64],
+    cat: &mut CatScratch,
+    out: &mut [f32],
+    dfl: &mut [u8],
+) {
+    let (bins, k1) = (spec.bins, spec.k1);
+    let ph = &hist[pair * bins * k1..(pair + 1) * bins * k1];
+    let (tot_g, rest) = ws.split_at_mut(k);
+    let (acc_g, miss_g) = rest.split_at_mut(k);
+    match spec.kinds[pair % spec.m] {
+        FeatureKind::Numeric => match spec.missing {
+            MissingPolicy::AlwaysLeft => {
+                scan_numeric_prefix(ph, spec, k, tot_g, acc_g, out)
+            }
+            MissingPolicy::Learn => {
+                scan_numeric_learn(ph, spec, k, tot_g, acc_g, miss_g, out, dfl)
+            }
+        },
+        FeatureKind::Categorical => {
+            scan_categorical(ph, spec, k, tot_g, acc_g, miss_g, cat, out, dfl)
+        }
+    }
+}
+
+/// The classic prefix scan over all bins — the missing bin participates
+/// as the smallest value (`MissingPolicy::AlwaysLeft`): a totals pass,
+/// then the prefix scan emitting S(left) + S(right) per candidate.
+/// `dfl` stays at its all-left initialization.
+fn scan_numeric_prefix(
+    ph: &[f32],
+    spec: &ScanSpec,
+    k: usize,
     tot_g: &mut [f64],
     acc_g: &mut [f64],
     out: &mut [f32],
 ) {
-    let base = pair * bins * k1;
+    let (bins, k1, lam, mode) = (spec.bins, spec.k1, spec.lam, spec.mode);
     tot_g.fill(0.0);
     let mut tot_d = 0.0f64;
     for b in 0..bins {
-        let cell = &hist[base + b * k1..base + (b + 1) * k1];
+        let cell = &ph[b * k1..(b + 1) * k1];
         for c in 0..k {
             tot_g[c] += cell[c] as f64;
         }
@@ -440,7 +484,7 @@ fn scan_pair(
     acc_g.fill(0.0);
     let mut acc_d = 0.0f64;
     for b in 0..bins {
-        let cell = &hist[base + b * k1..base + (b + 1) * k1];
+        let cell = &ph[b * k1..(b + 1) * k1];
         for c in 0..k {
             acc_g[c] += cell[c] as f64;
         }
@@ -456,6 +500,166 @@ fn scan_pair(
         s_left /= acc_d + lam as f64;
         s_right /= (tot_d - acc_d) + lam as f64;
         out[b] = (s_left + s_right) as f32;
+    }
+}
+
+/// Score one candidate with missing routed left and right (in that
+/// order): `acc_*` are the non-missing left-side sums, `miss_*` the
+/// missing bin's, `tot_*` the node totals. Shared by the numeric
+/// learned-default scan and the categorical scan — and by the
+/// `reference` oracle, so the leaf formula cannot drift between them
+/// (the *scan structure* around it is what the oracle independently
+/// recomputes).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn missing_direction_scores(
+    acc_g: &[f64],
+    miss_g: &[f64],
+    tot_g: &[f64],
+    acc_d: f64,
+    miss_d: f64,
+    tot_d: f64,
+    lam: f64,
+    k: usize,
+) -> (f64, f64) {
+    let mut sl = 0.0f64;
+    let mut sr = 0.0f64;
+    for c in 0..k {
+        let l = acc_g[c] + miss_g[c];
+        let r = tot_g[c] - l;
+        sl += l * l;
+        sr += r * r;
+    }
+    let ld = acc_d + miss_d;
+    let gain_left = sl / (ld + lam) + sr / ((tot_d - ld) + lam);
+    let mut sl2 = 0.0f64;
+    let mut sr2 = 0.0f64;
+    for c in 0..k {
+        let l = acc_g[c];
+        let r = tot_g[c] - l;
+        sl2 += l * l;
+        sr2 += r * r;
+    }
+    let gain_right = sl2 / (acc_d + lam) + sr2 / ((tot_d - acc_d) + lam);
+    (gain_left, gain_right)
+}
+
+/// Shared prologue of the learned-default scans: node totals (f64 fold
+/// over all bins, ascending — the canonical order the `reference`
+/// oracle mirrors) into `tot_g`, the missing bin's channel sums into
+/// `miss_g`; returns `(tot_d, miss_d)`. One implementation so the
+/// numeric and categorical scans cannot drift apart.
+fn node_totals(
+    ph: &[f32],
+    bins: usize,
+    k1: usize,
+    k: usize,
+    mode: ScoreMode,
+    tot_g: &mut [f64],
+    miss_g: &mut [f64],
+) -> (f64, f64) {
+    tot_g.fill(0.0);
+    let mut tot_d = 0.0f64;
+    for b in 0..bins {
+        let cell = &ph[b * k1..(b + 1) * k1];
+        for c in 0..k {
+            tot_g[c] += cell[c] as f64;
+        }
+        tot_d += denom_of(cell, k, k1, mode);
+    }
+    let mcell = &ph[0..k1];
+    for c in 0..k {
+        miss_g[c] = mcell[c] as f64;
+    }
+    (tot_d, denom_of(mcell, k, k1, mode))
+}
+
+/// XGBoost-style sparsity-aware numeric scan: prefix over the value
+/// bins (1..bins), each candidate scored with the missing bin routed
+/// left and right; the max wins and its direction lands in `dfl`. Ties
+/// — including every NaN-free node, where both scores are bit-equal —
+/// go left, preserving the legacy behavior exactly. Candidate 0 (left =
+/// missing only) has no representable threshold and stays 0/left.
+#[allow(clippy::too_many_arguments)]
+fn scan_numeric_learn(
+    ph: &[f32],
+    spec: &ScanSpec,
+    k: usize,
+    tot_g: &mut [f64],
+    acc_g: &mut [f64],
+    miss_g: &mut [f64],
+    out: &mut [f32],
+    dfl: &mut [u8],
+) {
+    let (bins, k1, lam, mode) = (spec.bins, spec.k1, spec.lam as f64, spec.mode);
+    let (tot_d, miss_d) = node_totals(ph, bins, k1, k, mode, tot_g, miss_g);
+    acc_g.fill(0.0);
+    let mut acc_d = 0.0f64;
+    out[0] = 0.0;
+    for b in 1..bins {
+        let cell = &ph[b * k1..(b + 1) * k1];
+        for c in 0..k {
+            acc_g[c] += cell[c] as f64;
+        }
+        acc_d += denom_of(cell, k, k1, mode);
+        let (gl, gr) = missing_direction_scores(
+            acc_g, miss_g, tot_g, acc_d, miss_d, tot_d, lam, k,
+        );
+        if gl >= gr {
+            out[b] = gl as f32;
+            dfl[b] = 1;
+        } else {
+            out[b] = gr as f32;
+            dfl[b] = 0;
+        }
+    }
+}
+
+/// LightGBM-style categorical scan: prefix over [`categorical_order`]'s
+/// sorted categories; candidate `j` = "first j+1 sorted categories
+/// left", scored with missing routed per policy (both directions under
+/// `Learn`). Entries past the number of present categories stay 0.
+#[allow(clippy::too_many_arguments)]
+fn scan_categorical(
+    ph: &[f32],
+    spec: &ScanSpec,
+    k: usize,
+    tot_g: &mut [f64],
+    acc_g: &mut [f64],
+    miss_g: &mut [f64],
+    cat: &mut CatScratch,
+    out: &mut [f32],
+    dfl: &mut [u8],
+) {
+    let (bins, k1, lam, mode) = (spec.bins, spec.k1, spec.lam as f64, spec.mode);
+    categorical_order(ph, bins, k1, mode, spec.lam, cat);
+    let (tot_d, miss_d) = node_totals(ph, bins, k1, k, mode, tot_g, miss_g);
+    acc_g.fill(0.0);
+    let mut acc_d = 0.0f64;
+    for (j, &b) in cat.order.iter().enumerate() {
+        let cell = &ph[b as usize * k1..(b as usize + 1) * k1];
+        for c in 0..k {
+            acc_g[c] += cell[c] as f64;
+        }
+        acc_d += denom_of(cell, k, k1, mode);
+        let (gl, gr) = missing_direction_scores(
+            acc_g, miss_g, tot_g, acc_d, miss_d, tot_d, lam, k,
+        );
+        match spec.missing {
+            MissingPolicy::AlwaysLeft => {
+                out[j] = gl as f32;
+                dfl[j] = 1;
+            }
+            MissingPolicy::Learn => {
+                if gl >= gr {
+                    out[j] = gl as f32;
+                    dfl[j] = 1;
+                } else {
+                    out[j] = gr as f32;
+                    dfl[j] = 0;
+                }
+            }
+        }
     }
 }
 
@@ -533,24 +737,6 @@ fn hist_pass_dyn(
             for (o, &s) in out_s.iter_mut().zip(src.iter()) {
                 *o += s;
             }
-        }
-    }
-}
-
-#[inline]
-fn denom_of(cell: &[f32], k: usize, k1: usize, mode: ScoreMode) -> f64 {
-    match mode {
-        // count channel
-        ScoreMode::CountL2 => cell[k1 - 1] as f64,
-        // GBDT-MO: sum of hessian channels (per-output denominators are
-        // approximated by the summed hessian, as GBDT-MO's shared-
-        // denominator formulation does)
-        ScoreMode::HessL2 => {
-            let mut s = 0.0f64;
-            for c in k..2 * k {
-                s += cell[c] as f64;
-            }
-            s
         }
     }
 }
@@ -773,6 +959,30 @@ mod tests {
         }
     }
 
+    /// Scan spec over all-numeric features with the legacy missing
+    /// policy — the shape under which the classic prefix-scan tests
+    /// below stay valid verbatim.
+    fn legacy_spec(
+        n_slots: usize,
+        m: usize,
+        bins: usize,
+        k1: usize,
+        lam: f32,
+        mode: ScoreMode,
+        kinds: &[FeatureKind],
+    ) -> ScanSpec<'_> {
+        ScanSpec {
+            n_slots,
+            m,
+            bins,
+            k1,
+            lam,
+            mode,
+            kinds,
+            missing: MissingPolicy::AlwaysLeft,
+        }
+    }
+
     #[test]
     fn split_gains_match_scalar_reference() {
         run_prop("native gains", 15, |gen| {
@@ -792,10 +1002,16 @@ mod tests {
                     }
                 }
             }
+            let kinds = vec![FeatureKind::Numeric; m];
             let mut gains = Vec::new();
+            let mut dfl = Vec::new();
             NativeEngine::new().split_gains(
-                &hist, slots, m, bins, k1, lam, ScoreMode::CountL2, &mut gains,
+                &hist,
+                &legacy_spec(slots, m, bins, k1, lam, ScoreMode::CountL2, &kinds),
+                &mut gains,
+                &mut dfl,
             );
+            assert!(dfl.iter().all(|&d| d == 1), "AlwaysLeft fills defaults left");
             // scalar reference
             for s in 0..slots {
                 for f in 0..m {
@@ -847,11 +1063,152 @@ mod tests {
             1.0, 2.0, 10.0, // bin 0: g=1 h=2 count=10
             3.0, 4.0, 10.0, // bin 1
         ];
+        let kinds = [FeatureKind::Numeric];
         let mut gains = Vec::new();
-        NativeEngine::new().split_gains(&hist, 1, 1, 2, k1, 1.0, ScoreMode::HessL2, &mut gains);
+        let mut dfl = Vec::new();
+        NativeEngine::new().split_gains(
+            &hist,
+            &legacy_spec(1, 1, 2, k1, 1.0, ScoreMode::HessL2, &kinds),
+            &mut gains,
+            &mut dfl,
+        );
         // split at b=0: left g=1 h=2 -> 1/(2+1); right g=3 h=4 -> 9/(4+1)
         let want0 = 1.0 / 3.0 + 9.0 / 5.0;
         assert!((gains[0] - want0).abs() < 1e-5, "{} vs {want0}", gains[0]);
+    }
+
+    #[test]
+    fn learned_defaults_match_always_left_on_nan_free_histograms() {
+        // with an empty missing bin the learned-default scan must emit
+        // bit-identical gains to the legacy prefix scan (shifted
+        // semantics coincide) and default every candidate left
+        run_prop("learn == left when no missing", 15, |gen| {
+            let slots = gen.usize_in(1, 3);
+            let m = gen.usize_in(1, 3);
+            let bins = *gen.choose(&[4usize, 8, 16]);
+            let k = gen.usize_in(1, 4);
+            let k1 = k + 1;
+            let mut hist = gen.vec_gaussian(slots * m * bins * k1, 1.0);
+            for s in 0..slots {
+                for f in 0..m {
+                    for b in 0..bins {
+                        let cell = ((s * m + f) * bins + b) * k1;
+                        hist[cell + k] = gen.usize_in(1, 20) as f32;
+                        if b == 0 {
+                            // empty missing bin
+                            hist[cell..cell + k1].fill(0.0);
+                        }
+                    }
+                }
+            }
+            let kinds = vec![FeatureKind::Numeric; m];
+            let mut spec = legacy_spec(slots, m, bins, k1, 1.0, ScoreMode::CountL2, &kinds);
+            let mut legacy = Vec::new();
+            let mut d0 = Vec::new();
+            NativeEngine::new().split_gains(&hist, &spec, &mut legacy, &mut d0);
+            spec.missing = MissingPolicy::Learn;
+            let mut learned = Vec::new();
+            let mut d1 = Vec::new();
+            NativeEngine::new().split_gains(&hist, &spec, &mut learned, &mut d1);
+            assert!(d1.iter().all(|&d| d == 1), "ties must default left");
+            for pair in 0..slots * m {
+                for b in 1..bins {
+                    assert_eq!(
+                        learned[pair * bins + b],
+                        legacy[pair * bins + b],
+                        "pair {pair} candidate {b}"
+                    );
+                }
+                assert_eq!(learned[pair * bins], 0.0, "candidate 0 is invalid");
+            }
+        });
+    }
+
+    #[test]
+    fn learned_default_picks_the_better_direction() {
+        // one feature, 3 bins (0 = missing), k = 1, lam = 1.
+        // missing: g=+4, cnt 4; bin1: g=+4, cnt 4; bin2: g=-8, cnt 8.
+        // candidate b=1 (left = bin1): missing belongs with the positive
+        // gradients on the left.
+        let k1 = 2;
+        let hist = vec![
+            4.0, 4.0, // missing
+            4.0, 4.0, // bin 1
+            -8.0, 8.0, // bin 2
+        ];
+        let kinds = [FeatureKind::Numeric];
+        let spec = ScanSpec {
+            n_slots: 1,
+            m: 1,
+            bins: 3,
+            k1,
+            lam: 1.0,
+            mode: ScoreMode::CountL2,
+            kinds: &kinds,
+            missing: MissingPolicy::Learn,
+        };
+        let mut gains = Vec::new();
+        let mut dfl = Vec::new();
+        NativeEngine::new().split_gains(&hist, &spec, &mut gains, &mut dfl);
+        // missing left:  left g=8 cnt 8 -> 64/9;  right g=-8 cnt 8 -> 64/9
+        // missing right: left g=4 cnt 4 -> 16/5; right g=-4 cnt 12 -> 16/13
+        let want_left = 64.0 / 9.0 + 64.0 / 9.0;
+        assert_eq!(dfl[1], 1, "missing must default left here");
+        assert!((gains[1] as f64 - want_left).abs() < 1e-4, "{}", gains[1]);
+
+        // flip the missing gradient: now it belongs right
+        let hist2 = vec![
+            -4.0, 4.0, // missing
+            4.0, 4.0, //
+            -8.0, 8.0, //
+        ];
+        NativeEngine::new().split_gains(&hist2, &spec, &mut gains, &mut dfl);
+        // missing right: left g=4 cnt 4 -> 16/5; right g=-12 cnt 12 -> 144/13
+        // missing left:  left g=0 cnt 8 -> 0;    right g=-8 cnt 8 -> 64/9
+        assert_eq!(dfl[1], 0, "missing must default right here");
+        let want_right = 16.0 / 5.0 + 144.0 / 13.0;
+        assert!((gains[1] as f64 - want_right).abs() < 1e-4, "{}", gains[1]);
+    }
+
+    #[test]
+    fn categorical_scan_scores_sorted_prefixes() {
+        // one categorical feature, 4 bins (0 = missing, empty), k = 1:
+        // cat ids 0..=2 at bins 1..=3 with g = [+6, -6, +2], cnt 4 each.
+        // order by stat(c) = g_c / (cnt + lam):
+        // bin1 (6/5) > bin3 (2/5) > bin2 (-6/5).
+        let k1 = 2;
+        let hist = vec![
+            0.0, 0.0, // missing
+            6.0, 4.0, // bin 1
+            -6.0, 4.0, // bin 2
+            2.0, 4.0, // bin 3
+        ];
+        let kinds = [FeatureKind::Categorical];
+        let spec = ScanSpec {
+            n_slots: 1,
+            m: 1,
+            bins: 4,
+            k1,
+            lam: 1.0,
+            mode: ScoreMode::CountL2,
+            kinds: &kinds,
+            missing: MissingPolicy::Learn,
+        };
+        let mut gains = Vec::new();
+        let mut dfl = Vec::new();
+        NativeEngine::new().split_gains(&hist, &spec, &mut gains, &mut dfl);
+        // candidate 0: left = {bin1}: 36/5 + 16/9
+        let want0 = 36.0 / 5.0 + 16.0 / 9.0;
+        assert!((gains[0] as f64 - want0).abs() < 1e-4, "{}", gains[0]);
+        // candidate 1: left = {bin1, bin3}: 64/9 + 36/5
+        let want1 = 64.0 / 9.0 + 36.0 / 5.0;
+        assert!((gains[1] as f64 - want1).abs() < 1e-4, "{}", gains[1]);
+        // candidate 2 = all cats left (right would be empty) and the
+        // padding stay in the buffer but are never admissible; padding = 0
+        assert_eq!(gains[3], 0.0);
+        // the best candidate isolates {bin1, bin3} — a category set that
+        // is NOT contiguous in id order, which an ordinal scan cannot hit
+        assert!(gains[1] > gains[0]);
     }
 
     #[test]
@@ -901,7 +1258,8 @@ mod tests {
 
     #[test]
     fn split_gains_bit_identical_across_thread_counts() {
-        // big enough (hist.len() >= 16k) to take the parallel branch
+        // big enough (hist.len() >= 16k) to take the parallel branch;
+        // mixed feature kinds + learned defaults to cover every scan
         let (slots, m, bins, k1) = (8usize, 8usize, 64usize, 4usize);
         let mut rng = Rng::new(11);
         let mut hist = vec![0.0f32; slots * m * bins * k1];
@@ -909,14 +1267,28 @@ mod tests {
         for cell in 0..slots * m * bins {
             hist[cell * k1 + k1 - 1] = rng.next_below(30) as f32;
         }
+        let kinds: Vec<FeatureKind> = (0..m)
+            .map(|f| if f % 3 == 0 { FeatureKind::Categorical } else { FeatureKind::Numeric })
+            .collect();
+        let spec = ScanSpec {
+            n_slots: slots,
+            m,
+            bins,
+            k1,
+            lam: 1.0,
+            mode: ScoreMode::CountL2,
+            kinds: &kinds,
+            missing: MissingPolicy::Learn,
+        };
         let mut base = Vec::new();
-        NativeEngine::with_threads(1)
-            .split_gains(&hist, slots, m, bins, k1, 1.0, ScoreMode::CountL2, &mut base);
+        let mut base_d = Vec::new();
+        NativeEngine::with_threads(1).split_gains(&hist, &spec, &mut base, &mut base_d);
         for t in [2usize, 4] {
             let mut got = Vec::new();
-            NativeEngine::with_threads(t)
-                .split_gains(&hist, slots, m, bins, k1, 1.0, ScoreMode::CountL2, &mut got);
+            let mut got_d = Vec::new();
+            NativeEngine::with_threads(t).split_gains(&hist, &spec, &mut got, &mut got_d);
             assert_eq!(got, base, "threads = {t}");
+            assert_eq!(got_d, base_d, "threads = {t} defaults");
         }
     }
 

@@ -26,11 +26,14 @@
 
 use crate::boosting::losses::LossKind;
 use crate::data::binning::BinnedDataset;
-use crate::data::dataset::Targets;
+use crate::data::dataset::{FeatureKind, Targets};
 use crate::util::threading::{reduce_shards, shard_bounds, DisjointSlice, ThreadPool};
 
-use super::native::hist_shards;
-use super::{ComputeEngine, EngineOpts, LeafSums, NativeEngine, ScoreMode, SlotRange};
+use super::native::{hist_shards, missing_direction_scores};
+use super::{
+    categorical_order, denom_of, CatScratch, ComputeEngine, EngineOpts, LeafSums,
+    MissingPolicy, NativeEngine, ScanSpec, ScoreMode, SlotRange,
+};
 
 /// The historical histogram path: gather channel rows and per-row slice
 /// bases into compact buffers, shard the (interleaved) row list with
@@ -192,10 +195,117 @@ pub fn partition_inputs(
     (prows, pchan, segs)
 }
 
+/// Naive split-gain oracle: every candidate of every (slot, feature)
+/// pair recomputed **from scratch** with plain per-candidate loops — no
+/// prefix accumulators, no worker queue, no shared per-pair state. The
+/// per-side f64 sums fold the same cell sequence in the same ascending
+/// order as `NativeEngine`'s incremental scan (sequential left-folds of
+/// the same sequence are bit-identical), and the final candidate score
+/// reuses [`missing_direction_scores`], so `rust/tests/missing_categorical.rs`
+/// can require **bitwise** equality between this oracle and the
+/// native scan across feature kinds, missing policies, and thread
+/// counts. Allocates per call — test/bench support only.
+pub fn split_gains_naive(
+    hist: &[f32],
+    spec: &ScanSpec,
+    out: &mut Vec<f32>,
+    defaults: &mut Vec<u8>,
+) {
+    let (n_slots, m, bins, k1) = (spec.n_slots, spec.m, spec.bins, spec.k1);
+    let (lam, mode) = (spec.lam as f64, spec.mode);
+    let k = mode.scoring_k(k1);
+    out.clear();
+    out.resize(n_slots * m * bins, 0.0);
+    defaults.clear();
+    defaults.resize(n_slots * m * bins, 1);
+    if n_slots * m == 0 || bins == 0 {
+        return;
+    }
+    // per-candidate from-scratch left-side sums over an explicit bin list
+    let side = |ph: &[f32], left_bins: &[u8]| -> (Vec<f64>, f64) {
+        let mut g = vec![0.0f64; k];
+        let mut d = 0.0f64;
+        for &b in left_bins {
+            let cell = &ph[b as usize * k1..(b as usize + 1) * k1];
+            for c in 0..k {
+                g[c] += cell[c] as f64;
+            }
+            d += denom_of(cell, k, k1, mode);
+        }
+        (g, d)
+    };
+    let all_bins: Vec<u8> = (0..bins as u16).map(|b| b as u8).collect();
+    let mut cat = CatScratch::default();
+    for pair in 0..n_slots * m {
+        let ph = &hist[pair * bins * k1..(pair + 1) * bins * k1];
+        let (tot_g, tot_d) = side(ph, &all_bins);
+        let (miss_g, miss_d) = side(ph, &[0]);
+        let dst = &mut out[pair * bins..(pair + 1) * bins];
+        let dfl = &mut defaults[pair * bins..(pair + 1) * bins];
+        match spec.kinds[pair % m] {
+            FeatureKind::Numeric => match spec.missing {
+                MissingPolicy::AlwaysLeft => {
+                    // classic prefix scan: candidate b = bins 0..=b left
+                    for b in 0..bins {
+                        let (acc_g, acc_d) = side(ph, &all_bins[..=b]);
+                        let mut sl = 0.0f64;
+                        let mut sr = 0.0f64;
+                        for c in 0..k {
+                            let l = acc_g[c];
+                            let r = tot_g[c] - l;
+                            sl += l * l;
+                            sr += r * r;
+                        }
+                        sl /= acc_d + lam;
+                        sr /= (tot_d - acc_d) + lam;
+                        dst[b] = (sl + sr) as f32;
+                    }
+                }
+                MissingPolicy::Learn => {
+                    for b in 1..bins {
+                        let (acc_g, acc_d) = side(ph, &all_bins[1..=b]);
+                        let (gl, gr) = missing_direction_scores(
+                            &acc_g, &miss_g, &tot_g, acc_d, miss_d, tot_d, lam, k,
+                        );
+                        if gl >= gr {
+                            dst[b] = gl as f32;
+                        } else {
+                            dst[b] = gr as f32;
+                            dfl[b] = 0;
+                        }
+                    }
+                }
+            },
+            FeatureKind::Categorical => {
+                categorical_order(ph, bins, k1, mode, spec.lam, &mut cat);
+                let order = cat.order.clone();
+                for j in 0..order.len() {
+                    let (acc_g, acc_d) = side(ph, &order[..=j]);
+                    let (gl, gr) = missing_direction_scores(
+                        &acc_g, &miss_g, &tot_g, acc_d, miss_d, tot_d, lam, k,
+                    );
+                    match spec.missing {
+                        MissingPolicy::AlwaysLeft => dst[j] = gl as f32,
+                        MissingPolicy::Learn => {
+                            if gl >= gr {
+                                dst[j] = gl as f32;
+                            } else {
+                                dst[j] = gr as f32;
+                                dfl[j] = 0;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// A [`ComputeEngine`] whose `histograms` reproduces the pre-refactor
 /// bits by merging the range-based inputs back into the historical
 /// globally ascending interleaved order and running
-/// [`histograms_flagged`]. Every other op delegates to a normal
+/// [`histograms_flagged`]; `split_gains` runs the from-scratch
+/// [`split_gains_naive`] oracle. Every other op delegates to a normal
 /// [`NativeEngine`] (those ops did not change in the refactor).
 pub struct ReferenceEngine {
     pool: ThreadPool,
@@ -295,15 +405,11 @@ impl ComputeEngine for ReferenceEngine {
     fn split_gains(
         &mut self,
         hist: &[f32],
-        n_slots: usize,
-        m: usize,
-        bins: usize,
-        k1: usize,
-        lam: f32,
-        mode: ScoreMode,
+        spec: &ScanSpec,
         out: &mut Vec<f32>,
+        defaults: &mut Vec<u8>,
     ) {
-        self.inner.split_gains(hist, n_slots, m, bins, k1, lam, mode, out);
+        split_gains_naive(hist, spec, out, defaults);
     }
 
     fn leaf_sums(
@@ -351,6 +457,45 @@ mod tests {
         // channel rows follow their rows
         assert_eq!(&pc[0..2], &chan[2..4]); // row 1
         assert_eq!(&pc[6..8], &chan[0..2]); // row 0
+    }
+
+    /// The from-scratch naive scan must agree with the native prefix
+    /// scan bit-for-bit across feature kinds and missing policies.
+    #[test]
+    fn naive_scan_matches_native_bitwise() {
+        use crate::util::proptest::run_prop;
+        run_prop("naive scan == native", 20, |gen| {
+            let slots = gen.usize_in(1, 3);
+            let m = gen.usize_in(1, 4);
+            let bins = *gen.choose(&[4usize, 8, 32]);
+            let k = gen.usize_in(1, 3);
+            let k1 = k + 1;
+            let mut hist = gen.vec_gaussian(slots * m * bins * k1, 1.0);
+            for cell in 0..slots * m * bins {
+                hist[cell * k1 + k] = gen.usize_in(0, 10) as f32;
+            }
+            let kinds: Vec<FeatureKind> = (0..m)
+                .map(|_| if gen.bool() { FeatureKind::Categorical } else { FeatureKind::Numeric })
+                .collect();
+            for missing in [MissingPolicy::Learn, MissingPolicy::AlwaysLeft] {
+                let spec = ScanSpec {
+                    n_slots: slots,
+                    m,
+                    bins,
+                    k1,
+                    lam: 1.0,
+                    mode: ScoreMode::CountL2,
+                    kinds: &kinds,
+                    missing,
+                };
+                let (mut a, mut da) = (Vec::new(), Vec::new());
+                NativeEngine::new().split_gains(&hist, &spec, &mut a, &mut da);
+                let (mut b, mut db) = (Vec::new(), Vec::new());
+                split_gains_naive(&hist, &spec, &mut b, &mut db);
+                assert_eq!(a, b, "{missing:?} gains");
+                assert_eq!(da, db, "{missing:?} defaults");
+            }
+        });
     }
 
     /// The range-based NativeEngine must agree with the pinned historical

@@ -9,9 +9,11 @@
 //! configuration disagrees with the artifact shapes, because silently
 //! falling back would invalidate the engine-ablation benchmarks.
 //!
-//! One documented exception: `ScoreMode::HessL2` (the GBDT-MO baseline)
-//! has no gain artifact — only the native engine supports it — so
-//! `split_gains` delegates to native in that mode.
+//! Documented exceptions: the gain artifact bakes the classic
+//! all-numeric missing-left prefix scan, so `split_gains` delegates to
+//! the native scan for `ScoreMode::HessL2` (the GBDT-MO baseline), for
+//! `MissingPolicy::Learn` (learned missing-value directions), and for
+//! datasets with categorical features.
 //!
 //! Requires the `pjrt` build feature (see `runtime/` and DESIGN.md
 //! section "Build features"); without it, construction fails with an
@@ -25,7 +27,10 @@ use crate::runtime::registry::{ArtifactRegistry, Signature};
 use crate::runtime::{literal_f32, literal_i32};
 use crate::util::error::Result;
 
-use super::{ComputeEngine, EngineOpts, LeafSums, NativeEngine, ScoreMode, SlotRange};
+use super::{
+    ComputeEngine, EngineOpts, FeatureKind, LeafSums, MissingPolicy, NativeEngine, ScanSpec,
+    ScoreMode, SlotRange,
+};
 
 /// Engine executing PJRT artifacts; see module docs.
 pub struct XlaEngine {
@@ -284,20 +289,23 @@ impl ComputeEngine for XlaEngine {
     fn split_gains(
         &mut self,
         hist: &[f32],
-        n_slots: usize,
-        m: usize,
-        bins: usize,
-        k1: usize,
-        lam: f32,
-        mode: ScoreMode,
+        spec: &ScanSpec,
         out: &mut Vec<f32>,
+        defaults: &mut Vec<u8>,
     ) {
-        if mode == ScoreMode::HessL2 {
-            // documented fallback: no HessL2 gain artifact
-            self.native_fallback
-                .split_gains(hist, n_slots, m, bins, k1, lam, mode, out);
+        // Documented fallbacks: the gain artifact bakes the classic
+        // all-numeric prefix scan — no HessL2 variant, no learned
+        // missing-direction scan, no categorical-set scan. Those modes
+        // run the native scan host-side (split decisions are O(slots *
+        // m * bins), far off the artifact-dispatch critical path).
+        let artifact_scan = spec.mode == ScoreMode::CountL2
+            && spec.missing == MissingPolicy::AlwaysLeft
+            && spec.kinds.iter().all(|k| *k == FeatureKind::Numeric);
+        if !artifact_scan {
+            self.native_fallback.split_gains(hist, spec, out, defaults);
             return;
         }
+        let (n_slots, m, bins, k1, lam) = (spec.n_slots, spec.m, spec.bins, spec.k1, spec.lam);
         let sig = self.sig("gain");
         assert_eq!(m, sig.m, "gain artifact m={} vs {}", sig.m, m);
         assert_eq!(bins, sig.bins);
@@ -329,9 +337,12 @@ impl ComputeEngine for XlaEngine {
             .unwrap()])
             .expect("execute gain");
         self.n_executions += 1;
-        // artifact [m, nodes, bins] -> ours [slot, f, bin]
+        // artifact [m, nodes, bins] -> ours [slot, f, bin]; defaults are
+        // all-left by definition of the AlwaysLeft prefix scan
         out.clear();
         out.resize(n_slots * m * bins, 0.0);
+        defaults.clear();
+        defaults.resize(n_slots * m * bins, 1);
         for slot in 0..n_slots {
             for f in 0..m {
                 let src = (f * nodes + slot) * bins;

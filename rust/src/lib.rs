@@ -81,7 +81,9 @@ pub mod prelude {
     pub use crate::boosting::trainer::{GBDTConfig, GBDT};
     pub use crate::data::profiles;
     pub use crate::data::split;
-    pub use crate::data::{BinnedDataset, Dataset, Targets};
+    pub use crate::data::{BinnedDataset, Dataset, FeatureKind, Targets};
+    pub use crate::engine::MissingPolicy;
     pub use crate::predict::{FlatForest, PredictOptions};
     pub use crate::sketch::SketchConfig;
+    pub use crate::tree::CatSet;
 }

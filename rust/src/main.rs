@@ -18,7 +18,7 @@ use sketchboost::boosting::trainer::{GBDTConfig, GBDT};
 use sketchboost::data::csv;
 use sketchboost::data::profiles::Profile;
 use sketchboost::data::split::train_test_split;
-use sketchboost::engine::{EngineOpts, XlaEngine};
+use sketchboost::engine::{EngineOpts, MissingPolicy, XlaEngine};
 use sketchboost::prelude::*;
 use sketchboost::util::bench::{fmt_secs, time_once, Table};
 use sketchboost::util::cli::{usage, Args};
@@ -68,12 +68,14 @@ fn load_data(args: &Args) -> Result<Dataset, Box<dyn std::error::Error>> {
     if let Some(path) = args.get("data") {
         let task = args.get_str("task", "multiclass");
         let d = args.get_usize("outputs", 2);
-        Ok(csv::load_dataset(std::path::Path::new(path), &task, d)?)
+        let cats = args.get_usize_list("categorical", &[]);
+        Ok(csv::load_dataset_spec(std::path::Path::new(path), &task, d, &cats)?)
     } else {
         let name = args.get_str("profile", "otto");
         let p = Profile::by_name(&name)
             .ok_or_else(|| format!("unknown profile {name:?} (see data/profiles.rs)"))?;
         let rows = args.get_usize("rows", p.rows);
+        // profiles with categorical columns mark the dataset themselves
         Ok(p.generate_sized(rows, args.get_u64("data-seed", 42)))
     }
 }
@@ -92,6 +94,13 @@ fn config_from_args(args: &Args, ds: &Dataset) -> GBDTConfig {
         // run-shape flags stay overridable on top of a config file
         cfg.early_stopping_rounds =
             args.get_usize("early-stop", cfg.early_stopping_rounds);
+        if args.get("categorical").is_some() {
+            cfg.categorical_features = args.get_usize_list("categorical", &[]);
+        }
+        if let Some(p) = args.get("missing") {
+            cfg.missing_policy = MissingPolicy::parse(p)
+                .unwrap_or_else(|| panic!("unknown missing policy {p:?} (learn|left)"));
+        }
         return cfg;
     }
     let mut cfg = GBDTConfig::for_dataset(ds);
@@ -111,6 +120,10 @@ fn config_from_args(args: &Args, ds: &Dataset) -> GBDTConfig {
     let sk = args.get_str("sketch", "full");
     cfg.sketch = SketchConfig::parse(&sk, k)
         .unwrap_or_else(|| panic!("unknown sketch {sk:?} (full|top|rs|rp|svd)"));
+    cfg.categorical_features = args.get_usize_list("categorical", &[]);
+    let mp = args.get_str("missing", "learn");
+    cfg.missing_policy = MissingPolicy::parse(&mp)
+        .unwrap_or_else(|| panic!("unknown missing policy {mp:?} (learn|left)"));
     cfg
 }
 
@@ -125,6 +138,8 @@ fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                     ("--profile NAME", "synthetic profile (default otto); see data/profiles.rs"),
                     ("--rows N", "override profile row count"),
                     ("--data FILE", "CSV instead of a profile (with --task, --outputs)"),
+                    ("--categorical LIST", "comma-separated feature columns holding category ids (e.g. 0,3,7)"),
+                    ("--missing P", "missing-value routing: learn (per-split default) | left (legacy)"),
                     ("--sketch S", "full | top | rs | rp | svd (default full)"),
                     ("--k K", "sketch dimension (default 5)"),
                     ("--rounds N", "boosting rounds (default 100)"),

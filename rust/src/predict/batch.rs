@@ -186,8 +186,8 @@ mod tests {
         let t0 = Tree {
             n_outputs: 2,
             nodes: vec![
-                TreeNode { feature: 0, bin: 0, threshold: 2.0, left: encode_leaf(0), right: 1, gain: 1.0 },
-                TreeNode { feature: 2, bin: 0, threshold: 1.5, left: encode_leaf(1), right: encode_leaf(2), gain: 0.4 },
+                TreeNode { feature: 0, bin: 0, threshold: 2.0, default_left: false, cats: None, left: encode_leaf(0), right: 1, gain: 1.0 },
+                TreeNode { feature: 2, bin: 0, threshold: 1.5, default_left: true, cats: None, left: encode_leaf(1), right: encode_leaf(2), gain: 0.4 },
             ],
             leaf_values: vec![0.1, -0.1, 0.2, -0.2, 0.3, -0.3],
             n_leaves: 3,
@@ -198,6 +198,8 @@ mod tests {
                 feature: 1,
                 bin: 0,
                 threshold: 0.0,
+                default_left: true,
+                cats: None,
                 left: encode_leaf(0),
                 right: encode_leaf(1),
                 gain: 0.2,

@@ -10,14 +10,17 @@
 //! stepping stone to an XLA/GPU predict path (the same arrays upload as
 //! device tensors).
 //!
-//! Routing semantics are *identical* to [`Tree::leaf_for_raw`]: go left
-//! iff `x <= threshold` or `x` is NaN (the binning policy sends NaN to
-//! bin 0). `rust/tests/predict_equivalence.rs` pins bitwise equality of
-//! the two paths across sketches, depths, losses, and thread counts.
+//! Routing semantics are *identical* to [`Tree::leaf_for_raw`]: NaN
+//! routes by the split's learned `default_left`, categorical splits by
+//! category-set membership ([`CatSet`]), numeric splits by `x <=
+//! threshold`. `rust/tests/predict_equivalence.rs` and
+//! `rust/tests/missing_categorical.rs` pin bitwise equality of the two
+//! paths across sketches, depths, losses, thread counts, and
+//! NaN-bearing/categorical inputs.
 
 use crate::baselines::one_vs_all::OvaModel;
 use crate::boosting::ensemble::Ensemble;
-use crate::tree::tree::Tree;
+use crate::tree::tree::{CatSet, Tree};
 
 /// A tree ensemble compiled for batched inference (see module docs).
 ///
@@ -32,10 +35,16 @@ pub struct FlatForest {
     // --- per-node SoA, all trees packed back-to-back ---------------------
     feature: Vec<u32>,
     threshold: Vec<f32>,
+    /// where NaN routes at this node (1 = left)
+    default_left: Vec<u8>,
+    /// `>= 0`: index into `cat_sets` (categorical node); `-1`: numeric
+    cat_idx: Vec<i32>,
     /// children keep the tree-local encoding: `>= 0` is a node index
     /// relative to the tree's first node, `< 0` encodes leaf `!child`.
     left: Vec<i32>,
     right: Vec<i32>,
+    /// pooled category sets referenced by `cat_idx` (typically few)
+    cat_sets: Vec<CatSet>,
     // --- per-tree offset tables (len n_trees + 1) ------------------------
     node_offset: Vec<u32>,
     value_offset: Vec<u32>,
@@ -57,8 +66,11 @@ impl FlatForest {
             base_score,
             feature: Vec::new(),
             threshold: Vec::new(),
+            default_left: Vec::new(),
+            cat_idx: Vec::new(),
             left: Vec::new(),
             right: Vec::new(),
+            cat_sets: Vec::new(),
             node_offset: vec![0],
             value_offset: vec![0],
             out_col: Vec::new(),
@@ -70,6 +82,8 @@ impl FlatForest {
     fn reserve(&mut self, n_nodes: usize, n_values: usize, n_trees: usize) {
         self.feature.reserve(n_nodes);
         self.threshold.reserve(n_nodes);
+        self.default_left.reserve(n_nodes);
+        self.cat_idx.reserve(n_nodes);
         self.left.reserve(n_nodes);
         self.right.reserve(n_nodes);
         self.leaf_values.reserve(n_values);
@@ -93,6 +107,14 @@ impl FlatForest {
         for nd in &tree.nodes {
             self.feature.push(nd.feature);
             self.threshold.push(nd.threshold);
+            self.default_left.push(u8::from(nd.default_left));
+            self.cat_idx.push(match &nd.cats {
+                Some(cats) => {
+                    self.cat_sets.push(*cats);
+                    (self.cat_sets.len() - 1) as i32
+                }
+                None => -1,
+            });
             self.left.push(nd.left);
             self.right.push(nd.right);
             self.n_features_required = self.n_features_required.max(nd.feature as usize + 1);
@@ -146,8 +168,9 @@ impl FlatForest {
         self.n_features_required
     }
 
-    /// Leaf index of `row` (row-major feature values) in tree `t` —
-    /// the flat-array mirror of [`Tree::leaf_for_raw`] (NaN goes left).
+    /// Leaf index of `row` (row-major feature values) in tree `t` — the
+    /// flat-array mirror of [`Tree::leaf_for_raw`]: NaN routes by the
+    /// node's learned default, categorical nodes by set membership.
     #[inline]
     pub fn leaf_of(&self, t: usize, row: &[f32]) -> usize {
         let base = self.node_offset[t] as usize;
@@ -158,11 +181,17 @@ impl FlatForest {
         loop {
             let i = base + child as usize;
             let x = row[self.feature[i] as usize];
-            let next = if x.is_nan() || x <= self.threshold[i] {
-                self.left[i]
+            let go_left = if x.is_nan() {
+                self.default_left[i] != 0
             } else {
-                self.right[i]
+                let ci = self.cat_idx[i];
+                if ci >= 0 {
+                    self.cat_sets[ci as usize].contains_value(x)
+                } else {
+                    x <= self.threshold[i]
+                }
             };
+            let next = if go_left { self.left[i] } else { self.right[i] };
             if next < 0 {
                 return !next as usize;
             }
@@ -202,13 +231,14 @@ mod tests {
     use crate::boosting::losses::LossKind;
     use crate::tree::tree::{encode_leaf, TreeNode};
 
-    /// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2), d = 2
+    /// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2), d = 2; NaN at
+    /// the root defaults left, at the inner node right
     fn toy_tree() -> Tree {
         Tree {
             n_outputs: 2,
             nodes: vec![
-                TreeNode { feature: 0, bin: 3, threshold: 0.5, left: encode_leaf(0), right: 1, gain: 1.0 },
-                TreeNode { feature: 1, bin: 1, threshold: 2.0, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
+                TreeNode { feature: 0, bin: 3, threshold: 0.5, default_left: true, cats: None, left: encode_leaf(0), right: 1, gain: 1.0 },
+                TreeNode { feature: 1, bin: 1, threshold: 2.0, default_left: false, cats: None, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
             ],
             leaf_values: vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0],
             n_leaves: 3,
@@ -241,8 +271,9 @@ mod tests {
             vec![1.0, 1.0],
             vec![1.0, 5.0],
             vec![0.5, 9.0],          // boundary goes left
-            vec![f32::NAN, 9.0],     // NaN left at the root
-            vec![1.0, f32::NAN],     // NaN left at the inner node
+            vec![f32::NAN, 9.0],     // NaN defaults left at the root
+            vec![1.0, f32::NAN],     // NaN defaults right at the inner node
+            vec![f32::NAN, f32::NAN],
         ] {
             for t in 0..2 {
                 assert_eq!(
@@ -277,6 +308,52 @@ mod tests {
     }
 
     #[test]
+    fn categorical_nodes_route_by_pooled_sets() {
+        use crate::tree::tree::CatSet;
+        // tree 0: cat feature 0, ids {1, 3} left, missing right;
+        // tree 1: numeric (exercises the -1 cat_idx path next to a pooled set)
+        let cat_tree = Tree {
+            n_outputs: 2,
+            nodes: vec![TreeNode {
+                feature: 0,
+                bin: 0,
+                threshold: 0.0,
+                default_left: false,
+                cats: Some(CatSet::from_ids([1u32, 3])),
+                left: encode_leaf(0),
+                right: encode_leaf(1),
+                gain: 1.0,
+            }],
+            leaf_values: vec![1.0, 1.0, -1.0, -1.0],
+            n_leaves: 2,
+        };
+        let model = Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 2,
+            base_score: vec![0.0, 0.0],
+            trees: vec![cat_tree, toy_tree()],
+            history: TrainHistory::default(),
+        };
+        let ff = FlatForest::from_ensemble(&model);
+        for row in [
+            vec![1.0f32, 0.0],
+            vec![3.0, 5.0],
+            vec![0.0, 1.0],
+            vec![2.5, 1.0],          // non-integer: not a member -> right
+            vec![9.0, 1.0],          // unseen id -> right
+            vec![f32::NAN, 1.0],     // missing -> default right
+        ] {
+            for t in 0..2 {
+                assert_eq!(
+                    ff.leaf_of(t, &row),
+                    model.trees[t].leaf_for_raw(&row),
+                    "row {row:?} tree {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn ova_trees_write_one_column() {
         let uni = Tree {
             n_outputs: 1,
@@ -284,6 +361,8 @@ mod tests {
                 feature: 0,
                 bin: 0,
                 threshold: 0.0,
+                default_left: true,
+                cats: None,
                 left: encode_leaf(0),
                 right: encode_leaf(1),
                 gain: 0.0,

@@ -27,11 +27,11 @@
 //! accumulation order (and therefore every result bit) matches the
 //! historical flag-routed builder (`rust/tests/partition_equivalence.rs`).
 
-use crate::data::binning::BinnedDataset;
-use crate::engine::{ComputeEngine, ScoreMode, SlotRange};
+use crate::data::binning::{BinnedDataset, MISSING_BIN};
+use crate::engine::{ComputeEngine, MissingPolicy, ScanSpec, ScoreMode, SlotRange};
 use crate::tree::splitter::{best_split, node_score, SplitDecision};
 use crate::tree::tree::{encode_leaf, Tree, TreeNode};
-use crate::tree::workspace::{Outcome, Parent, SplitInfo, TreeWorkspace};
+use crate::tree::workspace::{Outcome, Parent, SplitInfo, SplitRule, TreeWorkspace};
 
 pub const SENTINEL: u32 = u32::MAX;
 
@@ -63,6 +63,9 @@ pub struct BuildParams<'a> {
     /// applied to every histogram channel including the count). Leaf
     /// values stay unweighted (exact over the kept rows).
     pub row_weights: Option<&'a [f32]>,
+    /// how split search treats the missing bin (learned default
+    /// direction vs. the legacy always-left policy)
+    pub missing: MissingPolicy,
 }
 
 /// Build one tree with a freshly allocated [`TreeWorkspace`]. Also
@@ -176,7 +179,17 @@ pub fn build_tree_in(
 
     for depth in 0..p.max_depth {
         let n_slots = ws.frontier.len();
-        engine.split_gains(&ws.hist, n_slots, m, bins, k1, p.lambda, p.mode, &mut ws.gains);
+        let spec = ScanSpec {
+            n_slots,
+            m,
+            bins,
+            k1,
+            lam: p.lambda,
+            mode: p.mode,
+            kinds: &p.binned.kinds,
+            missing: p.missing,
+        };
+        engine.split_gains(&ws.hist, &spec, &mut ws.gains, &mut ws.defaults);
 
         // decide each slot
         ws.outcomes.clear();
@@ -198,16 +211,16 @@ pub fn build_tree_in(
             } else {
                 best_split(
                     &ws.gains,
+                    &ws.defaults,
                     &ws.hist,
                     slot,
-                    m,
-                    bins,
-                    k1,
+                    &spec,
                     pscore,
                     pcount,
                     p.min_data_in_leaf,
                     p.min_gain,
                     p.feature_mask,
+                    &mut ws.cat_scratch,
                 )
             };
             match dec {
@@ -217,10 +230,16 @@ pub fn build_tree_in(
                 }
                 Some(d) => {
                     let node_idx = nodes.len();
+                    let threshold = match d.cats {
+                        None => p.binned.threshold_value(d.feature, d.bin as usize),
+                        Some(_) => 0.0,
+                    };
                     nodes.push(TreeNode {
                         feature: d.feature as u32,
                         bin: d.bin,
-                        threshold: p.binned.threshold_value(d.feature, d.bin as usize),
+                        threshold,
+                        default_left: d.default_left,
+                        cats: d.cats,
                         left: 0,
                         right: 0,
                         gain: d.gain,
@@ -248,7 +267,11 @@ pub fn build_tree_in(
                     });
                     ws.outcomes.push(Outcome::Split {
                         feature: d.feature as u32,
-                        bin: d.bin,
+                        rule: match d.cats {
+                            None => SplitRule::Numeric { bin: d.bin },
+                            Some(cats) => SplitRule::Categorical { cats },
+                        },
+                        default_left: d.default_left,
                         left_slot,
                         right_slot,
                     });
@@ -270,7 +293,7 @@ pub fn build_tree_in(
                         ws.leaf_of_row[ws.rows[pos] as usize] = *id;
                     }
                 }
-                Outcome::Split { feature, bin, left_slot, right_slot } => {
+                Outcome::Split { feature, rule, default_left, left_slot, right_slot } => {
                     let col = p.binned.column(*feature as usize);
                     ws.right_rows.clear();
                     ws.right_chan.clear();
@@ -278,7 +301,18 @@ pub fn build_tree_in(
                     for pos in seg.range() {
                         let r = ws.rows[pos];
                         let crow = &ws.chan[pos * k1..(pos + 1) * k1];
-                        if col[r as usize] <= *bin {
+                        let code = col[r as usize];
+                        let go_left = if code == MISSING_BIN {
+                            *default_left
+                        } else {
+                            match rule {
+                                SplitRule::Numeric { bin } => code <= *bin,
+                                SplitRule::Categorical { cats } => {
+                                    cats.contains(code as u32 - 1)
+                                }
+                            }
+                        };
+                        if go_left {
                             ws.rows_next[write] = r;
                             ws.chan_next[write * k1..(write + 1) * k1].copy_from_slice(crow);
                             write += 1;
@@ -450,6 +484,7 @@ mod tests {
             feature_mask: None,
             sparse_topk: None,
             row_weights: None,
+            missing: MissingPolicy::Learn,
         }
     }
 
@@ -584,6 +619,80 @@ mod tests {
     }
 
     #[test]
+    fn nan_rows_follow_the_learned_default() {
+        // x > 0 carries g = -1; x <= 0 carries g = +1; a fifth of the
+        // rows are missing and carry g = -1 — the learned default must
+        // send them right, with the negative-gradient side
+        let n = 500;
+        let mut rng = Rng::new(21);
+        let mut x = vec![0.0f32; n];
+        rng.fill_gaussian(&mut x, 1.0);
+        let mut g = vec![0.0f32; n];
+        for i in 0..n {
+            if i % 5 == 0 {
+                x[i] = f32::NAN;
+                g[i] = -1.0;
+            } else {
+                g[i] = if x[i] <= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        let h = vec![1.0f32; n];
+        let ds = Dataset::new(
+            n,
+            1,
+            x,
+            Targets::Regression { values: vec![0.0; n], n_targets: 1 },
+        );
+        let binned = BinnedDataset::from_dataset(&ds, 32);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut eng = NativeEngine::new();
+        let (tree, leaf_of_row) = build_tree(&params(&binned, &rows, &g, &h, 1), &mut eng);
+        assert_eq!(tree.n_leaves, 2);
+        assert!(!tree.nodes[0].default_left, "missing aligns with the right side");
+        // raw NaN routes with the x > 0 rows
+        assert_eq!(tree.leaf_for_raw(&[f32::NAN]), tree.leaf_for_raw(&[3.0]));
+        for r in 0..n {
+            assert_eq!(leaf_of_row[r] as usize, tree.leaf_for_binned(&binned, r));
+        }
+    }
+
+    #[test]
+    fn categorical_build_isolates_a_scattered_set() {
+        // 6 categories; g = +1 for ids {0, 3, 5}, -1 for {1, 2, 4}: one
+        // categorical split isolates the scattered set exactly
+        let n = 600;
+        let x: Vec<f32> = (0..n).map(|i| (i % 6) as f32).collect();
+        let g: Vec<f32> = (0..n)
+            .map(|i| if matches!(i % 6, 0 | 3 | 5) { 1.0 } else { -1.0 })
+            .collect();
+        let h = vec![1.0f32; n];
+        let mut ds = Dataset::new(
+            n,
+            1,
+            x,
+            Targets::Regression { values: vec![0.0; n], n_targets: 1 },
+        );
+        ds.mark_categorical(&[0]);
+        let binned = BinnedDataset::from_dataset(&ds, 32);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let mut eng = NativeEngine::new();
+        let (tree, leaf_of_row) = build_tree(&params(&binned, &rows, &g, &h, 1), &mut eng);
+        assert_eq!(tree.n_leaves, 2);
+        let cats = tree.nodes[0].cats.expect("categorical split");
+        let mut ids: Vec<u32> = cats.ids().collect();
+        // the split may put either side of the partition "left"
+        if !ids.contains(&0) {
+            ids = (0..6u32).filter(|i| !ids.contains(i)).collect();
+        }
+        assert_eq!(ids, vec![0, 3, 5]);
+        // routing consistency, binned vs raw
+        for r in 0..n {
+            assert_eq!(leaf_of_row[r] as usize, tree.leaf_for_binned(&binned, r));
+            assert_eq!(tree.leaf_for_binned(&binned, r), tree.leaf_for_raw(&[(r % 6) as f32]));
+        }
+    }
+
+    #[test]
     fn sparse_topk_zeroes_small_outputs() {
         let mut v = vec![
             3.0, -1.0, 0.5, -4.0, // leaf 0
@@ -627,6 +736,7 @@ mod tests {
             feature_mask: None,
             sparse_topk: None,
             row_weights: None,
+            missing: MissingPolicy::Learn,
         };
         let mut eng = NativeEngine::new();
         let (tree, leaf_of_row) = build_tree(&p, &mut eng);

@@ -9,5 +9,5 @@ pub mod tree;
 pub mod workspace;
 
 pub use builder::{build_tree, build_tree_in, BuildParams, SENTINEL};
-pub use tree::{Tree, TreeNode};
+pub use tree::{CatSet, Tree, TreeNode};
 pub use workspace::TreeWorkspace;

@@ -1,13 +1,23 @@
-//! Best-split selection from histograms + gain tensors (paper eq. 4).
+//! Best-split selection from histograms + gain tensors (paper eq. 4),
+//! sparsity-aware: candidates carry a learned missing-value direction
+//! and categorical features are scanned as sorted category-set prefixes
+//! (see the `ComputeEngine::split_gains` contract in `engine/`).
 
-use crate::engine::ScoreMode;
+use crate::data::dataset::FeatureKind;
+use crate::engine::{categorical_order, CatScratch, ScanSpec, ScoreMode};
+use crate::tree::tree::CatSet;
 
 /// A chosen split for one frontier node.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SplitDecision {
     pub feature: usize,
-    /// left = codes <= bin
+    /// numeric: left = value bins 1..=bin (missing per `default_left`);
+    /// 0 for categorical splits
     pub bin: u8,
+    /// categorical: the category-id set routed left (None = numeric)
+    pub cats: Option<CatSet>,
+    /// where the missing bin routes
+    pub default_left: bool,
     /// S(left) + S(right) - S(parent): the (unhalved) information gain
     pub gain: f32,
     pub count_left: usize,
@@ -16,9 +26,10 @@ pub struct SplitDecision {
 
 /// S(R) and |R| (or Σh in HessL2 mode) for one frontier slot, computed
 /// from its histogram totals over feature 0 (every feature's bins
-/// partition the same node, so any feature gives the same totals).
-/// `scratch` is a caller-pooled k-wide f64 buffer (resized here), so the
-/// per-level decide loop stays allocation-free.
+/// partition the same node — missing bin included — so any feature
+/// gives the same totals). `scratch` is a caller-pooled k-wide f64
+/// buffer (resized here), so the per-level decide loop stays
+/// allocation-free.
 #[allow(clippy::too_many_arguments)]
 pub fn node_score(
     hist: &[f32],
@@ -54,30 +65,60 @@ pub fn node_score(
 
 #[inline]
 pub fn scoring_k(k1: usize, mode: ScoreMode) -> usize {
-    match mode {
-        ScoreMode::CountL2 => k1 - 1,
-        ScoreMode::HessL2 => (k1 - 1) / 2,
-    }
+    mode.scoring_k(k1)
 }
 
-/// Pick the best admissible split for `slot` from the engine's gain
-/// tensor, enforcing `min_data_in_leaf` on both children and requiring
+/// Pick the best admissible split for `slot` from the engine's gain +
+/// default tensors, enforcing `min_data_in_leaf` on both children
+/// (missing mass counted on its default side) and requiring
 /// `gain - parent_score > min_gain`.
+///
+/// The engine commits each candidate's missing direction **by gain
+/// alone**; if that direction then fails `min_data_in_leaf` the
+/// candidate is discarded (the gain of the other direction is not in
+/// the tensor). This is a deliberate precision/bandwidth trade-off —
+/// emitting both directions would double the gain buffers — pinned by
+/// `missing_counts_follow_the_learned_default` below.
+///
+/// Admissibility per feature kind:
+///
+/// * **Numeric** candidates additionally need at least one non-missing
+///   row on each side — "missing only" sides have no representable raw
+///   threshold (checked structurally: a non-empty value bin must exist
+///   at or below the candidate and another above it).
+/// * **Categorical** candidates are prefixes of [`categorical_order`];
+///   the winning prefix is reconstructed into a [`CatSet`] of category
+///   ids (`bin - 1`). A right side holding only missing rows is fine —
+///   "not in set" routes unseen categories right at serve time.
+///
+/// `cat_scratch` is the caller-pooled ordering scratch (the same order
+/// the engine used — both call [`categorical_order`] on the same
+/// histogram, which is pure).
 #[allow(clippy::too_many_arguments)]
 pub fn best_split(
     gains: &[f32],
+    defaults: &[u8],
     hist: &[f32],
     slot: usize,
-    m: usize,
-    bins: usize,
-    k1: usize,
+    spec: &ScanSpec,
     parent_score: f64,
     parent_count: f64,
     min_data: usize,
     min_gain: f32,
     feature_mask: Option<&[bool]>,
+    cat_scratch: &mut CatScratch,
 ) -> Option<SplitDecision> {
+    let (m, bins, k1) = (spec.m, spec.bins, spec.k1);
+    let min_data = min_data as f64;
     let mut best: Option<SplitDecision> = None;
+    // Categorical winners carry their prefix length; the set is
+    // reconstructed at the end. The decide loop re-derives each
+    // categorical feature's ordering from the histogram (pure, so it
+    // matches the engine's) rather than shipping the order through the
+    // engine API — the serial decide loop is off the hot path, but if a
+    // profile ever shows these sorts, have split_gains emit per-candidate
+    // left-counts into a pooled buffer like `defaults`.
+    let mut best_cat_prefix: Option<usize> = None;
     for f in 0..m {
         if let Some(mask) = feature_mask {
             if !mask[f] {
@@ -86,34 +127,112 @@ pub fn best_split(
         }
         let hbase = (slot * m + f) * bins * k1;
         let gbase = (slot * m + f) * bins;
-        let mut cum_count = 0.0f64;
-        // last bin is the degenerate all-left split: excluded by the
-        // count_right >= min_data check below.
-        for b in 0..bins {
-            cum_count += hist[hbase + b * k1 + (k1 - 1)] as f64;
-            let count_left = cum_count;
-            let count_right = parent_count - cum_count;
-            if count_left < min_data as f64 || count_right < min_data as f64 {
-                continue;
+        let count_of = |b: usize| hist[hbase + b * k1 + (k1 - 1)] as f64;
+        let miss_count = count_of(0);
+        match spec.kinds[f] {
+            FeatureKind::Numeric => {
+                // highest non-empty value bin: candidates at or past it
+                // leave no non-missing row on the right
+                let mut top = 0usize;
+                for b in 1..bins {
+                    if count_of(b) > 0.0 {
+                        top = b;
+                    }
+                }
+                let mut cum = 0.0f64; // non-missing rows at or below b
+                for b in 1..bins {
+                    cum += count_of(b);
+                    if cum <= 0.0 || b >= top {
+                        // no non-missing row on one side: no threshold
+                        if b >= top {
+                            break;
+                        }
+                        continue;
+                    }
+                    let default_left = defaults[gbase + b] != 0;
+                    let count_left = if default_left { cum + miss_count } else { cum };
+                    let count_right = parent_count - count_left;
+                    if count_left < min_data || count_right < min_data {
+                        continue;
+                    }
+                    let gain = gains[gbase + b] as f64 - parent_score;
+                    if gain <= min_gain as f64 {
+                        continue;
+                    }
+                    let better = match &best {
+                        None => true,
+                        Some(prev) => gain > prev.gain as f64,
+                    };
+                    if better {
+                        best = Some(SplitDecision {
+                            feature: f,
+                            bin: b as u8,
+                            cats: None,
+                            default_left,
+                            gain: gain as f32,
+                            count_left: count_left as usize,
+                            count_right: count_right as usize,
+                        });
+                        best_cat_prefix = None;
+                    }
+                }
             }
-            let gain = gains[gbase + b] as f64 - parent_score;
-            if gain <= min_gain as f64 {
-                continue;
-            }
-            let better = match &best {
-                None => true,
-                Some(prev) => gain > prev.gain as f64,
-            };
-            if better {
-                best = Some(SplitDecision {
-                    feature: f,
-                    bin: b as u8,
-                    gain: gain as f32,
-                    count_left: count_left as usize,
-                    count_right: count_right as usize,
-                });
+            FeatureKind::Categorical => {
+                categorical_order(
+                    &hist[hbase..hbase + bins * k1],
+                    bins,
+                    k1,
+                    spec.mode,
+                    spec.lam,
+                    cat_scratch,
+                );
+                let mut cum = 0.0f64;
+                for (j, &b) in cat_scratch.order.iter().enumerate() {
+                    cum += count_of(b as usize);
+                    let default_left = defaults[gbase + j] != 0;
+                    let count_left = if default_left { cum + miss_count } else { cum };
+                    let count_right = parent_count - count_left;
+                    if count_left < min_data || count_right < min_data {
+                        continue;
+                    }
+                    let gain = gains[gbase + j] as f64 - parent_score;
+                    if gain <= min_gain as f64 {
+                        continue;
+                    }
+                    let better = match &best {
+                        None => true,
+                        Some(prev) => gain > prev.gain as f64,
+                    };
+                    if better {
+                        best = Some(SplitDecision {
+                            feature: f,
+                            bin: 0,
+                            cats: Some(CatSet::new()), // reconstructed below
+                            default_left,
+                            gain: gain as f32,
+                            count_left: count_left as usize,
+                            count_right: count_right as usize,
+                        });
+                        best_cat_prefix = Some(j);
+                    }
+                }
             }
         }
+    }
+    // reconstruct the winning categorical prefix into a category-id set
+    if let (Some(dec), Some(prefix)) = (best.as_mut(), best_cat_prefix) {
+        let hbase = (slot * m + dec.feature) * bins * k1;
+        categorical_order(
+            &hist[hbase..hbase + bins * k1],
+            bins,
+            k1,
+            spec.mode,
+            spec.lam,
+            cat_scratch,
+        );
+        dec.cats = Some(CatSet::from_ids(
+            cat_scratch.order[..=prefix].iter().map(|&b| b as u32 - 1),
+        ));
     }
     best
 }
@@ -121,32 +240,72 @@ pub fn best_split(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{ComputeEngine, NativeEngine};
+    use crate::engine::{ComputeEngine, MissingPolicy, NativeEngine};
 
-    /// hist with one feature, 4 bins, k=1 (+count): bins carry gradient
-    /// +2, +2, -2, -2 with 5 rows each -> perfect split at bin 1.
+    fn numeric_spec(m: usize, bins: usize, k1: usize, kinds: &[FeatureKind]) -> ScanSpec<'_> {
+        ScanSpec {
+            n_slots: 1,
+            m,
+            bins,
+            k1,
+            lam: 1.0,
+            mode: ScoreMode::CountL2,
+            kinds,
+            missing: MissingPolicy::Learn,
+        }
+    }
+
+    /// hist with one feature, 5 bins (0 = missing, empty), k=1 (+count):
+    /// value bins carry gradient +2, +2, -2, -2 with 5 rows each ->
+    /// perfect split after value bin 2.
     fn separable_hist() -> Vec<f32> {
         let k1 = 2;
-        let mut h = vec![0.0f32; 4 * k1];
-        let g = [2.0f32, 2.0, -2.0, -2.0];
-        for b in 0..4 {
+        let mut h = vec![0.0f32; 5 * k1];
+        let g = [0.0f32, 2.0, 2.0, -2.0, -2.0];
+        let cnt = [0.0f32, 5.0, 5.0, 5.0, 5.0];
+        for b in 0..5 {
             h[b * k1] = g[b];
-            h[b * k1 + 1] = 5.0;
+            h[b * k1 + 1] = cnt[b];
         }
         h
     }
 
-    fn gains_of(hist: &[f32], bins: usize, k1: usize) -> Vec<f32> {
-        let mut out = Vec::new();
-        NativeEngine::new().split_gains(hist, 1, 1, bins, k1, 1.0, ScoreMode::CountL2, &mut out);
-        out
+    fn scan(hist: &[f32], spec: &ScanSpec) -> (Vec<f32>, Vec<u8>) {
+        let mut gains = Vec::new();
+        let mut dfl = Vec::new();
+        NativeEngine::new().split_gains(hist, spec, &mut gains, &mut dfl);
+        (gains, dfl)
+    }
+
+    fn pick(
+        hist: &[f32],
+        spec: &ScanSpec,
+        parent_score: f64,
+        parent_count: f64,
+        min_data: usize,
+        min_gain: f32,
+        mask: Option<&[bool]>,
+    ) -> Option<SplitDecision> {
+        let (gains, dfl) = scan(hist, spec);
+        best_split(
+            &gains,
+            &dfl,
+            hist,
+            0,
+            spec,
+            parent_score,
+            parent_count,
+            min_data,
+            min_gain,
+            mask,
+            &mut CatScratch::default(),
+        )
     }
 
     #[test]
     fn node_score_totals() {
         let h = separable_hist();
-        let (s, count) =
-            node_score(&h, 0, 1, 4, 2, 1.0, ScoreMode::CountL2, &mut Vec::new());
+        let (s, count) = node_score(&h, 0, 1, 5, 2, 1.0, ScoreMode::CountL2, &mut Vec::new());
         assert!((count - 20.0).abs() < 1e-9);
         // total gradient = 0 -> S(R) = 0
         assert!(s.abs() < 1e-9);
@@ -155,10 +314,12 @@ mod tests {
     #[test]
     fn best_split_finds_boundary() {
         let h = separable_hist();
-        let gains = gains_of(&h, 4, 2);
-        let dec = best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 1, 0.0, None).unwrap();
+        let kinds = [FeatureKind::Numeric];
+        let dec = pick(&h, &numeric_spec(1, 5, 2, &kinds), 0.0, 20.0, 1, 0.0, None).unwrap();
         assert_eq!(dec.feature, 0);
-        assert_eq!(dec.bin, 1);
+        assert_eq!(dec.bin, 2);
+        assert!(dec.cats.is_none());
+        assert!(dec.default_left, "no missing rows: ties default left");
         assert_eq!(dec.count_left, 10);
         assert_eq!(dec.count_right, 10);
         // gain = 16/11 + 16/11
@@ -168,38 +329,103 @@ mod tests {
     #[test]
     fn min_data_blocks_unbalanced() {
         let h = separable_hist();
-        let gains = gains_of(&h, 4, 2);
+        let kinds = [FeatureKind::Numeric];
+        let spec = numeric_spec(1, 5, 2, &kinds);
         // min_data 11 > any achievable side
-        assert!(best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 11, 0.0, None).is_none());
+        assert!(pick(&h, &spec, 0.0, 20.0, 11, 0.0, None).is_none());
         // min_data 10: only the middle split remains admissible
-        let dec = best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 10, 0.0, None).unwrap();
-        assert_eq!(dec.bin, 1);
+        let dec = pick(&h, &spec, 0.0, 20.0, 10, 0.0, None).unwrap();
+        assert_eq!(dec.bin, 2);
     }
 
     #[test]
     fn min_gain_blocks_weak_splits() {
         let h = separable_hist();
-        let gains = gains_of(&h, 4, 2);
-        assert!(best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 1, 100.0, None).is_none());
+        let kinds = [FeatureKind::Numeric];
+        assert!(pick(&h, &numeric_spec(1, 5, 2, &kinds), 0.0, 20.0, 1, 100.0, None).is_none());
     }
 
     #[test]
     fn feature_mask_excludes() {
         let h = separable_hist();
-        let gains = gains_of(&h, 4, 2);
+        let kinds = [FeatureKind::Numeric];
         let mask = vec![false];
-        assert!(best_split(&gains, &h, 0, 1, 4, 2, 0.0, 20.0, 1, 0.0, Some(&mask)).is_none());
+        assert!(pick(&h, &numeric_spec(1, 5, 2, &kinds), 0.0, 20.0, 1, 0.0, Some(&mask)).is_none());
     }
 
     #[test]
-    fn degenerate_last_bin_never_chosen() {
-        // all mass in bin 0: no split leaves the right side populated
+    fn degenerate_one_sided_candidates_never_chosen() {
+        // all value mass in bin 1 (+ missing rows in bin 0): no numeric
+        // candidate leaves a non-missing row on both sides, so there is
+        // no split even though "missing vs rest" would score
         let k1 = 2;
-        let mut h = vec![0.0f32; 4 * k1];
-        h[0] = 3.0;
-        h[1] = 10.0;
-        let gains = gains_of(&h, 4, k1);
-        assert!(best_split(&gains, &h, 0, 1, 4, k1, 0.0, 10.0, 1, 0.0, None).is_none());
+        let mut h = vec![0.0f32; 5 * k1];
+        h[0] = -3.0; // missing g
+        h[1] = 4.0; // missing count
+        h[2] = 3.0; // bin 1 g
+        h[3] = 10.0; // bin 1 count
+        let kinds = [FeatureKind::Numeric];
+        assert!(pick(&h, &numeric_spec(1, 5, 2, &kinds), 0.0, 14.0, 1, 0.0, None).is_none());
+    }
+
+    #[test]
+    fn missing_counts_follow_the_learned_default() {
+        // value bins separable; missing gradient aligns with the right
+        // side, so the default goes right and min_data must see the
+        // missing mass on the right
+        let k1 = 2;
+        let h = vec![
+            -2.0, 6.0, // missing: g=-2, 6 rows
+            4.0, 5.0, // bin 1
+            -4.0, 5.0, // bin 2
+        ];
+        let kinds = [FeatureKind::Numeric];
+        let spec = numeric_spec(1, 3, k1, &kinds);
+        let dec = pick(&h, &spec, 0.0, 16.0, 1, 0.0, None).unwrap();
+        assert_eq!(dec.bin, 1);
+        assert!(!dec.default_left, "missing belongs with the negative side");
+        assert_eq!(dec.count_left, 5);
+        assert_eq!(dec.count_right, 11);
+        // with min_data = 6 the left side (5 rows, missing routed right)
+        // is inadmissible
+        assert!(pick(&h, &spec, 0.0, 16.0, 6, 0.0, None).is_none());
+    }
+
+    #[test]
+    fn categorical_winner_reconstructs_the_sorted_prefix() {
+        // cat ids 0..=2 (bins 1..=3): g = [+6, -6, +2], cnt 4 each ->
+        // order [1, 3, 2], best prefix = {bin1, bin3} = ids {0, 2}
+        let k1 = 2;
+        let h = vec![
+            0.0, 0.0, // missing
+            6.0, 4.0, // id 0
+            -6.0, 4.0, // id 1
+            2.0, 4.0, // id 2
+        ];
+        let kinds = [FeatureKind::Categorical];
+        let spec = ScanSpec {
+            n_slots: 1,
+            m: 1,
+            bins: 4,
+            k1,
+            lam: 1.0,
+            mode: ScoreMode::CountL2,
+            kinds: &kinds,
+            missing: MissingPolicy::Learn,
+        };
+        let dec = pick(&h, &spec, 0.0, 12.0, 1, 0.0, None).unwrap();
+        let cats = dec.cats.expect("categorical decision");
+        assert_eq!(cats.ids().collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(dec.bin, 0);
+        assert_eq!(dec.count_left, 8);
+        assert_eq!(dec.count_right, 4);
+        // the isolated set is non-contiguous in id order: the ordinal
+        // scan over the same histogram can at best cut {id0} | {id1, id2}
+        // or {id0, id1} | {id2} — strictly worse
+        let kinds_num = [FeatureKind::Numeric];
+        let spec_num = ScanSpec { kinds: &kinds_num, ..spec };
+        let ord = pick(&h, &spec_num, 0.0, 12.0, 1, 0.0, None).unwrap();
+        assert!(dec.gain > ord.gain, "{} vs {}", dec.gain, ord.gain);
     }
 
     #[test]
@@ -210,8 +436,7 @@ mod tests {
             2.0, 4.0, 10.0, // bin 0
             1.0, 2.0, 5.0, // bin 1
         ];
-        let (s, count) =
-            node_score(&h, 0, 1, 2, k1, 1.0, ScoreMode::HessL2, &mut Vec::new());
+        let (s, count) = node_score(&h, 0, 1, 2, k1, 1.0, ScoreMode::HessL2, &mut Vec::new());
         assert!((count - 15.0).abs() < 1e-9);
         // (2+1)^2 / (4+2+1)
         assert!((s - 9.0 / 7.0).abs() < 1e-6, "s={s}");

@@ -1,18 +1,83 @@
 //! Multivariate decision tree representation (the paper's single-tree
 //! strategy: one tree predicts all `d` outputs; each leaf holds a vector
-//! value v_j in R^d, eq. 3).
+//! value v_j in R^d, eq. 3), with sparsity-aware routing: every split
+//! carries a learned `default_left` direction for missing values, and
+//! categorical splits route by category-*set* membership ([`CatSet`])
+//! instead of a threshold.
 
-use crate::data::binning::BinnedDataset;
+use crate::data::binning::{BinnedDataset, MISSING_BIN};
+
+/// A set of category ids (0..=255) routed to the left child of a
+/// categorical split — a fixed 256-bit bitset, `Copy` so routing and
+/// the partition loop stay allocation-free.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CatSet {
+    blocks: [u64; 4],
+}
+
+impl CatSet {
+    pub fn new() -> CatSet {
+        CatSet::default()
+    }
+
+    /// Build from category ids.
+    pub fn from_ids<I: IntoIterator<Item = u32>>(ids: I) -> CatSet {
+        let mut s = CatSet::new();
+        for id in ids {
+            s.insert(id);
+        }
+        s
+    }
+
+    pub fn insert(&mut self, id: u32) {
+        assert!(id < 256, "category id {id} out of range");
+        self.blocks[(id >> 6) as usize] |= 1u64 << (id & 63);
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        id < 256 && (self.blocks[(id >> 6) as usize] >> (id & 63)) & 1 == 1
+    }
+
+    /// Membership test for a raw feature value: true iff `x` is exactly
+    /// an integer category id in the set. Non-integer, negative,
+    /// out-of-range, and NaN values are not members (NaN is handled by
+    /// the split's `default_left` before this is consulted).
+    #[inline]
+    pub fn contains_value(&self, x: f32) -> bool {
+        let id = x as i64;
+        id >= 0 && id < 256 && id as f32 == x && self.contains(id as u32)
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.iter().all(|&b| b == 0)
+    }
+
+    /// Ascending category ids (for serialization and display).
+    pub fn ids(&self) -> impl Iterator<Item = u32> + '_ {
+        (0u32..256).filter(move |&id| self.contains(id))
+    }
+}
 
 /// Internal split node. Children encode either another internal node
 /// (index >= 0 into `Tree::nodes`) or a leaf (`!leaf_id`, i.e. negative).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TreeNode {
     pub feature: u32,
-    /// split on quantized codes: left iff code <= bin
+    /// numeric split on quantized codes: left iff 1 <= code <= bin
+    /// (code 0 = missing routes per `default_left`); 0 for categorical
     pub bin: u8,
-    /// equivalent raw-value threshold: left iff x <= threshold (NaN left)
+    /// numeric raw-value threshold: left iff x <= threshold; 0.0 for
+    /// categorical splits (`cats` is authoritative there)
     pub threshold: f32,
+    /// where missing values (NaN / code 0) go — learned per split
+    pub default_left: bool,
+    /// categorical split: the category-id set routed left (None = numeric)
+    pub cats: Option<CatSet>,
     pub left: i32,
     pub right: i32,
     /// impurity improvement this split achieved (for diagnostics)
@@ -46,7 +111,9 @@ pub fn encode_leaf(id: usize) -> i32 {
 }
 
 impl Tree {
-    /// Leaf index for a row of the *binned* training matrix.
+    /// Leaf index for a row of the *binned* training matrix. Missing
+    /// codes route by the split's learned default; categorical codes by
+    /// set membership (code = category id + 1).
     pub fn leaf_for_binned(&self, binned: &BinnedDataset, row: usize) -> usize {
         if self.nodes.is_empty() {
             return 0;
@@ -55,7 +122,15 @@ impl Tree {
         loop {
             let nd = &self.nodes[node as usize];
             let code = binned.codes[nd.feature as usize * binned.n_rows + row];
-            let child = if code <= nd.bin { nd.left } else { nd.right };
+            let go_left = if code == MISSING_BIN {
+                nd.default_left
+            } else {
+                match &nd.cats {
+                    Some(cats) => cats.contains(code as u32 - 1),
+                    None => code <= nd.bin,
+                }
+            };
+            let child = if go_left { nd.left } else { nd.right };
             if is_leaf(child) {
                 return leaf_id(child);
             }
@@ -63,8 +138,9 @@ impl Tree {
         }
     }
 
-    /// Leaf index for a raw (unbinned) feature row.
-    /// NaN goes left, matching the binning policy (NaN -> bin 0).
+    /// Leaf index for a raw (unbinned) feature row. NaN routes by the
+    /// split's learned `default_left`; categorical values (category ids)
+    /// by set membership.
     pub fn leaf_for_raw(&self, row: &[f32]) -> usize {
         if self.nodes.is_empty() {
             return 0;
@@ -73,7 +149,14 @@ impl Tree {
         loop {
             let nd = &self.nodes[node as usize];
             let x = row[nd.feature as usize];
-            let go_left = x.is_nan() || x <= nd.threshold;
+            let go_left = if x.is_nan() {
+                nd.default_left
+            } else {
+                match &nd.cats {
+                    Some(cats) => cats.contains_value(x),
+                    None => x <= nd.threshold,
+                }
+            };
             let child = if go_left { nd.left } else { nd.right };
             if is_leaf(child) {
                 return leaf_id(child);
@@ -173,13 +256,13 @@ mod tests {
     use super::*;
     use crate::data::dataset::{Dataset, Targets};
 
-    /// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2)
+    /// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2); missing left
     fn toy_tree() -> Tree {
         Tree {
             n_outputs: 2,
             nodes: vec![
-                TreeNode { feature: 0, bin: 3, threshold: 0.5, left: encode_leaf(0), right: 1, gain: 1.0 },
-                TreeNode { feature: 1, bin: 1, threshold: 2.0, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
+                TreeNode { feature: 0, bin: 3, threshold: 0.5, default_left: true, cats: None, left: encode_leaf(0), right: 1, gain: 1.0 },
+                TreeNode { feature: 1, bin: 1, threshold: 2.0, default_left: true, cats: None, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
             ],
             leaf_values: vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0],
             n_leaves: 3,
@@ -204,9 +287,62 @@ mod tests {
         assert_eq!(t.leaf_for_raw(&[1.0, 5.0]), 2);
         // boundary goes left
         assert_eq!(t.leaf_for_raw(&[0.5, 9.0]), 0);
-        // NaN goes left at every node
+        // NaN follows default_left = true at every node here
         assert_eq!(t.leaf_for_raw(&[f32::NAN, 9.0]), 0);
         assert_eq!(t.leaf_for_raw(&[1.0, f32::NAN]), 1);
+    }
+
+    #[test]
+    fn raw_routing_honors_default_right() {
+        let mut t = toy_tree();
+        t.nodes[0].default_left = false;
+        // NaN at the root now goes right, then x1 routes normally
+        assert_eq!(t.leaf_for_raw(&[f32::NAN, 1.0]), 1);
+        assert_eq!(t.leaf_for_raw(&[f32::NAN, 5.0]), 2);
+        t.nodes[1].default_left = false;
+        assert_eq!(t.leaf_for_raw(&[1.0, f32::NAN]), 2);
+    }
+
+    #[test]
+    fn cat_set_membership() {
+        let s = CatSet::from_ids([0u32, 3, 200]);
+        assert!(s.contains(0) && s.contains(3) && s.contains(200));
+        assert!(!s.contains(1) && !s.contains(255));
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.ids().collect::<Vec<_>>(), vec![0, 3, 200]);
+        // raw-value membership: exact integer ids only
+        assert!(s.contains_value(3.0));
+        assert!(!s.contains_value(3.5));
+        assert!(!s.contains_value(-1.0));
+        assert!(!s.contains_value(f32::NAN));
+        assert!(!s.contains_value(1e9));
+        assert!(CatSet::new().is_empty());
+    }
+
+    #[test]
+    fn categorical_routing_by_set_membership() {
+        // cat feature 0: ids {1, 4} left, everything else right; missing right
+        let t = Tree {
+            n_outputs: 1,
+            nodes: vec![TreeNode {
+                feature: 0,
+                bin: 0,
+                threshold: 0.0,
+                default_left: false,
+                cats: Some(CatSet::from_ids([1u32, 4])),
+                left: encode_leaf(0),
+                right: encode_leaf(1),
+                gain: 1.0,
+            }],
+            leaf_values: vec![-5.0, 5.0],
+            n_leaves: 2,
+        };
+        assert_eq!(t.leaf_for_raw(&[1.0]), 0);
+        assert_eq!(t.leaf_for_raw(&[4.0]), 0);
+        assert_eq!(t.leaf_for_raw(&[0.0]), 1);
+        assert_eq!(t.leaf_for_raw(&[2.0]), 1);
+        assert_eq!(t.leaf_for_raw(&[9.0]), 1); // unseen category -> right
+        assert_eq!(t.leaf_for_raw(&[f32::NAN]), 1); // missing -> default right
     }
 
     #[test]
@@ -219,20 +355,24 @@ mod tests {
 
     #[test]
     fn binned_routing_matches_bins() {
-        // one feature, codes: [0, 2, 4]; split at bin 1
+        // one feature, values [0, 2, 4, NaN]; split at the first row's
+        // value bin, missing defaults right
         let ds = Dataset::new(
-            3,
+            4,
             1,
-            vec![0.0, 2.0, 4.0],
-            Targets::Regression { values: vec![0.0; 3], n_targets: 1 },
+            vec![0.0, 2.0, 4.0, f32::NAN],
+            Targets::Regression { values: vec![0.0; 4], n_targets: 1 },
         );
         let binned = BinnedDataset::from_dataset(&ds, 8);
+        assert_eq!(binned.column(0)[3], 0, "NaN lands in the missing bin");
         let t = Tree {
             n_outputs: 1,
             nodes: vec![TreeNode {
                 feature: 0,
                 bin: binned.column(0)[0],
                 threshold: 0.0,
+                default_left: false,
+                cats: None,
                 left: encode_leaf(0),
                 right: encode_leaf(1),
                 gain: 0.0,
@@ -243,6 +383,7 @@ mod tests {
         assert_eq!(t.leaf_for_binned(&binned, 0), 0);
         assert_eq!(t.leaf_for_binned(&binned, 1), 1);
         assert_eq!(t.leaf_for_binned(&binned, 2), 1);
+        assert_eq!(t.leaf_for_binned(&binned, 3), 1, "missing follows default");
     }
 
     #[test]

@@ -34,7 +34,8 @@
 //!
 //! [`Tree`]: crate::tree::Tree
 
-use crate::engine::{LeafSums, SlotRange};
+use crate::engine::{CatScratch, LeafSums, SlotRange};
+use crate::tree::tree::CatSet;
 
 /// Where a frontier slot hangs in the partially-built tree.
 #[derive(Clone, Copy)]
@@ -43,10 +44,26 @@ pub(crate) enum Parent {
     Child { node: usize, is_left: bool },
 }
 
+/// How a split routes non-missing codes (missing routes by the split's
+/// `default_left`). `Copy` so the partition loop stays allocation-free.
+#[derive(Clone, Copy)]
+pub(crate) enum SplitRule {
+    /// left iff 1 <= code <= bin
+    Numeric { bin: u8 },
+    /// left iff the code's category id (code - 1) is in the set
+    Categorical { cats: CatSet },
+}
+
 /// Per-slot decision of one level.
 pub(crate) enum Outcome {
     Leaf(u32),
-    Split { feature: u32, bin: u8, left_slot: u32, right_slot: u32 },
+    Split {
+        feature: u32,
+        rule: SplitRule,
+        default_left: bool,
+        left_slot: u32,
+        right_slot: u32,
+    },
 }
 
 /// Bookkeeping for one split: which new slots it produced and the
@@ -89,8 +106,12 @@ pub struct TreeWorkspace {
     pub(crate) hist_next: Vec<f32>,
     /// Split-gain output, filled by `ComputeEngine::split_gains`.
     pub(crate) gains: Vec<f32>,
+    /// Per-candidate missing-direction output, parallel to `gains`.
+    pub(crate) defaults: Vec<u8>,
     /// f64 scratch for `node_score`.
     pub(crate) score_scratch: Vec<f64>,
+    /// Categorical ordering scratch for `best_split`.
+    pub(crate) cat_scratch: CatScratch,
     /// Global row -> leaf id (SENTINEL outside the sampled rows).
     pub(crate) leaf_of_row: Vec<u32>,
     /// Exact per-leaf derivative sums, filled by `ComputeEngine::leaf_sums`.

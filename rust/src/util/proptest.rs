@@ -41,6 +41,31 @@ impl Gen {
         (0..len).map(|_| self.rng.next_below(bound) as u32).collect()
     }
 
+    /// Gaussian vector with a `nan_rate` fraction of cells missing (NaN).
+    pub fn vec_gaussian_nan(&mut self, len: usize, sigma: f64, nan_rate: f32) -> Vec<f32> {
+        let mut v = self.vec_gaussian(len, sigma);
+        for x in v.iter_mut() {
+            if self.rng.next_f32() < nan_rate {
+                *x = f32::NAN;
+            }
+        }
+        v
+    }
+
+    /// Integer category ids in `[0, cards)` as f32 (the raw encoding of
+    /// a categorical feature column), with a `nan_rate` fraction missing.
+    pub fn vec_cat_values(&mut self, len: usize, cards: usize, nan_rate: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if self.rng.next_f32() < nan_rate {
+                    f32::NAN
+                } else {
+                    self.rng.next_below(cards) as f32
+                }
+            })
+            .collect()
+    }
+
     /// Pick one element from a slice.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.next_below(xs.len())]
@@ -133,6 +158,23 @@ mod tests {
             assert!((-1.0..=1.0).contains(&f));
             let v = g.vec_u32_below(10, 4);
             assert!(v.iter().all(|&u| u < 4));
+        });
+    }
+
+    #[test]
+    fn gen_nan_and_cat_vectors() {
+        run_prop("gen nan/cat", 20, |g| {
+            let v = g.vec_gaussian_nan(200, 1.0, 0.3);
+            let nans = v.iter().filter(|x| x.is_nan()).count();
+            assert!(nans > 0 && nans < 200, "nan_rate 0.3 -> mixed: {nans}");
+            assert!(g.vec_gaussian_nan(50, 1.0, 0.0).iter().all(|x| !x.is_nan()));
+            let c = g.vec_cat_values(200, 5, 0.2);
+            for x in &c {
+                assert!(
+                    x.is_nan() || (*x >= 0.0 && *x < 5.0 && x.fract() == 0.0),
+                    "bad cat value {x}"
+                );
+            }
         });
     }
 

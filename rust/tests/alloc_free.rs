@@ -49,7 +49,7 @@ fn alloc_count() -> usize {
 
 use sketchboost::data::binning::BinnedDataset;
 use sketchboost::data::synthetic::{make_multiclass, FeatureSpec};
-use sketchboost::engine::{NativeEngine, ScoreMode};
+use sketchboost::engine::{MissingPolicy, NativeEngine, ScoreMode};
 use sketchboost::tree::builder::{build_tree_in, BuildParams};
 use sketchboost::tree::workspace::TreeWorkspace;
 
@@ -83,6 +83,7 @@ fn steady_state_builds_allocate_only_the_tree_artifact() {
         feature_mask: None,
         sparse_topk: None,
         row_weights: None,
+        missing: MissingPolicy::Learn,
     };
 
     let mut engine = NativeEngine::new();
@@ -161,6 +162,7 @@ fn steady_state_allocations_do_not_scale_with_depth() {
             feature_mask: None,
             sparse_topk: None,
             row_weights: None,
+            missing: MissingPolicy::Learn,
         };
         let mut engine = NativeEngine::new();
         let mut ws = TreeWorkspace::new();

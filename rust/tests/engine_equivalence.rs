@@ -10,7 +10,9 @@ use sketchboost::boosting::trainer::{GBDTConfig, GBDT};
 use sketchboost::data::binning::BinnedDataset;
 use sketchboost::data::dataset::{Dataset, Targets};
 use sketchboost::data::synthetic::{make_multiclass, FeatureSpec};
-use sketchboost::engine::{ComputeEngine, NativeEngine, ScoreMode, XlaEngine};
+use sketchboost::engine::{
+    ComputeEngine, FeatureKind, MissingPolicy, NativeEngine, ScanSpec, ScoreMode, XlaEngine,
+};
 use sketchboost::runtime::registry::artifacts_available;
 use sketchboost::sketch::SketchConfig;
 use sketchboost::util::proptest::assert_close;
@@ -149,11 +151,27 @@ fn split_gains_match_native() {
         }
     }
     let lam = 1.0; // must match the lambda baked into the artifact
+    // the artifact bakes the all-numeric missing-left prefix scan; the
+    // native engine reproduces it exactly under the same spec
+    let kinds = vec![FeatureKind::Numeric; M];
+    let spec = ScanSpec {
+        n_slots,
+        m: M,
+        bins: BINS,
+        k1,
+        lam,
+        mode: ScoreMode::CountL2,
+        kinds: &kinds,
+        missing: MissingPolicy::AlwaysLeft,
+    };
     let mut g1 = Vec::new();
+    let mut d1 = Vec::new();
     let mut g2 = Vec::new();
-    neng.split_gains(&hist, n_slots, M, BINS, k1, lam, ScoreMode::CountL2, &mut g1);
-    xeng.split_gains(&hist, n_slots, M, BINS, k1, lam, ScoreMode::CountL2, &mut g2);
+    let mut d2 = Vec::new();
+    neng.split_gains(&hist, &spec, &mut g1, &mut d1);
+    xeng.split_gains(&hist, &spec, &mut g2, &mut d2);
     assert_close(&g1, &g2, 2e-3, 2e-3);
+    assert_eq!(d1, d2, "AlwaysLeft defaults are all-left on both engines");
 }
 
 #[test]
@@ -192,6 +210,9 @@ fn full_training_equivalent_across_engines() {
     cfg.learning_rate = 0.3;
     cfg.lambda_l2 = 1.0; // matches baked lambda
     cfg.sketch = SketchConfig::TopOutputs { k: K }; // deterministic sketch
+    // keep the gain artifact on the training path (MissingPolicy::Learn
+    // would route split_gains through the documented native fallback)
+    cfg.missing_policy = MissingPolicy::AlwaysLeft;
 
     let native_model = GBDT::fit(&cfg, &ds, None);
     let xla_model = GBDT::fit_with_engine(&cfg, &ds, None, &mut xeng);

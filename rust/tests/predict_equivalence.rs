@@ -2,8 +2,10 @@
 //! the per-row reference walker (`predict_raw_naive`) — across every
 //! sketch strategy, tree depth 1–6, 1/2/4 prediction threads, all three
 //! losses, the one-vs-all baseline, the leaf-index output, and a
-//! save→load→predict round trip. NaN routing (left at every node, the
-//! binning policy) is pinned by a handcrafted-tree unit test.
+//! save→load→predict round trip. NaN routing through per-split default
+//! directions is pinned by a handcrafted-tree unit test here (the
+//! default-left case) and exercised adversarially — learned defaults,
+//! categorical sets — in `rust/tests/missing_categorical.rs`.
 
 use sketchboost::baselines::one_vs_all::fit_one_vs_all;
 use sketchboost::boosting::ensemble::{Ensemble, TrainHistory};
@@ -145,15 +147,16 @@ fn save_load_predict_round_trip_is_bit_identical() {
     assert_bits_eq(&naive, &loaded.predict_raw_naive(&ds), "save/load naive");
 }
 
-/// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2) — NaN must go left
-/// at *every* node in both paths (matching the NaN -> bin 0 policy).
+/// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2) — NaN must follow
+/// `default_left = true` at *every* node in both paths (the behavior
+/// legacy models load with).
 #[test]
 fn nan_features_route_left_identically() {
     let tree = Tree {
         n_outputs: 2,
         nodes: vec![
-            TreeNode { feature: 0, bin: 3, threshold: 0.5, left: encode_leaf(0), right: 1, gain: 1.0 },
-            TreeNode { feature: 1, bin: 1, threshold: 2.0, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
+            TreeNode { feature: 0, bin: 3, threshold: 0.5, default_left: true, cats: None, left: encode_leaf(0), right: 1, gain: 1.0 },
+            TreeNode { feature: 1, bin: 1, threshold: 2.0, default_left: true, cats: None, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
         ],
         leaf_values: vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0],
         n_leaves: 3,

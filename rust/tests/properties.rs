@@ -2,9 +2,9 @@
 //! by the in-repo prop-test harness (util::proptest).
 
 use sketchboost::data::binning::BinnedDataset;
-use sketchboost::data::dataset::{Dataset, Targets};
+use sketchboost::data::dataset::{Dataset, FeatureKind, Targets};
 use sketchboost::data::synthetic::{make_multiclass, FeatureSpec};
-use sketchboost::engine::{ComputeEngine, NativeEngine, ScoreMode};
+use sketchboost::engine::{ComputeEngine, MissingPolicy, NativeEngine, ScanSpec, ScoreMode};
 use sketchboost::prelude::*;
 use sketchboost::sketch::{column_sq_norms, SketchConfig};
 use sketchboost::tree::builder::{build_tree, BuildParams};
@@ -157,7 +157,19 @@ fn prop_split_gain_superadditive_at_small_lambda() {
         let lam = 1e-4f32;
         let mut eng = NativeEngine::new();
         let mut gains = Vec::new();
-        eng.split_gains(&hist, 1, m, bins, k1, lam, ScoreMode::CountL2, &mut gains);
+        let mut defaults = Vec::new();
+        let kinds = vec![FeatureKind::Numeric; m];
+        let spec = ScanSpec {
+            n_slots: 1,
+            m,
+            bins,
+            k1,
+            lam,
+            mode: ScoreMode::CountL2,
+            kinds: &kinds,
+            missing: MissingPolicy::AlwaysLeft,
+        };
+        eng.split_gains(&hist, &spec, &mut gains, &mut defaults);
         let (pscore, _) = sketchboost::tree::splitter::node_score(
             &hist,
             0,
@@ -207,6 +219,7 @@ fn prop_tree_partitions_and_depth_bounded() {
             feature_mask: None,
             sparse_topk: None,
             row_weights: None,
+            missing: MissingPolicy::Learn,
         };
         let mut eng = NativeEngine::new();
         let (tree, leaf_of_row) = build_tree(&p, &mut eng);
@@ -229,6 +242,127 @@ fn prop_tree_partitions_and_depth_bounded() {
             let raw: Vec<f32> = (0..m).map(|f| binned.codes[f * n + r] as f32).collect();
             let _ = raw; // raw-value recheck happens in tree unit tests
             assert_eq!(tree.leaf_for_binned(&binned, r), leaf_of_row[r] as usize);
+        }
+    });
+}
+
+#[test]
+fn prop_missing_and_categorical_codes_bin_consistently() {
+    // Bin-layout invariants with NaN placement and categorical codes:
+    // code 0 <=> the raw value is missing; numeric candidates b >= 1
+    // satisfy (code <= b) == (x <= threshold); categorical codes are
+    // exactly id + 1.
+    run_prop("missing/categorical bin layout", 20, |g| {
+        let n = g.usize_in(30, 300);
+        let nan_rate = *g.choose(&[0.05f32, 0.3]);
+        let num = g.vec_gaussian_nan(n, 2.0, nan_rate);
+        let cards = g.usize_in(2, 12);
+        let cat = g.vec_cat_values(n, cards, nan_rate);
+        let mut cols = num.clone();
+        cols.extend(cat.clone());
+        let mut ds = Dataset::new(
+            n,
+            2,
+            cols,
+            Targets::Regression { values: vec![0.0; n], n_targets: 1 },
+        );
+        ds.mark_categorical(&[1]);
+        let bins = *g.choose(&[16usize, 64]);
+        let b = BinnedDataset::from_dataset(&ds, bins);
+        for i in 0..n {
+            assert_eq!(b.column(0)[i] == 0, num[i].is_nan(), "numeric row {i}");
+            if cat[i].is_nan() {
+                assert_eq!(b.column(1)[i], 0, "cat row {i}");
+            } else {
+                assert_eq!(b.column(1)[i], cat[i] as u8 + 1, "cat row {i}");
+            }
+        }
+        for cand in 1..=b.edges[0].len() {
+            let t = b.threshold_value(0, cand);
+            for i in 0..n {
+                if num[i].is_nan() {
+                    continue;
+                }
+                assert_eq!(
+                    b.column(0)[i] as usize <= cand,
+                    num[i] <= t,
+                    "x={} cand={cand} t={t}",
+                    num[i]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_binned_and_raw_routing_agree_with_missing_and_categorical() {
+    // The satellite invariant: for a tree trained on NaN-bearing data
+    // with categorical columns, the binned split decision equals the
+    // raw-value decision for EVERY row — including missing cells —
+    // through the builder's leaf map, the per-row walker, and the
+    // FlatForest serving path.
+    run_prop("binned == raw routing", 12, |g| {
+        let n = g.usize_in(80, 400);
+        let m_num = g.usize_in(1, 3);
+        let m_cat = g.usize_in(1, 3);
+        let m = m_num + m_cat;
+        let nan_rate = *g.choose(&[0.0f32, 0.1, 0.3]);
+        let cards = g.usize_in(2, 10);
+        let mut cols = Vec::with_capacity(n * m);
+        for _ in 0..m_num {
+            cols.extend(g.vec_gaussian_nan(n, 2.0, nan_rate));
+        }
+        for _ in 0..m_cat {
+            cols.extend(g.vec_cat_values(n, cards, nan_rate));
+        }
+        let mut ds = Dataset::new(
+            n,
+            m,
+            cols,
+            Targets::Regression { values: vec![0.0; n], n_targets: 1 },
+        );
+        let cat_cols: Vec<usize> = (m_num..m).collect();
+        ds.mark_categorical(&cat_cols);
+        let binned = BinnedDataset::from_dataset(&ds, 16);
+        let grad = g.vec_gaussian(n, 1.0);
+        let h = vec![1.0f32; n];
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let p = BuildParams {
+            binned: &binned,
+            rows: &rows,
+            g: &grad,
+            h: &h,
+            d: 1,
+            score_g: &grad,
+            kc: 1,
+            score_h: None,
+            mode: ScoreMode::CountL2,
+            max_depth: g.usize_in(1, 4),
+            lambda: 1.0,
+            min_data_in_leaf: g.usize_in(1, 5),
+            min_gain: 0.0,
+            feature_mask: None,
+            sparse_topk: None,
+            row_weights: None,
+            missing: *g.choose(&[MissingPolicy::Learn, MissingPolicy::AlwaysLeft]),
+        };
+        let mut eng = NativeEngine::new();
+        let (tree, leaf_of_row) = build_tree(&p, &mut eng);
+        tree.validate().unwrap();
+        let model = Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 1,
+            base_score: vec![0.0],
+            trees: vec![tree.clone()],
+            history: Default::default(),
+        };
+        let flat = FlatForest::from_ensemble(&model);
+        for r in 0..n {
+            let raw = ds.row(r);
+            let via_bins = tree.leaf_for_binned(&binned, r);
+            assert_eq!(leaf_of_row[r] as usize, via_bins, "row {r} builder map");
+            assert_eq!(tree.leaf_for_raw(&raw), via_bins, "row {r} raw walker");
+            assert_eq!(flat.leaf_of(0, &raw), via_bins, "row {r} flat path");
         }
     });
 }
