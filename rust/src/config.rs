@@ -15,6 +15,7 @@ use crate::boosting::losses::LossKind;
 use crate::boosting::sampling::RowSampling;
 use crate::boosting::trainer::GBDTConfig;
 use crate::engine::MissingPolicy;
+use crate::serve::ServeOptions;
 use crate::sketch::SketchConfig;
 use crate::util::json::Json;
 
@@ -153,6 +154,50 @@ pub fn load_config(path: &std::path::Path) -> Result<GBDTConfig, String> {
     config_from_json(&j)
 }
 
+pub fn serve_options_to_json(opts: &ServeOptions) -> Json {
+    let mut o = Json::obj();
+    o.set("bind", Json::Str(opts.bind.clone()));
+    o.set("port", Json::Num(opts.port as f64));
+    o.set("threads", Json::Num(opts.n_workers as f64));
+    o.set("block", Json::Num(opts.block_rows as f64));
+    o.set("max_wait_us", Json::Num(opts.max_wait_us as f64));
+    o.set("queue", Json::Num(opts.queue_cap as f64));
+    o.set("poll_ms", Json::Num(opts.poll_ms as f64));
+    o
+}
+
+/// Missing keys keep their [`ServeOptions::default`] values, so a
+/// config file only needs the knobs it changes.
+pub fn serve_options_from_json(j: &Json) -> Result<ServeOptions, String> {
+    let mut opts = ServeOptions::default();
+    if let Some(b) = j.get("bind") {
+        opts.bind = b.as_str().ok_or("bad bind")?.to_string();
+    }
+    if let Some(p) = j.get("port") {
+        let p = p.as_usize().ok_or("bad port")?;
+        opts.port = u16::try_from(p).map_err(|_| format!("port {p} out of range"))?;
+    }
+    let num = |key: &str, dflt: usize| -> Result<usize, String> {
+        match j.get(key) {
+            Some(v) => v.as_usize().ok_or_else(|| format!("bad {key}")),
+            None => Ok(dflt),
+        }
+    };
+    opts.n_workers = num("threads", opts.n_workers)?;
+    opts.block_rows = num("block", opts.block_rows)?;
+    opts.max_wait_us = num("max_wait_us", opts.max_wait_us as usize)? as u64;
+    opts.queue_cap = num("queue", opts.queue_cap)?;
+    opts.poll_ms = num("poll_ms", opts.poll_ms as usize)? as u64;
+    Ok(opts)
+}
+
+/// Load serving options from a JSON file (`sketchboost serve --config`).
+pub fn load_serve_options(path: &std::path::Path) -> Result<ServeOptions, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let j = Json::parse(&text).map_err(|e| e.to_string())?;
+    serve_options_from_json(&j)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +264,49 @@ mod tests {
         std::fs::write(&path, config_to_json(&cfg).to_pretty()).unwrap();
         let back = load_config(&path).unwrap();
         assert_eq!(back.n_outputs, 9);
+    }
+
+    #[test]
+    fn serve_options_roundtrip_and_partial_files() {
+        let opts = ServeOptions {
+            bind: "0.0.0.0".to_string(),
+            port: 7733,
+            n_workers: 4,
+            block_rows: 128,
+            max_wait_us: 500,
+            queue_cap: 64,
+            poll_ms: 250,
+        };
+        let back = serve_options_from_json(&serve_options_to_json(&opts)).unwrap();
+        assert_eq!(back.bind, "0.0.0.0");
+        assert_eq!(back.port, 7733);
+        assert_eq!(back.n_workers, 4);
+        assert_eq!(back.block_rows, 128);
+        assert_eq!(back.max_wait_us, 500);
+        assert_eq!(back.queue_cap, 64);
+        assert_eq!(back.poll_ms, 250);
+
+        // a partial file keeps defaults for everything it omits
+        let partial = Json::parse(r#"{"port": 9000}"#).unwrap();
+        let back = serve_options_from_json(&partial).unwrap();
+        assert_eq!(back.port, 9000);
+        assert_eq!(back.bind, ServeOptions::default().bind);
+        assert_eq!(back.block_rows, ServeOptions::default().block_rows);
+
+        // out-of-range port is rejected, not truncated
+        let bad = Json::parse(r#"{"port": 70000}"#).unwrap();
+        assert!(serve_options_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_options_file_roundtrip() {
+        let opts = ServeOptions { n_workers: 2, ..ServeOptions::default() };
+        let dir = std::env::temp_dir().join("sb_serve_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(&path, serve_options_to_json(&opts).to_pretty()).unwrap();
+        let back = load_serve_options(&path).unwrap();
+        assert_eq!(back.n_workers, 2);
     }
 
     #[test]

@@ -82,11 +82,19 @@ pub const SPARSE: [Profile; 2] = [
     Profile { name: "cat-rule", task: TaskKind::Multitask, paper_rows: 0, paper_features: 0, outputs: 8, rows: 4000, features: 24, rank: 0, missing_rate: 0.05, n_categorical: 16, cardinality: 12 },
 ];
 
+/// Tiny profiles for CI smoke jobs (train + serve in seconds on a
+/// 2-core runner). `moa-small` keeps MoA's multilabel task shape at a
+/// width a shell client can type (64 features).
+pub const SMOKE: [Profile; 1] = [
+    Profile { name: "moa-small", task: TaskKind::Multilabel, paper_rows: 23_814, paper_features: 876, outputs: 24, rows: 800, features: 64, rank: 6, missing_rate: 0.0, n_categorical: 0, cardinality: 0 },
+];
+
 impl Profile {
     pub fn by_name(name: &str) -> Option<Profile> {
         MAIN.iter()
             .chain(GBDTMO.iter())
             .chain(SPARSE.iter())
+            .chain(SMOKE.iter())
             .find(|p| p.name == name)
             .copied()
     }
@@ -143,12 +151,14 @@ mod tests {
         assert_eq!(Profile::by_name("mnist").unwrap().outputs, 10);
         assert_eq!(Profile::by_name("moa-nan").unwrap().outputs, 206);
         assert_eq!(Profile::by_name("cat-rule").unwrap().n_categorical, 16);
+        let small = Profile::by_name("moa-small").unwrap();
+        assert_eq!((small.features, small.outputs), (64, 24));
         assert!(Profile::by_name("nope").is_none());
     }
 
     #[test]
     fn all_profiles_generate() {
-        for p in MAIN.iter().chain(GBDTMO.iter()).chain(SPARSE.iter()) {
+        for p in MAIN.iter().chain(GBDTMO.iter()).chain(SPARSE.iter()).chain(SMOKE.iter()) {
             let ds = p.generate_sized(200, 1);
             assert_eq!(ds.n_rows, 200, "{}", p.name);
             assert_eq!(ds.n_features, p.features, "{}", p.name);

@@ -31,7 +31,11 @@
 //! Inference runs through [`predict::FlatForest`] — the ensemble
 //! compiled into structure-of-arrays node tables, driven block-of-rows
 //! at a time in parallel, bit-identical to the per-row reference walker
-//! for every thread count (DESIGN.md "Inference model").
+//! for every thread count (DESIGN.md "Inference model"). The [`serve`]
+//! module puts that predictor behind a dependency-free TCP daemon
+//! (`sketchboost serve`) that coalesces concurrent requests into the
+//! same cache-sized blocks and hot-swaps models without ever tearing a
+//! response (DESIGN.md "Serving model").
 //!
 //! The training API is open (DESIGN.md "Training session & extension
 //! points"): losses, metrics, and per-round behavior plug in through
@@ -63,6 +67,7 @@ pub mod data;
 pub mod engine;
 pub mod predict;
 pub mod runtime;
+pub mod serve;
 pub mod sketch;
 pub mod tree;
 pub mod util;
@@ -83,7 +88,8 @@ pub mod prelude {
     pub use crate::data::split;
     pub use crate::data::{BinnedDataset, Dataset, FeatureKind, Targets};
     pub use crate::engine::MissingPolicy;
-    pub use crate::predict::{FlatForest, PredictOptions};
+    pub use crate::predict::{FlatForest, PredictOptions, SharedForest};
+    pub use crate::serve::{ServeOptions, Server};
     pub use crate::sketch::SketchConfig;
     pub use crate::tree::CatSet;
 }

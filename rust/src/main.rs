@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train              train on a dataset profile or CSV file
 //!   predict            batch-score a CSV with a saved model (FlatForest)
+//!   serve              TCP daemon with request coalescing + model hot-swap
 //!   evaluate           load a saved model and score a dataset
 //!   gen-data           write a synthetic profile dataset to CSV
 //!   bench-synth        quick Figure-1-style scaling run
@@ -29,6 +30,7 @@ fn main() -> ExitCode {
     let result = match cmd {
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
         "evaluate" => cmd_evaluate(&args),
         "cv" => cmd_cv(&args),
         "gen-data" => cmd_gen_data(&args),
@@ -55,6 +57,7 @@ fn top_usage() -> String {
      Commands:\n\
      \x20 train              train a model (see `train --help`)\n\
      \x20 predict            batch-score a CSV with a saved model (see `predict --help`)\n\
+     \x20 serve              micro-batching TCP model server (see `serve --help`)\n\
      \x20 evaluate           score a saved model on a dataset\n\
      \x20 cv                 5-fold cross-validation (paper Appendix B.2)\n\
      \x20 gen-data           write a synthetic profile dataset to CSV\n\
@@ -345,6 +348,73 @@ fn cmd_predict(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         csv::write_predictions(std::path::Path::new(out), &preds, model.n_outputs)?;
         println!("predictions written to {out}");
     }
+    Ok(())
+}
+
+/// The serving daemon: load a model, bind, and block until `/shutdown`
+/// (or a signal kills the process; in-flight batches drain either way
+/// on `/shutdown`).
+fn cmd_serve(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "sketchboost serve --model FILE [options]",
+                "Serve a saved model over TCP with micro-batching (line protocol: \
+                 CSV rows in, scores out; /stats, /model, /ping, /shutdown).",
+                &[
+                    ("--model FILE", "model JSON saved by train --out (required)"),
+                    ("--config FILE", "serve options JSON (flags below override it)"),
+                    ("--bind ADDR", "listen address (default 127.0.0.1)"),
+                    ("--port N", "TCP port; 0 = OS-assigned ephemeral (default 0)"),
+                    ("--threads N", "scoring worker threads (default 1)"),
+                    ("--block N", "rows per scoring block = coalescing target (default 512)"),
+                    ("--max-wait-us N", "batch linger once it has one request, µs (default 250)"),
+                    ("--queue N", "pending-job queue capacity (default 1024)"),
+                    ("--watch", "hot-swap the model when --model's file changes"),
+                    ("--poll-ms N", "watch poll interval (default 200, implies --watch)"),
+                ],
+            )
+        );
+        return Ok(());
+    }
+    let model_path = args
+        .get("model")
+        .ok_or("serve needs --model FILE (a model saved by train --out)")?;
+    let mut opts = match args.get("config") {
+        Some(path) => sketchboost::config::load_serve_options(std::path::Path::new(path))?,
+        None => sketchboost::serve::ServeOptions::default(),
+    };
+    if let Some(bind) = args.get("bind") {
+        opts.bind = bind.to_string();
+    }
+    let port = args.get_usize("port", opts.port as usize);
+    opts.port = u16::try_from(port).map_err(|_| format!("--port {port} out of range"))?;
+    opts.n_workers = args.get_usize("threads", opts.n_workers);
+    opts.block_rows = args.get_usize("block", opts.block_rows);
+    opts.max_wait_us = args.get_u64("max-wait-us", opts.max_wait_us);
+    opts.queue_cap = args.get_usize("queue", opts.queue_cap);
+    if args.flag("watch") || args.get("poll-ms").is_some() {
+        opts.poll_ms = args.get_u64("poll-ms", if opts.poll_ms > 0 { opts.poll_ms } else { 200 });
+    }
+
+    let server = sketchboost::serve::Server::start(std::path::Path::new(model_path), &opts)?;
+    println!(
+        "serving {model_path} on {} (workers={} block={} max_wait_us={}{})",
+        server.addr(),
+        opts.n_workers.max(1),
+        opts.block_rows.max(1),
+        opts.max_wait_us,
+        if opts.poll_ms > 0 {
+            format!(" watch={}ms", opts.poll_ms)
+        } else {
+            String::new()
+        },
+    );
+    server.wait();
+    println!("shutdown requested; draining");
+    server.stop();
+    println!("bye");
     Ok(())
 }
 

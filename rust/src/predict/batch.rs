@@ -107,20 +107,53 @@ impl FlatForest {
         });
     }
 
+    /// Score one row-major block in place: `out[i]` = base score plus the
+    /// leaf values of row `i`, trees accumulated in ascending order — the
+    /// exact per-row recipe of the naive walker, so every caller that
+    /// feeds rows through this function (the offline driver below, the
+    /// serving workers in `serve::server`) produces bit-identical scores
+    /// regardless of how rows were grouped into blocks.
+    ///
+    /// `tile` holds `n_rows` rows of `width` features each, row-major;
+    /// `width` must cover every feature the forest splits on. Re-entrant:
+    /// takes `&self` and only caller-owned buffers, so any number of
+    /// threads may score disjoint blocks of one shared forest at once.
+    pub fn predict_block_into(
+        &self,
+        tile: &[f32],
+        width: usize,
+        n_rows: usize,
+        out: &mut [f32],
+    ) {
+        let d = self.n_outputs;
+        assert!(
+            width >= self.n_features_required(),
+            "block is {} features wide but the model splits on feature index {}",
+            width,
+            self.n_features_required().saturating_sub(1),
+        );
+        assert!(tile.len() >= n_rows * width, "tile holds fewer than n_rows rows");
+        assert_eq!(out.len(), n_rows * d, "output buffer size");
+        if n_rows == 0 || d == 0 {
+            return;
+        }
+        for row in out.chunks_mut(d) {
+            row.copy_from_slice(&self.base_score);
+        }
+        for t in 0..self.n_trees() {
+            for i in 0..n_rows {
+                let leaf = self.leaf_of(t, &tile[i * width..(i + 1) * width]);
+                self.add_leaf(t, leaf, &mut out[i * d..(i + 1) * d]);
+            }
+        }
+    }
+
     /// Raw scores, row-major `[n_rows, n_outputs]`, written into `out`.
     pub fn predict_raw_into(&self, ds: &Dataset, opts: &PredictOptions, out: &mut [f32]) {
         let d = self.n_outputs;
         let m = ds.n_features;
         self.for_each_block(ds, opts, d, out, |tile, rows, dst| {
-            for row in dst.chunks_mut(d) {
-                row.copy_from_slice(&self.base_score);
-            }
-            for t in 0..self.n_trees() {
-                for i in 0..rows {
-                    let leaf = self.leaf_of(t, &tile[i * m..(i + 1) * m]);
-                    self.add_leaf(t, leaf, &mut dst[i * d..(i + 1) * d]);
-                }
-            }
+            self.predict_block_into(&tile[..rows * m], m, rows, dst);
         });
     }
 
@@ -279,6 +312,46 @@ mod tests {
         let ds = Dataset::new(0, 3, vec![], Targets::Regression { values: vec![], n_targets: 2 });
         assert!(ff.predict_raw(&ds, &PredictOptions::default()).is_empty());
         assert!(ff.predict_leaf_indices(&ds, &PredictOptions::default()).is_empty());
+    }
+
+    #[test]
+    fn predict_block_into_matches_reference_row_grouping_free() {
+        let ds = toy_ds();
+        let (model, ff) = toy_forest();
+        let want = reference(&model, &ds);
+        let m = ds.n_features;
+        let d = ff.n_outputs;
+        // score the same rows in arbitrary block groupings; every grouping
+        // must reproduce the reference bits because each row only sees
+        // its own tile slice
+        for sizes in [vec![23usize], vec![1; 23], vec![5, 9, 9], vec![22, 1]] {
+            let mut got = vec![0.0f32; ds.n_rows * d];
+            let mut start = 0usize;
+            let mut tile = vec![0.0f32; 23 * m];
+            for n in sizes {
+                gather_block(&ds, start, start + n, &mut tile);
+                ff.predict_block_into(
+                    &tile[..n * m],
+                    m,
+                    n,
+                    &mut got[start * d..(start + n) * d],
+                );
+                start += n;
+            }
+            assert_eq!(start, ds.n_rows);
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "cell {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "splits on feature index")]
+    fn predict_block_into_rejects_narrow_width() {
+        let (_, ff) = toy_forest(); // splits reference feature 2
+        let tile = vec![0.0f32; 4];
+        let mut out = vec![0.0f32; 4];
+        ff.predict_block_into(&tile, 2, 2, &mut out);
     }
 
     #[test]

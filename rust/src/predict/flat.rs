@@ -224,6 +224,52 @@ impl FlatForest {
     }
 }
 
+/// A hot-swappable handle to the forest being served.
+///
+/// Readers take an `Arc` snapshot and score against it for as long as
+/// they like; [`SharedForest::swap`] flips the shared pointer to a new
+/// forest without waiting for readers, so a swap can never tear a
+/// snapshot mid-batch — a reader either holds the old forest entirely
+/// or the new one entirely. The old forest is freed when its last
+/// in-flight snapshot drops. A monotone version counter identifies
+/// which model produced a given response (`serve` reports it under
+/// `/stats`).
+#[derive(Debug)]
+pub struct SharedForest {
+    current: std::sync::Mutex<std::sync::Arc<FlatForest>>,
+    version: std::sync::atomic::AtomicU64,
+}
+
+impl SharedForest {
+    /// Wrap `forest` as version 1.
+    pub fn new(forest: FlatForest) -> SharedForest {
+        SharedForest {
+            current: std::sync::Mutex::new(std::sync::Arc::new(forest)),
+            version: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// The forest to score the next batch against. The lock is held only
+    /// long enough to clone the `Arc` (pointer-sized critical section).
+    pub fn snapshot(&self) -> std::sync::Arc<FlatForest> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Version of the forest currently installed (starts at 1, bumps on
+    /// every [`SharedForest::swap`]).
+    pub fn version(&self) -> u64 {
+        self.version.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// Install `forest` as the new current model and return its version.
+    /// In-flight snapshots keep the old forest alive until they drop.
+    pub fn swap(&self, forest: FlatForest) -> u64 {
+        let mut cur = self.current.lock().unwrap();
+        *cur = std::sync::Arc::new(forest);
+        self.version.fetch_add(1, std::sync::atomic::Ordering::AcqRel) + 1
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -391,5 +437,25 @@ mod tests {
     fn rejects_width_mismatch() {
         let mut ff = FlatForest::empty(3, vec![0.0; 3]);
         ff.push_tree(&toy_tree(), None); // d = 2 tree into d = 3 forest
+    }
+
+    #[test]
+    fn shared_forest_swaps_without_tearing_snapshots() {
+        let shared = SharedForest::new(FlatForest::from_ensemble(&toy_model()));
+        assert_eq!(shared.version(), 1);
+        let old = shared.snapshot();
+        let stump_only = Ensemble {
+            trees: vec![Tree { n_outputs: 2, nodes: vec![], leaf_values: vec![9.0, 9.0], n_leaves: 1 }],
+            ..toy_model()
+        };
+        assert_eq!(shared.swap(FlatForest::from_ensemble(&stump_only)), 2);
+        assert_eq!(shared.version(), 2);
+        // the pre-swap snapshot still scores with the old trees
+        assert_eq!(old.n_trees(), 2);
+        let fresh = shared.snapshot();
+        assert_eq!(fresh.n_trees(), 1);
+        let mut out = vec![0.0f32; 2];
+        fresh.add_leaf(0, 0, &mut out);
+        assert_eq!(out, vec![9.0, 9.0]);
     }
 }

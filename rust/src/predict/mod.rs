@@ -16,4 +16,4 @@ pub mod batch;
 pub mod flat;
 
 pub use batch::{PredictOptions, DEFAULT_BLOCK_ROWS};
-pub use flat::FlatForest;
+pub use flat::{FlatForest, SharedForest};

@@ -1,0 +1,46 @@
+//! `sketchboost serve` — a micro-batching model server on [`FlatForest`].
+//!
+//! A dependency-free TCP daemon (std `TcpListener` only) that extends
+//! the repo's determinism story to the network edge: any interleaving
+//! of requests returns responses **bitwise-equal** to offline
+//! [`FlatForest`](crate::predict::FlatForest) predict on the same rows.
+//!
+//! Structure:
+//!
+//! * [`protocol`] — the line-delimited wire format: one request per
+//!   line (CSV rows or a `/`-prefixed control verb), one response line
+//!   per request, in order. f32 values survive the text round trip
+//!   bit-for-bit because Rust's `Display` prints the shortest
+//!   round-trip representation.
+//! * [`queue`] — the intake side: per-request completion slots plus the
+//!   [`Coalescer`](queue::Coalescer), which merges concurrent requests
+//!   into one cache-sized block for the PR 3 batch driver.
+//! * [`server`] — the daemon: accept loop, per-connection reader/writer
+//!   pair (pipelined, responses stay FIFO per connection), scoring
+//!   workers with warm tile buffers, model hot-swap watcher, graceful
+//!   drain on shutdown.
+//! * [`stats`] — lock-free counters and log-bucket latency histograms
+//!   behind the `/stats` verb.
+//!
+//! ## Correctness invariants (pinned by `rust/tests/serve_integration.rs`
+//! and the serving property in `rust/tests/properties.rs`)
+//!
+//! 1. **Bit-equality**: workers score through the same
+//!    [`predict_block_into`](crate::predict::FlatForest::predict_block_into)
+//!    the offline driver uses, and a row's score depends only on that
+//!    row — so batching decisions can never change a single bit.
+//! 2. **No torn responses**: the coalescing unit is the whole request;
+//!    a request's rows are never split across two forest snapshots, so
+//!    under a hot-swap every response matches exactly one model.
+//! 3. **Graceful drain**: shutdown stops intake first, then drains
+//!    every queued job before workers exit — no request is dropped
+//!    after its submission succeeded.
+
+pub mod protocol;
+pub mod queue;
+pub mod server;
+pub mod stats;
+
+pub use queue::{Coalescer, Job, JobTicket};
+pub use server::{score_batch, ServeOptions, Server};
+pub use stats::ServeStats;

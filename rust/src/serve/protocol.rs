@@ -1,0 +1,192 @@
+//! Line-delimited wire format for `sketchboost serve`.
+//!
+//! One request per line, one response line per request, in request
+//! order per connection. Two request shapes:
+//!
+//! * **Data line** — comma-separated f32 feature values; multiple rows
+//!   in one request are joined with `;`. Empty cells and `nan` parse as
+//!   missing (NaN). The response has the same shape: `n_outputs`
+//!   comma-separated scores per row, rows joined with `;`.
+//! * **Control line** — starts with `/`: `/ping`, `/stats`, `/model`,
+//!   `/shutdown`.
+//!
+//! Error responses are one line prefixed `!`.
+//!
+//! The format is bitwise-faithful for f32: values are printed with
+//! Rust's `Display`, which emits the shortest string that parses back
+//! to the identical bit pattern (including `-0`, subnormals, and
+//! `inf`; NaN prints as `NaN` and parses back to a quiet NaN — the
+//! same canonical NaN the offline CSV path produces). The protocol
+//! round-trip test below pins this.
+
+/// A parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// `n_rows` feature rows of `width` values each, row-major.
+    Rows { rows: Vec<f32>, n_rows: usize, width: usize },
+    Ping,
+    Stats,
+    ModelInfo,
+    Shutdown,
+}
+
+/// Parse one non-empty request line (the server skips blank lines).
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Err("empty request".to_string());
+    }
+    if let Some(verb) = line.strip_prefix('/') {
+        return match verb {
+            "ping" => Ok(Request::Ping),
+            "stats" => Ok(Request::Stats),
+            "model" => Ok(Request::ModelInfo),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown control verb /{other}")),
+        };
+    }
+    let mut rows = Vec::new();
+    let mut width = 0usize;
+    let mut n_rows = 0usize;
+    for (r, row) in line.split(';').enumerate() {
+        let start = rows.len();
+        for cell in row.split(',') {
+            rows.push(parse_cell(cell).map_err(|e| format!("row {r}: {e}"))?);
+        }
+        let w = rows.len() - start;
+        if r == 0 {
+            width = w;
+        } else if w != width {
+            return Err(format!("row {r} has {w} values, row 0 has {width}"));
+        }
+        n_rows += 1;
+    }
+    Ok(Request::Rows { rows, n_rows, width })
+}
+
+/// One feature cell: empty or `nan` (any case) means missing.
+fn parse_cell(cell: &str) -> Result<f32, String> {
+    let cell = cell.trim();
+    if cell.is_empty() || cell.eq_ignore_ascii_case("nan") {
+        return Ok(f32::NAN);
+    }
+    cell.parse::<f32>().map_err(|_| format!("bad value {cell:?}"))
+}
+
+/// Format a response for `n_rows = out.len() / d` scored rows: `d`
+/// scores per row joined with `,`, rows joined with `;`.
+pub fn format_scores(out: &[f32], d: usize) -> String {
+    debug_assert!(d > 0 && out.len() % d == 0);
+    let mut s = String::with_capacity(out.len() * 8);
+    for (r, row) in out.chunks(d).enumerate() {
+        if r > 0 {
+            s.push(';');
+        }
+        for (c, v) in row.iter().enumerate() {
+            if c > 0 {
+                s.push(',');
+            }
+            // Display prints the shortest round-trip repr (bit-exact)
+            s.push_str(&format!("{v}"));
+        }
+    }
+    s
+}
+
+/// Format an error response line.
+pub fn format_error(msg: &str) -> String {
+    format!("!{}", msg.replace('\n', " "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_control_verbs() {
+        assert_eq!(parse_request("/ping"), Ok(Request::Ping));
+        assert_eq!(parse_request("  /stats "), Ok(Request::Stats));
+        assert_eq!(parse_request("/model"), Ok(Request::ModelInfo));
+        assert_eq!(parse_request("/shutdown"), Ok(Request::Shutdown));
+        assert!(parse_request("/nope").is_err());
+    }
+
+    #[test]
+    fn parses_single_and_multi_row_requests() {
+        match parse_request("1.5,2,3").unwrap() {
+            Request::Rows { rows, n_rows, width } => {
+                assert_eq!((n_rows, width), (1, 3));
+                assert_eq!(rows, vec![1.5, 2.0, 3.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_request("1,2;3,4;5,6").unwrap() {
+            Request::Rows { rows, n_rows, width } => {
+                assert_eq!((n_rows, width), (3, 2));
+                assert_eq!(rows, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_cells_parse_as_nan() {
+        match parse_request("1,,nan,NaN").unwrap() {
+            Request::Rows { rows, width, .. } => {
+                assert_eq!(width, 4);
+                assert!(rows[1].is_nan() && rows[2].is_nan() && rows[3].is_nan());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_ragged_and_garbage_rows() {
+        assert!(parse_request("1,2;3").is_err());
+        assert!(parse_request("1,abc").is_err());
+        assert!(parse_request("").is_err());
+    }
+
+    /// The wire format must preserve every f32 bit pattern: print with
+    /// Display, parse back, compare bits (NaN canonicalizes to the one
+    /// quiet NaN `"NaN".parse()` yields, same as the offline CSV path).
+    #[test]
+    fn text_round_trip_is_bit_exact() {
+        let adversarial = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 2.0, // subnormal
+            f32::MAX,
+            f32::EPSILON,
+            0.1,
+            1.0 / 3.0,
+            core::f32::consts::PI,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            12345.678,
+            -9.869604e-18,
+        ];
+        let formatted = format_scores(&adversarial, adversarial.len());
+        match parse_request(&formatted).unwrap() {
+            Request::Rows { rows, n_rows, width } => {
+                assert_eq!((n_rows, width), (1, adversarial.len()));
+                for (i, (a, b)) in adversarial.iter().zip(&rows).enumerate() {
+                    let same = a.to_bits() == b.to_bits()
+                        || (a.is_nan() && b.to_bits() == f32::NAN.to_bits());
+                    assert!(same, "cell {i}: {a:?} vs {b:?}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn multi_row_scores_format() {
+        assert_eq!(format_scores(&[1.0, -2.5, 3.0, 4.0], 2), "1,-2.5;3,4");
+        assert_eq!(format_error("bad\nthing"), "!bad thing");
+    }
+}

@@ -1,0 +1,216 @@
+//! Request intake: completion slots and the micro-batching coalescer.
+//!
+//! Each connection reader turns a parsed data line into a [`Job`] (the
+//! rows to score) plus a [`JobTicket`] (where the response will appear)
+//! and submits the job to the shared [`Coalescer`]. Scoring workers
+//! pull *batches* of jobs: the first pop blocks until work arrives,
+//! then the coalescer keeps popping until the batch holds at least the
+//! worker's block-row budget or `max_wait` elapses — so concurrent
+//! single-row requests merge into one cache-sized block for the batch
+//! driver, while a lone request never waits longer than `max_wait`.
+//!
+//! ## Coalescing contract
+//!
+//! The unit of coalescing is the **whole request**: a job's rows always
+//! travel together, so a worker scores all of them against one forest
+//! snapshot — the "no torn response" half of the hot-swap invariant.
+//! Batch boundaries never affect scores (each row only reads its own
+//! tile slice), which the serving property in `rust/tests/properties.rs`
+//! checks by re-batching random arrival orders.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::threading::{BoundedQueue, PopResult};
+
+/// Where a job's result is delivered: filled exactly once by the
+/// scoring worker, awaited by the connection's writer.
+#[derive(Debug)]
+struct Slot {
+    state: Mutex<Option<Result<Vec<f32>, String>>>,
+    done: Condvar,
+}
+
+/// One request's rows, travelling through the queue as a unit.
+#[derive(Debug)]
+pub struct Job {
+    /// Row-major feature values, `n_rows * width` of them.
+    pub rows: Vec<f32>,
+    pub n_rows: usize,
+    /// Parsed width of every row (may exceed what the model needs; the
+    /// worker gathers only the leading required features).
+    pub width: usize,
+    /// Submission time, for per-request latency accounting.
+    pub enqueued: Instant,
+    slot: Arc<Slot>,
+}
+
+/// The caller's half of a [`Job`]: blocks until the worker completes it.
+pub struct JobTicket {
+    slot: Arc<Slot>,
+}
+
+impl Job {
+    /// Pair a job with the ticket its submitter will wait on.
+    pub fn new(rows: Vec<f32>, n_rows: usize, width: usize) -> (Job, JobTicket) {
+        assert!(width > 0 && rows.len() == n_rows * width, "job shape");
+        let slot = Arc::new(Slot { state: Mutex::new(None), done: Condvar::new() });
+        let ticket = JobTicket { slot: slot.clone() };
+        (Job { rows, n_rows, width, enqueued: Instant::now(), slot }, ticket)
+    }
+
+    /// Deliver the result (scores row-major, or an error message) and
+    /// wake the waiting ticket. Consumes the job: exactly one delivery.
+    pub fn complete(self, result: Result<Vec<f32>, String>) {
+        let mut state = self.slot.state.lock().unwrap();
+        debug_assert!(state.is_none(), "job completed twice");
+        *state = Some(result);
+        self.slot.done.notify_all();
+    }
+}
+
+impl JobTicket {
+    /// Block until the job completes and take its result.
+    pub fn wait(self) -> Result<Vec<f32>, String> {
+        let mut state = self.slot.state.lock().unwrap();
+        loop {
+            if let Some(result) = state.take() {
+                return result;
+            }
+            state = self.slot.done.wait(state).unwrap();
+        }
+    }
+}
+
+/// Merges concurrently submitted jobs into block-sized batches.
+pub struct Coalescer {
+    queue: BoundedQueue<Job>,
+}
+
+impl Coalescer {
+    /// Coalescer over a bounded queue of at most `cap` pending jobs
+    /// (submitters block when the queue is full — natural backpressure).
+    pub fn new(cap: usize) -> Coalescer {
+        Coalescer { queue: BoundedQueue::new(cap) }
+    }
+
+    /// Enqueue a job; `Err(job)` once the coalescer is closed.
+    pub fn submit(&self, job: Job) -> Result<(), Job> {
+        self.queue.push(job)
+    }
+
+    /// Stop intake; workers drain the remaining jobs, then
+    /// [`Coalescer::next_batch`] returns `None`.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    /// Jobs currently queued (snapshot).
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Pull the next batch: block for the first job, then keep popping
+    /// until the batch reaches `max_rows` rows or `max_wait` passes
+    /// (measured from the first pop). Already-queued jobs coalesce even
+    /// at `max_wait` zero; the last pop may overshoot `max_rows` —
+    /// jobs are never split. `None` means closed and fully drained.
+    pub fn next_batch(&self, max_rows: usize, max_wait: Duration) -> Option<Vec<Job>> {
+        let first = self.queue.pop()?;
+        let deadline = Instant::now() + max_wait;
+        let mut rows = first.n_rows;
+        let mut batch = vec![first];
+        while rows < max_rows {
+            match self.queue.pop_deadline(deadline) {
+                PopResult::Item(job) => {
+                    rows += job.n_rows;
+                    batch.push(job);
+                }
+                PopResult::TimedOut | PopResult::Closed => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticket_receives_result_across_threads() {
+        let (job, ticket) = Job::new(vec![1.0, 2.0], 1, 2);
+        let worker = std::thread::spawn(move || job.complete(Ok(vec![0.5])));
+        assert_eq!(ticket.wait(), Ok(vec![0.5]));
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn ticket_sees_result_even_if_completed_first() {
+        let (job, ticket) = Job::new(vec![1.0], 1, 1);
+        job.complete(Err("nope".to_string()));
+        assert_eq!(ticket.wait(), Err("nope".to_string()));
+    }
+
+    #[test]
+    #[should_panic(expected = "job shape")]
+    fn job_rejects_bad_shape() {
+        let _ = Job::new(vec![1.0, 2.0, 3.0], 2, 2);
+    }
+
+    #[test]
+    fn queued_jobs_coalesce_without_waiting() {
+        let c = Coalescer::new(16);
+        for i in 0..5 {
+            let (job, _ticket) = Job::new(vec![i as f32], 1, 1);
+            c.submit(job).unwrap();
+        }
+        // five single-row jobs are already queued: a 4-row budget takes
+        // exactly four of them even with a zero wait
+        let batch = c.next_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.iter().map(|j| j.n_rows).sum::<usize>(), 4);
+        let rest = c.next_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].rows, vec![4.0]);
+    }
+
+    #[test]
+    fn oversized_job_is_never_split() {
+        let c = Coalescer::new(16);
+        let (job, _t) = Job::new(vec![0.0; 10 * 3], 10, 3);
+        c.submit(job).unwrap();
+        let batch = c.next_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].n_rows, 10);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let c = Coalescer::new(16);
+        let (job, _t) = Job::new(vec![1.0], 1, 1);
+        c.submit(job).unwrap();
+        c.close();
+        let (late, _t2) = Job::new(vec![2.0], 1, 1);
+        assert!(c.submit(late).is_err());
+        assert_eq!(c.next_batch(8, Duration::ZERO).unwrap().len(), 1);
+        assert!(c.next_batch(8, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn next_batch_blocks_until_first_job() {
+        let c = std::sync::Arc::new(Coalescer::new(4));
+        let c2 = c.clone();
+        let consumer = std::thread::spawn(move || {
+            c2.next_batch(2, Duration::from_millis(1)).map(|b| b.len())
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let (job, _t) = Job::new(vec![3.0], 1, 1);
+        c.submit(job).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(1));
+    }
+}

@@ -1,0 +1,512 @@
+//! The `sketchboost serve` daemon: accept loop, pipelined connection
+//! handlers, micro-batching scoring workers, and the model hot-swap
+//! watcher — std networking and threads only, no external crates.
+//!
+//! ## Thread layout
+//!
+//! * **accept** — one thread on a nonblocking listener; spawns a
+//!   handler per connection and joins them all before it exits, so the
+//!   drain in [`Server::stop`] only has to join this one handle to know
+//!   every connection is gone.
+//! * **per connection** — a *reader* (parses lines, submits jobs,
+//!   answers control verbs) feeding a *writer* over an in-order
+//!   channel. Responses stay FIFO per connection while the client
+//!   pipelines requests — which is exactly what lets concurrent
+//!   single-row clients coalesce server-side.
+//! * **workers** — `n_workers` scoring loops: pull a batch from the
+//!   [`Coalescer`], snapshot the [`SharedForest`] once per batch, score
+//!   through the shared offline block kernel
+//!   ([`FlatForest::predict_block_into`]) with a warm per-worker tile.
+//! * **watcher** (optional) — polls the model path's (mtime, len) and
+//!   atomically swaps in freshly loaded models; a failed load keeps
+//!   the old model serving and retries next tick. Writers are expected
+//!   to replace the file atomically (write-new + rename).
+//!
+//! ## Shutdown ordering (deadlock-free drain)
+//!
+//! `stop` sets the flag, then joins in dependency order: the accept
+//! loop stops; readers notice the flag within one read-timeout tick,
+//! stop submitting, and join their writers (which block on outstanding
+//! [`JobTicket`]s — workers are still running here, so those tickets
+//! all complete); once every connection is joined the coalescer is
+//! closed; workers drain the remaining queue and exit; the watcher
+//! exits on its next poll tick. No request whose submission succeeded
+//! is ever dropped.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant, SystemTime};
+
+use crate::boosting::ensemble::Ensemble;
+use crate::predict::{FlatForest, SharedForest, DEFAULT_BLOCK_ROWS};
+use crate::serve::protocol::{format_error, format_scores, parse_request, Request};
+use crate::serve::queue::{Coalescer, Job, JobTicket};
+use crate::serve::stats::ServeStats;
+use crate::util::json::Json;
+
+/// Knobs for the serving daemon (CLI: `sketchboost serve`).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Address to bind (default loopback).
+    pub bind: String,
+    /// TCP port; `0` asks the OS for an ephemeral port (tests use this).
+    pub port: u16,
+    /// Scoring worker threads (each owns a warm tile buffer).
+    pub n_workers: usize,
+    /// Rows per scoring block — the coalescing target: a batch closes
+    /// as soon as it holds this many rows.
+    pub block_rows: usize,
+    /// How long a batch waits for more requests once it has its first
+    /// one, in microseconds. `0` still coalesces already-queued jobs.
+    pub max_wait_us: u64,
+    /// Bounded intake queue capacity, in jobs (backpressure bound).
+    pub queue_cap: usize,
+    /// Model-file poll interval for hot-swap; `0` disables watching.
+    pub poll_ms: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            bind: "127.0.0.1".to_string(),
+            port: 0,
+            n_workers: 1,
+            block_rows: DEFAULT_BLOCK_ROWS,
+            max_wait_us: 250,
+            queue_cap: 1024,
+            poll_ms: 0,
+        }
+    }
+}
+
+/// Everything the server's threads share.
+struct Shared {
+    forest: SharedForest,
+    coalescer: Coalescer,
+    stats: ServeStats,
+    shutdown: AtomicBool,
+    shutdown_cv: (Mutex<bool>, Condvar),
+    model_path: PathBuf,
+}
+
+impl Shared {
+    fn signal_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let (lock, cvar) = &self.shutdown_cv;
+        *lock.lock().unwrap() = true;
+        cvar.notify_all();
+    }
+}
+
+/// A running daemon; drop-in for tests via an ephemeral port.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    watcher: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Load the model at `model_path` and start serving. Returns once
+    /// the listener is bound and every thread is up.
+    pub fn start(model_path: &Path, opts: &ServeOptions) -> Result<Server, String> {
+        let model = Ensemble::load(model_path)?;
+        let forest = FlatForest::from_ensemble(&model);
+        let listener = TcpListener::bind((opts.bind.as_str(), opts.port))
+            .map_err(|e| format!("bind {}:{}: {e}", opts.bind, opts.port))?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        listener.set_nonblocking(true).map_err(|e| e.to_string())?;
+
+        let shared = Arc::new(Shared {
+            forest: SharedForest::new(forest),
+            coalescer: Coalescer::new(opts.queue_cap.max(1)),
+            stats: ServeStats::new(),
+            shutdown: AtomicBool::new(false),
+            shutdown_cv: (Mutex::new(false), Condvar::new()),
+            model_path: model_path.to_path_buf(),
+        });
+
+        let mut workers = Vec::new();
+        let block_rows = opts.block_rows.max(1);
+        let max_wait = Duration::from_micros(opts.max_wait_us);
+        for _ in 0..opts.n_workers.max(1) {
+            let sh = shared.clone();
+            workers.push(std::thread::spawn(move || worker_loop(&sh, block_rows, max_wait)));
+        }
+
+        let watcher = if opts.poll_ms > 0 {
+            let sh = shared.clone();
+            let poll = Duration::from_millis(opts.poll_ms);
+            Some(std::thread::spawn(move || watcher_loop(&sh, poll)))
+        } else {
+            None
+        };
+
+        let sh = shared.clone();
+        let accept = std::thread::spawn(move || accept_loop(listener, &sh));
+
+        Ok(Server { shared, addr, accept: Some(accept), workers, watcher })
+    }
+
+    /// The bound address (read the real port here when `port = 0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Version of the currently installed model (bumps on hot-swap).
+    pub fn model_version(&self) -> u64 {
+        self.shared.forest.version()
+    }
+
+    /// Block until shutdown is requested (`/shutdown` or [`Server::stop`]).
+    pub fn wait(&self) {
+        let (lock, cvar) = &self.shared.shutdown_cv;
+        let mut down = lock.lock().unwrap();
+        while !*down {
+            down = cvar.wait(down).unwrap();
+        }
+    }
+
+    /// Drain and stop every thread (see the module docs for the order).
+    pub fn stop(mut self) {
+        self.shared.signal_shutdown();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join(); // joins every connection handler too
+        }
+        self.shared.coalescer.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.watcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Accept connections until shutdown; join every handler before exit.
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let sh = shared.clone();
+                handlers.push(std::thread::spawn(move || handle_connection(stream, &sh)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// A response the writer thread will emit, in submission order.
+enum Pending {
+    /// Already-formatted response line.
+    Immediate(String),
+    /// A scored request: wait on the ticket, then format.
+    Scored { ticket: JobTicket, n_rows: usize },
+}
+
+/// Reader half of one connection: parse lines, submit jobs, keep the
+/// writer fed in request order.
+fn handle_connection(mut stream: TcpStream, shared: &Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<Pending>();
+    let writer = std::thread::spawn(move || writer_loop(write_half, rx));
+
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    'read: loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        };
+        buf.extend_from_slice(&chunk[..n]);
+        // process every complete line; keep the partial tail buffered
+        while let Some(eol) = buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = buf.drain(..=eol).collect();
+            let line = String::from_utf8_lossy(&line[..eol]);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if !handle_line(line, shared, &tx) {
+                break 'read;
+            }
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+}
+
+/// Handle one request line; returns `false` when the connection's read
+/// loop should end (shutdown requested).
+fn handle_line(line: &str, shared: &Arc<Shared>, tx: &mpsc::Sender<Pending>) -> bool {
+    match parse_request(line) {
+        Err(e) => {
+            shared.stats.n_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Pending::Immediate(format_error(&e)));
+        }
+        Ok(Request::Rows { rows, n_rows, width }) => {
+            let (job, ticket) = Job::new(rows, n_rows, width);
+            match shared.coalescer.submit(job) {
+                Ok(()) => {
+                    let _ = tx.send(Pending::Scored { ticket, n_rows });
+                }
+                Err(_rejected) => {
+                    shared.stats.n_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Pending::Immediate(format_error("server is shutting down")));
+                }
+            }
+        }
+        Ok(Request::Ping) => {
+            let _ = tx.send(Pending::Immediate("ok".to_string()));
+        }
+        Ok(Request::Stats) => {
+            let j = shared
+                .stats
+                .to_json(shared.forest.version(), shared.coalescer.len());
+            let _ = tx.send(Pending::Immediate(j.to_string()));
+        }
+        Ok(Request::ModelInfo) => {
+            let f = shared.forest.snapshot();
+            let mut j = Json::obj();
+            j.set("model_version", Json::Num(shared.forest.version() as f64))
+                .set("n_outputs", Json::Num(f.n_outputs as f64))
+                .set("n_trees", Json::Num(f.n_trees() as f64))
+                .set("n_features_required", Json::Num(f.n_features_required() as f64))
+                .set("path", Json::Str(shared.model_path.display().to_string()));
+            let _ = tx.send(Pending::Immediate(j.to_string()));
+        }
+        Ok(Request::Shutdown) => {
+            let _ = tx.send(Pending::Immediate("ok shutting down".to_string()));
+            shared.signal_shutdown();
+            return false;
+        }
+    }
+    true
+}
+
+/// Writer half of one connection: emit responses strictly in request
+/// order, flushing per line so single-row clients see low latency.
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<Pending>) {
+    let mut out = std::io::BufWriter::new(stream);
+    for pending in rx {
+        let line = match pending {
+            Pending::Immediate(s) => s,
+            Pending::Scored { ticket, n_rows } => match ticket.wait() {
+                Ok(scores) => {
+                    let d = scores.len() / n_rows.max(1);
+                    format_scores(&scores, d.max(1))
+                }
+                Err(e) => format_error(&e),
+            },
+        };
+        if out.write_all(line.as_bytes()).is_err() || out.write_all(b"\n").is_err() {
+            return;
+        }
+        if out.flush().is_err() {
+            return;
+        }
+    }
+}
+
+/// One scoring worker: batch → snapshot → score, with a warm tile.
+fn worker_loop(shared: &Arc<Shared>, block_rows: usize, max_wait: Duration) {
+    let mut tile: Vec<f32> = Vec::new();
+    while let Some(batch) = shared.coalescer.next_batch(block_rows, max_wait) {
+        // one snapshot per batch: every job in it scores against a
+        // single, internally consistent forest (hot-swap invariant)
+        let forest = shared.forest.snapshot();
+        score_batch(&forest, batch, block_rows, &mut tile, &shared.stats);
+    }
+}
+
+/// Score one coalesced batch of jobs against `forest`, reusing `tile`
+/// as the gather buffer. Public because the serving property test
+/// drives it directly (random batch boundaries, no sockets).
+///
+/// Rows are gathered `required`-features-wide and driven through
+/// [`FlatForest::predict_block_into`] in `block_rows`-sized blocks —
+/// the same kernel and the same per-row arithmetic as offline
+/// [`FlatForest::predict_raw_into`], which is what makes serving
+/// responses bitwise-equal to offline predict by construction.
+pub fn score_batch(
+    forest: &FlatForest,
+    jobs: Vec<Job>,
+    block_rows: usize,
+    tile: &mut Vec<f32>,
+    stats: &ServeStats,
+) {
+    let t0 = Instant::now();
+    let d = forest.n_outputs;
+    let required = forest.n_features_required();
+    let w = required.max(1);
+    let block = block_rows.max(1);
+    tile.resize(block * w, 0.0);
+    let (mut n_jobs, mut n_rows) = (0u64, 0u64);
+    for job in jobs {
+        if job.width < required {
+            stats.n_errors.fetch_add(1, Ordering::Relaxed);
+            job.complete(Err(format!(
+                "request rows have {} features but the model splits on feature index {}",
+                job.width,
+                required - 1
+            )));
+            continue;
+        }
+        let mut scores = vec![0.0f32; job.n_rows * d];
+        let mut start = 0usize;
+        while start < job.n_rows {
+            let end = (start + block).min(job.n_rows);
+            let rows = end - start;
+            for i in 0..rows {
+                let src = (start + i) * job.width;
+                tile[i * w..(i + 1) * w].copy_from_slice(&job.rows[src..src + w]);
+            }
+            forest.predict_block_into(&tile[..rows * w], w, rows, &mut scores[start * d..end * d]);
+            start = end;
+        }
+        n_jobs += 1;
+        n_rows += job.n_rows as u64;
+        stats
+            .request_latency
+            .record(job.enqueued.elapsed().as_micros() as u64);
+        job.complete(Ok(scores));
+    }
+    if n_jobs > 0 {
+        stats.record_batch(n_jobs, n_rows, t0.elapsed().as_micros() as u64);
+    }
+}
+
+/// Poll the model file and hot-swap on change. Only a *successfully
+/// loaded* file updates the seen fingerprint, so a torn or mid-write
+/// file is retried until its writer finishes (atomic rename never
+/// exposes one).
+fn watcher_loop(shared: &Arc<Shared>, poll: Duration) {
+    let mut seen = fingerprint(&shared.model_path);
+    let tick = poll.min(Duration::from_millis(50)).max(Duration::from_millis(1));
+    let mut elapsed = Duration::ZERO;
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        elapsed += tick;
+        if elapsed < poll {
+            continue;
+        }
+        elapsed = Duration::ZERO;
+        let now = fingerprint(&shared.model_path);
+        if now.is_none() || now == seen {
+            continue;
+        }
+        match Ensemble::load(&shared.model_path) {
+            Ok(model) => {
+                shared.forest.swap(FlatForest::from_ensemble(&model));
+                shared.stats.n_reloads.fetch_add(1, Ordering::Relaxed);
+                seen = now;
+            }
+            Err(_) => {
+                // keep serving the old model; retry next tick
+                shared.stats.n_reload_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// (mtime, len) fingerprint of the watched model file.
+fn fingerprint(path: &Path) -> Option<(SystemTime, u64)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.modified().ok()?, meta.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny two-tree forest plus jobs scored through `score_batch`
+    /// must reproduce the per-row walker bits exactly — the socket-free
+    /// core of the serving equality story.
+    #[test]
+    fn score_batch_matches_per_row_walker() {
+        use crate::boosting::ensemble::{Ensemble, TrainHistory};
+        use crate::boosting::losses::LossKind;
+        use crate::tree::tree::{encode_leaf, Tree, TreeNode};
+        let tree = Tree {
+            n_outputs: 2,
+            nodes: vec![TreeNode {
+                feature: 1,
+                bin: 0,
+                threshold: 0.5,
+                default_left: true,
+                cats: None,
+                left: encode_leaf(0),
+                right: encode_leaf(1),
+                gain: 1.0,
+            }],
+            leaf_values: vec![1.0, -1.0, 2.0, -2.0],
+            n_leaves: 2,
+        };
+        let model = Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 2,
+            base_score: vec![0.1, -0.1],
+            trees: vec![tree],
+            history: TrainHistory::default(),
+        };
+        let forest = FlatForest::from_ensemble(&model);
+        let stats = ServeStats::new();
+        let mut tile = Vec::new();
+
+        // width 3 > required 2: extra features must be ignored
+        let rows = vec![0.0, 0.0, 9.0, 0.0, 1.0, 9.0, 0.0, f32::NAN, 9.0];
+        let (job, ticket) = Job::new(rows.clone(), 3, 3);
+        score_batch(&forest, vec![job], 2, &mut tile, &stats);
+        let got = ticket.wait().unwrap();
+        for (i, want_leaf) in [(0usize, 0usize), (1, 1), (2, 0)] {
+            let mut want = vec![0.1f32, -0.1];
+            forest.add_leaf(0, want_leaf, &mut want);
+            assert_eq!(&got[i * 2..i * 2 + 2], &want[..], "row {i}");
+        }
+        assert_eq!(stats.n_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.n_rows.load(Ordering::Relaxed), 3);
+
+        // too-narrow rows get an error, not a panic
+        let (narrow, t2) = Job::new(vec![0.5], 1, 1);
+        score_batch(&forest, vec![narrow], 2, &mut tile, &stats);
+        let err = t2.wait().unwrap_err();
+        assert!(err.contains("feature index 1"), "{err}");
+        assert_eq!(stats.n_errors.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn serve_options_default_is_loopback_ephemeral() {
+        let o = ServeOptions::default();
+        assert_eq!(o.bind, "127.0.0.1");
+        assert_eq!(o.port, 0);
+        assert_eq!(o.block_rows, DEFAULT_BLOCK_ROWS);
+        assert_eq!(o.poll_ms, 0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Serving counters and latency accounting behind the `/stats` verb.
+//!
+//! All counters are relaxed atomics — `/stats` is a monitoring
+//! snapshot, not a synchronization point. Latencies go into a fixed
+//! power-of-two-bucket histogram (bucket `b` covers `[2^(b-1), 2^b)`
+//! microseconds), so the reported p50/p99 are **upper bounds accurate
+//! to 2×**, with zero allocation and no lock on the hot path. The
+//! latency bench (`benches/serve_latency.rs`) computes exact
+//! percentiles client-side; these are for live eyeballing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+const N_BUCKETS: usize = 64;
+
+/// Lock-free log-bucket latency histogram (microsecond samples).
+pub struct LatencyHist {
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Record one sample of `us` microseconds.
+    pub fn record(&self, us: u64) {
+        let b = (u64::BITS - us.leading_zeros()) as usize;
+        self.buckets[b.min(N_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate quantile `q` in microseconds: the upper edge of the
+    /// bucket holding the q-th sample (0 if no samples yet).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (b, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if b == 0 { 0 } else { (1u64 << b) - 1 };
+            }
+        }
+        (1u64 << (N_BUCKETS - 1)) - 1
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist::new()
+    }
+}
+
+/// Counters for one server instance, shared by every worker/connection.
+pub struct ServeStats {
+    started: Instant,
+    pub n_requests: AtomicU64,
+    pub n_rows: AtomicU64,
+    pub n_batches: AtomicU64,
+    pub n_errors: AtomicU64,
+    pub n_reloads: AtomicU64,
+    pub n_reload_errors: AtomicU64,
+    /// Submission → response, per request.
+    pub request_latency: LatencyHist,
+    /// Snapshot → scored, per batch.
+    pub batch_latency: LatencyHist,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            started: Instant::now(),
+            n_requests: AtomicU64::new(0),
+            n_rows: AtomicU64::new(0),
+            n_batches: AtomicU64::new(0),
+            n_errors: AtomicU64::new(0),
+            n_reloads: AtomicU64::new(0),
+            n_reload_errors: AtomicU64::new(0),
+            request_latency: LatencyHist::new(),
+            batch_latency: LatencyHist::new(),
+        }
+    }
+
+    /// One scored batch of `n_jobs` requests totalling `n_rows` rows.
+    pub fn record_batch(&self, n_jobs: u64, n_rows: u64, batch_us: u64) {
+        self.n_batches.fetch_add(1, Ordering::Relaxed);
+        self.n_requests.fetch_add(n_jobs, Ordering::Relaxed);
+        self.n_rows.fetch_add(n_rows, Ordering::Relaxed);
+        self.batch_latency.record(batch_us);
+    }
+
+    /// The `/stats` payload (one line of JSON once `.to_string()`-ed).
+    pub fn to_json(&self, model_version: u64, queued_jobs: usize) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
+        let requests = self.n_requests.load(Ordering::Relaxed);
+        let rows = self.n_rows.load(Ordering::Relaxed);
+        let batches = self.n_batches.load(Ordering::Relaxed);
+        let mut j = Json::obj();
+        j.set("uptime_s", Json::Num(self.started.elapsed().as_secs_f64()))
+            .set("model_version", n(model_version))
+            .set("n_requests", n(requests))
+            .set("n_rows", n(rows))
+            .set("n_batches", n(batches))
+            .set("n_errors", n(self.n_errors.load(Ordering::Relaxed)))
+            .set("n_reloads", n(self.n_reloads.load(Ordering::Relaxed)))
+            .set("n_reload_errors", n(self.n_reload_errors.load(Ordering::Relaxed)))
+            .set("queued_jobs", n(queued_jobs as u64))
+            .set(
+                "rows_per_batch",
+                Json::Num(if batches == 0 { 0.0 } else { rows as f64 / batches as f64 }),
+            )
+            .set("request_p50_us_approx", n(self.request_latency.quantile(0.5)))
+            .set("request_p99_us_approx", n(self.request_latency.quantile(0.99)))
+            .set("batch_p50_us_approx", n(self.batch_latency.quantile(0.5)))
+            .set("batch_p99_us_approx", n(self.batch_latency.quantile(0.99)));
+        j
+    }
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bound_samples_within_2x() {
+        let h = LatencyHist::new();
+        assert_eq!(h.quantile(0.5), 0);
+        for us in [3u64, 3, 3, 3, 3, 3, 3, 3, 3, 200] {
+            h.record(us);
+        }
+        // p50 falls in the [2,3] bucket; p99 in [128,255]
+        assert_eq!(h.quantile(0.5), 3);
+        let p99 = h.quantile(0.99);
+        assert!((200..=255).contains(&p99), "p99={p99}");
+        // quantiles are monotone in q
+        assert!(h.quantile(0.1) <= h.quantile(0.9));
+    }
+
+    #[test]
+    fn histogram_handles_zero_and_huge_samples() {
+        let h = LatencyHist::new();
+        h.record(0);
+        assert_eq!(h.quantile(0.5), 0);
+        h.record(u64::MAX); // clamps into the last bucket, no panic
+        assert!(h.quantile(1.0) > 0);
+    }
+
+    #[test]
+    fn stats_json_has_the_monitoring_keys() {
+        let s = ServeStats::new();
+        s.record_batch(3, 40, 120);
+        s.n_errors.fetch_add(1, Ordering::Relaxed);
+        let j = s.to_json(7, 2);
+        let line = j.to_string();
+        let back = Json::parse(&line).unwrap();
+        assert_eq!(back.get("model_version").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(back.get("n_requests").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(back.get("n_rows").unwrap().as_usize().unwrap(), 40);
+        assert_eq!(back.get("n_errors").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(back.get("queued_jobs").unwrap().as_usize().unwrap(), 2);
+        assert!(back.get("rows_per_batch").unwrap().as_f64().unwrap() > 13.0);
+        assert!(!line.contains('\n'), "stats must be one line");
+    }
+}

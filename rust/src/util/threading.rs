@@ -29,8 +29,11 @@
 //! bit-identical results (`rust/tests/parallel_determinism.rs` enforces
 //! this end-to-end).
 
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// A fixed-width pool of scoped workers (see module docs).
 #[derive(Clone, Debug)]
@@ -195,6 +198,123 @@ impl<'a, T> DisjointSlice<'a, T> {
     }
 }
 
+/// Outcome of a [`BoundedQueue::pop_deadline`] call.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PopResult<T> {
+    /// An item was dequeued before the deadline.
+    Item(T),
+    /// The deadline passed with the queue still empty (and open).
+    TimedOut,
+    /// The queue is closed and fully drained.
+    Closed,
+}
+
+/// A bounded multi-producer/multi-consumer FIFO on `Mutex` + `Condvar`
+/// (offline build: no `crossbeam`). Producers block while the queue is
+/// at capacity; consumers block while it is empty. [`BoundedQueue::close`]
+/// stops new pushes immediately but lets consumers drain what is already
+/// queued — the shutdown half of the serving drain contract
+/// (`serve::server` relies on this ordering).
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue holding at most `cap` items (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue `item`, blocking while the queue is at capacity. Returns
+    /// the item back as `Err` if the queue is (or becomes) closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(item);
+            }
+            if inner.items.len() < self.cap {
+                inner.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Dequeue the oldest item, blocking while the queue is empty.
+    /// Returns `None` only once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Dequeue the oldest item, waiting at most until `deadline`. The
+    /// coalescer uses this to cap how long a batch waits for company.
+    pub fn pop_deadline(&self, deadline: Instant) -> PopResult<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                self.not_full.notify_one();
+                return PopResult::Item(item);
+            }
+            if inner.closed {
+                return PopResult::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopResult::TimedOut;
+            }
+            let (guard, timeout) =
+                self.not_empty.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if timeout.timed_out() && inner.items.is_empty() && !inner.closed {
+                return PopResult::TimedOut;
+            }
+        }
+    }
+
+    /// Close the queue: pending and future `push` calls fail, consumers
+    /// drain the remaining items and then see `None`/`Closed`.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently queued (a snapshot; racy by nature).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,5 +429,110 @@ mod tests {
         let shards = vec![0.0f32; 7];
         let mut out = vec![0.0f32; 3];
         reduce_shards(&pool, &shards, 2, &mut out);
+    }
+
+    #[test]
+    fn queue_is_fifo() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn queue_push_blocks_at_capacity_until_pop() {
+        let q = std::sync::Arc::new(BoundedQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || q2.push(3));
+        // the producer must be parked until a slot frees up
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        producer.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn queue_close_drains_then_ends() {
+        let q = BoundedQueue::new(4);
+        q.push("a").unwrap();
+        q.push("b").unwrap();
+        q.close();
+        assert_eq!(q.push("c"), Err("c"));
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_close_wakes_blocked_consumer() {
+        let q = std::sync::Arc::new(BoundedQueue::<u32>::new(4));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn queue_pop_deadline_times_out_then_delivers() {
+        let q = BoundedQueue::<u32>::new(4);
+        let t0 = Instant::now();
+        let r = q.pop_deadline(t0 + std::time::Duration::from_millis(15));
+        assert_eq!(r, PopResult::TimedOut);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(10));
+        q.push(7).unwrap();
+        assert_eq!(
+            q.pop_deadline(Instant::now() + std::time::Duration::from_millis(100)),
+            PopResult::Item(7)
+        );
+        q.close();
+        assert_eq!(
+            q.pop_deadline(Instant::now() + std::time::Duration::from_millis(5)),
+            PopResult::Closed
+        );
+    }
+
+    #[test]
+    fn queue_mpmc_delivers_every_item_once() {
+        let q = std::sync::Arc::new(BoundedQueue::new(3));
+        let seen = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let (q2, s2) = (q.clone(), seen.clone());
+            consumers.push(std::thread::spawn(move || {
+                while let Some(v) = q2.pop() {
+                    s2.lock().unwrap().push(v);
+                }
+            }));
+        }
+        let mut producers = Vec::new();
+        for p in 0..2u32 {
+            let q2 = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..50u32 {
+                    q2.push(p * 100 + i).unwrap();
+                }
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        let mut got = seen.lock().unwrap().clone();
+        got.sort_unstable();
+        let mut want: Vec<u32> = (0..50).chain(100..150).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
     }
 }

@@ -368,6 +368,89 @@ fn prop_binned_and_raw_routing_agree_with_missing_and_categorical() {
 }
 
 #[test]
+fn prop_coalesced_serving_is_bit_identical_to_per_row_walks() {
+    // The serving-path extension of the binned==raw property: random
+    // request sizes, arrival orders, and batch boundaries through the
+    // serve::Coalescer + score_batch pipeline produce results that are
+    // bit-identical to naive per-row walks — batching is invisible.
+    use sketchboost::serve::{score_batch, Coalescer, Job, ServeStats};
+    use std::time::Duration;
+    run_prop("coalesced serving == per-row walks", 10, |g| {
+        let n = g.usize_in(40, 120);
+        let m = g.usize_in(3, 8);
+        let d = g.usize_in(1, 4);
+        let nan_rate = *g.choose(&[0.0f32, 0.2]);
+        let mut cols = Vec::with_capacity(n * m);
+        for _ in 0..m {
+            cols.extend(g.vec_gaussian_nan(n, 1.5, nan_rate));
+        }
+        let ds = Dataset::new(
+            n,
+            m,
+            cols,
+            Targets::Regression { values: g.vec_gaussian(n * d, 1.0), n_targets: d },
+        );
+        let mut cfg = GBDTConfig::multitask(d);
+        cfg.n_rounds = 3;
+        cfg.max_depth = 3;
+        cfg.max_bins = 16;
+        cfg.seed = g.seed;
+        let model = GBDT::fit(&cfg, &ds, None);
+        let naive = model.predict_raw_naive(&ds);
+        let flat = FlatForest::from_ensemble(&model);
+
+        // random requests (rows sampled with replacement; some rows in
+        // no request, some in several), some padded with junk features
+        // past the model's required width
+        let n_requests = g.usize_in(1, 25);
+        let mut requests: Vec<(Vec<usize>, usize)> = Vec::new();
+        for _ in 0..n_requests {
+            let rows: Vec<usize> = (0..g.usize_in(1, 5)).map(|_| g.usize_in(0, n - 1)).collect();
+            let width = m + g.usize_in(0, 2);
+            requests.push((rows, width));
+        }
+        g.rng.shuffle(&mut requests); // random arrival order
+
+        let coalescer = Coalescer::new(n_requests);
+        let mut tickets = Vec::new();
+        for (rows, width) in &requests {
+            let mut vals = Vec::with_capacity(rows.len() * width);
+            for &i in rows {
+                vals.extend(ds.row(i));
+                vals.extend(g.vec_gaussian(width - m, 1.0)); // ignored padding
+            }
+            let (job, ticket) = Job::new(vals, rows.len(), *width);
+            coalescer.submit(job).unwrap();
+            tickets.push((ticket, rows.clone()));
+        }
+        coalescer.close();
+
+        // drain with random batch budgets and block sizes
+        let stats = ServeStats::new();
+        let mut tile = Vec::new();
+        while let Some(batch) = coalescer.next_batch(g.usize_in(1, 64), Duration::ZERO) {
+            let block = *g.choose(&[1usize, 3, 17, 512]);
+            score_batch(&flat, batch, block, &mut tile, &stats);
+        }
+
+        for (ticket, rows) in tickets {
+            let got = ticket.wait().unwrap();
+            assert_eq!(got.len(), rows.len() * d);
+            for (j, &i) in rows.iter().enumerate() {
+                for c in 0..d {
+                    let want = naive[i * d + c];
+                    let have = got[j * d + c];
+                    assert!(
+                        want.to_bits() == have.to_bits(),
+                        "row {i} output {c}: {want:?} vs {have:?}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_leaf_values_shrink_with_lambda() {
     // larger lambda => smaller |leaf value| (eq. 3 regularization)
     run_prop("lambda shrinkage", 10, |g| {

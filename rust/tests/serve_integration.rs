@@ -1,0 +1,295 @@
+//! The serving daemon must extend the repo's determinism story to the
+//! network edge: every response — under any interleaving of concurrent
+//! single-row and multi-row requests, for every worker count and block
+//! size, and across a mid-load model hot-swap — is **bitwise-equal** to
+//! offline `FlatForest` predict on the same rows. The tests here run
+//! the real daemon (`serve::Server`) on loopback ephemeral ports.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use sketchboost::data::synthetic::{make_multilabel, FeatureSpec};
+use sketchboost::prelude::*;
+use sketchboost::serve::{ServeOptions, Server};
+
+/// Train a small multilabel model and save it where the server loads it.
+fn train_and_save(dir: &str, seed: u64) -> (Dataset, Ensemble, PathBuf) {
+    let ds = make_multilabel(200, FeatureSpec::guyon(12), 6, 3, seed);
+    let mut cfg = GBDTConfig::multilabel(6);
+    cfg.n_rounds = 5;
+    cfg.max_depth = 4;
+    cfg.max_bins = 16;
+    cfg.seed = seed;
+    let model = GBDT::fit(&cfg, &ds, None);
+    let d = std::env::temp_dir().join(dir);
+    std::fs::create_dir_all(&d).unwrap();
+    let path = d.join(format!("model_{seed}.json"));
+    model.save(&path).unwrap();
+    (ds, model, path)
+}
+
+/// One request line for row `i` (Display round-trips every f32 bit).
+fn row_line(ds: &Dataset, i: usize) -> String {
+    ds.row(i)
+        .iter()
+        .map(|v| format!("{v}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// One multi-row request line for `rows`.
+fn multi_line(ds: &Dataset, rows: &[usize]) -> String {
+    rows.iter().map(|&i| row_line(ds, i)).collect::<Vec<_>>().join(";")
+}
+
+/// Parse a response line back into row-major scores.
+fn parse_scores(line: &str) -> Vec<f32> {
+    assert!(!line.starts_with('!'), "error response: {line}");
+    line.split(';')
+        .flat_map(|row| row.split(','))
+        .map(|c| c.parse::<f32>().unwrap())
+        .collect()
+}
+
+/// Blocking request/response client on one connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        stream.set_nodelay(true).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn request(&mut self, line: &str) -> String {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        assert!(resp.ends_with('\n'), "truncated response: {resp:?}");
+        resp.trim_end().to_string()
+    }
+}
+
+fn assert_bits_eq(want: &[f32], got: &[f32], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "{ctx}: cell {i} differs ({a:?} vs {b:?})");
+    }
+}
+
+/// Expected bits for a multi-row request: the offline per-row reference
+/// concatenated in request order.
+fn expected(naive: &[f32], d: usize, rows: &[usize]) -> Vec<f32> {
+    rows.iter().flat_map(|&i| naive[i * d..(i + 1) * d].to_vec()).collect()
+}
+
+/// The tentpole matrix: every worker count × block size, six concurrent
+/// clients interleaving single-row and multi-row requests — every
+/// response bitwise-equal to offline predict.
+#[test]
+fn concurrent_interleavings_match_offline_predict_bitwise() {
+    let (ds, model, path) = train_and_save("sb_serve_matrix", 21);
+    let naive = model.predict_raw_naive(&ds);
+    let d = model.n_outputs;
+    for workers in [1usize, 2, 4] {
+        for block in [1usize, 64, 512] {
+            let opts = ServeOptions {
+                n_workers: workers,
+                block_rows: block,
+                max_wait_us: 500,
+                ..ServeOptions::default()
+            };
+            let server = Server::start(&path, &opts).unwrap();
+            let addr = server.addr();
+            std::thread::scope(|s| {
+                for t in 0..6usize {
+                    let (ds, naive) = (&ds, &naive);
+                    s.spawn(move || {
+                        let mut client = Client::connect(addr);
+                        for k in 0..20usize {
+                            let rows: Vec<usize> = if (k + t) % 3 == 0 {
+                                // multi-row request of varying length
+                                (0..(k % 4) + 2).map(|j| (t * 31 + k * 7 + j * 13) % ds.n_rows).collect()
+                            } else {
+                                vec![(t * 31 + k * 7) % ds.n_rows]
+                            };
+                            let resp = client.request(&multi_line(ds, &rows));
+                            let got = parse_scores(&resp);
+                            assert_bits_eq(
+                                &expected(naive, d, &rows),
+                                &got,
+                                &format!("workers={workers} block={block} client={t} req={k} rows={rows:?}"),
+                            );
+                        }
+                    });
+                }
+            });
+            server.stop();
+        }
+    }
+}
+
+/// Hot-swap under load: while clients hammer the server, the watched
+/// model file is atomically replaced. Every in-flight response must
+/// match the old or the new model *exactly* (no torn forest), and
+/// post-drain traffic must match only the new one.
+#[test]
+fn hot_swap_mid_load_never_tears_a_response() {
+    let (ds, model_a, path) = train_and_save("sb_serve_swap", 31);
+    // same shape, different seed -> different trees, same save path dir
+    let (_, model_b, path_b) = train_and_save("sb_serve_swap", 32);
+    let naive_a = model_a.predict_raw_naive(&ds);
+    let naive_b = model_b.predict_raw_naive(&ds);
+    let d = model_a.n_outputs;
+    assert!(
+        naive_a.iter().zip(&naive_b).any(|(a, b)| a.to_bits() != b.to_bits()),
+        "models must differ for the swap to be observable"
+    );
+
+    let opts = ServeOptions {
+        n_workers: 2,
+        block_rows: 8,
+        max_wait_us: 300,
+        poll_ms: 10,
+        ..ServeOptions::default()
+    };
+    let server = Server::start(&path, &opts).unwrap();
+    let addr = server.addr();
+    assert_eq!(server.model_version(), 1);
+
+    std::thread::scope(|s| {
+        let mut loaders = Vec::new();
+        for t in 0..4usize {
+            let (ds, naive_a, naive_b) = (&ds, &naive_a, &naive_b);
+            loaders.push(s.spawn(move || {
+                let mut client = Client::connect(addr);
+                for k in 0..60usize {
+                    let rows: Vec<usize> = if k % 4 == 0 {
+                        (0..3).map(|j| (t * 17 + k * 5 + j * 11) % ds.n_rows).collect()
+                    } else {
+                        vec![(t * 17 + k * 5) % ds.n_rows]
+                    };
+                    let got = parse_scores(&client.request(&multi_line(ds, &rows)));
+                    let want_a = expected(naive_a, d, &rows);
+                    let want_b = expected(naive_b, d, &rows);
+                    let matches =
+                        |w: &[f32]| w.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits());
+                    // the whole response matches exactly one model: a
+                    // torn forest would blend the two
+                    assert!(
+                        matches(&want_a) || matches(&want_b),
+                        "client {t} req {k}: response matches neither model entirely"
+                    );
+                }
+            }));
+        }
+        // let traffic flow, then atomically replace the watched file
+        std::thread::sleep(Duration::from_millis(50));
+        std::fs::rename(&path_b, &path).unwrap();
+        // the watcher (10ms poll) must pick it up while load continues
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while server.model_version() < 2 {
+            assert!(std::time::Instant::now() < deadline, "hot swap never happened");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        for l in loaders {
+            l.join().unwrap();
+        }
+    });
+
+    // post-drain: every batch now snapshots the new forest, so fresh
+    // traffic matches model B only
+    let mut client = Client::connect(addr);
+    for i in (0..ds.n_rows).step_by(17) {
+        let got = parse_scores(&client.request(&row_line(&ds, i)));
+        assert_bits_eq(&naive_b[i * d..(i + 1) * d], &got, &format!("post-swap row {i}"));
+    }
+    server.stop();
+}
+
+/// Control verbs, error responses, and the clean shutdown path.
+#[test]
+fn protocol_stats_and_clean_shutdown() {
+    let (ds, model, path) = train_and_save("sb_serve_proto", 41);
+    let naive = model.predict_raw_naive(&ds);
+    let d = model.n_outputs;
+    let opts = ServeOptions { n_workers: 1, max_wait_us: 100, ..ServeOptions::default() };
+    let server = Server::start(&path, &opts).unwrap();
+    let addr = server.addr();
+    let mut client = Client::connect(addr);
+
+    assert_eq!(client.request("/ping"), "ok");
+
+    let info = sketchboost::util::json::Json::parse(&client.request("/model")).unwrap();
+    assert_eq!(info.get("n_outputs").unwrap().as_usize().unwrap(), d);
+    assert_eq!(info.get("model_version").unwrap().as_usize().unwrap(), 1);
+    assert!(info.get("n_trees").unwrap().as_usize().unwrap() > 0);
+
+    // a real request, then garbage, then a too-narrow row: the
+    // connection keeps answering in order
+    let got = parse_scores(&client.request(&row_line(&ds, 3)));
+    assert_bits_eq(&naive[3 * d..4 * d], &got, "single row");
+    assert!(client.request("1,2,oops").starts_with('!'), "garbage must error");
+    // sanity: the trained model really needs more than one feature, so
+    // the width-1 row below must come back as an error response
+    assert!(FlatForest::from_ensemble(&model).n_features_required() > 1);
+    assert!(client.request("0.5").starts_with('!'), "narrow row must error");
+    let got = parse_scores(&client.request(&row_line(&ds, 4)));
+    assert_bits_eq(&naive[4 * d..5 * d], &got, "after errors");
+
+    let stats = sketchboost::util::json::Json::parse(&client.request("/stats")).unwrap();
+    assert!(stats.get("n_requests").unwrap().as_usize().unwrap() >= 2);
+    assert_eq!(stats.get("n_errors").unwrap().as_usize().unwrap(), 2);
+    assert!(stats.get("n_batches").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(stats.get("model_version").unwrap().as_usize().unwrap(), 1);
+
+    assert_eq!(client.request("/shutdown"), "ok shutting down");
+    server.wait(); // returns because /shutdown signalled
+    server.stop();
+    // the listener is gone: new connections are refused
+    assert!(TcpStream::connect(addr).is_err(), "server should be down");
+}
+
+/// Empty lines are skipped, and a pipelined burst (many requests
+/// written before any response is read) comes back in order.
+#[test]
+fn pipelined_burst_responds_in_order() {
+    let (ds, model, path) = train_and_save("sb_serve_pipeline", 51);
+    let naive = model.predict_raw_naive(&ds);
+    let d = model.n_outputs;
+    let opts = ServeOptions {
+        n_workers: 2,
+        block_rows: 16,
+        max_wait_us: 2000,
+        ..ServeOptions::default()
+    };
+    let server = Server::start(&path, &opts).unwrap();
+    let mut client = Client::connect(server.addr());
+
+    // write a burst: rows 0..40 pipelined with blank lines sprinkled in
+    let mut burst = String::new();
+    for i in 0..40usize {
+        burst.push_str(&row_line(&ds, i));
+        burst.push('\n');
+        if i % 7 == 0 {
+            burst.push('\n'); // blank line: skipped, no response
+        }
+    }
+    client.writer.write_all(burst.as_bytes()).unwrap();
+    client.writer.flush().unwrap();
+    for i in 0..40usize {
+        let mut resp = String::new();
+        client.reader.read_line(&mut resp).unwrap();
+        let got = parse_scores(resp.trim_end());
+        assert_bits_eq(&naive[i * d..(i + 1) * d], &got, &format!("burst row {i}"));
+    }
+    server.stop();
+}
