@@ -257,6 +257,13 @@ impl Callback for TimeBudget {
 /// Checkpoints are complete models: [`Ensemble::load`] + predict works
 /// on each one. A failed write logs to stderr and training continues —
 /// a full disk should cost the checkpoint, not the run.
+///
+/// Writes are **crash-safe**: the model goes to `<path>.tmp` first and
+/// is renamed into place only after the write succeeds (rename within
+/// one directory is atomic on POSIX). A crash mid-write can cost the
+/// newest checkpoint, never corrupt an existing one — which also makes
+/// `Checkpoint` a safe feed for the serve hot-swap watcher: the watched
+/// path never holds a torn model.
 pub struct Checkpoint {
     path: String,
     every: usize,
@@ -267,6 +274,20 @@ impl Checkpoint {
         assert!(every >= 1, "checkpoint needs every >= 1");
         Checkpoint { path: path.into(), every }
     }
+
+    /// Write `ensemble` to `path` via tmp-file + atomic rename.
+    fn save_atomic(ensemble: &Ensemble, path: &str) -> std::io::Result<()> {
+        let tmp = format!("{path}.tmp");
+        ensemble.save(std::path::Path::new(&tmp))?;
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                // don't leave the orphan tmp file behind
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
 }
 
 impl Callback for Checkpoint {
@@ -274,7 +295,7 @@ impl Callback for Checkpoint {
         let done = ctx.round + 1;
         if done % self.every == 0 {
             let path = self.path.replace("{round}", &done.to_string());
-            if let Err(e) = ctx.ensemble.save(std::path::Path::new(&path)) {
+            if let Err(e) = Checkpoint::save_atomic(ctx.ensemble, &path) {
                 eprintln!("[checkpoint] round {}: failed to write {path}: {e}", ctx.round);
             }
         }
@@ -394,6 +415,30 @@ mod tests {
         assert!(tb.on_round(&ctx(0, 1.0, None, &e)).is_break());
         let mut tb = TimeBudget::seconds(1e9);
         assert!(tb.on_round(&ctx(0, 1.0, None, &e)).is_continue());
+    }
+
+    /// Checkpointing must go through tmp + rename: after a save the
+    /// target is a loadable model and no `.tmp` litter remains.
+    #[test]
+    fn checkpoint_saves_atomically_and_cleans_up_tmp() {
+        let dir = std::env::temp_dir()
+            .join(format!("sb_checkpoint_cb_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("model_{round}.json");
+        let e = empty_ensemble();
+        let mut cp = Checkpoint::every(target.to_str().unwrap(), 2);
+
+        assert!(cp.on_round(&ctx(0, 1.0, None, &e)).is_continue());
+        assert!(!dir.join("model_1.json").exists(), "round 1 is off-cadence");
+
+        assert!(cp.on_round(&ctx(1, 1.0, None, &e)).is_continue());
+        let written = dir.join("model_2.json");
+        assert!(written.exists());
+        assert!(!dir.join("model_2.json.tmp").exists(), "tmp must be renamed away");
+        let back = Ensemble::load(&written).unwrap();
+        assert_eq!(back.n_outputs, 1);
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

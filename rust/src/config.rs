@@ -15,7 +15,7 @@ use crate::boosting::losses::LossKind;
 use crate::boosting::sampling::RowSampling;
 use crate::boosting::trainer::GBDTConfig;
 use crate::engine::MissingPolicy;
-use crate::serve::ServeOptions;
+use crate::serve::{ServeOptions, ShedPolicy};
 use crate::sketch::SketchConfig;
 use crate::util::json::Json;
 
@@ -163,6 +163,11 @@ pub fn serve_options_to_json(opts: &ServeOptions) -> Json {
     o.set("max_wait_us", Json::Num(opts.max_wait_us as f64));
     o.set("queue", Json::Num(opts.queue_cap as f64));
     o.set("poll_ms", Json::Num(opts.poll_ms as f64));
+    o.set("deadline_ms", Json::Num(opts.deadline_ms as f64));
+    o.set("shed", Json::Str(opts.shed.as_str().to_string()));
+    o.set("max_rows", Json::Num(opts.max_rows as f64));
+    o.set("max_line_bytes", Json::Num(opts.max_line_bytes as f64));
+    o.set("idle_timeout_ms", Json::Num(opts.idle_timeout_ms as f64));
     o
 }
 
@@ -188,6 +193,13 @@ pub fn serve_options_from_json(j: &Json) -> Result<ServeOptions, String> {
     opts.max_wait_us = num("max_wait_us", opts.max_wait_us as usize)? as u64;
     opts.queue_cap = num("queue", opts.queue_cap)?;
     opts.poll_ms = num("poll_ms", opts.poll_ms as usize)? as u64;
+    opts.deadline_ms = num("deadline_ms", opts.deadline_ms as usize)? as u64;
+    if let Some(s) = j.get("shed") {
+        opts.shed = ShedPolicy::parse(s.as_str().ok_or("bad shed")?)?;
+    }
+    opts.max_rows = num("max_rows", opts.max_rows)?;
+    opts.max_line_bytes = num("max_line_bytes", opts.max_line_bytes)?;
+    opts.idle_timeout_ms = num("idle_timeout_ms", opts.idle_timeout_ms as usize)? as u64;
     Ok(opts)
 }
 
@@ -276,6 +288,11 @@ mod tests {
             max_wait_us: 500,
             queue_cap: 64,
             poll_ms: 250,
+            deadline_ms: 1500,
+            shed: ShedPolicy::Drop,
+            max_rows: 256,
+            max_line_bytes: 65536,
+            idle_timeout_ms: 30_000,
         };
         let back = serve_options_from_json(&serve_options_to_json(&opts)).unwrap();
         assert_eq!(back.bind, "0.0.0.0");
@@ -285,6 +302,11 @@ mod tests {
         assert_eq!(back.max_wait_us, 500);
         assert_eq!(back.queue_cap, 64);
         assert_eq!(back.poll_ms, 250);
+        assert_eq!(back.deadline_ms, 1500);
+        assert_eq!(back.shed, ShedPolicy::Drop);
+        assert_eq!(back.max_rows, 256);
+        assert_eq!(back.max_line_bytes, 65536);
+        assert_eq!(back.idle_timeout_ms, 30_000);
 
         // a partial file keeps defaults for everything it omits
         let partial = Json::parse(r#"{"port": 9000}"#).unwrap();
@@ -292,9 +314,15 @@ mod tests {
         assert_eq!(back.port, 9000);
         assert_eq!(back.bind, ServeOptions::default().bind);
         assert_eq!(back.block_rows, ServeOptions::default().block_rows);
+        assert_eq!(back.shed, ShedPolicy::Block);
+        assert_eq!(back.deadline_ms, 0);
 
         // out-of-range port is rejected, not truncated
         let bad = Json::parse(r#"{"port": 70000}"#).unwrap();
+        assert!(serve_options_from_json(&bad).is_err());
+
+        // an unknown shed policy is rejected, not defaulted
+        let bad = Json::parse(r#"{"shed": "sometimes"}"#).unwrap();
         assert!(serve_options_from_json(&bad).is_err());
     }
 

@@ -35,7 +35,11 @@
 //! module puts that predictor behind a dependency-free TCP daemon
 //! (`sketchboost serve`) that coalesces concurrent requests into the
 //! same cache-sized blocks and hot-swaps models without ever tearing a
-//! response (DESIGN.md "Serving model").
+//! response (DESIGN.md "Serving model"); under load or failure it
+//! degrades structurally — deadlines, load shedding, panic isolation —
+//! with every degradation counted in `/stats` and chaos-tested through
+//! the deterministic fault points in [`util::fault`] (DESIGN.md
+//! "Failure model").
 //!
 //! The training API is open (DESIGN.md "Training session & extension
 //! points"): losses, metrics, and per-round behavior plug in through
@@ -89,7 +93,7 @@ pub mod prelude {
     pub use crate::data::{BinnedDataset, Dataset, FeatureKind, Targets};
     pub use crate::engine::MissingPolicy;
     pub use crate::predict::{FlatForest, PredictOptions, SharedForest};
-    pub use crate::serve::{ServeOptions, Server};
+    pub use crate::serve::{ServeOptions, Server, ShedPolicy};
     pub use crate::sketch::SketchConfig;
     pub use crate::tree::CatSet;
 }

@@ -373,6 +373,11 @@ fn cmd_serve(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                     ("--queue N", "pending-job queue capacity (default 1024)"),
                     ("--watch", "hot-swap the model when --model's file changes"),
                     ("--poll-ms N", "watch poll interval (default 200, implies --watch)"),
+                    ("--deadline-ms N", "shed requests queued longer than N ms (default 0 = off)"),
+                    ("--shed POLICY", "full-queue policy: block | drop (default block)"),
+                    ("--max-rows N", "max rows per request, larger get !too_large (default 4096)"),
+                    ("--max-line-bytes N", "max request line bytes (default 1048576)"),
+                    ("--idle-timeout-ms N", "close idle connections after N ms (default 0 = off)"),
                 ],
             )
         );
@@ -397,14 +402,32 @@ fn cmd_serve(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     if args.flag("watch") || args.get("poll-ms").is_some() {
         opts.poll_ms = args.get_u64("poll-ms", if opts.poll_ms > 0 { opts.poll_ms } else { 200 });
     }
+    opts.deadline_ms = args.get_u64("deadline-ms", opts.deadline_ms);
+    if let Some(policy) = args.get("shed") {
+        opts.shed = sketchboost::serve::ShedPolicy::parse(policy)?;
+    }
+    opts.max_rows = args.get_usize("max-rows", opts.max_rows);
+    opts.max_line_bytes = args.get_usize("max-line-bytes", opts.max_line_bytes);
+    opts.idle_timeout_ms = args.get_u64("idle-timeout-ms", opts.idle_timeout_ms);
 
     let server = sketchboost::serve::Server::start(std::path::Path::new(model_path), &opts)?;
     println!(
-        "serving {model_path} on {} (workers={} block={} max_wait_us={}{})",
+        "serving {model_path} on {} (workers={} block={} max_wait_us={} shed={}{}{}{})",
         server.addr(),
         opts.n_workers.max(1),
         opts.block_rows.max(1),
         opts.max_wait_us,
+        opts.shed.as_str(),
+        if opts.deadline_ms > 0 {
+            format!(" deadline={}ms", opts.deadline_ms)
+        } else {
+            String::new()
+        },
+        if opts.idle_timeout_ms > 0 {
+            format!(" idle_timeout={}ms", opts.idle_timeout_ms)
+        } else {
+            String::new()
+        },
         if opts.poll_ms > 0 {
             format!(" watch={}ms", opts.poll_ms)
         } else {

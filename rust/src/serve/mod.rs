@@ -35,6 +35,18 @@
 //! 3. **Graceful drain**: shutdown stops intake first, then drains
 //!    every queued job before workers exit — no request is dropped
 //!    after its submission succeeded.
+//!
+//! ## Failure model (pinned by `rust/tests/serve_chaos.rs` under the
+//! `fault-injection` feature)
+//!
+//! Overload, slow clients, oversized requests, worker panics, and
+//! failed hot-swaps all degrade into *structured*, *bounded*, *counted*
+//! behavior — deadlines shed with `!timeout`, full queues with
+//! `!overloaded` (policy [`ShedPolicy`]), size caps with `!too_large`,
+//! isolated worker panics with `!internal` — and two meta-invariants
+//! hold under **any** injected fault plan: every non-error response is
+//! still bitwise-equal to offline predict, and the drain still
+//! terminates. See `DESIGN.md` §4e for the full failure model.
 
 pub mod protocol;
 pub mod queue;
@@ -42,5 +54,5 @@ pub mod server;
 pub mod stats;
 
 pub use queue::{Coalescer, Job, JobTicket};
-pub use server::{score_batch, ServeOptions, Server};
+pub use server::{score_batch, ServeOptions, Server, ShedPolicy};
 pub use stats::ServeStats;

@@ -30,8 +30,43 @@ pub enum Request {
     Shutdown,
 }
 
+// Machine-readable error codes. Degraded-mode responses lead with one
+// of these (`!<code>: <detail>` on the wire), so clients can branch on
+// the code without parsing prose — and chaos tests can count each
+// degradation path exactly.
+
+/// The request expired before a worker scored it (`--deadline-ms`), or
+/// an idle connection was reaped (`--idle-timeout-ms`).
+pub const ERR_TIMEOUT: &str = "timeout";
+/// The intake queue was full and the shed policy is `drop`.
+pub const ERR_OVERLOADED: &str = "overloaded";
+/// The request exceeded `--max-rows` or `--max-line-bytes`.
+pub const ERR_TOO_LARGE: &str = "too_large";
+/// A worker failed while scoring this request (panic isolation).
+pub const ERR_INTERNAL: &str = "internal";
+
+/// Compose a structured error message: `<code>: <detail>` (or just the
+/// code). [`format_error`] prefixes the `!` when it goes on the wire.
+pub fn error_msg(code: &str, detail: &str) -> String {
+    if detail.is_empty() {
+        code.to_string()
+    } else {
+        format!("{code}: {detail}")
+    }
+}
+
 /// Parse one non-empty request line (the server skips blank lines).
+/// Unlimited row count — the daemon calls
+/// [`parse_request_limited`] with its configured cap.
 pub fn parse_request(line: &str) -> Result<Request, String> {
+    parse_request_limited(line, usize::MAX)
+}
+
+/// [`parse_request`] with a row cap: a data line with more than
+/// `max_rows` rows is rejected *before* any cell is parsed (a
+/// structured [`ERR_TOO_LARGE`] error, never an allocation
+/// proportional to the oversized request).
+pub fn parse_request_limited(line: &str, max_rows: usize) -> Result<Request, String> {
     let line = line.trim();
     if line.is_empty() {
         return Err("empty request".to_string());
@@ -44,6 +79,13 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!("unknown control verb /{other}")),
         };
+    }
+    let claimed_rows = line.as_bytes().iter().filter(|&&b| b == b';').count() + 1;
+    if claimed_rows > max_rows {
+        return Err(error_msg(
+            ERR_TOO_LARGE,
+            &format!("request has {claimed_rows} rows, limit is {max_rows}"),
+        ));
     }
     let mut rows = Vec::new();
     let mut width = 0usize;
@@ -188,5 +230,27 @@ mod tests {
     fn multi_row_scores_format() {
         assert_eq!(format_scores(&[1.0, -2.5, 3.0, 4.0], 2), "1,-2.5;3,4");
         assert_eq!(format_error("bad\nthing"), "!bad thing");
+    }
+
+    #[test]
+    fn error_codes_compose_structured_lines() {
+        assert_eq!(error_msg(ERR_OVERLOADED, ""), "overloaded");
+        assert_eq!(
+            format_error(&error_msg(ERR_TIMEOUT, "queued past deadline")),
+            "!timeout: queued past deadline"
+        );
+    }
+
+    #[test]
+    fn row_cap_rejects_oversized_requests_before_parsing_cells() {
+        // under the cap: parses normally
+        assert!(parse_request_limited("1,2;3,4", 2).is_ok());
+        // over the cap: structured too_large, even though every cell is garbage
+        // (the cap check must run before cell parsing)
+        let err = parse_request_limited("x;y;z", 2).unwrap_err();
+        assert!(err.starts_with(ERR_TOO_LARGE), "{err}");
+        assert!(err.contains("3 rows"), "{err}");
+        // control verbs are exempt
+        assert_eq!(parse_request_limited("/ping", 1), Ok(Request::Ping));
     }
 }

@@ -21,7 +21,8 @@
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::util::threading::{BoundedQueue, PopResult};
+use crate::serve::protocol::{error_msg, ERR_INTERNAL};
+use crate::util::threading::{BoundedQueue, PopResult, TryPush};
 
 /// Where a job's result is delivered: filled exactly once by the
 /// scoring worker, awaited by the connection's writer.
@@ -42,6 +43,10 @@ pub struct Job {
     pub width: usize,
     /// Submission time, for per-request latency accounting.
     pub enqueued: Instant,
+    /// Absolute expiry: a worker that pops this job after the deadline
+    /// sheds it with a structured `timeout` error instead of scoring
+    /// (`None` = never expires; set from `ServeOptions::deadline_ms`).
+    pub deadline: Option<Instant>,
     slot: Arc<Slot>,
 }
 
@@ -56,7 +61,7 @@ impl Job {
         assert!(width > 0 && rows.len() == n_rows * width, "job shape");
         let slot = Arc::new(Slot { state: Mutex::new(None), done: Condvar::new() });
         let ticket = JobTicket { slot: slot.clone() };
-        (Job { rows, n_rows, width, enqueued: Instant::now(), slot }, ticket)
+        (Job { rows, n_rows, width, enqueued: Instant::now(), deadline: None, slot }, ticket)
     }
 
     /// Deliver the result (scores row-major, or an error message) and
@@ -66,6 +71,23 @@ impl Job {
         debug_assert!(state.is_none(), "job completed twice");
         *state = Some(result);
         self.slot.done.notify_all();
+        // `self` drops here with the slot filled, so `Drop` is a no-op
+    }
+}
+
+/// Panic-isolation backstop: a job dropped *without* being completed —
+/// e.g. mid-batch during a scoring worker's unwind — still resolves
+/// its ticket, with a structured `internal` error. The waiting writer
+/// gets `!internal` instead of hanging forever on an orphaned slot,
+/// which is what keeps the connection usable and the drain terminating
+/// no matter where a worker dies.
+impl Drop for Job {
+    fn drop(&mut self) {
+        let mut state = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        if state.is_none() {
+            *state = Some(Err(error_msg(ERR_INTERNAL, "request dropped by a worker failure")));
+            self.slot.done.notify_all();
+        }
     }
 }
 
@@ -94,9 +116,20 @@ impl Coalescer {
         Coalescer { queue: BoundedQueue::new(cap) }
     }
 
-    /// Enqueue a job; `Err(job)` once the coalescer is closed.
-    pub fn submit(&self, job: Job) -> Result<(), Job> {
+    /// Enqueue a job, blocking while the queue is full (bounded
+    /// backpressure). `Ok` carries the queue depth right after the
+    /// push (for high-water accounting); `Err(job)` once the coalescer
+    /// is closed.
+    pub fn submit(&self, job: Job) -> Result<usize, Job> {
         self.queue.push(job)
+    }
+
+    /// Enqueue a job only if there is room right now — the
+    /// load-shedding submit: `Full(job)` hands the job back so the
+    /// caller can answer `!overloaded` instead of parking the reader
+    /// behind a saturated queue.
+    pub fn try_submit(&self, job: Job) -> TryPush<Job> {
+        self.queue.try_push(job)
     }
 
     /// Stop intake; workers drain the remaining jobs, then
@@ -160,6 +193,41 @@ mod tests {
     #[should_panic(expected = "job shape")]
     fn job_rejects_bad_shape() {
         let _ = Job::new(vec![1.0, 2.0, 3.0], 2, 2);
+    }
+
+    /// The panic-isolation backstop: a job dropped without completion
+    /// (as happens to batch-mates during a worker unwind) must resolve
+    /// its ticket with a structured internal error, never hang it.
+    #[test]
+    fn dropped_job_poisons_its_ticket_with_internal_error() {
+        let (job, ticket) = Job::new(vec![1.0], 1, 1);
+        drop(job);
+        let err = ticket.wait().unwrap_err();
+        assert!(err.starts_with("internal"), "{err}");
+
+        // ...and a ticket already waiting on another thread is woken
+        let (job, ticket) = Job::new(vec![2.0], 1, 1);
+        let waiter = std::thread::spawn(move || ticket.wait());
+        std::thread::sleep(Duration::from_millis(20));
+        drop(job);
+        assert!(waiter.join().unwrap().unwrap_err().starts_with("internal"));
+    }
+
+    #[test]
+    fn try_submit_sheds_when_full_and_rejects_when_closed() {
+        use crate::util::threading::TryPush;
+        let c = Coalescer::new(1);
+        let (a, _ta) = Job::new(vec![1.0], 1, 1);
+        assert!(matches!(c.try_submit(a), TryPush::Pushed(1)));
+        let (b, tb) = Job::new(vec![2.0], 1, 1);
+        match c.try_submit(b) {
+            TryPush::Full(job) => drop(job), // shed: ticket resolves via Drop
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert!(tb.wait().is_err());
+        c.close();
+        let (late, _tl) = Job::new(vec![3.0], 1, 1);
+        assert!(matches!(c.try_submit(late), TryPush::Closed(_)));
     }
 
     #[test]

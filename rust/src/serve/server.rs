@@ -17,10 +17,36 @@
 //!   [`Coalescer`], snapshot the [`SharedForest`] once per batch, score
 //!   through the shared offline block kernel
 //!   ([`FlatForest::predict_block_into`]) with a warm per-worker tile.
-//! * **watcher** (optional) — polls the model path's (mtime, len) and
-//!   atomically swaps in freshly loaded models; a failed load keeps
-//!   the old model serving and retries next tick. Writers are expected
+//!   A panic while scoring is **isolated**: it poisons only the jobs of
+//!   the affected request (their clients get `!internal`), the worker
+//!   respawns, and the connection stays usable.
+//! * **watcher** (optional) — polls the model path's content
+//!   fingerprint (mtime, len, head/tail hash) and atomically swaps in
+//!   freshly loaded models; a failed load keeps the old model serving
+//!   and retries with capped exponential backoff. Writers are expected
 //!   to replace the file atomically (write-new + rename).
+//!
+//! ## Degraded modes
+//!
+//! Every way the server departs from normal service is structured,
+//! bounded, and counted in [`ServeStats`]:
+//!
+//! * `--deadline-ms` — a request that waits in the queue past its
+//!   deadline is shed with `!timeout` instead of scored late.
+//! * `--shed drop` — when the intake queue is full, answer
+//!   `!overloaded` immediately instead of parking the reader
+//!   (`--shed block`, the default, keeps bounded-blocking backpressure).
+//! * `--max-rows` / `--max-line-bytes` — oversized requests get
+//!   `!too_large` before any proportional allocation happens.
+//! * `--idle-timeout-ms` — connections with no complete request for
+//!   that long are reaped (slow-loris / half-open defense).
+//!
+//! The invariant underneath all of them: a degraded request gets a
+//! structured `!<code>` line or a closed connection — **every response
+//! that is not an error is still bitwise-equal to offline predict**,
+//! and the drain in [`Server::stop`] terminates under any mix of these
+//! modes (the chaos suite in `rust/tests/serve_chaos.rs` drives this
+//! with injected faults).
 //!
 //! ## Shutdown ordering (deadlock-free drain)
 //!
@@ -31,10 +57,12 @@
 //! all complete); once every connection is joined the coalescer is
 //! closed; workers drain the remaining queue and exit; the watcher
 //! exits on its next poll tick. No request whose submission succeeded
-//! is ever dropped.
+//! is ever left hanging: scored, shed with a structured error, or —
+//! if a worker dies with it — poisoned by the [`Job`] drop backstop.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -43,10 +71,45 @@ use std::time::{Duration, Instant, SystemTime};
 
 use crate::boosting::ensemble::Ensemble;
 use crate::predict::{FlatForest, SharedForest, DEFAULT_BLOCK_ROWS};
-use crate::serve::protocol::{format_error, format_scores, parse_request, Request};
+use crate::serve::protocol::{
+    error_msg, format_error, format_scores, parse_request_limited, Request, ERR_INTERNAL,
+    ERR_OVERLOADED, ERR_TIMEOUT, ERR_TOO_LARGE,
+};
 use crate::serve::queue::{Coalescer, Job, JobTicket};
 use crate::serve::stats::ServeStats;
+use crate::util::fault;
+use crate::util::fault::fnv1a64_with;
 use crate::util::json::Json;
+use crate::util::threading::TryPush;
+
+/// What to do with a request when the intake queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Block the connection's reader until there is room (bounded
+    /// backpressure — the pre-hardening behavior, and the default).
+    Block,
+    /// Refuse immediately with a structured `!overloaded` error.
+    Drop,
+}
+
+impl ShedPolicy {
+    /// Parse the CLI spelling (`block` | `drop`).
+    pub fn parse(s: &str) -> Result<ShedPolicy, String> {
+        match s {
+            "block" => Ok(ShedPolicy::Block),
+            "drop" => Ok(ShedPolicy::Drop),
+            other => Err(format!("unknown shed policy {other:?} (expected block|drop)")),
+        }
+    }
+
+    /// The CLI spelling (inverse of [`ShedPolicy::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedPolicy::Block => "block",
+            ShedPolicy::Drop => "drop",
+        }
+    }
+}
 
 /// Knobs for the serving daemon (CLI: `sketchboost serve`).
 #[derive(Clone, Debug)]
@@ -67,6 +130,21 @@ pub struct ServeOptions {
     pub queue_cap: usize,
     /// Model-file poll interval for hot-swap; `0` disables watching.
     pub poll_ms: u64,
+    /// Per-request deadline in milliseconds, measured from submission;
+    /// a request still queued past it is shed with `!timeout`.
+    /// `0` disables deadlines.
+    pub deadline_ms: u64,
+    /// Full-queue policy (see [`ShedPolicy`]).
+    pub shed: ShedPolicy,
+    /// Maximum rows per request; larger data lines get `!too_large`
+    /// before their cells are parsed.
+    pub max_rows: usize,
+    /// Maximum bytes per request line; longer lines get `!too_large`
+    /// and are discarded without buffering (never OOM on one line).
+    pub max_line_bytes: usize,
+    /// Reap a connection after this long with no complete request
+    /// (slow-loris / half-open defense). `0` disables reaping.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -79,6 +157,11 @@ impl Default for ServeOptions {
             max_wait_us: 250,
             queue_cap: 1024,
             poll_ms: 0,
+            deadline_ms: 0,
+            shed: ShedPolicy::Block,
+            max_rows: 4096,
+            max_line_bytes: 1 << 20,
+            idle_timeout_ms: 0,
         }
     }
 }
@@ -91,6 +174,13 @@ struct Shared {
     shutdown: AtomicBool,
     shutdown_cv: (Mutex<bool>, Condvar),
     model_path: PathBuf,
+    /// `deadline_ms` as a duration (`None` = no deadlines).
+    deadline: Option<Duration>,
+    shed: ShedPolicy,
+    max_rows: usize,
+    max_line_bytes: usize,
+    /// `idle_timeout_ms` as a duration (`None` = never reap).
+    idle_timeout: Option<Duration>,
 }
 
 impl Shared {
@@ -129,6 +219,12 @@ impl Server {
             shutdown: AtomicBool::new(false),
             shutdown_cv: (Mutex::new(false), Condvar::new()),
             model_path: model_path.to_path_buf(),
+            deadline: (opts.deadline_ms > 0).then(|| Duration::from_millis(opts.deadline_ms)),
+            shed: opts.shed,
+            max_rows: opts.max_rows.max(1),
+            max_line_bytes: opts.max_line_bytes.max(64),
+            idle_timeout: (opts.idle_timeout_ms > 0)
+                .then(|| Duration::from_millis(opts.idle_timeout_ms)),
         });
 
         let mut workers = Vec::new();
@@ -218,6 +314,18 @@ enum Pending {
 
 /// Reader half of one connection: parse lines, submit jobs, keep the
 /// writer fed in request order.
+///
+/// Two connection-level defenses live here:
+///
+/// * **Line cap** — once the buffered partial line exceeds
+///   `max_line_bytes`, the buffer is dropped, one `!too_large` response
+///   is queued, and the reader switches to *discard mode*: bytes are
+///   thrown away until the newline that ends the oversized line. Memory
+///   stays bounded by one read chunk no matter how long the line is.
+/// * **Idle reaping** — with `idle_timeout_ms` set, a connection that
+///   completes no request for that long (slow loris dribbling bytes, a
+///   half-open peer sending nothing) is closed after one `!timeout`
+///   notice.
 fn handle_connection(mut stream: TcpStream, shared: &Arc<Shared>) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
@@ -230,6 +338,8 @@ fn handle_connection(mut stream: TcpStream, shared: &Arc<Shared>) {
 
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 4096];
+    let mut discarding = false;
+    let mut last_line = Instant::now();
     'read: loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             break;
@@ -241,22 +351,58 @@ fn handle_connection(mut stream: TcpStream, shared: &Arc<Shared>) {
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
+                if let Some(idle) = shared.idle_timeout {
+                    if last_line.elapsed() >= idle {
+                        shared.stats.n_idle_closed.fetch_add(1, Ordering::Relaxed);
+                        let _ = tx.send(Pending::Immediate(format_error(&error_msg(
+                            ERR_TIMEOUT,
+                            "idle connection closed",
+                        ))));
+                        break;
+                    }
+                }
                 continue;
             }
             Err(_) => break,
         };
-        buf.extend_from_slice(&chunk[..n]);
+        if discarding {
+            // inside an oversized line: drop bytes until its newline
+            match chunk[..n].iter().position(|&b| b == b'\n') {
+                Some(eol) => {
+                    discarding = false;
+                    buf.extend_from_slice(&chunk[eol + 1..n]);
+                }
+                None => continue,
+            }
+        } else {
+            buf.extend_from_slice(&chunk[..n]);
+        }
         // process every complete line; keep the partial tail buffered
         while let Some(eol) = buf.iter().position(|&b| b == b'\n') {
             let line: Vec<u8> = buf.drain(..=eol).collect();
             let line = String::from_utf8_lossy(&line[..eol]);
             let line = line.trim();
+            last_line = Instant::now();
             if line.is_empty() {
                 continue;
             }
             if !handle_line(line, shared, &tx) {
                 break 'read;
             }
+        }
+        if buf.len() > shared.max_line_bytes {
+            // the partial line is already over budget: refuse it now
+            // and stop buffering its bytes
+            shared.stats.n_too_large.fetch_add(1, Ordering::Relaxed);
+            shared.stats.n_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Pending::Immediate(format_error(&error_msg(
+                ERR_TOO_LARGE,
+                &format!("request line exceeds {} bytes", shared.max_line_bytes),
+            ))));
+            buf.clear();
+            buf.shrink_to_fit();
+            discarding = true;
+            last_line = Instant::now();
         }
     }
     drop(tx);
@@ -266,20 +412,43 @@ fn handle_connection(mut stream: TcpStream, shared: &Arc<Shared>) {
 /// Handle one request line; returns `false` when the connection's read
 /// loop should end (shutdown requested).
 fn handle_line(line: &str, shared: &Arc<Shared>, tx: &mpsc::Sender<Pending>) -> bool {
-    match parse_request(line) {
+    match parse_request_limited(line, shared.max_rows) {
         Err(e) => {
+            if e.starts_with(ERR_TOO_LARGE) {
+                shared.stats.n_too_large.fetch_add(1, Ordering::Relaxed);
+            }
             shared.stats.n_errors.fetch_add(1, Ordering::Relaxed);
             let _ = tx.send(Pending::Immediate(format_error(&e)));
         }
         Ok(Request::Rows { rows, n_rows, width }) => {
-            let (job, ticket) = Job::new(rows, n_rows, width);
-            match shared.coalescer.submit(job) {
-                Ok(()) => {
+            let (mut job, ticket) = Job::new(rows, n_rows, width);
+            job.deadline = shared.deadline.map(|d| job.enqueued + d);
+            let submitted = match shared.shed {
+                ShedPolicy::Block => match shared.coalescer.submit(job) {
+                    Ok(depth) => Ok(depth),
+                    Err(job) => Err((job, "server is shutting down".to_string())),
+                },
+                ShedPolicy::Drop => match shared.coalescer.try_submit(job) {
+                    TryPush::Pushed(depth) => Ok(depth),
+                    TryPush::Full(job) => {
+                        shared.stats.n_shed.fetch_add(1, Ordering::Relaxed);
+                        Err((job, error_msg(ERR_OVERLOADED, "intake queue is full")))
+                    }
+                    TryPush::Closed(job) => Err((job, "server is shutting down".to_string())),
+                },
+            };
+            match submitted {
+                Ok(depth) => {
+                    shared.stats.note_queue_depth(depth);
                     let _ = tx.send(Pending::Scored { ticket, n_rows });
                 }
-                Err(_rejected) => {
+                Err((rejected, msg)) => {
+                    // complete the job ourselves so its drop backstop
+                    // doesn't report a misleading `internal`
+                    rejected.complete(Err(msg.clone()));
+                    drop(ticket); // response goes out as Immediate below
                     shared.stats.n_errors.fetch_add(1, Ordering::Relaxed);
-                    let _ = tx.send(Pending::Immediate(format_error("server is shutting down")));
+                    let _ = tx.send(Pending::Immediate(format_error(&msg)));
                 }
             }
         }
@@ -336,13 +505,31 @@ fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<Pending>) {
 }
 
 /// One scoring worker: batch → snapshot → score, with a warm tile.
+///
+/// The whole loop runs under `catch_unwind`, so a panic that escapes
+/// [`score_batch`]'s per-request isolation (a bug in batch handling
+/// itself, or an injected `serve.worker.score:panic` that fires outside
+/// the per-job guard) does not silently shrink the worker pool: jobs
+/// still in the dying batch resolve to `!internal` via the [`Job`] drop
+/// backstop, and the loop restarts with a fresh tile — the respawned
+/// worker keeps draining, so shutdown still terminates.
 fn worker_loop(shared: &Arc<Shared>, block_rows: usize, max_wait: Duration) {
-    let mut tile: Vec<f32> = Vec::new();
-    while let Some(batch) = shared.coalescer.next_batch(block_rows, max_wait) {
-        // one snapshot per batch: every job in it scores against a
-        // single, internally consistent forest (hot-swap invariant)
-        let forest = shared.forest.snapshot();
-        score_batch(&forest, batch, block_rows, &mut tile, &shared.stats);
+    loop {
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            let mut tile: Vec<f32> = Vec::new();
+            while let Some(batch) = shared.coalescer.next_batch(block_rows, max_wait) {
+                // one snapshot per batch: every job in it scores against a
+                // single, internally consistent forest (hot-swap invariant)
+                let forest = shared.forest.snapshot();
+                score_batch(&forest, batch, block_rows, &mut tile, &shared.stats);
+            }
+        }));
+        match run {
+            Ok(()) => return, // coalescer closed and drained
+            Err(_) => {
+                shared.stats.n_worker_panics.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 }
 
@@ -355,6 +542,15 @@ fn worker_loop(shared: &Arc<Shared>, block_rows: usize, max_wait: Duration) {
 /// the same kernel and the same per-row arithmetic as offline
 /// [`FlatForest::predict_raw_into`], which is what makes serving
 /// responses bitwise-equal to offline predict by construction.
+///
+/// Degradation paths, per job:
+///
+/// * a job popped after its [`Job::deadline`] is shed with `!timeout`
+///   (scoring it late would waste a block on an answer nobody reads);
+/// * scoring runs under `catch_unwind`, so one request's panic (the
+///   `serve.worker.score` fault point fires inside the guard) resolves
+///   *that* job to `!internal` and the rest of the batch scores
+///   normally.
 pub fn score_batch(
     forest: &FlatForest,
     jobs: Vec<Job>,
@@ -370,6 +566,14 @@ pub fn score_batch(
     tile.resize(block * w, 0.0);
     let (mut n_jobs, mut n_rows) = (0u64, 0u64);
     for job in jobs {
+        if let Some(deadline) = job.deadline {
+            if Instant::now() > deadline {
+                stats.n_timeouts.fetch_add(1, Ordering::Relaxed);
+                stats.n_errors.fetch_add(1, Ordering::Relaxed);
+                job.complete(Err(error_msg(ERR_TIMEOUT, "request expired in queue")));
+                continue;
+            }
+        }
         if job.width < required {
             stats.n_errors.fetch_add(1, Ordering::Relaxed);
             job.complete(Err(format!(
@@ -379,42 +583,79 @@ pub fn score_batch(
             )));
             continue;
         }
-        let mut scores = vec![0.0f32; job.n_rows * d];
-        let mut start = 0usize;
-        while start < job.n_rows {
-            let end = (start + block).min(job.n_rows);
-            let rows = end - start;
-            for i in 0..rows {
-                let src = (start + i) * job.width;
-                tile[i * w..(i + 1) * w].copy_from_slice(&job.rows[src..src + w]);
+        let scored = catch_unwind(AssertUnwindSafe(|| {
+            fault::failpoint("serve.worker.score")?;
+            let mut scores = vec![0.0f32; job.n_rows * d];
+            let mut start = 0usize;
+            while start < job.n_rows {
+                let end = (start + block).min(job.n_rows);
+                let rows = end - start;
+                for i in 0..rows {
+                    let src = (start + i) * job.width;
+                    tile[i * w..(i + 1) * w].copy_from_slice(&job.rows[src..src + w]);
+                }
+                forest.predict_block_into(
+                    &tile[..rows * w],
+                    w,
+                    rows,
+                    &mut scores[start * d..end * d],
+                );
+                start = end;
             }
-            forest.predict_block_into(&tile[..rows * w], w, rows, &mut scores[start * d..end * d]);
-            start = end;
+            Ok(scores)
+        }));
+        match scored {
+            Ok(Ok(scores)) => {
+                n_jobs += 1;
+                n_rows += job.n_rows as u64;
+                stats
+                    .request_latency
+                    .record(job.enqueued.elapsed().as_micros() as u64);
+                job.complete(Ok(scores));
+            }
+            Ok(Err(e)) => {
+                // injected `fail` (or future fallible scoring): this
+                // request only
+                stats.n_errors.fetch_add(1, Ordering::Relaxed);
+                job.complete(Err(error_msg(ERR_INTERNAL, &e)));
+            }
+            Err(_panic) => {
+                stats.n_worker_panics.fetch_add(1, Ordering::Relaxed);
+                stats.n_errors.fetch_add(1, Ordering::Relaxed);
+                job.complete(Err(error_msg(ERR_INTERNAL, "scoring worker panicked")));
+            }
         }
-        n_jobs += 1;
-        n_rows += job.n_rows as u64;
-        stats
-            .request_latency
-            .record(job.enqueued.elapsed().as_micros() as u64);
-        job.complete(Ok(scores));
     }
     if n_jobs > 0 {
         stats.record_batch(n_jobs, n_rows, t0.elapsed().as_micros() as u64);
     }
 }
 
+/// Longest backoff between reload attempts after repeated failures.
+const SWAP_BACKOFF_CAP: Duration = Duration::from_secs(5);
+
 /// Poll the model file and hot-swap on change. Only a *successfully
 /// loaded* file updates the seen fingerprint, so a torn or mid-write
 /// file is retried until its writer finishes (atomic rename never
 /// exposes one).
+///
+/// A failed load (corrupt file, transient IO error, injected
+/// `serve.swap.load` fault — even a panic inside the loader) never
+/// disturbs the serving model: the failure is counted in
+/// `swap_failures` and the retry interval backs off exponentially
+/// (doubling per consecutive failure, capped at [`SWAP_BACKOFF_CAP`]),
+/// so a persistently broken file does not turn the watcher into a busy
+/// loop. The first success resets the backoff.
 fn watcher_loop(shared: &Arc<Shared>, poll: Duration) {
     let mut seen = fingerprint(&shared.model_path);
     let tick = poll.min(Duration::from_millis(50)).max(Duration::from_millis(1));
     let mut elapsed = Duration::ZERO;
+    let mut fail_streak = 0u32;
     while !shared.shutdown.load(Ordering::SeqCst) {
         std::thread::sleep(tick);
         elapsed += tick;
-        if elapsed < poll {
+        let wait = backoff(poll, fail_streak);
+        if elapsed < wait {
             continue;
         }
         elapsed = Duration::ZERO;
@@ -422,24 +663,68 @@ fn watcher_loop(shared: &Arc<Shared>, poll: Duration) {
         if now.is_none() || now == seen {
             continue;
         }
-        match Ensemble::load(&shared.model_path) {
+        let loaded = catch_unwind(AssertUnwindSafe(|| {
+            fault::failpoint("serve.swap.load").and_then(|()| Ensemble::load(&shared.model_path))
+        }))
+        .unwrap_or_else(|_| Err("model loader panicked".to_string()));
+        match loaded {
             Ok(model) => {
                 shared.forest.swap(FlatForest::from_ensemble(&model));
                 shared.stats.n_reloads.fetch_add(1, Ordering::Relaxed);
                 seen = now;
+                fail_streak = 0;
             }
             Err(_) => {
-                // keep serving the old model; retry next tick
-                shared.stats.n_reload_errors.fetch_add(1, Ordering::Relaxed);
+                // keep serving the old model; retry after backoff
+                shared.stats.n_swap_failures.fetch_add(1, Ordering::Relaxed);
+                fail_streak = fail_streak.saturating_add(1);
             }
         }
     }
 }
 
-/// (mtime, len) fingerprint of the watched model file.
-fn fingerprint(path: &Path) -> Option<(SystemTime, u64)> {
+/// Reload-retry interval after `fail_streak` consecutive failures:
+/// `poll * 2^streak`, capped (and never below `poll`).
+fn backoff(poll: Duration, fail_streak: u32) -> Duration {
+    poll.saturating_mul(1u32 << fail_streak.min(6)).min(SWAP_BACKOFF_CAP).max(poll)
+}
+
+/// How many bytes of the file's head and tail go into the content hash.
+const FINGERPRINT_SPAN: usize = 4096;
+
+/// Identity of the watched model file on disk.
+///
+/// (mtime, len) alone is not enough: a same-length rewrite landing
+/// within the filesystem's mtime granularity (coarse on some systems)
+/// would be invisible, and the stale model would keep serving. The
+/// hash of the first and last [`FINGERPRINT_SPAN`] bytes catches any
+/// such rewrite whose bytes differ near either end — O(1) IO per poll
+/// regardless of model size, and model JSON carries its varying parts
+/// (version counters, tree payload) in exactly those regions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Fingerprint {
+    mtime: SystemTime,
+    len: u64,
+    head_tail_hash: u64,
+}
+
+/// Content fingerprint of the watched model file.
+fn fingerprint(path: &Path) -> Option<Fingerprint> {
+    use std::io::{Seek, SeekFrom};
     let meta = std::fs::metadata(path).ok()?;
-    Some((meta.modified().ok()?, meta.len()))
+    let mtime = meta.modified().ok()?;
+    let len = meta.len();
+    let mut f = std::fs::File::open(path).ok()?;
+    let span = FINGERPRINT_SPAN.min(len as usize);
+    let mut buf = vec![0u8; span];
+    f.read_exact(&mut buf).ok()?;
+    let mut h = fnv1a64_with(0xcbf29ce484222325, &buf);
+    if len as usize > span {
+        f.seek(SeekFrom::End(-(span as i64))).ok()?;
+        f.read_exact(&mut buf).ok()?;
+        h = fnv1a64_with(h, &buf);
+    }
+    Some(Fingerprint { mtime, len, head_tail_hash: h })
 }
 
 #[cfg(test)]
@@ -508,5 +793,101 @@ mod tests {
         assert_eq!(o.port, 0);
         assert_eq!(o.block_rows, DEFAULT_BLOCK_ROWS);
         assert_eq!(o.poll_ms, 0);
+        // hardening knobs default to the pre-hardening behavior:
+        // no deadlines, blocking backpressure, generous size caps,
+        // no idle reaping
+        assert_eq!(o.deadline_ms, 0);
+        assert_eq!(o.shed, ShedPolicy::Block);
+        assert_eq!(o.max_rows, 4096);
+        assert_eq!(o.max_line_bytes, 1 << 20);
+        assert_eq!(o.idle_timeout_ms, 0);
+    }
+
+    #[test]
+    fn shed_policy_parses_its_cli_spellings() {
+        for p in [ShedPolicy::Block, ShedPolicy::Drop] {
+            assert_eq!(ShedPolicy::parse(p.as_str()), Ok(p));
+        }
+        assert!(ShedPolicy::parse("sometimes").is_err());
+    }
+
+    /// An expired job is shed with a structured timeout, not scored.
+    #[test]
+    fn score_batch_sheds_jobs_past_their_deadline() {
+        use crate::boosting::ensemble::{Ensemble, TrainHistory};
+        use crate::boosting::losses::LossKind;
+        let model = Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 1,
+            base_score: vec![0.5],
+            trees: vec![],
+            history: TrainHistory::default(),
+        };
+        let forest = FlatForest::from_ensemble(&model);
+        let stats = ServeStats::new();
+        let mut tile = Vec::new();
+        let (mut expired, t_expired) = Job::new(vec![1.0], 1, 1);
+        expired.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let (fresh, t_fresh) = Job::new(vec![1.0], 1, 1);
+        score_batch(&forest, vec![expired, fresh], 4, &mut tile, &stats);
+        let err = t_expired.wait().unwrap_err();
+        assert!(err.starts_with(ERR_TIMEOUT), "{err}");
+        assert_eq!(t_fresh.wait().unwrap(), vec![0.5]);
+        assert_eq!(stats.n_timeouts.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.n_requests.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn swap_backoff_doubles_and_caps() {
+        let poll = Duration::from_millis(100);
+        assert_eq!(backoff(poll, 0), poll);
+        assert_eq!(backoff(poll, 1), Duration::from_millis(200));
+        assert_eq!(backoff(poll, 3), Duration::from_millis(800));
+        assert_eq!(backoff(poll, 6), SWAP_BACKOFF_CAP);
+        assert_eq!(backoff(poll, 60), SWAP_BACKOFF_CAP); // shift stays in range
+        // backoff never dips below the poll interval, even for huge polls
+        let slow = Duration::from_secs(30);
+        assert_eq!(backoff(slow, 4), slow);
+    }
+
+    /// The regression that motivated content hashing: two models of the
+    /// *same byte length* must fingerprint differently, because (mtime,
+    /// len) can collide when a same-length rewrite lands within the
+    /// filesystem's mtime granularity.
+    #[test]
+    fn fingerprint_distinguishes_same_length_rewrites() {
+        let dir = std::env::temp_dir()
+            .join(format!("sb_fingerprint_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+
+        let a = vec![b'a'; 10_000]; // bigger than one hash span
+        let mut b = a.clone();
+        let mid = b.len() / 2;
+        b[5] = b'x'; // head difference
+        b[mid] = b'y'; // middle difference (outside both spans — allowed to miss)
+        std::fs::write(&path, &a).unwrap();
+        let fp_a = fingerprint(&path).unwrap();
+        std::fs::write(&path, &b).unwrap();
+        let fp_b = fingerprint(&path).unwrap();
+        assert_eq!(fp_a.len, fp_b.len);
+        assert_ne!(fp_a.head_tail_hash, fp_b.head_tail_hash);
+
+        // tail-only difference is caught too
+        let mut c = a.clone();
+        let last = c.len() - 3;
+        c[last] = b'z';
+        std::fs::write(&path, &c).unwrap();
+        let fp_c = fingerprint(&path).unwrap();
+        assert_ne!(fp_a.head_tail_hash, fp_c.head_tail_hash);
+
+        // short files (under one span) hash their whole contents
+        std::fs::write(&path, b"tiny-a").unwrap();
+        let small_a = fingerprint(&path).unwrap();
+        std::fs::write(&path, b"tiny-b").unwrap();
+        let small_b = fingerprint(&path).unwrap();
+        assert_ne!(small_a.head_tail_hash, small_b.head_tail_hash);
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -58,6 +58,12 @@ impl Default for LatencyHist {
 }
 
 /// Counters for one server instance, shared by every worker/connection.
+///
+/// Beyond throughput, the stats track every **degradation path** the
+/// hardened server can take — shed requests, expired deadlines, worker
+/// panics, failed hot-swaps, oversized requests, reaped idle
+/// connections — so an operator (or the chaos suite) can account for
+/// each departure from normal service exactly.
 pub struct ServeStats {
     started: Instant,
     pub n_requests: AtomicU64,
@@ -65,7 +71,23 @@ pub struct ServeStats {
     pub n_batches: AtomicU64,
     pub n_errors: AtomicU64,
     pub n_reloads: AtomicU64,
-    pub n_reload_errors: AtomicU64,
+    /// Hot-swap reload attempts that failed to load (the old model
+    /// stays live; the watcher retries with capped backoff).
+    pub n_swap_failures: AtomicU64,
+    /// Requests refused at intake because the queue was full
+    /// (`--shed drop`).
+    pub n_shed: AtomicU64,
+    /// Requests that expired (`--deadline-ms`) before a worker scored
+    /// them.
+    pub n_timeouts: AtomicU64,
+    /// Scoring-worker panics caught and isolated (the worker respawns).
+    pub n_worker_panics: AtomicU64,
+    /// Requests rejected for exceeding `--max-rows`/`--max-line-bytes`.
+    pub n_too_large: AtomicU64,
+    /// Connections reaped by `--idle-timeout-ms`.
+    pub n_idle_closed: AtomicU64,
+    /// Deepest the intake queue has ever been (high-water mark).
+    pub queue_depth_hwm: AtomicU64,
     /// Submission → response, per request.
     pub request_latency: LatencyHist,
     /// Snapshot → scored, per batch.
@@ -81,7 +103,13 @@ impl ServeStats {
             n_batches: AtomicU64::new(0),
             n_errors: AtomicU64::new(0),
             n_reloads: AtomicU64::new(0),
-            n_reload_errors: AtomicU64::new(0),
+            n_swap_failures: AtomicU64::new(0),
+            n_shed: AtomicU64::new(0),
+            n_timeouts: AtomicU64::new(0),
+            n_worker_panics: AtomicU64::new(0),
+            n_too_large: AtomicU64::new(0),
+            n_idle_closed: AtomicU64::new(0),
+            queue_depth_hwm: AtomicU64::new(0),
             request_latency: LatencyHist::new(),
             batch_latency: LatencyHist::new(),
         }
@@ -93,6 +121,11 @@ impl ServeStats {
         self.n_requests.fetch_add(n_jobs, Ordering::Relaxed);
         self.n_rows.fetch_add(n_rows, Ordering::Relaxed);
         self.batch_latency.record(batch_us);
+    }
+
+    /// Fold a just-observed queue depth into the high-water mark.
+    pub fn note_queue_depth(&self, depth: usize) {
+        self.queue_depth_hwm.fetch_max(depth as u64, Ordering::Relaxed);
     }
 
     /// The `/stats` payload (one line of JSON once `.to_string()`-ed).
@@ -109,7 +142,13 @@ impl ServeStats {
             .set("n_batches", n(batches))
             .set("n_errors", n(self.n_errors.load(Ordering::Relaxed)))
             .set("n_reloads", n(self.n_reloads.load(Ordering::Relaxed)))
-            .set("n_reload_errors", n(self.n_reload_errors.load(Ordering::Relaxed)))
+            .set("swap_failures", n(self.n_swap_failures.load(Ordering::Relaxed)))
+            .set("shed", n(self.n_shed.load(Ordering::Relaxed)))
+            .set("timeouts", n(self.n_timeouts.load(Ordering::Relaxed)))
+            .set("worker_panics", n(self.n_worker_panics.load(Ordering::Relaxed)))
+            .set("too_large", n(self.n_too_large.load(Ordering::Relaxed)))
+            .set("idle_closed", n(self.n_idle_closed.load(Ordering::Relaxed)))
+            .set("queue_depth_hwm", n(self.queue_depth_hwm.load(Ordering::Relaxed)))
             .set("queued_jobs", n(queued_jobs as u64))
             .set(
                 "rows_per_batch",
@@ -172,5 +211,28 @@ mod tests {
         assert_eq!(back.get("queued_jobs").unwrap().as_usize().unwrap(), 2);
         assert!(back.get("rows_per_batch").unwrap().as_f64().unwrap() > 13.0);
         assert!(!line.contains('\n'), "stats must be one line");
+    }
+
+    /// Every degradation path has its own key, zero on a quiet server.
+    #[test]
+    fn stats_json_exposes_degradation_counters() {
+        let s = ServeStats::new();
+        s.n_shed.fetch_add(2, Ordering::Relaxed);
+        s.n_timeouts.fetch_add(3, Ordering::Relaxed);
+        s.n_worker_panics.fetch_add(1, Ordering::Relaxed);
+        s.n_swap_failures.fetch_add(4, Ordering::Relaxed);
+        s.n_too_large.fetch_add(5, Ordering::Relaxed);
+        s.n_idle_closed.fetch_add(6, Ordering::Relaxed);
+        s.note_queue_depth(9);
+        s.note_queue_depth(4); // high-water never regresses
+        let back = Json::parse(&s.to_json(1, 0).to_string()).unwrap();
+        let get = |k: &str| back.get(k).unwrap().as_usize().unwrap();
+        assert_eq!(get("shed"), 2);
+        assert_eq!(get("timeouts"), 3);
+        assert_eq!(get("worker_panics"), 1);
+        assert_eq!(get("swap_failures"), 4);
+        assert_eq!(get("too_large"), 5);
+        assert_eq!(get("idle_closed"), 6);
+        assert_eq!(get("queue_depth_hwm"), 9);
     }
 }

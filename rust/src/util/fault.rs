@@ -1,0 +1,411 @@
+//! Named fault points for deterministic chaos testing.
+//!
+//! Production code marks its failure-relevant sites with
+//! [`point`] (`fault::point("serve.worker.score")` — infallible sites,
+//! where only `panic`/`delay` make sense) or [`failpoint`]
+//! (`fault::failpoint("serve.swap.load")?` — fallible sites, where an
+//! injected `fail` surfaces as an `Err`). In a normal build both
+//! compile to empty `#[inline(always)]` functions: no globals, no
+//! branches, zero cost. Under the `fault-injection` cargo feature the
+//! hooks consult the installed [`FaultPlan`], so a chaos test can make
+//! a worker panic on exactly the third request it scores, or a model
+//! hot-swap fail on its first load attempt — **reproducibly**. All
+//! randomness comes from [`crate::util::rng::Rng`] seeded by the plan,
+//! so a `(plan, seed)` pair replays bit-for-bit.
+//!
+//! Whole-process runs (the `sketchboost serve` binary under a chaos
+//! harness) read the plan from the `SB_FAULT_PLAN` environment
+//! variable, seeded by `SB_FAULT_SEED` (default 0). In-process tests
+//! use [`install`], which also serializes plan-using tests through a
+//! global lock — fault points are process-global, so two concurrent
+//! tests with different plans would otherwise contaminate each other.
+//!
+//! ## Plan grammar
+//!
+//! Entries are separated by `;`:
+//!
+//! ```text
+//! <point>:<action>[<trigger>]
+//!   action  := panic | fail | delay-<ms>
+//!   trigger := @<k>    fire on exactly the k-th hit (1-based)
+//!            | @<k>+   fire on the k-th hit and every one after
+//!            | %<p>    fire each hit with probability p (seeded rng)
+//!            | (none)  fire on every hit
+//! ```
+//!
+//! Example: `serve.worker.score:panic@3;serve.swap.load:fail@1` — the
+//! scoring worker panics on the third request it processes, and the
+//! first hot-swap load attempt fails.
+//!
+//! ## Registered points
+//!
+//! | point                | kind      | effect of firing                         |
+//! |----------------------|-----------|------------------------------------------|
+//! | `serve.worker.score` | failpoint | per-request scoring (panic → `!internal`)|
+//! | `serve.swap.load`    | failpoint | model hot-swap load (fail → keep old)    |
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// FNV-1a 64-bit over `bytes`, continuing from `state`. Used to derive
+/// per-point rng streams and by the hot-swap watcher's content
+/// fingerprint — a stable, dependency-free hash, not a cryptographic
+/// one.
+pub fn fnv1a64_with(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a 64-bit from the standard offset basis.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_with(0xcbf29ce484222325, bytes)
+}
+
+/// What an armed fault point does when its trigger fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic at the point (`point` and `failpoint`).
+    Panic,
+    /// Return an injected error (`failpoint` only; ignored by `point`,
+    /// which has no error channel).
+    Fail,
+    /// Sleep for the given duration, then continue normally.
+    Delay(Duration),
+}
+
+/// When a rule fires, relative to the per-rule hit counter.
+#[derive(Clone, Debug, PartialEq)]
+enum Trigger {
+    Always,
+    /// Exactly the k-th hit (1-based).
+    Nth(u64),
+    /// The k-th hit and every one after.
+    From(u64),
+    /// Each hit independently with probability p, drawn from the
+    /// rule's seeded rng stream.
+    Prob(f64),
+}
+
+#[derive(Clone, Debug)]
+struct Rule {
+    point: String,
+    action: FaultAction,
+    trigger: Trigger,
+    hits: u64,
+    rng: Rng,
+}
+
+/// A parsed, seeded fault schedule. Deterministic: the fire pattern is
+/// a pure function of `(spec, seed, hit order)` — counter triggers
+/// (`@k`, `@k+`) do not even depend on the seed.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// A plan with no rules: every fault point is a no-op. Installing
+    /// it still takes the global test lock, which is how fault-free
+    /// serve tests shield themselves from concurrently installed plans.
+    pub fn empty() -> FaultPlan {
+        FaultPlan { rules: Vec::new() }
+    }
+
+    /// Parse a plan from the grammar in the module docs. Each rule's
+    /// probability stream is seeded from `(seed, point name)`, so two
+    /// plans parsed from the same `(spec, seed)` replay identically.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for entry in spec.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (point, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("fault rule {entry:?}: expected <point>:<action>"))?;
+            let point = point.trim();
+            if point.is_empty() {
+                return Err(format!("fault rule {entry:?}: empty point name"));
+            }
+            let rest = rest.trim();
+            let (action_str, trigger) = if let Some((a, t)) = rest.split_once('@') {
+                let trigger = match t.strip_suffix('+') {
+                    Some(k) => Trigger::From(
+                        k.parse().map_err(|_| format!("fault rule {entry:?}: bad @{t}"))?,
+                    ),
+                    None => Trigger::Nth(
+                        t.parse().map_err(|_| format!("fault rule {entry:?}: bad @{t}"))?,
+                    ),
+                };
+                if let Trigger::Nth(0) | Trigger::From(0) = trigger {
+                    return Err(format!("fault rule {entry:?}: hit counts are 1-based"));
+                }
+                (a, trigger)
+            } else if let Some((a, p)) = rest.split_once('%') {
+                let p: f64 =
+                    p.parse().map_err(|_| format!("fault rule {entry:?}: bad %{p}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("fault rule {entry:?}: probability outside [0, 1]"));
+                }
+                (a, Trigger::Prob(p))
+            } else {
+                (rest, Trigger::Always)
+            };
+            let action = match action_str.trim() {
+                "panic" => FaultAction::Panic,
+                "fail" => FaultAction::Fail,
+                a => match a.strip_prefix("delay-") {
+                    Some(ms) => FaultAction::Delay(Duration::from_millis(
+                        ms.parse()
+                            .map_err(|_| format!("fault rule {entry:?}: bad delay {ms:?}"))?,
+                    )),
+                    None => {
+                        return Err(format!(
+                            "fault rule {entry:?}: unknown action {a:?} \
+                             (expected panic | fail | delay-<ms>)"
+                        ))
+                    }
+                },
+            };
+            rules.push(Rule {
+                point: point.to_string(),
+                action,
+                trigger,
+                hits: 0,
+                rng: Rng::new(seed ^ fnv1a64(point.as_bytes())),
+            });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    /// Record one hit at `name` on every matching rule; the first rule
+    /// whose trigger fires returns its action.
+    pub fn hit(&mut self, name: &str) -> Option<FaultAction> {
+        let mut fired = None;
+        for rule in self.rules.iter_mut() {
+            if rule.point != name {
+                continue;
+            }
+            rule.hits += 1;
+            let fire = match rule.trigger {
+                Trigger::Always => true,
+                Trigger::Nth(k) => rule.hits == k,
+                Trigger::From(k) => rule.hits >= k,
+                Trigger::Prob(p) => rule.rng.next_f64() < p,
+            };
+            if fire && fired.is_none() {
+                fired = Some(rule.action.clone());
+            }
+        }
+        fired
+    }
+
+    /// How many times `name` has been hit (max across its rules; 0 if
+    /// the plan has no rule for it — unplanned points are not counted).
+    pub fn hits(&self, name: &str) -> u64 {
+        self.rules
+            .iter()
+            .filter(|r| r.point == name)
+            .map(|r| r.hits)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Number of rules in the plan.
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// the global hooks
+// ---------------------------------------------------------------------
+
+/// Hit an infallible fault point. No-op unless the `fault-injection`
+/// feature is on and the active plan fires `panic` or `delay` here
+/// (`fail` is ignored — this site has no error channel).
+#[cfg(not(feature = "fault-injection"))]
+#[inline(always)]
+pub fn point(_name: &str) {}
+
+/// Hit a fallible fault point. Always `Ok(())` unless the
+/// `fault-injection` feature is on and the active plan fires here.
+#[cfg(not(feature = "fault-injection"))]
+#[inline(always)]
+pub fn failpoint(_name: &str) -> Result<(), String> {
+    Ok(())
+}
+
+#[cfg(feature = "fault-injection")]
+pub use active::{failpoint, hits, install, point, FaultGuard};
+
+#[cfg(feature = "fault-injection")]
+mod active {
+    use super::{FaultAction, FaultPlan};
+    use std::sync::{Mutex, MutexGuard, Once};
+
+    /// The installed plan (`None` until env init or `install`).
+    static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+    /// One-shot initialization from `SB_FAULT_PLAN` / `SB_FAULT_SEED`.
+    static ENV_INIT: Once = Once::new();
+    /// Serializes in-process tests that install plans.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn plan_guard() -> MutexGuard<'static, Option<FaultPlan>> {
+        ENV_INIT.call_once(|| {
+            if let Ok(spec) = std::env::var("SB_FAULT_PLAN") {
+                let seed = std::env::var("SB_FAULT_SEED")
+                    .ok()
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0);
+                match FaultPlan::parse(&spec, seed) {
+                    Ok(p) => *PLAN.lock().unwrap() = Some(p),
+                    Err(e) => eprintln!("[fault] ignoring bad SB_FAULT_PLAN: {e}"),
+                }
+            }
+        });
+        // a panic injected *while holding* this lock is impossible —
+        // actions fire after the guard drops — but recover anyway
+        PLAN.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn fire(name: &str) -> Option<FaultAction> {
+        plan_guard().as_mut().and_then(|p| p.hit(name))
+    }
+
+    /// See the no-op twin for the contract.
+    pub fn point(name: &str) {
+        match fire(name) {
+            Some(FaultAction::Panic) => panic!("injected fault: {name}"),
+            Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+            Some(FaultAction::Fail) | None => {}
+        }
+    }
+
+    /// See the no-op twin for the contract.
+    pub fn failpoint(name: &str) -> Result<(), String> {
+        match fire(name) {
+            Some(FaultAction::Panic) => panic!("injected fault: {name}"),
+            Some(FaultAction::Delay(d)) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Some(FaultAction::Fail) => Err(format!("injected fault: {name}")),
+            None => Ok(()),
+        }
+    }
+
+    /// Hit count recorded for `name` by the active plan (0 if no plan
+    /// or no rule — assertions should plan the points they count).
+    pub fn hits(name: &str) -> u64 {
+        plan_guard().as_ref().map_or(0, |p| p.hits(name))
+    }
+
+    /// Keeps an installed plan active (and other plan users excluded)
+    /// until dropped.
+    pub struct FaultGuard {
+        _lock: MutexGuard<'static, ()>,
+    }
+
+    impl Drop for FaultGuard {
+        fn drop(&mut self) {
+            *PLAN.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        }
+    }
+
+    /// Install `plan` as the process-wide fault schedule until the
+    /// returned guard drops. Tests that exercise fault points — even
+    /// with an [`FaultPlan::empty`] plan — must hold one of these, so
+    /// plans never overlap across concurrently running tests.
+    pub fn install(plan: FaultPlan) -> FaultGuard {
+        let lock = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // mark env init done so a later first-hit cannot clobber the
+        // installed plan with the environment one
+        ENV_INIT.call_once(|| {});
+        *PLAN.lock().unwrap_or_else(|e| e.into_inner()) = Some(plan);
+        FaultGuard { _lock: lock }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_readme_grammar() {
+        let p = FaultPlan::parse("serve.worker.score:panic@3;serve.swap.load:fail@1", 0).unwrap();
+        assert_eq!(p.len(), 2);
+        let p = FaultPlan::parse("a:delay-50;b:fail@2+;c:panic%0.5; ;", 7).unwrap();
+        assert_eq!(p.len(), 3);
+        assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_rules() {
+        for bad in [
+            "noaction",
+            "p:explode",
+            "p:panic@zero",
+            "p:panic@0",
+            "p:fail%1.5",
+            "p:delay-abc",
+            ":panic",
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn nth_fires_exactly_once_and_from_fires_onward() {
+        let mut p = FaultPlan::parse("x:panic@3;y:fail@2+", 0).unwrap();
+        let fires: Vec<bool> = (0..5).map(|_| p.hit("x").is_some()).collect();
+        assert_eq!(fires, [false, false, true, false, false]);
+        assert_eq!(p.hits("x"), 5);
+        let fires: Vec<bool> = (0..4).map(|_| p.hit("y").is_some()).collect();
+        assert_eq!(fires, [false, true, true, true]);
+        assert!(p.hit("unplanned").is_none());
+        assert_eq!(p.hits("unplanned"), 0);
+    }
+
+    #[test]
+    fn always_fires_every_hit_with_the_right_action() {
+        let mut p = FaultPlan::parse("x:delay-10", 0).unwrap();
+        for _ in 0..3 {
+            assert_eq!(p.hit("x"), Some(FaultAction::Delay(Duration::from_millis(10))));
+        }
+    }
+
+    /// The probabilistic trigger must replay bit-for-bit for a seed and
+    /// diverge across seeds — the heart of "every chaos test is
+    /// reproducible".
+    #[test]
+    fn probabilistic_schedule_is_seed_deterministic() {
+        let pattern = |seed: u64| -> Vec<bool> {
+            let mut p = FaultPlan::parse("x:fail%0.35", seed).unwrap();
+            (0..200).map(|_| p.hit("x").is_some()).collect()
+        };
+        assert_eq!(pattern(42), pattern(42));
+        assert_ne!(pattern(42), pattern(43));
+        let fired = pattern(42).iter().filter(|&&f| f).count();
+        assert!((30..=110).contains(&fired), "p=0.35 over 200 hits fired {fired}");
+    }
+
+    #[test]
+    fn fnv_is_stable_and_content_sensitive() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), fnv1a64(b"a"));
+        assert_ne!(fnv1a64(b"model-a"), fnv1a64(b"model-b"));
+        // chaining is the same as hashing the concatenation
+        assert_eq!(fnv1a64_with(fnv1a64(b"ab"), b"cd"), fnv1a64(b"abcd"));
+    }
+}

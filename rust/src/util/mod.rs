@@ -1,11 +1,13 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! RNG (no `rand`), JSON (no `serde`), CLI parsing (no `clap`), bench
 //! harness (no `criterion`), a property-testing helper (no `proptest`),
-//! a scoped thread pool (no `rayon`), and a string error (no `anyhow`).
+//! a scoped thread pool (no `rayon`), a string error (no `anyhow`),
+//! and named fault points for chaos testing (no `fail` crate).
 
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod fault;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -209,6 +209,20 @@ pub enum PopResult<T> {
     Closed,
 }
 
+/// Outcome of a non-blocking [`BoundedQueue::try_push`] call. The
+/// rejected item travels back to the caller in both failure arms, so a
+/// load-shedding producer can still answer its client.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryPush<T> {
+    /// Enqueued; the payload is the queue depth right after the push
+    /// (for high-water-mark accounting without a second lock).
+    Pushed(usize),
+    /// The queue is at capacity — the shedding hook.
+    Full(T),
+    /// The queue is closed.
+    Closed(T),
+}
+
 /// A bounded multi-producer/multi-consumer FIFO on `Mutex` + `Condvar`
 /// (offline build: no `crossbeam`). Producers block while the queue is
 /// at capacity; consumers block while it is empty. [`BoundedQueue::close`]
@@ -239,8 +253,9 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Enqueue `item`, blocking while the queue is at capacity. Returns
-    /// the item back as `Err` if the queue is (or becomes) closed.
-    pub fn push(&self, item: T) -> Result<(), T> {
+    /// the depth right after the push, or the item back as `Err` if the
+    /// queue is (or becomes) closed.
+    pub fn push(&self, item: T) -> Result<usize, T> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if inner.closed {
@@ -249,10 +264,26 @@ impl<T> BoundedQueue<T> {
             if inner.items.len() < self.cap {
                 inner.items.push_back(item);
                 self.not_empty.notify_one();
-                return Ok(());
+                return Ok(inner.items.len());
             }
             inner = self.not_full.wait(inner).unwrap();
         }
+    }
+
+    /// Enqueue `item` only if there is room right now — the
+    /// load-shedding variant: a full queue returns the item instead of
+    /// parking the producer.
+    pub fn try_push(&self, item: T) -> TryPush<T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return TryPush::Closed(item);
+        }
+        if inner.items.len() >= self.cap {
+            return TryPush::Full(item);
+        }
+        inner.items.push_back(item);
+        self.not_empty.notify_one();
+        TryPush::Pushed(inner.items.len())
     }
 
     /// Dequeue the oldest item, blocking while the queue is empty.
@@ -457,6 +488,23 @@ mod tests {
         producer.join().unwrap().unwrap();
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn try_push_sheds_at_capacity_instead_of_blocking() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.try_push(1), TryPush::Pushed(1));
+        assert_eq!(q.push(2), Ok(2)); // blocking push reports depth too
+        // full: the item comes straight back, no parking
+        assert_eq!(q.try_push(3), TryPush::Full(3));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.try_push(3), TryPush::Pushed(2));
+        q.close();
+        assert_eq!(q.try_push(4), TryPush::Closed(4));
+        // shedding never lost an accepted item
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

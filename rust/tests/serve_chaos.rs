@@ -1,0 +1,575 @@
+//! Chaos suite for `sketchboost serve`: seeded fault plans drive the
+//! named fault points (`rust/src/util/fault.rs`) while real clients
+//! hammer a real daemon on a loopback port.
+//!
+//! Two invariants hold under **every** plan in this file:
+//!
+//! 1. every response that is not a structured `!<code>` error is
+//!    **bitwise-equal** to offline `FlatForest` predict on the same
+//!    rows, and
+//! 2. the daemon drains cleanly — `Server::stop` returns (a per-test
+//!    watchdog aborts the process if anything deadlocks).
+//!
+//! Runs only with the fault points armed:
+//!
+//! ```text
+//! cargo test --features fault-injection --test serve_chaos
+//! ```
+//!
+//! Seeds come from `SB_CHAOS_SEED` (default 0) so CI can replay the
+//! probabilistic plans across several fixed seeds. Counter-triggered
+//! plans (`@k`) are seed-independent by construction.
+#![cfg(feature = "fault-injection")]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sketchboost::data::synthetic::{make_multilabel, FeatureSpec};
+use sketchboost::prelude::*;
+use sketchboost::serve::{ServeOptions, Server};
+use sketchboost::util::fault::{self, FaultPlan};
+use sketchboost::util::json::Json;
+
+// -----------------------------------------------------------------
+// harness
+// -----------------------------------------------------------------
+
+/// Seed for the probabilistic plans (CI replays a few fixed values).
+fn chaos_seed() -> u64 {
+    std::env::var("SB_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+/// Abort the whole process if `f` runs longer than `secs` — a deadlock
+/// in a drain path must fail the suite, not hang it forever.
+fn with_watchdog<F: FnOnce()>(secs: u64, f: F) {
+    let done = Arc::new(AtomicBool::new(false));
+    let flag = done.clone();
+    std::thread::spawn(move || {
+        let deadline = Instant::now() + Duration::from_secs(secs);
+        while Instant::now() < deadline {
+            if flag.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        eprintln!("chaos watchdog: test exceeded {secs}s — aborting (deadlocked drain?)");
+        std::process::abort();
+    });
+    f();
+    done.store(true, Ordering::SeqCst);
+}
+
+/// Train a small multilabel model and save it where the server loads it.
+fn train_and_save(dir: &str, seed: u64) -> (Dataset, Ensemble, PathBuf) {
+    let ds = make_multilabel(150, FeatureSpec::guyon(10), 4, 3, seed);
+    let mut cfg = GBDTConfig::multilabel(4);
+    cfg.n_rounds = 4;
+    cfg.max_depth = 4;
+    cfg.max_bins = 16;
+    cfg.seed = seed;
+    let model = GBDT::fit(&cfg, &ds, None);
+    let d = std::env::temp_dir().join(dir);
+    std::fs::create_dir_all(&d).unwrap();
+    let path = d.join(format!("model_{seed}.json"));
+    model.save(&path).unwrap();
+    (ds, model, path)
+}
+
+fn row_line(ds: &Dataset, i: usize) -> String {
+    ds.row(i).iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",")
+}
+
+/// Split a response into scores, or the structured error after `!`.
+fn scores_or_err(line: &str) -> Result<Vec<f32>, String> {
+    if let Some(err) = line.strip_prefix('!') {
+        return Err(err.to_string());
+    }
+    Ok(line
+        .split(';')
+        .flat_map(|row| row.split(','))
+        .map(|c| c.parse::<f32>().unwrap())
+        .collect())
+}
+
+fn assert_bits_eq(want: &[f32], got: &[f32], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "{ctx}: cell {i} differs ({a:?} vs {b:?})");
+    }
+}
+
+/// Blocking request/response client on one connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        stream.set_nodelay(true).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        assert!(resp.ends_with('\n'), "truncated response: {resp:?}");
+        resp.trim_end().to_string()
+    }
+
+    fn request(&mut self, line: &str) -> String {
+        self.send(line);
+        self.recv()
+    }
+
+    fn stats(&mut self) -> Json {
+        Json::parse(&self.request("/stats")).unwrap()
+    }
+}
+
+fn stat(stats: &Json, key: &str) -> usize {
+    stats.get(key).unwrap_or_else(|| panic!("/stats missing {key}")).as_usize().unwrap()
+}
+
+// -----------------------------------------------------------------
+// size caps and malformed input (no injected faults — empty plan held
+// so a concurrent chaos test cannot contaminate this server)
+// -----------------------------------------------------------------
+
+#[test]
+fn oversized_and_malformed_requests_degrade_structurally() {
+    with_watchdog(90, || {
+        let _guard = fault::install(FaultPlan::empty());
+        let (ds, model, path) = train_and_save("sb_chaos_caps", 11);
+        let naive = model.predict_raw_naive(&ds);
+        let d = model.n_outputs;
+        let opts = ServeOptions {
+            n_workers: 1,
+            max_rows: 2,
+            max_line_bytes: 4096,
+            ..ServeOptions::default()
+        };
+        let server = Server::start(&path, &opts).unwrap();
+        let mut client = Client::connect(server.addr());
+
+        // over the row cap: rejected before any cell parses
+        let resp = client.request("1;2;3");
+        assert!(resp.starts_with("!too_large"), "{resp}");
+
+        // a line over the byte cap: one !too_large, bounded memory, and
+        // the connection recovers for the next (pipelined) request
+        let huge = "1,".repeat(8000); // ~16 KB >> 4 KB cap
+        client.send(&huge);
+        client.send(&row_line(&ds, 5));
+        let resp = client.recv();
+        assert!(resp.starts_with("!too_large"), "{resp}");
+        let got = scores_or_err(&client.recv()).unwrap();
+        assert_bits_eq(&naive[5 * d..6 * d], &got, "after oversized line");
+
+        // plain garbage still gets a plain parse error
+        assert!(client.request("1,spam").starts_with('!'));
+
+        let stats = client.stats();
+        assert_eq!(stat(&stats, "too_large"), 2);
+        assert_eq!(stat(&stats, "n_errors"), 3);
+        assert_eq!(stat(&stats, "shed"), 0);
+        server.stop();
+    });
+}
+
+// -----------------------------------------------------------------
+// slow-loris / half-open clients
+// -----------------------------------------------------------------
+
+#[test]
+fn idle_connections_are_reaped_without_disturbing_active_ones() {
+    with_watchdog(90, || {
+        let _guard = fault::install(FaultPlan::empty());
+        let (ds, model, path) = train_and_save("sb_chaos_idle", 12);
+        let naive = model.predict_raw_naive(&ds);
+        let d = model.n_outputs;
+        let opts =
+            ServeOptions { n_workers: 1, idle_timeout_ms: 150, ..ServeOptions::default() };
+        let server = Server::start(&path, &opts).unwrap();
+        let addr = server.addr();
+
+        // a slow loris: dribbles half a line, then goes quiet
+        let mut loris = TcpStream::connect(addr).unwrap();
+        loris.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        loris.write_all(b"1,2,3").unwrap(); // no newline, ever
+        loris.flush().unwrap();
+
+        // a half-open peer: connects and sends nothing at all
+        let half_open = TcpStream::connect(addr).unwrap();
+
+        // both must be closed by the reaper: the loris reads the
+        // timeout notice then EOF
+        let mut text = String::new();
+        loris.read_to_string(&mut text).unwrap(); // returns only on EOF
+        assert!(text.starts_with("!timeout"), "loris got {text:?}");
+        drop(half_open);
+
+        // an active client on the same server was never disturbed
+        let mut client = Client::connect(addr);
+        let got = scores_or_err(&client.request(&row_line(&ds, 7))).unwrap();
+        assert_bits_eq(&naive[7 * d..8 * d], &got, "active client");
+        assert!(stat(&client.stats(), "idle_closed") >= 1);
+        server.stop();
+    });
+}
+
+// -----------------------------------------------------------------
+// queue saturation: shed policies
+// -----------------------------------------------------------------
+
+#[test]
+fn full_queue_sheds_with_drop_policy_and_blocks_with_default() {
+    with_watchdog(120, || {
+        let (ds, model, path) = train_and_save("sb_chaos_shed", 13);
+        let naive = model.predict_raw_naive(&ds);
+        let d = model.n_outputs;
+        let n_req = 10usize;
+
+        // drop policy: a slow worker (50ms per request) + a 2-deep queue
+        // forces overload on a pipelined burst
+        {
+            let _guard = fault::install(
+                FaultPlan::parse("serve.worker.score:delay-50", chaos_seed()).unwrap(),
+            );
+            let opts = ServeOptions {
+                n_workers: 1,
+                block_rows: 1,
+                max_wait_us: 0,
+                queue_cap: 2,
+                shed: sketchboost::serve::ShedPolicy::Drop,
+                ..ServeOptions::default()
+            };
+            let server = Server::start(&path, &opts).unwrap();
+            let mut client = Client::connect(server.addr());
+            for i in 0..n_req {
+                client.send(&row_line(&ds, i));
+            }
+            let (mut ok, mut overloaded) = (0usize, 0usize);
+            for i in 0..n_req {
+                match scores_or_err(&client.recv()) {
+                    Ok(got) => {
+                        ok += 1;
+                        assert_bits_eq(&naive[i * d..(i + 1) * d], &got, &format!("row {i}"));
+                    }
+                    Err(e) => {
+                        overloaded += 1;
+                        assert!(e.starts_with("overloaded"), "row {i}: {e}");
+                    }
+                }
+            }
+            assert!(ok >= 1, "the first request always fits");
+            assert!(overloaded >= 6, "a 2-deep queue cannot hold a burst of {n_req}");
+            let stats = client.stats();
+            assert_eq!(stat(&stats, "shed"), overloaded, "shed counter matches responses");
+            assert!(stat(&stats, "queue_depth_hwm") >= 2, "the queue visibly filled");
+            server.stop();
+        }
+
+        // block policy (the default): same burst, nothing is shed —
+        // backpressure parks the reader instead
+        {
+            let _guard = fault::install(
+                FaultPlan::parse("serve.worker.score:delay-50", chaos_seed()).unwrap(),
+            );
+            let opts = ServeOptions {
+                n_workers: 1,
+                block_rows: 1,
+                max_wait_us: 0,
+                queue_cap: 2,
+                ..ServeOptions::default()
+            };
+            let server = Server::start(&path, &opts).unwrap();
+            let mut client = Client::connect(server.addr());
+            for i in 0..n_req {
+                client.send(&row_line(&ds, i));
+            }
+            for i in 0..n_req {
+                let got = scores_or_err(&client.recv()).unwrap();
+                assert_bits_eq(&naive[i * d..(i + 1) * d], &got, &format!("blocked row {i}"));
+            }
+            assert_eq!(stat(&client.stats(), "shed"), 0);
+            server.stop();
+        }
+    });
+}
+
+// -----------------------------------------------------------------
+// worker panic isolation
+// -----------------------------------------------------------------
+
+#[test]
+fn worker_panic_poisons_only_the_affected_request() {
+    with_watchdog(90, || {
+        // the third scored request panics, exactly once
+        let _guard = fault::install(
+            FaultPlan::parse("serve.worker.score:panic@3", chaos_seed()).unwrap(),
+        );
+        let (ds, model, path) = train_and_save("sb_chaos_panic", 14);
+        let naive = model.predict_raw_naive(&ds);
+        let d = model.n_outputs;
+        let opts = ServeOptions { n_workers: 1, ..ServeOptions::default() };
+        let server = Server::start(&path, &opts).unwrap();
+        let mut client = Client::connect(server.addr());
+
+        // sequential requests on one worker: hit order == request order
+        for i in 0..6usize {
+            let resp = client.request(&row_line(&ds, i));
+            if i == 2 {
+                // the victim gets a structured internal error...
+                assert!(resp.starts_with("!internal"), "request 3 got {resp}");
+            } else {
+                // ...and everyone else, before and after, exact bits —
+                // same connection, worker still alive
+                let got = scores_or_err(&resp).unwrap();
+                assert_bits_eq(&naive[i * d..(i + 1) * d], &got, &format!("row {i}"));
+            }
+        }
+        let stats = client.stats();
+        assert_eq!(stat(&stats, "worker_panics"), 1, "exactly the planned panic");
+        assert_eq!(stat(&stats, "n_requests"), 5, "five requests scored cleanly");
+        assert_eq!(fault::hits("serve.worker.score"), 6, "every score hit the point");
+        server.stop();
+    });
+}
+
+/// A plan that panics on *every* scoring attempt from the second on:
+/// the drain must still terminate (each victim resolves to `!internal`,
+/// nothing hangs) — the "no deadlock under any plan" half of the
+/// invariant.
+#[test]
+fn drain_terminates_while_panics_keep_firing() {
+    with_watchdog(90, || {
+        let _guard = fault::install(
+            FaultPlan::parse("serve.worker.score:panic@2+", chaos_seed()).unwrap(),
+        );
+        let (ds, model, path) = train_and_save("sb_chaos_drain", 15);
+        let naive = model.predict_raw_naive(&ds);
+        let d = model.n_outputs;
+        let opts = ServeOptions { n_workers: 2, ..ServeOptions::default() };
+        let server = Server::start(&path, &opts).unwrap();
+        let mut client = Client::connect(server.addr());
+
+        let mut ok = 0usize;
+        for i in 0..12usize {
+            match scores_or_err(&client.request(&row_line(&ds, i))) {
+                Ok(got) => {
+                    ok += 1;
+                    assert_bits_eq(&naive[i * d..(i + 1) * d], &got, &format!("row {i}"));
+                }
+                Err(e) => assert!(e.starts_with("internal"), "row {i}: {e}"),
+            }
+        }
+        assert_eq!(ok, 1, "only the first score precedes the @2+ panic storm");
+        let stats = client.stats();
+        assert_eq!(stat(&stats, "worker_panics"), 11);
+        drop(client);
+        server.stop(); // must return: the watchdog is the assertion
+    });
+}
+
+// -----------------------------------------------------------------
+// hot-swap failures: injected load failure + same-length rewrite
+// -----------------------------------------------------------------
+
+#[test]
+fn swap_survives_injected_load_failure_and_same_length_rewrite() {
+    with_watchdog(120, || {
+        // the first reload attempt fails; the retry must succeed
+        let _guard = fault::install(
+            FaultPlan::parse("serve.swap.load:fail@1", chaos_seed()).unwrap(),
+        );
+        let (ds, model_a, path) = train_and_save("sb_chaos_swap", 16);
+        let (_, model_b, path_b) = train_and_save("sb_chaos_swap", 17);
+        let naive_a = model_a.predict_raw_naive(&ds);
+        let naive_b = model_b.predict_raw_naive(&ds);
+        let d = model_a.n_outputs;
+
+        // craft the fingerprint-race regression pair: pad the shorter
+        // model JSON with trailing whitespace (the parser tolerates it)
+        // so the two files have the SAME byte length — (mtime, len)
+        // alone could miss this rewrite on coarse-mtime filesystems
+        let mut bytes_a = std::fs::read(&path).unwrap();
+        let mut bytes_b = std::fs::read(&path_b).unwrap();
+        let target = bytes_a.len().max(bytes_b.len());
+        bytes_a.resize(target, b' ');
+        bytes_b.resize(target, b' ');
+        std::fs::write(&path, &bytes_a).unwrap();
+        std::fs::remove_file(&path_b).unwrap();
+
+        let opts = ServeOptions { n_workers: 2, poll_ms: 10, ..ServeOptions::default() };
+        let server = Server::start(&path, &opts).unwrap();
+        let addr = server.addr();
+        assert_eq!(server.model_version(), 1);
+
+        std::thread::scope(|s| {
+            // hammer the server across the whole failure + retry window
+            let stop = Arc::new(AtomicBool::new(false));
+            let mut hammers = Vec::new();
+            for t in 0..2usize {
+                let (ds, naive_a, naive_b, stop) = (&ds, &naive_a, &naive_b, stop.clone());
+                hammers.push(s.spawn(move || {
+                    let mut client = Client::connect(addr);
+                    let mut k = 0usize;
+                    while !stop.load(Ordering::SeqCst) {
+                        let i = (t * 37 + k * 7) % ds.n_rows;
+                        let got = scores_or_err(&client.request(&row_line(ds, i))).unwrap();
+                        let want_a = &naive_a[i * d..(i + 1) * d];
+                        let want_b = &naive_b[i * d..(i + 1) * d];
+                        let eq = |w: &[f32]| {
+                            w.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits())
+                        };
+                        assert!(eq(want_a) || eq(want_b), "client {t} req {k}: torn response");
+                        k += 1;
+                    }
+                }));
+            }
+
+            // same-length rewrite of the watched file, atomically
+            // (write-new + rename) so the only load failure the watcher
+            // can see is the injected one
+            std::thread::sleep(Duration::from_millis(50));
+            let old_len = std::fs::metadata(&path).unwrap().len();
+            let tmp = path.with_extension("json.tmp");
+            std::fs::write(&tmp, &bytes_b).unwrap();
+            std::fs::rename(&tmp, &path).unwrap();
+            assert_eq!(std::fs::metadata(&path).unwrap().len(), old_len, "same-length pair");
+
+            // attempt 1 is injected to fail (old model keeps serving),
+            // the backoff retry must land the swap
+            let deadline = Instant::now() + Duration::from_secs(30);
+            let swapped = loop {
+                if server.model_version() >= 2 {
+                    break true;
+                }
+                if Instant::now() >= deadline {
+                    break false;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            };
+            // release the hammers before asserting, so a failure here
+            // reports as a test failure rather than a watchdog abort
+            stop.store(true, Ordering::SeqCst);
+            for h in hammers {
+                h.join().unwrap();
+            }
+            assert!(swapped, "swap never recovered from the injected failure");
+        });
+
+        // post-swap traffic is model B, bit-for-bit
+        let mut client = Client::connect(addr);
+        for i in (0..ds.n_rows).step_by(29) {
+            let got = scores_or_err(&client.request(&row_line(&ds, i))).unwrap();
+            assert_bits_eq(&naive_b[i * d..(i + 1) * d], &got, &format!("post-swap row {i}"));
+        }
+        let stats = client.stats();
+        assert_eq!(stat(&stats, "swap_failures"), 1, "exactly the injected failure");
+        assert_eq!(stat(&stats, "n_reloads"), 1);
+        assert!(fault::hits("serve.swap.load") >= 2, "failed attempt + successful retry");
+        server.stop();
+    });
+}
+
+// -----------------------------------------------------------------
+// deadlines
+// -----------------------------------------------------------------
+
+#[test]
+fn requests_queued_past_their_deadline_are_shed_with_timeout() {
+    with_watchdog(120, || {
+        // every score takes ~1s; with a 250ms deadline only the request
+        // a worker picks up immediately survives
+        let _guard = fault::install(
+            FaultPlan::parse("serve.worker.score:delay-1000", chaos_seed()).unwrap(),
+        );
+        let (ds, model, path) = train_and_save("sb_chaos_deadline", 18);
+        let naive = model.predict_raw_naive(&ds);
+        let d = model.n_outputs;
+        let opts = ServeOptions {
+            n_workers: 1,
+            block_rows: 1,
+            max_wait_us: 0,
+            deadline_ms: 250,
+            ..ServeOptions::default()
+        };
+        let server = Server::start(&path, &opts).unwrap();
+        let mut client = Client::connect(server.addr());
+
+        for i in 0..4usize {
+            client.send(&row_line(&ds, i));
+        }
+        // request 0: popped at once, scored (slowly), exact bits
+        let got = scores_or_err(&client.recv()).unwrap();
+        assert_bits_eq(&naive[0..d], &got, "request 0");
+        // requests 1-3: each popped ~1s after submission, way past the
+        // 250ms deadline — shed with a structured timeout, not scored
+        for i in 1..4usize {
+            let err = scores_or_err(&client.recv()).unwrap_err();
+            assert!(err.starts_with("timeout"), "request {i}: {err}");
+        }
+        let stats = client.stats();
+        assert_eq!(stat(&stats, "timeouts"), 3);
+        assert_eq!(stat(&stats, "n_requests"), 1);
+        assert_eq!(fault::hits("serve.worker.score"), 1, "shed requests never score");
+        server.stop();
+    });
+}
+
+// -----------------------------------------------------------------
+// probabilistic plans replay bit-for-bit
+// -----------------------------------------------------------------
+
+#[test]
+fn probabilistic_fault_pattern_is_reproducible_for_a_seed() {
+    with_watchdog(120, || {
+        let (ds, model, path) = train_and_save("sb_chaos_prob", 19);
+        let naive = model.predict_raw_naive(&ds);
+        let d = model.n_outputs;
+        let seed = chaos_seed().wrapping_add(7); // any fixed seed works
+
+        // one sequential pass: per-request success/failure pattern
+        let run = || -> Vec<bool> {
+            let _guard =
+                fault::install(FaultPlan::parse("serve.worker.score:fail%0.4", seed).unwrap());
+            let opts = ServeOptions { n_workers: 1, ..ServeOptions::default() };
+            let server = Server::start(&path, &opts).unwrap();
+            let mut client = Client::connect(server.addr());
+            let pattern: Vec<bool> = (0..30usize)
+                .map(|i| match scores_or_err(&client.request(&row_line(&ds, i))) {
+                    Ok(got) => {
+                        assert_bits_eq(&naive[i * d..(i + 1) * d], &got, &format!("row {i}"));
+                        true
+                    }
+                    Err(e) => {
+                        assert!(e.starts_with("internal"), "row {i}: {e}");
+                        false
+                    }
+                })
+                .collect();
+            server.stop();
+            pattern
+        };
+
+        let first = run();
+        let second = run();
+        assert_eq!(first, second, "same (plan, seed) must replay the same fault pattern");
+        assert!(first.iter().any(|&ok| ok), "p=0.4 over 30 requests should pass some");
+        assert!(first.iter().any(|&ok| !ok), "p=0.4 over 30 requests should fail some");
+    });
+}
