@@ -13,7 +13,7 @@ use crate::boosting::trainer::GBDTConfig;
 use crate::data::binning::BinnedDataset;
 use crate::data::dataset::Dataset;
 use crate::engine::{ComputeEngine, EngineOpts, NativeEngine, ScoreMode};
-use crate::predict::{FlatForest, PredictOptions};
+use crate::predict::PredictOptions;
 use crate::tree::builder::{build_tree_in, BuildParams, SENTINEL};
 use crate::tree::tree::Tree;
 use crate::tree::workspace::TreeWorkspace;
@@ -31,16 +31,20 @@ pub struct OvaModel {
 }
 
 impl OvaModel {
-    /// Raw scores through the batched [`FlatForest`] path (univariate
-    /// trees compiled with their output column; bit-identical to
-    /// [`OvaModel::predict_raw_naive`] for every thread count).
+    /// Raw scores through the batched flat path (univariate trees
+    /// compiled with their output column; bit-identical to
+    /// [`OvaModel::predict_raw_naive`] for every thread count). Legacy
+    /// convenience — prefer
+    /// [`Predictor::compile_ova`](crate::predict::Predictor::compile_ova).
+    #[doc(hidden)]
     pub fn predict_raw(&self, ds: &Dataset) -> Vec<f32> {
         self.predict_raw_with(ds, &PredictOptions::default())
     }
 
-    /// [`OvaModel::predict_raw`] with explicit batching/threading knobs.
+    /// Legacy convenience: [`OvaModel::predict_raw`] with explicit knobs.
+    #[doc(hidden)]
     pub fn predict_raw_with(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<f32> {
-        FlatForest::from_ova(self).predict_raw(ds, opts)
+        crate::predict::Predictor::compile_ova(self, *opts).raw(ds)
     }
 
     /// Reference per-row walker, kept as the equivalence-test oracle
@@ -250,7 +254,7 @@ mod tests {
         let model = fit_one_vs_all(&cfg, &ds, None);
         let naive = model.predict_raw_naive(&ds);
         for threads in [1usize, 2, 4] {
-            let opts = PredictOptions { n_threads: threads, block_rows: 64 };
+            let opts = PredictOptions::threads(threads).with_block_rows(64);
             assert_eq!(model.predict_raw_with(&ds, &opts), naive, "threads {threads}");
         }
     }

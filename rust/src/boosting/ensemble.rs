@@ -3,7 +3,7 @@
 
 use crate::boosting::losses::LossKind;
 use crate::data::dataset::Dataset;
-use crate::predict::{FlatForest, PredictOptions};
+use crate::predict::PredictOptions;
 use crate::tree::tree::{CatSet, Tree, TreeNode};
 use crate::util::json::Json;
 
@@ -28,32 +28,40 @@ pub struct Ensemble {
     pub history: TrainHistory,
 }
 
+/// Version tag written into saved model JSON (`"format"` key).
+///
+/// * **absent / 1** — the original schema (6/7/8-element node arrays);
+///   still read silently.
+/// * **2** — identical node schema, tag emitted on save so future
+///   readers can tell versions apart; unknown *higher* versions are
+///   rejected with a structured error instead of a mid-parse panic.
+pub const MODEL_FORMAT_VERSION: u32 = 2;
+
 impl Ensemble {
     /// Raw scores (logits for classification), row-major [n, d].
     ///
-    /// Runs the batched [`FlatForest`] path with default options (one
-    /// thread, default block size); [`Ensemble::predict_raw_with`]
-    /// exposes the threading/blocking knobs. Bit-identical to the
-    /// per-row reference walker [`Ensemble::predict_raw_naive`].
+    /// Legacy convenience kept for source compatibility: prefer
+    /// [`Predictor`](crate::predict::Predictor), the unified facade
+    /// these methods delegate to (it compiles the forest once instead
+    /// of per call). Bit-identical to the per-row reference walker
+    /// [`Ensemble::predict_raw_naive`].
+    #[doc(hidden)]
     pub fn predict_raw(&self, ds: &Dataset) -> Vec<f32> {
         self.predict_raw_with(ds, &PredictOptions::default())
     }
 
-    /// Raw scores through the batched flat path with explicit options.
-    ///
-    /// Repeated scoring of the same model should compile the
-    /// [`FlatForest`] once and call it directly; this convenience
-    /// recompiles per call (O(total nodes), negligible against any
-    /// non-trivial batch).
+    /// Legacy convenience: [`Predictor`](crate::predict::Predictor)
+    /// compiled per call with explicit options.
+    #[doc(hidden)]
     pub fn predict_raw_with(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<f32> {
-        FlatForest::from_ensemble(self).predict_raw(ds, opts)
+        crate::predict::Predictor::compile(self, *opts).raw(ds)
     }
 
     /// Reference per-row walker (pointer-chasing [`Tree`] traversal).
     ///
     /// Kept as the oracle the batched path is tested against
     /// (`rust/tests/predict_equivalence.rs`); prefer
-    /// [`Ensemble::predict_raw`] everywhere else.
+    /// [`Predictor`](crate::predict::Predictor) everywhere else.
     pub fn predict_raw_naive(&self, ds: &Dataset) -> Vec<f32> {
         let d = self.n_outputs;
         let mut out = vec![0.0f32; ds.n_rows * d];
@@ -72,15 +80,17 @@ impl Ensemble {
     }
 
     /// Probabilities for classification losses; identity for MSE.
+    /// Legacy convenience — prefer
+    /// [`Predictor::predict`](crate::predict::Predictor::predict).
+    #[doc(hidden)]
     pub fn predict(&self, ds: &Dataset) -> Vec<f32> {
         self.predict_with(ds, &PredictOptions::default())
     }
 
-    /// [`Ensemble::predict`] with explicit batching/threading options.
+    /// Legacy convenience: [`Ensemble::predict`] with explicit options.
+    #[doc(hidden)]
     pub fn predict_with(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<f32> {
-        let mut raw = self.predict_raw_with(ds, opts);
-        self.apply_link(&mut raw);
-        raw
+        crate::predict::Predictor::compile(self, *opts).predict(ds)
     }
 
     /// Map raw scores to the loss's output scale in place (softmax for
@@ -107,6 +117,7 @@ impl Ensemble {
 
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
+        o.set("format", Json::Num(f64::from(MODEL_FORMAT_VERSION)));
         o.set("loss", Json::Str(self.loss.name().to_string()));
         o.set("n_outputs", Json::Num(self.n_outputs as f64));
         o.set("base_score", Json::from_f32_slice(&self.base_score));
@@ -116,6 +127,22 @@ impl Ensemble {
     }
 
     pub fn from_json(j: &Json) -> Result<Ensemble, String> {
+        // Format versions: absent = v1 (models saved before the tag
+        // existed) and loads silently, as does any version <= ours.
+        // A higher version is a structured error up front instead of a
+        // confusing parse failure halfway into the tree arrays.
+        match j.get("format") {
+            None => {}
+            Some(v) => {
+                let ver = v.as_usize().ok_or("model format tag must be an integer")?;
+                if ver as u32 > MODEL_FORMAT_VERSION {
+                    return Err(format!(
+                        "unsupported model format {ver} (this build reads formats <= {MODEL_FORMAT_VERSION}); \
+                         re-save the model with a matching sketchboost version"
+                    ));
+                }
+            }
+        }
         let loss = LossKind::parse(
             j.get("loss").and_then(|v| v.as_str()).ok_or("missing loss")?,
         )
@@ -300,7 +327,7 @@ mod tests {
         let m = toy_model();
         let ds = toy_data();
         assert_eq!(m.predict_raw(&ds), m.predict_raw_naive(&ds));
-        let opts = crate::predict::PredictOptions { n_threads: 2, block_rows: 1 };
+        let opts = crate::predict::PredictOptions::threads(2).with_block_rows(1);
         assert_eq!(m.predict_raw_with(&ds, &opts), m.predict_raw_naive(&ds));
     }
 
@@ -379,6 +406,42 @@ mod tests {
         let back = Ensemble::from_json(&j).unwrap();
         assert!(back.trees[0].nodes[0].default_left, "legacy nodes route NaN left");
         assert!(back.trees[0].nodes[0].cats.is_none());
+    }
+
+    #[test]
+    fn save_emits_format_tag_and_untagged_models_load_silently() {
+        let m = toy_model();
+        let j = m.to_json();
+        assert_eq!(
+            j.get("format").and_then(|v| v.as_usize()),
+            Some(MODEL_FORMAT_VERSION as usize)
+        );
+        // a pre-tag (v1) file has no "format" key: synthesize one and
+        // confirm it loads without complaint
+        let mut legacy = m.to_json();
+        if let Json::Obj(o) = &mut legacy {
+            o.remove("format");
+        }
+        assert!(legacy.get("format").is_none());
+        let back = Ensemble::from_json(&legacy).unwrap();
+        assert_eq!(back.trees.len(), 1);
+    }
+
+    #[test]
+    fn from_json_rejects_future_format_with_structured_error() {
+        let m = toy_model();
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("format".into(), Json::Num(99.0));
+        }
+        let err = Ensemble::from_json(&j).unwrap_err();
+        assert!(err.contains("unsupported model format 99"), "got: {err}");
+        assert!(err.contains("formats <= 2"), "got: {err}");
+        // non-integer tags are rejected too, not silently ignored
+        if let Json::Obj(o) = &mut j {
+            o.insert("format".into(), Json::Str("two".into()));
+        }
+        assert!(Ensemble::from_json(&j).is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use crate::boosting::ensemble::Ensemble;
 use crate::boosting::metrics::Metric;
 use crate::data::dataset::Dataset;
-use crate::predict::{FlatForest, PredictOptions};
+use crate::predict::PredictOptions;
 use crate::tree::tree::{is_leaf, leaf_id, Tree};
 
 /// How to weight splits when accumulating feature importance.
@@ -72,14 +72,17 @@ impl Ensemble {
 
     /// Leaf index of every row in every tree — the "apply" output used
     /// for embedding/feature-engineering pipelines. Row-major
-    /// `[n_rows, n_trees]`, via the batched flat path.
+    /// `[n_rows, n_trees]`. Legacy convenience — prefer
+    /// [`Predictor::leaf_indices`](crate::predict::Predictor::leaf_indices).
+    #[doc(hidden)]
     pub fn predict_leaf_indices(&self, ds: &Dataset) -> Vec<u32> {
         self.predict_leaf_indices_with(ds, &PredictOptions::default())
     }
 
-    /// [`Ensemble::predict_leaf_indices`] with explicit batching knobs.
+    /// Legacy convenience: leaf indices with explicit batching knobs.
+    #[doc(hidden)]
     pub fn predict_leaf_indices_with(&self, ds: &Dataset, opts: &PredictOptions) -> Vec<u32> {
-        FlatForest::from_ensemble(self).predict_leaf_indices(ds, opts)
+        crate::predict::Predictor::compile(self, *opts).leaf_indices(ds)
     }
 
     /// Reference per-row walker for the leaf-index output (oracle for
@@ -211,7 +214,7 @@ mod tests {
         }
         // the batched path must agree with the per-row walker exactly
         assert_eq!(leaves, model.predict_leaf_indices_naive(&ds));
-        let opts = PredictOptions { n_threads: 4, block_rows: 33 };
+        let opts = PredictOptions::threads(4).with_block_rows(33);
         assert_eq!(model.predict_leaf_indices_with(&ds, &opts), leaves);
     }
 

@@ -15,6 +15,7 @@ use crate::boosting::losses::LossKind;
 use crate::boosting::sampling::RowSampling;
 use crate::boosting::trainer::GBDTConfig;
 use crate::engine::MissingPolicy;
+use crate::predict::ForestLayout;
 use crate::serve::{ServeOptions, ShedPolicy};
 use crate::sketch::SketchConfig;
 use crate::util::json::Json;
@@ -168,6 +169,8 @@ pub fn serve_options_to_json(opts: &ServeOptions) -> Json {
     o.set("max_rows", Json::Num(opts.max_rows as f64));
     o.set("max_line_bytes", Json::Num(opts.max_line_bytes as f64));
     o.set("idle_timeout_ms", Json::Num(opts.idle_timeout_ms as f64));
+    o.set("layout", Json::Str(opts.layout.as_str().to_string()));
+    o.set("exact_leaves", Json::Bool(opts.exact_leaves));
     o
 }
 
@@ -200,6 +203,12 @@ pub fn serve_options_from_json(j: &Json) -> Result<ServeOptions, String> {
     opts.max_rows = num("max_rows", opts.max_rows)?;
     opts.max_line_bytes = num("max_line_bytes", opts.max_line_bytes)?;
     opts.idle_timeout_ms = num("idle_timeout_ms", opts.idle_timeout_ms as usize)? as u64;
+    if let Some(s) = j.get("layout") {
+        opts.layout = ForestLayout::parse(s.as_str().ok_or("bad layout")?)?;
+    }
+    if let Some(b) = j.get("exact_leaves") {
+        opts.exact_leaves = b.as_bool().ok_or("bad exact_leaves")?;
+    }
     Ok(opts)
 }
 
@@ -293,6 +302,8 @@ mod tests {
             max_rows: 256,
             max_line_bytes: 65536,
             idle_timeout_ms: 30_000,
+            layout: ForestLayout::V2Quantized,
+            exact_leaves: true,
         };
         let back = serve_options_from_json(&serve_options_to_json(&opts)).unwrap();
         assert_eq!(back.bind, "0.0.0.0");
@@ -307,6 +318,8 @@ mod tests {
         assert_eq!(back.max_rows, 256);
         assert_eq!(back.max_line_bytes, 65536);
         assert_eq!(back.idle_timeout_ms, 30_000);
+        assert_eq!(back.layout, ForestLayout::V2Quantized);
+        assert!(back.exact_leaves);
 
         // a partial file keeps defaults for everything it omits
         let partial = Json::parse(r#"{"port": 9000}"#).unwrap();
@@ -316,6 +329,8 @@ mod tests {
         assert_eq!(back.block_rows, ServeOptions::default().block_rows);
         assert_eq!(back.shed, ShedPolicy::Block);
         assert_eq!(back.deadline_ms, 0);
+        assert_eq!(back.layout, ForestLayout::V1);
+        assert!(!back.exact_leaves);
 
         // out-of-range port is rejected, not truncated
         let bad = Json::parse(r#"{"port": 70000}"#).unwrap();
@@ -323,6 +338,10 @@ mod tests {
 
         // an unknown shed policy is rejected, not defaulted
         let bad = Json::parse(r#"{"shed": "sometimes"}"#).unwrap();
+        assert!(serve_options_from_json(&bad).is_err());
+
+        // an unknown layout is rejected, not defaulted
+        let bad = Json::parse(r#"{"layout": "v3"}"#).unwrap();
         assert!(serve_options_from_json(&bad).is_err());
     }
 

@@ -28,10 +28,12 @@
 //! contiguous per-node ranges and pools all per-level buffers in a
 //! reusable [`tree::TreeWorkspace`], so steady-state tree building is
 //! allocation-free (DESIGN.md "Memory model & row partitioning").
-//! Inference runs through [`predict::FlatForest`] — the ensemble
-//! compiled into structure-of-arrays node tables, driven block-of-rows
-//! at a time in parallel, bit-identical to the per-row reference walker
-//! for every thread count (DESIGN.md "Inference model"). The [`serve`]
+//! Inference runs through [`predict::Predictor`] — the ensemble
+//! compiled once into flat node tables (SoA, interleaved 16-byte
+//! records, or quantized integer-compare records; see
+//! [`predict::ForestLayout`]), driven block-of-rows at a time in
+//! parallel, bit-identical to the per-row reference walker for every
+//! thread count (DESIGN.md "Inference model"). The [`serve`]
 //! module puts that predictor behind a dependency-free TCP daemon
 //! (`sketchboost serve`) that coalesces concurrent requests into the
 //! same cache-sized blocks and hot-swaps models without ever tearing a
@@ -92,7 +94,9 @@ pub mod prelude {
     pub use crate::data::split;
     pub use crate::data::{BinnedDataset, Dataset, FeatureKind, Targets};
     pub use crate::engine::MissingPolicy;
-    pub use crate::predict::{FlatForest, PredictOptions, SharedForest};
+    pub use crate::predict::{
+        FlatForest, ForestLayout, LayoutOptions, PredictOptions, Predictor, SharedForest,
+    };
     pub use crate::serve::{ServeOptions, Server, ShedPolicy};
     pub use crate::sketch::SketchConfig;
     pub use crate::tree::CatSet;

@@ -258,7 +258,8 @@ fn cmd_evaluate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let model = Ensemble::load(std::path::Path::new(model_path))?;
     let ds = load_data(args)?;
     let opts = PredictOptions::threads(args.get_usize("threads", 1));
-    let (preds, secs) = time_once(|| model.predict_raw_with(&ds, &opts));
+    let pred = Predictor::compile(&model, opts);
+    let (preds, secs) = time_once(|| pred.raw(&ds));
     report_scores("saved-model", &preds, &ds, secs);
     Ok(())
 }
@@ -282,6 +283,8 @@ fn cmd_predict(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                     ("--profile NAME", "score a synthetic profile instead of a CSV (implies metrics)"),
                     ("--threads N", "worker threads over row blocks; 0 = all cores (default 1)"),
                     ("--block N", "rows per block (default 512)"),
+                    ("--layout S", "forest layout: v1 | v2 | v2q (default v1; v2 is bit-identical, v2q quantizes)"),
+                    ("--exact-leaves", "with --layout v2q: keep f32 leaves (bit-identical output)"),
                     ("--raw", "write raw scores instead of probabilities"),
                     ("--out FILE", "write predictions CSV (header p0..p{d-1})"),
                 ],
@@ -293,10 +296,12 @@ fn cmd_predict(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .get("model")
         .ok_or("predict needs --model FILE (a model saved by train --out)")?;
     let model = Ensemble::load(std::path::Path::new(model_path))?;
-    let opts = PredictOptions {
-        n_threads: args.get_usize("threads", 1),
-        block_rows: args.get_usize("block", 512),
-    };
+    let mut opts = PredictOptions::threads(args.get_usize("threads", 1))
+        .with_block_rows(args.get_usize("block", 512))
+        .with_exact_leaves(args.flag("exact-leaves"));
+    if let Some(s) = args.get("layout") {
+        opts = opts.with_layout(ForestLayout::parse(s)?);
+    }
     // feature-only CSV by default; --labeled / --profile routes through
     // the target-aware loader and also reports metrics
     let labeled = args.flag("labeled") || args.get("data").is_none();
@@ -305,7 +310,8 @@ fn cmd_predict(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     } else {
         csv::load_features(std::path::Path::new(args.get("data").unwrap()))?
     };
-    let flat = FlatForest::from_ensemble(&model);
+    let pred = Predictor::compile(&model, opts);
+    let flat = pred.forest();
     if ds.n_features < flat.n_features_required() {
         return Err(format!(
             "dataset has {} feature columns but the model splits on feature index {} \
@@ -316,14 +322,15 @@ fn cmd_predict(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         )
         .into());
     }
-    let (raw, secs) = time_once(|| flat.predict_raw(&ds, &opts));
+    let (raw, secs) = time_once(|| pred.raw(&ds));
     println!(
-        "predict: n={} m={} d={} trees={} nodes={} threads={} block={} time={} ({:.1}k rows/s)",
+        "predict: n={} m={} d={} trees={} nodes={} layout={} threads={} block={} time={} ({:.1}k rows/s)",
         ds.n_rows,
         ds.n_features,
         model.n_outputs,
         flat.n_trees(),
         flat.n_nodes(),
+        flat.layout().as_str(),
         opts.n_threads,
         opts.block_rows,
         fmt_secs(secs),
@@ -378,6 +385,8 @@ fn cmd_serve(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                     ("--max-rows N", "max rows per request, larger get !too_large (default 4096)"),
                     ("--max-line-bytes N", "max request line bytes (default 1048576)"),
                     ("--idle-timeout-ms N", "close idle connections after N ms (default 0 = off)"),
+                    ("--layout S", "forest layout: v1 | v2 | v2q (default v1; hot-swaps recompile into it)"),
+                    ("--exact-leaves", "with --layout v2q: keep f32 leaves (bit-identical scores)"),
                 ],
             )
         );
@@ -409,14 +418,21 @@ fn cmd_serve(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     opts.max_rows = args.get_usize("max-rows", opts.max_rows);
     opts.max_line_bytes = args.get_usize("max-line-bytes", opts.max_line_bytes);
     opts.idle_timeout_ms = args.get_u64("idle-timeout-ms", opts.idle_timeout_ms);
+    if let Some(s) = args.get("layout") {
+        opts.layout = ForestLayout::parse(s)?;
+    }
+    if args.flag("exact-leaves") {
+        opts.exact_leaves = true;
+    }
 
     let server = sketchboost::serve::Server::start(std::path::Path::new(model_path), &opts)?;
     println!(
-        "serving {model_path} on {} (workers={} block={} max_wait_us={} shed={}{}{}{})",
+        "serving {model_path} on {} (workers={} block={} max_wait_us={} layout={} shed={}{}{}{})",
         server.addr(),
         opts.n_workers.max(1),
         opts.block_rows.max(1),
         opts.max_wait_us,
+        opts.layout.as_str(),
         opts.shed.as_str(),
         if opts.deadline_ms > 0 {
             format!(" deadline={}ms", opts.deadline_ms)

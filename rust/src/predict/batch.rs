@@ -22,14 +22,14 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::data::dataset::Dataset;
-use crate::predict::flat::FlatForest;
+use crate::predict::flat::{FlatForest, ForestLayout, LayoutOptions};
 use crate::util::threading::{DisjointSlice, ThreadPool};
 
 /// Default rows per block: with the default feature widths a block tile
 /// stays ~64–128 KiB, inside L2, while amortizing the per-block gather.
 pub const DEFAULT_BLOCK_ROWS: usize = 512;
 
-/// Knobs for batched prediction.
+/// Knobs for batched prediction (a builder: chain the `with_*` methods).
 #[derive(Clone, Copy, Debug)]
 pub struct PredictOptions {
     /// Worker threads over row blocks; `0` = all cores. Bit-identical
@@ -37,11 +37,19 @@ pub struct PredictOptions {
     pub n_threads: usize,
     /// Rows per block (the unit of work-stealing and cache blocking).
     pub block_rows: usize,
+    /// Node/leaf layout the forest compiles into (see [`ForestLayout`]).
+    /// Consumed at compile time by [`Predictor`](crate::predict::Predictor)
+    /// and the serve daemon; ignored by an already-compiled forest.
+    pub layout: LayoutOptions,
 }
 
 impl Default for PredictOptions {
     fn default() -> Self {
-        PredictOptions { n_threads: 1, block_rows: DEFAULT_BLOCK_ROWS }
+        PredictOptions {
+            n_threads: 1,
+            block_rows: DEFAULT_BLOCK_ROWS,
+            layout: LayoutOptions::default(),
+        }
     }
 }
 
@@ -49,6 +57,28 @@ impl PredictOptions {
     /// Default blocking with an explicit thread count.
     pub fn threads(n_threads: usize) -> PredictOptions {
         PredictOptions { n_threads, ..PredictOptions::default() }
+    }
+
+    pub fn with_threads(mut self, n_threads: usize) -> PredictOptions {
+        self.n_threads = n_threads;
+        self
+    }
+
+    pub fn with_block_rows(mut self, block_rows: usize) -> PredictOptions {
+        self.block_rows = block_rows;
+        self
+    }
+
+    pub fn with_layout(mut self, layout: ForestLayout) -> PredictOptions {
+        self.layout.layout = layout;
+        self
+    }
+
+    /// Keep f32 leaf values under [`ForestLayout::V2Quantized`] (the
+    /// bitwise-exactness escape hatch; no effect on other layouts).
+    pub fn with_exact_leaves(mut self, exact: bool) -> PredictOptions {
+        self.layout.exact_leaves = exact;
+        self
     }
 }
 
@@ -140,12 +170,11 @@ impl FlatForest {
         for row in out.chunks_mut(d) {
             row.copy_from_slice(&self.base_score);
         }
-        for t in 0..self.n_trees() {
-            for i in 0..n_rows {
-                let leaf = self.leaf_of(t, &tile[i * width..(i + 1) * width]);
-                self.add_leaf(t, leaf, &mut out[i * d..(i + 1) * d]);
-            }
-        }
+        // layout-dispatched inner loop (flat.rs): V1 walks the SoA
+        // arrays per row, V2 layouts run the tree-major record walk
+        // with the 8-row micro-tile on hot trees — all three accumulate
+        // trees in ascending order per cell, preserving the contract.
+        self.accumulate_block(tile, width, n_rows, out);
     }
 
     /// Raw scores, row-major `[n_rows, n_outputs]`, written into `out`.
@@ -273,7 +302,10 @@ mod tests {
         let want = reference(&model, &ds);
         for threads in [1usize, 2, 4] {
             for block in [1usize, 4, 7, 23, 64] {
-                let got = ff.predict_raw(&ds, &PredictOptions { n_threads: threads, block_rows: block });
+                let got = ff.predict_raw(
+                    &ds,
+                    &PredictOptions::threads(threads).with_block_rows(block),
+                );
                 assert_eq!(got, want, "threads={threads} block={block}");
             }
         }
@@ -283,7 +315,7 @@ mod tests {
     fn leaf_indices_match_per_row_walker() {
         let ds = toy_ds();
         let (model, ff) = toy_forest();
-        let got = ff.predict_leaf_indices(&ds, &PredictOptions { n_threads: 2, block_rows: 5 });
+        let got = ff.predict_leaf_indices(&ds, &PredictOptions::threads(2).with_block_rows(5));
         assert_eq!(got.len(), ds.n_rows * 2);
         for i in 0..ds.n_rows {
             let row = ds.row(i);

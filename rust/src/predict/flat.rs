@@ -1,26 +1,360 @@
-//! The ensemble compiled into structure-of-arrays form.
+//! The ensemble compiled for batched inference, in one of three layouts.
 //!
 //! [`FlatForest`] is the serving-side twin of the training-side
-//! [`Tree`]/[`Ensemble`] representation: every tree's split nodes are
-//! packed back-to-back into four parallel arrays (feature / threshold /
-//! left / right), the leaf-value matrices are concatenated into one
-//! contiguous buffer, and per-tree offset tables say where each tree's
-//! nodes and values start. Traversal touches four small flat arrays
-//! instead of chasing 24-byte `TreeNode` structs, and the layout is the
-//! stepping stone to an XLA/GPU predict path (the same arrays upload as
-//! device tensors).
+//! [`Tree`]/[`Ensemble`] representation. [`FlatForest::compile`] picks a
+//! [`ForestLayout`]:
 //!
-//! Routing semantics are *identical* to [`Tree::leaf_for_raw`]: NaN
-//! routes by the split's learned `default_left`, categorical splits by
-//! category-set membership ([`CatSet`]), numeric splits by `x <=
-//! threshold`. `rust/tests/predict_equivalence.rs` and
-//! `rust/tests/missing_categorical.rs` pin bitwise equality of the two
-//! paths across sketches, depths, losses, thread counts, and
+//! * **V1** — the original structure-of-arrays form: every tree's split
+//!   nodes packed back-to-back into parallel arrays (feature /
+//!   threshold / default / cat / left / right). Traversal touches small
+//!   flat arrays instead of chasing 24-byte `TreeNode` structs.
+//! * **V2Exact** — an interleaved, 16-byte cache-line-aligned node
+//!   record ([`NodeRec`]): feature id + default/categorical flags packed
+//!   into one `u32`, the f32 threshold bit-cast into a second, children
+//!   in the remaining two. One record = one load; trees whose nodes are
+//!   all numeric and all default-left additionally run a branch-free
+//!   8-row micro-tiled walk. Output is **bitwise identical** to V1.
+//! * **V2Quantized** — same record, but numeric thresholds are replaced
+//!   by u16 *bin codes* over per-feature sorted distinct-threshold
+//!   tables built from the forest itself, so the inner compare is an
+//!   integer compare and each row's features quantize once per block
+//!   instead of re-comparing floats per node. Because every node
+//!   threshold is an entry of its feature's table, `x <= t` and
+//!   `code(x) <= code(t)` are equivalent for *all* inputs — routing is
+//!   exactly V1's. Leaf values optionally compress to f16-style u16
+//!   (half precision); [`LayoutOptions::exact_leaves`] is the escape
+//!   hatch that keeps f32 leaves and makes V2Quantized bitwise-exact
+//!   too. [`FlatForest::leaf_quant_error`] reports the worst-case
+//!   output error introduced by leaf compression (0.0 when exact).
+//!
+//! Routing semantics are *identical* to [`Tree::leaf_for_raw`] in every
+//! layout: NaN routes by the split's learned `default_left`, categorical
+//! splits by category-set membership ([`CatSet`]), numeric splits by
+//! `x <= threshold`. `rust/tests/predict_equivalence.rs` and
+//! `rust/tests/missing_categorical.rs` pin bitwise equality of the
+//! layouts across sketches, depths, losses, thread counts, and
 //! NaN-bearing/categorical inputs.
 
 use crate::baselines::one_vs_all::OvaModel;
 use crate::boosting::ensemble::Ensemble;
 use crate::tree::tree::{CatSet, Tree};
+
+/// Which node/leaf layout [`FlatForest::compile`] produces.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ForestLayout {
+    /// Parallel SoA arrays (the original layout; the compatibility
+    /// default everywhere).
+    #[default]
+    V1,
+    /// Interleaved 16-byte node records, f32 thresholds. Bitwise
+    /// identical to V1.
+    V2Exact,
+    /// Interleaved records with u16 bin-code thresholds (integer
+    /// compares; routing still exact) and, unless
+    /// [`LayoutOptions::exact_leaves`] is set, f16 leaf values.
+    V2Quantized,
+}
+
+impl ForestLayout {
+    /// Parse the CLI/config spelling: `v1`, `v2`, `v2q`.
+    pub fn parse(s: &str) -> Result<ForestLayout, String> {
+        match s {
+            "v1" => Ok(ForestLayout::V1),
+            "v2" => Ok(ForestLayout::V2Exact),
+            "v2q" => Ok(ForestLayout::V2Quantized),
+            other => Err(format!(
+                "unknown forest layout {other:?} (expected \"v1\", \"v2\", or \"v2q\")"
+            )),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ForestLayout::V1 => "v1",
+            ForestLayout::V2Exact => "v2",
+            ForestLayout::V2Quantized => "v2q",
+        }
+    }
+}
+
+/// Compile-time layout knobs for [`FlatForest::compile`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LayoutOptions {
+    pub layout: ForestLayout,
+    /// Only meaningful under [`ForestLayout::V2Quantized`]: keep leaf
+    /// values in f32 (the exactness escape hatch — quantized thresholds
+    /// route identically, so with exact leaves the whole output is
+    /// bitwise-identical to V1).
+    pub exact_leaves: bool,
+}
+
+impl LayoutOptions {
+    pub fn v1() -> LayoutOptions {
+        LayoutOptions::default()
+    }
+
+    pub fn v2_exact() -> LayoutOptions {
+        LayoutOptions { layout: ForestLayout::V2Exact, exact_leaves: false }
+    }
+
+    pub fn v2_quantized() -> LayoutOptions {
+        LayoutOptions { layout: ForestLayout::V2Quantized, exact_leaves: false }
+    }
+
+    pub fn with_layout(mut self, layout: ForestLayout) -> LayoutOptions {
+        self.layout = layout;
+        self
+    }
+
+    pub fn with_exact_leaves(mut self, exact: bool) -> LayoutOptions {
+        self.exact_leaves = exact;
+        self
+    }
+}
+
+// --- f32 <-> IEEE binary16 bit conversion (no `f16` type at MSRV 1.70) --
+
+/// Round-to-nearest-even f32 -> binary16 bits. Overflow saturates to
+/// infinity; NaN stays NaN (payload truncated, quiet bit forced).
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf / NaN: keep NaN-ness even if the payload's top bits are 0
+        let payload = (man >> 13) as u16 | u16::from(man != 0);
+        return sign | 0x7c00 | payload;
+    }
+    let exp = exp32 - 127 + 15; // rebias into binary16
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> +/-Inf
+    }
+    if exp <= 0 {
+        // subnormal (or zero) in binary16
+        if exp < -10 {
+            return sign; // underflows to +/-0 even after rounding
+        }
+        let man = man | 0x0080_0000; // make the implicit leading 1 explicit
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && (half & 1) == 1);
+        return sign | (half + u32::from(round_up)) as u16;
+    }
+    let half = ((exp as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1);
+    // a mantissa carry may bump the exponent (correct: 0x3ff rounds to
+    // the next power of two) and may carry into Inf (correct saturation)
+    sign | (half + u32::from(round_up)) as u16
+}
+
+/// Exact binary16 bits -> f32 (every binary16 value is representable).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // Inf / NaN
+    } else if exp == 0 {
+        if man == 0 {
+            sign // +/-0
+        } else {
+            // subnormal: value = man * 2^-24; normalize for f32
+            let p = 31 - man.leading_zeros(); // highest set bit, 0..=9
+            let e = p + 103; // (p - 24) + 127
+            sign | (e << 23) | ((man << (23 - p)) & 0x007f_ffff)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// --- layout v2 node record ---------------------------------------------
+
+/// Bits 0..=29 of [`NodeRec::ffl`]: the split feature index.
+const FEAT_MASK: u32 = (1 << 30) - 1;
+/// [`NodeRec::ffl`] flag: categorical split (`key` indexes `cat_sets`).
+const CAT_BIT: u32 = 1 << 30;
+/// [`NodeRec::ffl`] flag: NaN routes left at this node.
+const DEFAULT_LEFT_BIT: u32 = 1 << 31;
+
+/// One interleaved split node: 16 bytes, 16-byte aligned, so a record
+/// never straddles a cache line and traversal is one load per node.
+#[derive(Clone, Copy, Debug)]
+#[repr(C, align(16))]
+struct NodeRec {
+    /// feature index | [`CAT_BIT`] | [`DEFAULT_LEFT_BIT`]
+    ffl: u32,
+    /// Numeric nodes: f32 threshold bits (V2Exact) or the threshold's
+    /// bin code, `<= u16::MAX` (V2Quantized). Categorical nodes: index
+    /// into the pooled `cat_sets` (both variants).
+    key: u32,
+    /// Children keep the tree-local encoding: `>= 0` is a node index
+    /// relative to the tree's first node, `< 0` encodes leaf `!child`.
+    left: i32,
+    right: i32,
+}
+
+/// Per-feature quantization tables for [`ForestLayout::V2Quantized`].
+///
+/// `edges` holds each feature's **sorted distinct split thresholds**
+/// (taken from the forest itself — every trained threshold is a binned
+/// edge, so this is the model's full resolution), concatenated;
+/// `offsets[f]..offsets[f+1]` is feature `f`'s slice. Codes:
+///
+/// * `0` — missing (NaN); compares `<=` any node code, and node codes
+///   start at 1, so a plain integer compare routes NaN left — exactly
+///   what default-left trees need, and non-default-left nodes test for
+///   0 explicitly.
+/// * numeric feature: `code(x) = 1 + #{edges < x}`; a node with
+///   threshold `t` stores `code(t)`, and `x <= t  <=>  code(x) <=
+///   code(t)` for **all** finite `x` because `t` is itself an edge.
+/// * categorical feature: integer id in `0..=255` codes as `id + 2`
+///   (so 0 stays "missing" and 1 means "not a representable id" —
+///   never a member, like V1's `contains_value` on such inputs).
+#[derive(Clone, Debug)]
+struct QuantMap {
+    edges: Vec<f32>,
+    /// len `n_features_required + 1`
+    offsets: Vec<u32>,
+    /// features that appear in categorical splits (coded by id)
+    is_cat: Vec<bool>,
+}
+
+impl QuantMap {
+    fn build(soa: &SoaNodes, n_features: usize) -> QuantMap {
+        let mut per: Vec<Vec<f32>> = vec![Vec::new(); n_features];
+        let mut is_cat = vec![false; n_features];
+        for i in 0..soa.feature.len() {
+            let f = soa.feature[i] as usize;
+            if soa.cat_idx[i] >= 0 {
+                is_cat[f] = true;
+            } else {
+                per[f].push(soa.threshold[i]);
+            }
+        }
+        let mut edges = Vec::new();
+        let mut offsets = Vec::with_capacity(n_features + 1);
+        offsets.push(0u32);
+        for (f, mut ts) in per.into_iter().enumerate() {
+            assert!(
+                !(is_cat[f] && !ts.is_empty()),
+                "feature {f} is split both numerically and categorically; cannot quantize"
+            );
+            ts.sort_by(|a, b| a.partial_cmp(b).expect("split thresholds are finite"));
+            ts.dedup();
+            assert!(
+                ts.len() <= u16::MAX as usize - 1,
+                "feature {f} has {} distinct thresholds; v2q codes cap at {}",
+                ts.len(),
+                u16::MAX - 1
+            );
+            edges.extend_from_slice(&ts);
+            offsets.push(edges.len() as u32);
+        }
+        QuantMap { edges, offsets, is_cat }
+    }
+
+    #[inline]
+    fn edges_of(&self, f: usize) -> &[f32] {
+        &self.edges[self.offsets[f] as usize..self.offsets[f + 1] as usize]
+    }
+
+    /// Bin code of value `x` of feature `f` (see type docs).
+    #[inline]
+    fn code_of(&self, f: usize, x: f32) -> u16 {
+        if x.is_nan() {
+            return 0;
+        }
+        if self.is_cat[f] {
+            let id = x as i64;
+            if id >= 0 && id < 256 && id as f32 == x {
+                (id + 2) as u16
+            } else {
+                1
+            }
+        } else {
+            (1 + self.edges_of(f).partition_point(|&e| e < x)) as u16
+        }
+    }
+
+    /// Code stored in a numeric node whose threshold is `t` (which is
+    /// guaranteed to be one of feature `f`'s edges).
+    fn code_of_threshold(&self, f: usize, t: f32) -> u32 {
+        1 + self.edges_of(f).partition_point(|&e| e < t) as u32
+    }
+
+    /// Recover the f32 threshold a numeric node's code stands for (used
+    /// by the per-row float walker, which has no quantized row).
+    #[inline]
+    fn threshold_of(&self, f: usize, code: u32) -> f32 {
+        self.edges_of(f)[(code - 1) as usize]
+    }
+
+    /// Quantize a row-major block (`n_rows` rows of `width` features)
+    /// into `codes`, same shape. Features beyond the tables (the model
+    /// never splits on them) code as 0.
+    fn quantize_tile(&self, tile: &[f32], width: usize, n_rows: usize, codes: &mut Vec<u16>) {
+        codes.clear();
+        codes.resize(n_rows * width, 0);
+        let nf = self.offsets.len() - 1;
+        for i in 0..n_rows {
+            let row = &tile[i * width..(i + 1) * width];
+            let dst = &mut codes[i * width..(i + 1) * width];
+            for f in 0..width.min(nf) {
+                dst[f] = self.code_of(f, row[f]);
+            }
+        }
+    }
+}
+
+/// The original parallel-arrays node storage (layout V1, and the
+/// intermediate every compile goes through).
+#[derive(Clone, Debug, Default)]
+struct SoaNodes {
+    feature: Vec<u32>,
+    threshold: Vec<f32>,
+    /// where NaN routes at this node (1 = left)
+    default_left: Vec<u8>,
+    /// `>= 0`: index into `cat_sets` (categorical node); `-1`: numeric
+    cat_idx: Vec<i32>,
+    /// children keep the tree-local encoding: `>= 0` is a node index
+    /// relative to the tree's first node, `< 0` encodes leaf `!child`.
+    left: Vec<i32>,
+    right: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+enum Nodes {
+    V1(SoaNodes),
+    V2 { recs: Vec<NodeRec> },
+    V2Q { recs: Vec<NodeRec>, map: QuantMap },
+}
+
+/// Leaf-value storage: f32 (exact) or compressed binary16 bits.
+#[derive(Clone, Debug)]
+enum Leaves {
+    Exact(Vec<f32>),
+    Half(Vec<u16>),
+}
+
+impl Leaves {
+    fn len(&self) -> usize {
+        match self {
+            Leaves::Exact(v) => v.len(),
+            Leaves::Half(v) => v.len(),
+        }
+    }
+}
+
+/// Rows per micro-tile in the branch-free v2 walk: enough independent
+/// traversal chains to hide load latency and feed auto-vectorization,
+/// small enough that the cursor array lives in registers.
+const LANES: usize = 8;
 
 /// A tree ensemble compiled for batched inference (see module docs).
 ///
@@ -32,18 +366,10 @@ use crate::tree::tree::{CatSet, Tree};
 pub struct FlatForest {
     pub n_outputs: usize,
     pub base_score: Vec<f32>,
-    // --- per-node SoA, all trees packed back-to-back ---------------------
-    feature: Vec<u32>,
-    threshold: Vec<f32>,
-    /// where NaN routes at this node (1 = left)
-    default_left: Vec<u8>,
-    /// `>= 0`: index into `cat_sets` (categorical node); `-1`: numeric
-    cat_idx: Vec<i32>,
-    /// children keep the tree-local encoding: `>= 0` is a node index
-    /// relative to the tree's first node, `< 0` encodes leaf `!child`.
-    left: Vec<i32>,
-    right: Vec<i32>,
-    /// pooled category sets referenced by `cat_idx` (typically few)
+    layout: ForestLayout,
+    /// per-node storage, all trees packed back-to-back (layout-dependent)
+    nodes: Nodes,
+    /// pooled category sets referenced by categorical nodes (typically few)
     cat_sets: Vec<CatSet>,
     // --- per-tree offset tables (len n_trees + 1) ------------------------
     node_offset: Vec<u32>,
@@ -52,10 +378,16 @@ pub struct FlatForest {
     /// scalar leaf added into output column `j` (one-vs-all trees).
     out_col: Vec<i32>,
     /// all trees' leaf values, concatenated (`value_offset` indexes in)
-    leaf_values: Vec<f32>,
+    leaves: Leaves,
+    /// per tree: non-empty, all-numeric, all-default-left — eligible
+    /// for the branch-free micro-tiled walk (v2 layouts only)
+    hot: Vec<bool>,
     /// 1 + the largest feature index any node references (0 if all
     /// trees are stumps); prediction validates input width against it
     n_features_required: usize,
+    /// worst-case |exact - compressed| over any output cell introduced
+    /// by f16 leaf compression (0.0 for exact leaves / V1 / V2Exact)
+    leaf_quant_error: f32,
 }
 
 impl FlatForest {
@@ -64,32 +396,35 @@ impl FlatForest {
         FlatForest {
             n_outputs,
             base_score,
-            feature: Vec::new(),
-            threshold: Vec::new(),
-            default_left: Vec::new(),
-            cat_idx: Vec::new(),
-            left: Vec::new(),
-            right: Vec::new(),
+            layout: ForestLayout::V1,
+            nodes: Nodes::V1(SoaNodes::default()),
             cat_sets: Vec::new(),
             node_offset: vec![0],
             value_offset: vec![0],
             out_col: Vec::new(),
-            leaf_values: Vec::new(),
+            leaves: Leaves::Exact(Vec::new()),
+            hot: Vec::new(),
             n_features_required: 0,
+            leaf_quant_error: 0.0,
         }
     }
 
     fn reserve(&mut self, n_nodes: usize, n_values: usize, n_trees: usize) {
-        self.feature.reserve(n_nodes);
-        self.threshold.reserve(n_nodes);
-        self.default_left.reserve(n_nodes);
-        self.cat_idx.reserve(n_nodes);
-        self.left.reserve(n_nodes);
-        self.right.reserve(n_nodes);
-        self.leaf_values.reserve(n_values);
+        if let Nodes::V1(soa) = &mut self.nodes {
+            soa.feature.reserve(n_nodes);
+            soa.threshold.reserve(n_nodes);
+            soa.default_left.reserve(n_nodes);
+            soa.cat_idx.reserve(n_nodes);
+            soa.left.reserve(n_nodes);
+            soa.right.reserve(n_nodes);
+        }
+        if let Leaves::Exact(vals) = &mut self.leaves {
+            vals.reserve(n_values);
+        }
         self.node_offset.reserve(n_trees);
         self.value_offset.reserve(n_trees);
         self.out_col.reserve(n_trees);
+        self.hot.reserve(n_trees);
     }
 
     /// Append one tree. `out_col = None` for a vector-leaf tree (must
@@ -104,29 +439,40 @@ impl FlatForest {
             }
         }
         debug_assert!(tree.validate().is_ok());
+        let soa = match &mut self.nodes {
+            Nodes::V1(soa) => soa,
+            _ => unreachable!("trees are appended before layout conversion"),
+        };
+        let mut hot = !tree.nodes.is_empty();
         for nd in &tree.nodes {
-            self.feature.push(nd.feature);
-            self.threshold.push(nd.threshold);
-            self.default_left.push(u8::from(nd.default_left));
-            self.cat_idx.push(match &nd.cats {
+            soa.feature.push(nd.feature);
+            soa.threshold.push(nd.threshold);
+            soa.default_left.push(u8::from(nd.default_left));
+            soa.cat_idx.push(match &nd.cats {
                 Some(cats) => {
                     self.cat_sets.push(*cats);
                     (self.cat_sets.len() - 1) as i32
                 }
                 None => -1,
             });
-            self.left.push(nd.left);
-            self.right.push(nd.right);
+            soa.left.push(nd.left);
+            soa.right.push(nd.right);
+            hot &= nd.cats.is_none() && nd.default_left;
             self.n_features_required = self.n_features_required.max(nd.feature as usize + 1);
         }
-        self.leaf_values.extend_from_slice(&tree.leaf_values);
-        self.node_offset.push(self.feature.len() as u32);
-        self.value_offset.push(self.leaf_values.len() as u32);
+        match &mut self.leaves {
+            Leaves::Exact(vals) => vals.extend_from_slice(&tree.leaf_values),
+            Leaves::Half(_) => unreachable!("trees are appended before leaf compression"),
+        }
+        self.node_offset.push(soa.feature.len() as u32);
+        self.value_offset.push(self.leaves.len() as u32);
         self.out_col.push(out_col.map_or(-1, |j| j as i32));
+        self.hot.push(hot);
     }
 
-    /// Compile a trained single-tree-strategy model.
-    pub fn from_ensemble(model: &Ensemble) -> FlatForest {
+    /// Compile a trained single-tree-strategy model in the requested
+    /// layout.
+    pub fn compile(model: &Ensemble, opts: LayoutOptions) -> FlatForest {
         let mut ff = FlatForest::empty(model.n_outputs, model.base_score.clone());
         ff.reserve(
             model.trees.iter().map(|t| t.nodes.len()).sum(),
@@ -136,12 +482,13 @@ impl FlatForest {
         for tree in &model.trees {
             ff.push_tree(tree, None);
         }
+        ff.apply_layout(opts);
         ff
     }
 
     /// Compile a one-vs-all baseline model (univariate trees tagged with
-    /// their output column).
-    pub fn from_ova(model: &OvaModel) -> FlatForest {
+    /// their output column) in the requested layout.
+    pub fn compile_ova(model: &OvaModel, opts: LayoutOptions) -> FlatForest {
         let mut ff = FlatForest::empty(model.n_outputs, model.base_score.clone());
         ff.reserve(
             model.trees.iter().map(|(_, t)| t.nodes.len()).sum(),
@@ -151,7 +498,113 @@ impl FlatForest {
         for (j, tree) in &model.trees {
             ff.push_tree(tree, Some(*j as usize));
         }
+        ff.apply_layout(opts);
         ff
+    }
+
+    /// [`FlatForest::compile`] with the compatibility default (V1).
+    pub fn from_ensemble(model: &Ensemble) -> FlatForest {
+        FlatForest::compile(model, LayoutOptions::default())
+    }
+
+    /// [`FlatForest::compile_ova`] with the compatibility default (V1).
+    pub fn from_ova(model: &OvaModel) -> FlatForest {
+        FlatForest::compile_ova(model, LayoutOptions::default())
+    }
+
+    /// Convert the freshly-built V1 arrays into the requested layout.
+    fn apply_layout(&mut self, opts: LayoutOptions) {
+        if opts.layout == ForestLayout::V1 {
+            return;
+        }
+        let soa = match std::mem::replace(&mut self.nodes, Nodes::V1(SoaNodes::default())) {
+            Nodes::V1(soa) => soa,
+            _ => unreachable!("apply_layout runs once, on V1 arrays"),
+        };
+        let rec_of = |i: usize, key: u32| -> NodeRec {
+            let f = soa.feature[i];
+            assert!(f <= FEAT_MASK, "feature index {f} overflows the v2 node record");
+            let mut ffl = f;
+            if soa.cat_idx[i] >= 0 {
+                ffl |= CAT_BIT;
+            }
+            if soa.default_left[i] != 0 {
+                ffl |= DEFAULT_LEFT_BIT;
+            }
+            NodeRec { ffl, key, left: soa.left[i], right: soa.right[i] }
+        };
+        match opts.layout {
+            ForestLayout::V2Exact => {
+                let recs = (0..soa.feature.len())
+                    .map(|i| {
+                        let key = if soa.cat_idx[i] >= 0 {
+                            soa.cat_idx[i] as u32
+                        } else {
+                            soa.threshold[i].to_bits()
+                        };
+                        rec_of(i, key)
+                    })
+                    .collect();
+                self.nodes = Nodes::V2 { recs };
+            }
+            ForestLayout::V2Quantized => {
+                let map = QuantMap::build(&soa, self.n_features_required);
+                let recs = (0..soa.feature.len())
+                    .map(|i| {
+                        let key = if soa.cat_idx[i] >= 0 {
+                            soa.cat_idx[i] as u32
+                        } else {
+                            map.code_of_threshold(soa.feature[i] as usize, soa.threshold[i])
+                        };
+                        rec_of(i, key)
+                    })
+                    .collect();
+                self.nodes = Nodes::V2Q { recs, map };
+                if !opts.exact_leaves {
+                    self.compress_leaves();
+                }
+            }
+            ForestLayout::V1 => unreachable!(),
+        }
+        self.layout = opts.layout;
+    }
+
+    /// Replace f32 leaves with binary16 bits and record the worst-case
+    /// per-cell output error: each row receives exactly one leaf per
+    /// tree, so summing every tree's largest encode error bounds |Δ| of
+    /// any output cell (up to f32 accumulation slop).
+    fn compress_leaves(&mut self) {
+        let exact = match &self.leaves {
+            Leaves::Exact(vals) => vals,
+            Leaves::Half(_) => return,
+        };
+        let mut half = Vec::with_capacity(exact.len());
+        let mut bound = 0.0f32;
+        for t in 0..self.n_trees() {
+            let lo = self.value_offset[t] as usize;
+            let hi = self.value_offset[t + 1] as usize;
+            let mut worst = 0.0f32;
+            for &v in &exact[lo..hi] {
+                let h = f32_to_f16_bits(v);
+                half.push(h);
+                worst = worst.max((v - f16_bits_to_f32(h)).abs());
+            }
+            bound += worst;
+        }
+        self.leaves = Leaves::Half(half);
+        self.leaf_quant_error = bound;
+    }
+
+    /// The layout this forest was compiled into.
+    pub fn layout(&self) -> ForestLayout {
+        self.layout
+    }
+
+    /// Worst-case absolute output error any cell can accrue from f16
+    /// leaf compression; 0.0 for exact-leaf layouts. Thresholds never
+    /// contribute: quantized routing is exact by construction.
+    pub fn leaf_quant_error(&self) -> f32 {
+        self.leaf_quant_error
     }
 
     pub fn n_trees(&self) -> usize {
@@ -159,7 +612,7 @@ impl FlatForest {
     }
 
     pub fn n_nodes(&self) -> usize {
-        self.feature.len()
+        *self.node_offset.last().unwrap() as usize
     }
 
     /// Minimum input feature width any prediction row must have
@@ -171,31 +624,206 @@ impl FlatForest {
     /// Leaf index of `row` (row-major feature values) in tree `t` — the
     /// flat-array mirror of [`Tree::leaf_for_raw`]: NaN routes by the
     /// node's learned default, categorical nodes by set membership.
+    /// Identical in every layout (V2Quantized recovers the f32
+    /// threshold its code stands for).
     #[inline]
     pub fn leaf_of(&self, t: usize, row: &[f32]) -> usize {
         let base = self.node_offset[t] as usize;
         if base == self.node_offset[t + 1] as usize {
             return 0; // stump: single leaf
         }
+        match &self.nodes {
+            Nodes::V1(soa) => self.leaf_of_v1(soa, base, row),
+            Nodes::V2 { recs } => self.leaf_of_v2(recs, base, row, None),
+            Nodes::V2Q { recs, map } => self.leaf_of_v2(recs, base, row, Some(map)),
+        }
+    }
+
+    fn leaf_of_v1(&self, soa: &SoaNodes, base: usize, row: &[f32]) -> usize {
         let mut child: i32 = 0; // tree-local node index
         loop {
             let i = base + child as usize;
-            let x = row[self.feature[i] as usize];
+            let x = row[soa.feature[i] as usize];
             let go_left = if x.is_nan() {
-                self.default_left[i] != 0
+                soa.default_left[i] != 0
             } else {
-                let ci = self.cat_idx[i];
+                let ci = soa.cat_idx[i];
                 if ci >= 0 {
                     self.cat_sets[ci as usize].contains_value(x)
                 } else {
-                    x <= self.threshold[i]
+                    x <= soa.threshold[i]
                 }
             };
-            let next = if go_left { self.left[i] } else { self.right[i] };
+            let next = if go_left { soa.left[i] } else { soa.right[i] };
             if next < 0 {
                 return !next as usize;
             }
             child = next;
+        }
+    }
+
+    fn leaf_of_v2(
+        &self,
+        recs: &[NodeRec],
+        base: usize,
+        row: &[f32],
+        map: Option<&QuantMap>,
+    ) -> usize {
+        let mut child: i32 = 0;
+        loop {
+            let r = &recs[base + child as usize];
+            let f = (r.ffl & FEAT_MASK) as usize;
+            let x = row[f];
+            let go_left = if x.is_nan() {
+                r.ffl & DEFAULT_LEFT_BIT != 0
+            } else if r.ffl & CAT_BIT != 0 {
+                self.cat_sets[r.key as usize].contains_value(x)
+            } else {
+                let t = match map {
+                    Some(m) => m.threshold_of(f, r.key),
+                    None => f32::from_bits(r.key),
+                };
+                x <= t
+            };
+            let next = if go_left { r.left } else { r.right };
+            if next < 0 {
+                return !next as usize;
+            }
+            child = next;
+        }
+    }
+
+    /// Quantized-row walker: same routing as [`FlatForest::leaf_of`],
+    /// driven by pre-computed bin codes instead of floats.
+    fn leaf_of_codes(&self, recs: &[NodeRec], base: usize, codes: &[u16]) -> usize {
+        let mut child: i32 = 0;
+        loop {
+            let r = &recs[base + child as usize];
+            let c = codes[(r.ffl & FEAT_MASK) as usize] as u32;
+            let go_left = if c == 0 {
+                r.ffl & DEFAULT_LEFT_BIT != 0
+            } else if r.ffl & CAT_BIT != 0 {
+                c >= 2 && self.cat_sets[r.key as usize].contains(c - 2)
+            } else {
+                c <= r.key
+            };
+            let next = if go_left { r.left } else { r.right };
+            if next < 0 {
+                return !next as usize;
+            }
+            child = next;
+        }
+    }
+
+    /// Add every tree's leaf contribution for a row-major block into
+    /// `out` (which the caller has already seeded with the base score).
+    /// Per output cell, trees accumulate in ascending order in **every**
+    /// layout — the determinism contract `predict_block_into` documents.
+    pub(crate) fn accumulate_block(
+        &self,
+        tile: &[f32],
+        width: usize,
+        n_rows: usize,
+        out: &mut [f32],
+    ) {
+        match &self.nodes {
+            Nodes::V1(_) => {
+                let d = self.n_outputs;
+                for t in 0..self.n_trees() {
+                    for i in 0..n_rows {
+                        let leaf = self.leaf_of(t, &tile[i * width..(i + 1) * width]);
+                        self.add_leaf(t, leaf, &mut out[i * d..(i + 1) * d]);
+                    }
+                }
+            }
+            Nodes::V2 { recs } => self.accumulate_v2(recs, None, tile, width, n_rows, out),
+            Nodes::V2Q { recs, map } => with_code_scratch(|codes| {
+                map.quantize_tile(tile, width, n_rows, codes);
+                self.accumulate_v2(recs, Some((map, codes)), tile, width, n_rows, out);
+            }),
+        }
+    }
+
+    /// Layout-v2 block walk: tree-major like V1, but trees flagged
+    /// `hot` (non-empty, all numeric, all default-left) route
+    /// [`LANES`] rows at once through a branch-free cursor loop — the
+    /// select compiles to `cmp`+`cmov`/blend and the 8 independent
+    /// chains keep the load ports busy. `quant` carries the bin-code
+    /// tile for V2Quantized; `None` means V2Exact (float compares).
+    fn accumulate_v2(
+        &self,
+        recs: &[NodeRec],
+        quant: Option<(&QuantMap, &[u16])>,
+        tile: &[f32],
+        width: usize,
+        n_rows: usize,
+        out: &mut [f32],
+    ) {
+        let d = self.n_outputs;
+        for t in 0..self.n_trees() {
+            let base = self.node_offset[t] as usize;
+            if base == self.node_offset[t + 1] as usize {
+                for i in 0..n_rows {
+                    self.add_leaf(t, 0, &mut out[i * d..(i + 1) * d]);
+                }
+                continue;
+            }
+            if self.hot[t] {
+                let mut i = 0;
+                while i + LANES <= n_rows {
+                    let mut cur = [0i32; LANES];
+                    loop {
+                        let mut live = false;
+                        for (l, c) in cur.iter_mut().enumerate() {
+                            let r = recs[base + c.max(0) as usize];
+                            let f = (r.ffl & FEAT_MASK) as usize;
+                            let go_right = match quant {
+                                None => tile[(i + l) * width + f] > f32::from_bits(r.key),
+                                Some((_, codes)) => {
+                                    codes[(i + l) * width + f] as u32 > r.key
+                                }
+                            };
+                            // NaN: `x > t` is false, and a bin code of 0
+                            // is <= any node code — either way the row
+                            // goes left, the hot tree's default.
+                            let next = if go_right { r.right } else { r.left };
+                            *c = if *c < 0 { *c } else { next };
+                            live |= *c >= 0;
+                        }
+                        if !live {
+                            break;
+                        }
+                    }
+                    for (l, c) in cur.iter().enumerate() {
+                        let row = i + l;
+                        self.add_leaf(t, !*c as usize, &mut out[row * d..(row + 1) * d]);
+                    }
+                    i += LANES;
+                }
+                for i in i..n_rows {
+                    let leaf = match quant {
+                        None => {
+                            self.leaf_of_v2(recs, base, &tile[i * width..(i + 1) * width], None)
+                        }
+                        Some((_, codes)) => {
+                            self.leaf_of_codes(recs, base, &codes[i * width..(i + 1) * width])
+                        }
+                    };
+                    self.add_leaf(t, leaf, &mut out[i * d..(i + 1) * d]);
+                }
+            } else {
+                for i in 0..n_rows {
+                    let leaf = match quant {
+                        None => {
+                            self.leaf_of_v2(recs, base, &tile[i * width..(i + 1) * width], None)
+                        }
+                        Some((_, codes)) => {
+                            self.leaf_of_codes(recs, base, &codes[i * width..(i + 1) * width])
+                        }
+                    };
+                    self.add_leaf(t, leaf, &mut out[i * d..(i + 1) * d]);
+                }
+            }
         }
     }
 
@@ -205,14 +833,29 @@ impl FlatForest {
     pub fn add_leaf(&self, t: usize, leaf: usize, out: &mut [f32]) {
         let vo = self.value_offset[t] as usize;
         let col = self.out_col[t];
-        if col < 0 {
-            let d = self.n_outputs;
-            let v = &self.leaf_values[vo + leaf * d..vo + (leaf + 1) * d];
-            for (o, &lv) in out.iter_mut().zip(v.iter()) {
-                *o += lv;
+        match &self.leaves {
+            Leaves::Exact(vals) => {
+                if col < 0 {
+                    let d = self.n_outputs;
+                    let v = &vals[vo + leaf * d..vo + (leaf + 1) * d];
+                    for (o, &lv) in out.iter_mut().zip(v.iter()) {
+                        *o += lv;
+                    }
+                } else {
+                    out[col as usize] += vals[vo + leaf];
+                }
             }
-        } else {
-            out[col as usize] += self.leaf_values[vo + leaf];
+            Leaves::Half(vals) => {
+                if col < 0 {
+                    let d = self.n_outputs;
+                    let v = &vals[vo + leaf * d..vo + (leaf + 1) * d];
+                    for (o, &h) in out.iter_mut().zip(v.iter()) {
+                        *o += f16_bits_to_f32(h);
+                    }
+                } else {
+                    out[col as usize] += f16_bits_to_f32(vals[vo + leaf]);
+                }
+            }
         }
     }
 
@@ -224,50 +867,14 @@ impl FlatForest {
     }
 }
 
-/// A hot-swappable handle to the forest being served.
-///
-/// Readers take an `Arc` snapshot and score against it for as long as
-/// they like; [`SharedForest::swap`] flips the shared pointer to a new
-/// forest without waiting for readers, so a swap can never tear a
-/// snapshot mid-batch — a reader either holds the old forest entirely
-/// or the new one entirely. The old forest is freed when its last
-/// in-flight snapshot drops. A monotone version counter identifies
-/// which model produced a given response (`serve` reports it under
-/// `/stats`).
-#[derive(Debug)]
-pub struct SharedForest {
-    current: std::sync::Mutex<std::sync::Arc<FlatForest>>,
-    version: std::sync::atomic::AtomicU64,
-}
-
-impl SharedForest {
-    /// Wrap `forest` as version 1.
-    pub fn new(forest: FlatForest) -> SharedForest {
-        SharedForest {
-            current: std::sync::Mutex::new(std::sync::Arc::new(forest)),
-            version: std::sync::atomic::AtomicU64::new(1),
-        }
+/// Run `f` with this thread's reusable bin-code scratch buffer (the
+/// quantized mirror of a block tile; one per worker thread, reused
+/// across blocks so the hot loop never allocates).
+fn with_code_scratch<R>(f: impl FnOnce(&mut Vec<u16>) -> R) -> R {
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<Vec<u16>> = std::cell::RefCell::new(Vec::new());
     }
-
-    /// The forest to score the next batch against. The lock is held only
-    /// long enough to clone the `Arc` (pointer-sized critical section).
-    pub fn snapshot(&self) -> std::sync::Arc<FlatForest> {
-        self.current.lock().unwrap().clone()
-    }
-
-    /// Version of the forest currently installed (starts at 1, bumps on
-    /// every [`SharedForest::swap`]).
-    pub fn version(&self) -> u64 {
-        self.version.load(std::sync::atomic::Ordering::Acquire)
-    }
-
-    /// Install `forest` as the new current model and return its version.
-    /// In-flight snapshots keep the old forest alive until they drop.
-    pub fn swap(&self, forest: FlatForest) -> u64 {
-        let mut cur = self.current.lock().unwrap();
-        *cur = std::sync::Arc::new(forest);
-        self.version.fetch_add(1, std::sync::atomic::Ordering::AcqRel) + 1
-    }
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 #[cfg(test)]
@@ -276,6 +883,15 @@ mod tests {
     use crate::boosting::ensemble::TrainHistory;
     use crate::boosting::losses::LossKind;
     use crate::tree::tree::{encode_leaf, TreeNode};
+
+    fn all_layouts() -> [LayoutOptions; 4] {
+        [
+            LayoutOptions::v1(),
+            LayoutOptions::v2_exact(),
+            LayoutOptions::v2_quantized(),
+            LayoutOptions::v2_quantized().with_exact_leaves(true),
+        ]
+    }
 
     /// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2), d = 2; NaN at
     /// the root defaults left, at the inner node right
@@ -305,28 +921,32 @@ mod tests {
     }
 
     #[test]
-    fn routing_matches_per_row_walker() {
+    fn routing_matches_per_row_walker_in_every_layout() {
         let model = toy_model();
-        let ff = FlatForest::from_ensemble(&model);
-        assert_eq!(ff.n_trees(), 2);
-        assert_eq!(ff.n_nodes(), 2);
-        assert_eq!(ff.n_leaves(0), 3);
-        assert_eq!(ff.n_leaves(1), 1);
-        for row in [
-            vec![0.0f32, 0.0],
-            vec![1.0, 1.0],
-            vec![1.0, 5.0],
-            vec![0.5, 9.0],          // boundary goes left
-            vec![f32::NAN, 9.0],     // NaN defaults left at the root
-            vec![1.0, f32::NAN],     // NaN defaults right at the inner node
-            vec![f32::NAN, f32::NAN],
-        ] {
-            for t in 0..2 {
-                assert_eq!(
-                    ff.leaf_of(t, &row),
-                    model.trees[t].leaf_for_raw(&row),
-                    "row {row:?} tree {t}"
-                );
+        for opts in all_layouts() {
+            let ff = FlatForest::compile(&model, opts);
+            assert_eq!(ff.layout(), opts.layout);
+            assert_eq!(ff.n_trees(), 2);
+            assert_eq!(ff.n_nodes(), 2);
+            assert_eq!(ff.n_leaves(0), 3);
+            assert_eq!(ff.n_leaves(1), 1);
+            for row in [
+                vec![0.0f32, 0.0],
+                vec![1.0, 1.0],
+                vec![1.0, 5.0],
+                vec![0.5, 9.0],          // boundary goes left
+                vec![f32::NAN, 9.0],     // NaN defaults left at the root
+                vec![1.0, f32::NAN],     // NaN defaults right at the inner node
+                vec![f32::NAN, f32::NAN],
+            ] {
+                for t in 0..2 {
+                    assert_eq!(
+                        ff.leaf_of(t, &row),
+                        model.trees[t].leaf_for_raw(&row),
+                        "row {row:?} tree {t} layout {:?}",
+                        opts.layout
+                    );
+                }
             }
         }
     }
@@ -335,6 +955,7 @@ mod tests {
     fn tracks_required_feature_width() {
         let model = toy_model();
         let ff = FlatForest::from_ensemble(&model);
+        assert_eq!(ff.layout(), ForestLayout::V1); // compatibility default
         assert_eq!(ff.n_features_required(), 2); // splits on f0 and f1
         let stump_only = Ensemble {
             trees: vec![Tree { n_outputs: 2, nodes: vec![], leaf_values: vec![0.0, 0.0], n_leaves: 1 }],
@@ -354,10 +975,12 @@ mod tests {
     }
 
     #[test]
-    fn categorical_nodes_route_by_pooled_sets() {
+    fn categorical_nodes_route_by_pooled_sets_in_every_layout() {
         use crate::tree::tree::CatSet;
         // tree 0: cat feature 0, ids {1, 3} left, missing right;
-        // tree 1: numeric (exercises the -1 cat_idx path next to a pooled set)
+        // tree 1: numeric splits on f1/f2 (exercises the numeric path
+        // next to a pooled set; distinct features keep f0 purely
+        // categorical so the quantized layout accepts the model)
         let cat_tree = Tree {
             n_outputs: 2,
             nodes: vec![TreeNode {
@@ -373,34 +996,49 @@ mod tests {
             leaf_values: vec![1.0, 1.0, -1.0, -1.0],
             n_leaves: 2,
         };
+        let num_tree = Tree {
+            n_outputs: 2,
+            nodes: vec![
+                TreeNode { feature: 1, bin: 3, threshold: 0.5, default_left: true, cats: None, left: encode_leaf(0), right: 1, gain: 1.0 },
+                TreeNode { feature: 2, bin: 1, threshold: 2.0, default_left: false, cats: None, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
+            ],
+            leaf_values: vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0],
+            n_leaves: 3,
+        };
         let model = Ensemble {
             loss: LossKind::MSE,
             n_outputs: 2,
             base_score: vec![0.0, 0.0],
-            trees: vec![cat_tree, toy_tree()],
+            trees: vec![cat_tree, num_tree],
             history: TrainHistory::default(),
         };
-        let ff = FlatForest::from_ensemble(&model);
-        for row in [
-            vec![1.0f32, 0.0],
-            vec![3.0, 5.0],
-            vec![0.0, 1.0],
-            vec![2.5, 1.0],          // non-integer: not a member -> right
-            vec![9.0, 1.0],          // unseen id -> right
-            vec![f32::NAN, 1.0],     // missing -> default right
-        ] {
-            for t in 0..2 {
-                assert_eq!(
-                    ff.leaf_of(t, &row),
-                    model.trees[t].leaf_for_raw(&row),
-                    "row {row:?} tree {t}"
-                );
+        for opts in all_layouts() {
+            let ff = FlatForest::compile(&model, opts);
+            for row in [
+                vec![1.0f32, 0.0, 0.0],
+                vec![3.0, 5.0, 5.0],
+                vec![0.0, 1.0, 1.0],
+                vec![2.5, 1.0, 3.0],          // non-integer: not a member -> right
+                vec![9.0, 1.0, 2.0],          // unseen id -> right
+                vec![255.0, 1.0, 2.0],        // edge of the id range
+                vec![256.0, 1.0, 2.0],        // just past it -> right
+                vec![-1.0, 1.0, 2.0],         // negative -> right
+                vec![f32::NAN, 1.0, 2.0],     // missing -> default right
+            ] {
+                for t in 0..2 {
+                    assert_eq!(
+                        ff.leaf_of(t, &row),
+                        model.trees[t].leaf_for_raw(&row),
+                        "row {row:?} tree {t} layout {:?}",
+                        opts.layout
+                    );
+                }
             }
         }
     }
 
     #[test]
-    fn ova_trees_write_one_column() {
+    fn ova_trees_write_one_column_in_every_layout() {
         let uni = Tree {
             n_outputs: 1,
             nodes: vec![TreeNode {
@@ -423,13 +1061,15 @@ mod tests {
             trees: vec![(2, uni.clone()), (0, uni)],
             history: TrainHistory::default(),
         };
-        let ff = FlatForest::from_ova(&ova);
-        assert_eq!(ff.n_trees(), 2);
-        assert_eq!(ff.n_leaves(0), 2);
-        let mut out = vec![0.0f32; 3];
-        ff.add_leaf(0, ff.leaf_of(0, &[1.0]), &mut out); // right leaf -> col 2
-        ff.add_leaf(1, ff.leaf_of(1, &[-1.0]), &mut out); // left leaf -> col 0
-        assert_eq!(out, vec![-5.0, 0.0, 5.0]);
+        for opts in all_layouts() {
+            let ff = FlatForest::compile_ova(&ova, opts);
+            assert_eq!(ff.n_trees(), 2);
+            assert_eq!(ff.n_leaves(0), 2);
+            let mut out = vec![0.0f32; 3];
+            ff.add_leaf(0, ff.leaf_of(0, &[1.0]), &mut out); // right leaf -> col 2
+            ff.add_leaf(1, ff.leaf_of(1, &[-1.0]), &mut out); // left leaf -> col 0
+            assert_eq!(out, vec![-5.0, 0.0, 5.0], "layout {:?}", opts.layout);
+        }
     }
 
     #[test]
@@ -440,22 +1080,145 @@ mod tests {
     }
 
     #[test]
-    fn shared_forest_swaps_without_tearing_snapshots() {
-        let shared = SharedForest::new(FlatForest::from_ensemble(&toy_model()));
-        assert_eq!(shared.version(), 1);
-        let old = shared.snapshot();
-        let stump_only = Ensemble {
-            trees: vec![Tree { n_outputs: 2, nodes: vec![], leaf_values: vec![9.0, 9.0], n_leaves: 1 }],
-            ..toy_model()
+    fn layout_spellings_round_trip() {
+        for l in [ForestLayout::V1, ForestLayout::V2Exact, ForestLayout::V2Quantized] {
+            assert_eq!(ForestLayout::parse(l.as_str()), Ok(l));
+        }
+        assert!(ForestLayout::parse("v3").is_err());
+        assert_eq!(ForestLayout::default(), ForestLayout::V1);
+    }
+
+    #[test]
+    fn f16_round_trip_and_rounding() {
+        // exactly representable values survive the round trip
+        for v in [0.0f32, -0.0, 1.0, -2.5, 0.5, 65504.0, -65504.0, 6.103_515_6e-5] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back.to_bits(), v.to_bits(), "value {v}");
+        }
+        // signed zero keeps its sign
+        assert!(f16_bits_to_f32(f32_to_f16_bits(-0.0)).is_sign_negative());
+        // round-to-nearest-even at the half-ulp boundary: 1 + 2^-11 ties
+        // to even (1.0); 1 + 3*2^-11 ties up to 1 + 2^-9... check both
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0 + 0.000_488_281_25)), 1.0);
+        let up = f16_bits_to_f32(f32_to_f16_bits(1.0 + 3.0 * 0.000_488_281_25));
+        assert_eq!(up, 1.0 + 2.0 * 0.000_976_562_5);
+        // overflow saturates to infinity, NaN stays NaN
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1.0e6)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // subnormal round trip: smallest positive binary16 value
+        let tiny = f16_bits_to_f32(1);
+        assert_eq!(tiny, 5.960_464_5e-8);
+        assert_eq!(f32_to_f16_bits(tiny), 1);
+        // encode error of a non-representable value is within half an ulp
+        let v = 0.1f32;
+        let err = (v - f16_bits_to_f32(f32_to_f16_bits(v))).abs();
+        assert!(err > 0.0 && err <= 0.000_048_83, "err {err}");
+    }
+
+    #[test]
+    fn quantized_codes_reproduce_threshold_compares() {
+        // one feature, thresholds {-1.0, 0.5, 2.0}; codes must order
+        // every probe exactly as the float compares do
+        let model = Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 1,
+            base_score: vec![0.0],
+            trees: vec![Tree {
+                n_outputs: 1,
+                nodes: vec![
+                    TreeNode { feature: 0, bin: 0, threshold: 0.5, default_left: true, cats: None, left: 1, right: 2, gain: 1.0 },
+                    TreeNode { feature: 0, bin: 0, threshold: -1.0, default_left: true, cats: None, left: encode_leaf(0), right: encode_leaf(1), gain: 1.0 },
+                    TreeNode { feature: 0, bin: 0, threshold: 2.0, default_left: false, cats: None, left: encode_leaf(2), right: encode_leaf(3), gain: 1.0 },
+                ],
+                leaf_values: vec![0.0, 1.0, 2.0, 3.0],
+                n_leaves: 4,
+            }],
+            history: TrainHistory::default(),
         };
-        assert_eq!(shared.swap(FlatForest::from_ensemble(&stump_only)), 2);
-        assert_eq!(shared.version(), 2);
-        // the pre-swap snapshot still scores with the old trees
-        assert_eq!(old.n_trees(), 2);
-        let fresh = shared.snapshot();
-        assert_eq!(fresh.n_trees(), 1);
-        let mut out = vec![0.0f32; 2];
-        fresh.add_leaf(0, 0, &mut out);
-        assert_eq!(out, vec![9.0, 9.0]);
+        let ff = FlatForest::compile(&model, LayoutOptions::v2_quantized());
+        let map = match &ff.nodes {
+            Nodes::V2Q { map, .. } => map,
+            _ => unreachable!(),
+        };
+        assert_eq!(map.edges_of(0), &[-1.0, 0.5, 2.0]);
+        // codes: (-inf,-1] -> 1, (-1,0.5] -> 2, (0.5,2] -> 3, (2,inf) -> 4
+        for (x, want) in [
+            (-5.0f32, 1u16), (-1.0, 1), (-0.999, 2), (0.5, 2),
+            (0.500_01, 3), (2.0, 3), (2.000_1, 4), (f32::INFINITY, 4),
+        ] {
+            assert_eq!(map.code_of(0, x), want, "x = {x}");
+        }
+        assert_eq!(map.code_of(0, f32::NAN), 0);
+        // node codes are the threshold ranks + 1
+        assert_eq!(map.code_of_threshold(0, 0.5), 2);
+        assert_eq!(map.threshold_of(0, 2), 0.5);
+        // and routing agrees with the reference walker everywhere
+        for x in [-5.0f32, -1.0, -0.5, 0.5, 0.6, 2.0, 3.0, f32::NAN] {
+            assert_eq!(ff.leaf_of(0, &[x]), model.trees[0].leaf_for_raw(&[x]), "x = {x}");
+        }
+    }
+
+    #[test]
+    fn quantized_block_path_matches_per_row_walker() {
+        // drive accumulate_block directly (the code-tile path) against
+        // leaf_of (the float path) over a mixed default-left tree so
+        // both the hot micro-tile and the scalar code walk run
+        let model = toy_model();
+        for opts in [LayoutOptions::v2_exact(), LayoutOptions::v2_quantized().with_exact_leaves(true)] {
+            let ff = FlatForest::compile(&model, opts);
+            let v1 = FlatForest::from_ensemble(&model);
+            let n_rows = 13; // 8-lane group + 5-row remainder
+            let width = 2;
+            let mut tile = vec![0.0f32; n_rows * width];
+            for i in 0..n_rows {
+                tile[i * width] = (i as f32) * 0.31 - 1.5;
+                tile[i * width + 1] = (i as f32) * 0.77 - 3.0;
+            }
+            tile[5 * width] = f32::NAN;
+            tile[9 * width + 1] = f32::NAN;
+            let mut got = vec![0.0f32; n_rows * 2];
+            let mut want = vec![0.0f32; n_rows * 2];
+            for row in got.chunks_mut(2) {
+                row.copy_from_slice(&ff.base_score);
+            }
+            for row in want.chunks_mut(2) {
+                row.copy_from_slice(&v1.base_score);
+            }
+            ff.accumulate_block(&tile, width, n_rows, &mut got);
+            v1.accumulate_block(&tile, width, n_rows, &mut want);
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "cell {i} layout {:?}", opts.layout);
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_quant_error_bounds_half_precision_leaves() {
+        let model = toy_model();
+        // exact layouts report zero error
+        for opts in [LayoutOptions::v1(), LayoutOptions::v2_exact(), LayoutOptions::v2_quantized().with_exact_leaves(true)] {
+            assert_eq!(FlatForest::compile(&model, opts).leaf_quant_error(), 0.0);
+        }
+        // half-precision leaves: toy values are all f16-representable,
+        // so the bound is 0 and outputs stay exact
+        let ff = FlatForest::compile(&model, LayoutOptions::v2_quantized());
+        assert_eq!(ff.leaf_quant_error(), 0.0);
+        // a non-representable leaf value yields a positive, honest bound
+        let mut skewed = toy_model();
+        skewed.trees[1].leaf_values = vec![0.100_000_024, -0.3];
+        let ffq = FlatForest::compile(&skewed, LayoutOptions::v2_quantized());
+        let bound = ffq.leaf_quant_error();
+        assert!(bound > 0.0 && bound < 1.0e-3, "bound {bound}");
+        let exact = FlatForest::compile(&skewed, LayoutOptions::v2_quantized().with_exact_leaves(true));
+        let mut a = vec![0.0f32; 2];
+        let mut b = vec![0.0f32; 2];
+        a.copy_from_slice(&ffq.base_score);
+        b.copy_from_slice(&exact.base_score);
+        ffq.add_leaf(1, 0, &mut a);
+        exact.add_leaf(1, 0, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= bound, "delta {} bound {bound}", (x - y).abs());
+        }
     }
 }

@@ -2,10 +2,14 @@
 //!
 //! Training optimizes the *fit* hot path; this module is the serving
 //! half: [`FlatForest`] compiles a trained [`Ensemble`](crate::boosting::Ensemble)
-//! (or one-vs-all baseline) into structure-of-arrays node tables, and
-//! the blocked batch driver ([`FlatForest::predict_raw_into`]) streams
-//! cache-sized row blocks through all trees, parallelized over blocks
-//! with the deterministic [`ThreadPool`](crate::util::threading::ThreadPool).
+//! (or one-vs-all baseline) into one of three node layouts (see
+//! [`ForestLayout`]: SoA arrays, interleaved 16-byte records, or
+//! quantized records with integer threshold compares), and the blocked
+//! batch driver ([`FlatForest::predict_raw_into`]) streams cache-sized
+//! row blocks through all trees, parallelized over blocks with the
+//! deterministic [`ThreadPool`](crate::util::threading::ThreadPool).
+//! [`Predictor`] is the front door that owns the compile + scoring
+//! knobs; the serve daemon snapshots it through [`SharedForest`].
 //!
 //! Outputs are bit-identical to the per-row reference walker
 //! ([`Ensemble::predict_raw_naive`](crate::boosting::Ensemble::predict_raw_naive))
@@ -14,6 +18,8 @@
 
 pub mod batch;
 pub mod flat;
+pub mod predictor;
 
 pub use batch::{PredictOptions, DEFAULT_BLOCK_ROWS};
-pub use flat::{FlatForest, SharedForest};
+pub use flat::{FlatForest, ForestLayout, LayoutOptions};
+pub use predictor::{Predictor, SharedForest};

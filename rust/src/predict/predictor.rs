@@ -1,0 +1,263 @@
+//! The unified prediction facade.
+//!
+//! [`Predictor`] is the one front door for scoring a trained model: it
+//! compiles the model into a [`FlatForest`] **once** (in the layout
+//! [`PredictOptions::layout`] requests) and exposes every output the
+//! scattered convenience methods used to produce — raw margins, linked
+//! predictions, leaf indices — against that single compiled forest.
+//! The legacy entry points (`Ensemble::predict_raw/_with/predict/...`,
+//! `OvaModel::predict_raw/...`, `Ensemble::predict_leaf_indices*`) are
+//! kept as `#[doc(hidden)]` delegates onto this facade, so they are
+//! provably pure renames (`rust/tests/predict_equivalence.rs` pins the
+//! bits); the `*_naive` walkers stay public — they are the reference
+//! oracles, not conveniences.
+//!
+//! [`SharedForest`] (the serve daemon's hot-swappable model handle)
+//! lives here too: it hands out `Arc<Predictor>` snapshots so the
+//! serving workers consume the same facade as the offline CLI.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::baselines::one_vs_all::OvaModel;
+use crate::boosting::ensemble::Ensemble;
+use crate::boosting::losses::{self, LossKind};
+use crate::data::dataset::Dataset;
+use crate::predict::batch::PredictOptions;
+use crate::predict::flat::FlatForest;
+
+/// A model compiled for scoring: forest + link + batching knobs.
+///
+/// Construction is the only place layout matters
+/// ([`PredictOptions::layout`] is consumed by
+/// [`FlatForest::compile`]); after that every call scores against the
+/// same compiled forest, so repeated scoring pays the O(total nodes)
+/// compile exactly once — the thing the legacy per-call convenience
+/// methods could not offer.
+#[derive(Clone, Debug)]
+pub struct Predictor {
+    forest: FlatForest,
+    loss: LossKind,
+    opts: PredictOptions,
+}
+
+impl Predictor {
+    /// Compile a single-tree-strategy model for scoring.
+    pub fn compile(model: &Ensemble, opts: PredictOptions) -> Predictor {
+        Predictor {
+            forest: FlatForest::compile(model, opts.layout),
+            loss: model.loss,
+            opts,
+        }
+    }
+
+    /// Compile a one-vs-all baseline model for scoring.
+    pub fn compile_ova(model: &OvaModel, opts: PredictOptions) -> Predictor {
+        Predictor {
+            forest: FlatForest::compile_ova(model, opts.layout),
+            loss: model.loss,
+            opts,
+        }
+    }
+
+    /// Raw scores (margins), row-major `[n_rows, n_outputs]`.
+    pub fn raw(&self, ds: &Dataset) -> Vec<f32> {
+        self.forest.predict_raw(ds, &self.opts)
+    }
+
+    /// Raw scores written into a caller-owned buffer.
+    pub fn raw_into(&self, ds: &Dataset, out: &mut [f32]) {
+        self.forest.predict_raw_into(ds, &self.opts, out)
+    }
+
+    /// Predictions on the loss's output scale (softmax / sigmoid /
+    /// identity — whatever link the model was trained with).
+    pub fn predict(&self, ds: &Dataset) -> Vec<f32> {
+        let mut raw = self.raw(ds);
+        self.apply_link(&mut raw);
+        raw
+    }
+
+    /// Map raw scores to the loss's output scale in place.
+    pub fn apply_link(&self, raw: &mut [f32]) {
+        losses::apply_link(self.loss, raw, self.forest.n_outputs);
+    }
+
+    /// Leaf index of every row in every tree, row-major
+    /// `[n_rows, n_trees]` (the batched "apply" output).
+    pub fn leaf_indices(&self, ds: &Dataset) -> Vec<u32> {
+        self.forest.predict_leaf_indices(ds, &self.opts)
+    }
+
+    /// The compiled forest (serving workers score blocks against it
+    /// directly via [`FlatForest::predict_block_into`]).
+    pub fn forest(&self) -> &FlatForest {
+        &self.forest
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.forest.n_outputs
+    }
+
+    pub fn loss(&self) -> LossKind {
+        self.loss
+    }
+
+    pub fn options(&self) -> &PredictOptions {
+        &self.opts
+    }
+}
+
+/// A hot-swappable handle to the predictor being served.
+///
+/// Readers take an `Arc` snapshot and score against it for as long as
+/// they like; [`SharedForest::swap`] flips the shared pointer to a new
+/// predictor without waiting for readers, so a swap can never tear a
+/// snapshot mid-batch — a reader either holds the old model entirely
+/// or the new one entirely. The old predictor is freed when its last
+/// in-flight snapshot drops. A monotone version counter identifies
+/// which model produced a given response (`serve` reports it under
+/// `/stats`).
+#[derive(Debug)]
+pub struct SharedForest {
+    current: Mutex<Arc<Predictor>>,
+    version: AtomicU64,
+}
+
+impl SharedForest {
+    /// Wrap `pred` as version 1.
+    pub fn new(pred: Predictor) -> SharedForest {
+        SharedForest {
+            current: Mutex::new(Arc::new(pred)),
+            version: AtomicU64::new(1),
+        }
+    }
+
+    /// The predictor to score the next batch against. The lock is held
+    /// only long enough to clone the `Arc` (pointer-sized critical
+    /// section).
+    pub fn snapshot(&self) -> Arc<Predictor> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Version of the model currently installed (starts at 1, bumps on
+    /// every [`SharedForest::swap`]).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Install `pred` as the new current model and return its version.
+    /// In-flight snapshots keep the old predictor alive until they drop.
+    pub fn swap(&self, pred: Predictor) -> u64 {
+        let mut cur = self.current.lock().unwrap();
+        *cur = Arc::new(pred);
+        self.version.fetch_add(1, Ordering::AcqRel) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boosting::ensemble::TrainHistory;
+    use crate::data::dataset::Targets;
+    use crate::predict::flat::{ForestLayout, LayoutOptions};
+    use crate::tree::tree::{encode_leaf, Tree, TreeNode};
+
+    fn toy_model() -> Ensemble {
+        Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 2,
+            base_score: vec![0.25, -0.25],
+            trees: vec![
+                Tree {
+                    n_outputs: 2,
+                    nodes: vec![
+                        TreeNode { feature: 0, bin: 3, threshold: 0.5, default_left: true, cats: None, left: encode_leaf(0), right: 1, gain: 1.0 },
+                        TreeNode { feature: 1, bin: 1, threshold: 2.0, default_left: false, cats: None, left: encode_leaf(1), right: encode_leaf(2), gain: 0.5 },
+                    ],
+                    leaf_values: vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0],
+                    n_leaves: 3,
+                },
+                Tree { n_outputs: 2, nodes: vec![], leaf_values: vec![0.5, 0.5], n_leaves: 1 },
+            ],
+            history: TrainHistory::default(),
+        }
+    }
+
+    fn toy_ds() -> Dataset {
+        let n = 9usize;
+        let mut cols = vec![0.0f32; n * 2];
+        for f in 0..2 {
+            for i in 0..n {
+                cols[f * n + i] = (i as f32) * 0.41 - (f as f32) * 0.9;
+            }
+        }
+        cols[3] = f32::NAN;
+        Dataset::new(n, 2, cols, Targets::Regression { values: vec![0.0; n * 2], n_targets: 2 })
+    }
+
+    #[test]
+    fn facade_matches_legacy_methods_bitwise() {
+        let model = toy_model();
+        let ds = toy_ds();
+        let opts = PredictOptions::threads(2).with_block_rows(3);
+        let pred = Predictor::compile(&model, opts);
+        assert_eq!(pred.raw(&ds), model.predict_raw_with(&ds, &opts));
+        assert_eq!(pred.predict(&ds), model.predict_with(&ds, &opts));
+        assert_eq!(pred.leaf_indices(&ds), model.predict_leaf_indices_with(&ds, &opts));
+        assert_eq!(pred.n_outputs(), 2);
+        assert_eq!(pred.loss(), LossKind::MSE);
+        assert_eq!(pred.options().n_threads, 2);
+    }
+
+    #[test]
+    fn facade_layouts_agree_with_v1_bits() {
+        let model = toy_model();
+        let ds = toy_ds();
+        let want = Predictor::compile(&model, PredictOptions::default()).raw(&ds);
+        for layout in [ForestLayout::V2Exact, ForestLayout::V2Quantized] {
+            let pred = Predictor::compile(
+                &model,
+                PredictOptions::default().with_layout(layout).with_exact_leaves(true),
+            );
+            assert_eq!(pred.forest().layout(), layout);
+            let got = pred.raw(&ds);
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "cell {i} layout {layout:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn compile_honors_layout_options() {
+        let model = toy_model();
+        let opts = PredictOptions {
+            layout: LayoutOptions::v2_quantized(),
+            ..PredictOptions::default()
+        };
+        let pred = Predictor::compile(&model, opts);
+        assert_eq!(pred.forest().layout(), ForestLayout::V2Quantized);
+    }
+
+    #[test]
+    fn shared_forest_swaps_without_tearing_snapshots() {
+        let model = toy_model();
+        let shared = SharedForest::new(Predictor::compile(&model, PredictOptions::default()));
+        assert_eq!(shared.version(), 1);
+        let old = shared.snapshot();
+        let stump_only = Ensemble {
+            trees: vec![Tree { n_outputs: 2, nodes: vec![], leaf_values: vec![9.0, 9.0], n_leaves: 1 }],
+            ..toy_model()
+        };
+        let next = Predictor::compile(&stump_only, PredictOptions::default());
+        assert_eq!(shared.swap(next), 2);
+        assert_eq!(shared.version(), 2);
+        // the pre-swap snapshot still scores with the old trees
+        assert_eq!(old.forest().n_trees(), 2);
+        let fresh = shared.snapshot();
+        assert_eq!(fresh.forest().n_trees(), 1);
+        let mut out = vec![0.0f32; 2];
+        fresh.forest().add_leaf(0, 0, &mut out);
+        assert_eq!(out, vec![9.0, 9.0]);
+    }
+}

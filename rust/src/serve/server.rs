@@ -16,7 +16,8 @@
 //! * **workers** — `n_workers` scoring loops: pull a batch from the
 //!   [`Coalescer`], snapshot the [`SharedForest`] once per batch, score
 //!   through the shared offline block kernel
-//!   ([`FlatForest::predict_block_into`]) with a warm per-worker tile.
+//!   ([`FlatForest::accumulate_block`](crate::predict::FlatForest)
+//!   behind the [`Predictor`]) with a warm per-worker tile.
 //!   A panic while scoring is **isolated**: it poisons only the jobs of
 //!   the affected request (their clients get `!internal`), the worker
 //!   respawns, and the connection stays usable.
@@ -70,7 +71,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant, SystemTime};
 
 use crate::boosting::ensemble::Ensemble;
-use crate::predict::{FlatForest, SharedForest, DEFAULT_BLOCK_ROWS};
+use crate::predict::{ForestLayout, PredictOptions, Predictor, SharedForest, DEFAULT_BLOCK_ROWS};
 use crate::serve::protocol::{
     error_msg, format_error, format_scores, parse_request_limited, Request, ERR_INTERNAL,
     ERR_OVERLOADED, ERR_TIMEOUT, ERR_TOO_LARGE,
@@ -145,6 +146,14 @@ pub struct ServeOptions {
     /// Reap a connection after this long with no complete request
     /// (slow-loris / half-open defense). `0` disables reaping.
     pub idle_timeout_ms: u64,
+    /// Node/leaf layout the model compiles into (`v1` | `v2` | `v2q`);
+    /// hot-swapped models recompile into the same layout. `v1` and
+    /// `v2` are bitwise-identical; `v2q` quantizes leaf values unless
+    /// [`ServeOptions::exact_leaves`] is set.
+    pub layout: ForestLayout,
+    /// Keep f32 leaf values under the `v2q` layout (bitwise-exactness
+    /// escape hatch; no effect on other layouts).
+    pub exact_leaves: bool,
 }
 
 impl Default for ServeOptions {
@@ -162,6 +171,8 @@ impl Default for ServeOptions {
             max_rows: 4096,
             max_line_bytes: 1 << 20,
             idle_timeout_ms: 0,
+            layout: ForestLayout::V1,
+            exact_leaves: false,
         }
     }
 }
@@ -181,6 +192,8 @@ struct Shared {
     max_line_bytes: usize,
     /// `idle_timeout_ms` as a duration (`None` = never reap).
     idle_timeout: Option<Duration>,
+    /// Layout + batching knobs hot-swapped models recompile with.
+    predict_opts: PredictOptions,
 }
 
 impl Shared {
@@ -206,14 +219,17 @@ impl Server {
     /// the listener is bound and every thread is up.
     pub fn start(model_path: &Path, opts: &ServeOptions) -> Result<Server, String> {
         let model = Ensemble::load(model_path)?;
-        let forest = FlatForest::from_ensemble(&model);
+        let predict_opts = PredictOptions::default()
+            .with_layout(opts.layout)
+            .with_exact_leaves(opts.exact_leaves);
+        let predictor = Predictor::compile(&model, predict_opts);
         let listener = TcpListener::bind((opts.bind.as_str(), opts.port))
             .map_err(|e| format!("bind {}:{}: {e}", opts.bind, opts.port))?;
         let addr = listener.local_addr().map_err(|e| e.to_string())?;
         listener.set_nonblocking(true).map_err(|e| e.to_string())?;
 
         let shared = Arc::new(Shared {
-            forest: SharedForest::new(forest),
+            forest: SharedForest::new(predictor),
             coalescer: Coalescer::new(opts.queue_cap.max(1)),
             stats: ServeStats::new(),
             shutdown: AtomicBool::new(false),
@@ -225,6 +241,7 @@ impl Server {
             max_line_bytes: opts.max_line_bytes.max(64),
             idle_timeout: (opts.idle_timeout_ms > 0)
                 .then(|| Duration::from_millis(opts.idle_timeout_ms)),
+            predict_opts,
         });
 
         let mut workers = Vec::new();
@@ -462,12 +479,14 @@ fn handle_line(line: &str, shared: &Arc<Shared>, tx: &mpsc::Sender<Pending>) -> 
             let _ = tx.send(Pending::Immediate(j.to_string()));
         }
         Ok(Request::ModelInfo) => {
-            let f = shared.forest.snapshot();
+            let p = shared.forest.snapshot();
+            let f = p.forest();
             let mut j = Json::obj();
             j.set("model_version", Json::Num(shared.forest.version() as f64))
                 .set("n_outputs", Json::Num(f.n_outputs as f64))
                 .set("n_trees", Json::Num(f.n_trees() as f64))
                 .set("n_features_required", Json::Num(f.n_features_required() as f64))
+                .set("layout", Json::Str(f.layout().as_str().to_string()))
                 .set("path", Json::Str(shared.model_path.display().to_string()));
             let _ = tx.send(Pending::Immediate(j.to_string()));
         }
@@ -520,8 +539,8 @@ fn worker_loop(shared: &Arc<Shared>, block_rows: usize, max_wait: Duration) {
             while let Some(batch) = shared.coalescer.next_batch(block_rows, max_wait) {
                 // one snapshot per batch: every job in it scores against a
                 // single, internally consistent forest (hot-swap invariant)
-                let forest = shared.forest.snapshot();
-                score_batch(&forest, batch, block_rows, &mut tile, &shared.stats);
+                let pred = shared.forest.snapshot();
+                score_batch(&pred, batch, block_rows, &mut tile, &shared.stats);
             }
         }));
         match run {
@@ -533,15 +552,19 @@ fn worker_loop(shared: &Arc<Shared>, block_rows: usize, max_wait: Duration) {
     }
 }
 
-/// Score one coalesced batch of jobs against `forest`, reusing `tile`
-/// as the gather buffer. Public because the serving property test
-/// drives it directly (random batch boundaries, no sockets).
+/// Score one coalesced batch of jobs against `pred`'s compiled forest,
+/// reusing `tile` as the gather buffer. Public because the serving
+/// property test drives it directly (random batch boundaries, no
+/// sockets).
 ///
 /// Rows are gathered `required`-features-wide and driven through
-/// [`FlatForest::predict_block_into`] in `block_rows`-sized blocks —
-/// the same kernel and the same per-row arithmetic as offline
-/// [`FlatForest::predict_raw_into`], which is what makes serving
-/// responses bitwise-equal to offline predict by construction.
+/// `FlatForest::predict_block_into` in `block_rows`-sized blocks — the
+/// same kernel and the same per-row arithmetic as offline
+/// [`Predictor::raw`], which is what makes serving responses
+/// bitwise-equal to offline predict by construction (exactly, under the
+/// `v1`/`v2` layouts; within the model's
+/// [`leaf_quant_error`](crate::predict::FlatForest::leaf_quant_error)
+/// bound under `v2q`).
 ///
 /// Degradation paths, per job:
 ///
@@ -552,13 +575,14 @@ fn worker_loop(shared: &Arc<Shared>, block_rows: usize, max_wait: Duration) {
 ///   *that* job to `!internal` and the rest of the batch scores
 ///   normally.
 pub fn score_batch(
-    forest: &FlatForest,
+    pred: &Predictor,
     jobs: Vec<Job>,
     block_rows: usize,
     tile: &mut Vec<f32>,
     stats: &ServeStats,
 ) {
     let t0 = Instant::now();
+    let forest = pred.forest();
     let d = forest.n_outputs;
     let required = forest.n_features_required();
     let w = required.max(1);
@@ -669,7 +693,8 @@ fn watcher_loop(shared: &Arc<Shared>, poll: Duration) {
         .unwrap_or_else(|_| Err("model loader panicked".to_string()));
         match loaded {
             Ok(model) => {
-                shared.forest.swap(FlatForest::from_ensemble(&model));
+                // recompile into the same layout the server started with
+                shared.forest.swap(Predictor::compile(&model, shared.predict_opts));
                 shared.stats.n_reloads.fetch_add(1, Ordering::Relaxed);
                 seen = now;
                 fail_streak = 0;
@@ -761,14 +786,15 @@ mod tests {
             trees: vec![tree],
             history: TrainHistory::default(),
         };
-        let forest = FlatForest::from_ensemble(&model);
+        let pred = Predictor::compile(&model, PredictOptions::default());
+        let forest = pred.forest();
         let stats = ServeStats::new();
         let mut tile = Vec::new();
 
         // width 3 > required 2: extra features must be ignored
         let rows = vec![0.0, 0.0, 9.0, 0.0, 1.0, 9.0, 0.0, f32::NAN, 9.0];
         let (job, ticket) = Job::new(rows.clone(), 3, 3);
-        score_batch(&forest, vec![job], 2, &mut tile, &stats);
+        score_batch(&pred, vec![job], 2, &mut tile, &stats);
         let got = ticket.wait().unwrap();
         for (i, want_leaf) in [(0usize, 0usize), (1, 1), (2, 0)] {
             let mut want = vec![0.1f32, -0.1];
@@ -780,7 +806,7 @@ mod tests {
 
         // too-narrow rows get an error, not a panic
         let (narrow, t2) = Job::new(vec![0.5], 1, 1);
-        score_batch(&forest, vec![narrow], 2, &mut tile, &stats);
+        score_batch(&pred, vec![narrow], 2, &mut tile, &stats);
         let err = t2.wait().unwrap_err();
         assert!(err.contains("feature index 1"), "{err}");
         assert_eq!(stats.n_errors.load(Ordering::Relaxed), 1);
@@ -801,6 +827,9 @@ mod tests {
         assert_eq!(o.max_rows, 4096);
         assert_eq!(o.max_line_bytes, 1 << 20);
         assert_eq!(o.idle_timeout_ms, 0);
+        // layout defaults preserve the v1 bit-exact serving path
+        assert_eq!(o.layout, ForestLayout::V1);
+        assert!(!o.exact_leaves);
     }
 
     #[test]
@@ -823,13 +852,13 @@ mod tests {
             trees: vec![],
             history: TrainHistory::default(),
         };
-        let forest = FlatForest::from_ensemble(&model);
+        let pred = Predictor::compile(&model, PredictOptions::default());
         let stats = ServeStats::new();
         let mut tile = Vec::new();
         let (mut expired, t_expired) = Job::new(vec![1.0], 1, 1);
         expired.deadline = Some(Instant::now() - Duration::from_millis(1));
         let (fresh, t_fresh) = Job::new(vec![1.0], 1, 1);
-        score_batch(&forest, vec![expired, fresh], 4, &mut tile, &stats);
+        score_batch(&pred, vec![expired, fresh], 4, &mut tile, &stats);
         let err = t_expired.wait().unwrap_err();
         assert!(err.starts_with(ERR_TIMEOUT), "{err}");
         assert_eq!(t_fresh.wait().unwrap(), vec![0.5]);

@@ -118,11 +118,25 @@ fn handcrafted_default_direction_oracle_flat_vs_naive_bitwise() {
     assert_eq!(t1.leaf_for_raw(&rows[8]), 2, "non-integer is not a member");
 
     let naive = model.predict_raw_naive(&ds);
-    let flat = FlatForest::from_ensemble(&model);
-    for threads in [1usize, 2, 4] {
-        for block in [1usize, 3, 512] {
-            let got = flat.predict_raw(&ds, &PredictOptions { n_threads: threads, block_rows: block });
-            assert_bits_eq(&naive, &got, &format!("t={threads} block={block}"));
+    // the adversarial default-direction + categorical oracle must hold
+    // bitwise in every exact layout (v2q routing is exact by
+    // construction; exact_leaves keeps the f32 leaf values)
+    for lo in [
+        LayoutOptions::v1(),
+        LayoutOptions::v2_exact(),
+        LayoutOptions::v2_quantized().with_exact_leaves(true),
+    ] {
+        let flat = FlatForest::compile(&model, lo);
+        for threads in [1usize, 2, 4] {
+            for block in [1usize, 3, 512] {
+                let got =
+                    flat.predict_raw(&ds, &PredictOptions::threads(threads).with_block_rows(block));
+                assert_bits_eq(
+                    &naive,
+                    &got,
+                    &format!("layout={} t={threads} block={block}", lo.layout.as_str()),
+                );
+            }
         }
     }
 }
@@ -155,7 +169,7 @@ fn nan_injected_profile_trains_bit_identically_across_threads() {
     let naive = base.predict_raw_naive(&ds);
     let flat = FlatForest::from_ensemble(&base);
     for threads in [1usize, 2, 4] {
-        let got = flat.predict_raw(&ds, &PredictOptions { n_threads: threads, block_rows: 37 });
+        let got = flat.predict_raw(&ds, &PredictOptions::threads(threads).with_block_rows(37));
         assert_bits_eq(&naive, &got, &format!("predict threads = {threads}"));
     }
 }

@@ -2,18 +2,44 @@
 //! the per-row reference walker (`predict_raw_naive`) — across every
 //! sketch strategy, tree depth 1–6, 1/2/4 prediction threads, all three
 //! losses, the one-vs-all baseline, the leaf-index output, and a
-//! save→load→predict round trip. NaN routing through per-split default
-//! directions is pinned by a handcrafted-tree unit test here (the
-//! default-left case) and exercised adversarially — learned defaults,
-//! categorical sets — in `rust/tests/missing_categorical.rs`.
+//! save→load→predict round trip. The same matrix runs under every
+//! [`ForestLayout`]: `v1`, `v2`, and `v2q` with exact leaves must
+//! reproduce the walker bits exactly (quantized thresholds route
+//! identically by construction); `v2q` with f16 leaves must stay within
+//! the model's computed [`FlatForest::leaf_quant_error`] bound. NaN
+//! routing through per-split default directions is pinned by a
+//! handcrafted-tree unit test here (the default-left case) and
+//! exercised adversarially — learned defaults, categorical sets — in
+//! `rust/tests/missing_categorical.rs`.
 
 use sketchboost::baselines::one_vs_all::fit_one_vs_all;
 use sketchboost::boosting::ensemble::{Ensemble, TrainHistory};
 use sketchboost::data::dataset::{Dataset, Targets};
 use sketchboost::data::synthetic::{make_multiclass, make_multilabel, make_multitask, FeatureSpec};
-use sketchboost::predict::{FlatForest, PredictOptions};
+use sketchboost::predict::{FlatForest, ForestLayout, LayoutOptions, PredictOptions, Predictor};
 use sketchboost::prelude::*;
 use sketchboost::tree::tree::{encode_leaf, Tree, TreeNode};
+
+/// Every compile-time layout, with whether its output must be *bitwise*
+/// equal to the v1/naive reference (f16 leaves are bounded, not exact).
+fn layouts() -> [(LayoutOptions, &'static str, bool); 4] {
+    [
+        (LayoutOptions::v1(), "v1", true),
+        (LayoutOptions::v2_exact(), "v2", true),
+        (LayoutOptions::v2_quantized().with_exact_leaves(true), "v2q-exact", true),
+        (LayoutOptions::v2_quantized(), "v2q-f16", false),
+    ]
+}
+
+fn assert_close(want: &[f32], got: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert!(
+            (a - b).abs() <= tol || (a.is_nan() && b.is_nan()),
+            "{ctx}: cell {i} differs beyond {tol:e} ({a:?} vs {b:?})"
+        );
+    }
+}
 
 /// All five sketch strategies (k = 2 keeps them all active at d = 5).
 fn sketches() -> [SketchConfig; 5] {
@@ -37,7 +63,8 @@ fn assert_bits_eq(want: &[f32], got: &[f32], ctx: &str) {
 }
 
 /// Train at every (sketch, depth) cell and compare flat vs naive at
-/// 1/2/4 threads with a ragged block size plus the default blocking.
+/// 1/2/4 threads with a ragged block size plus the default blocking —
+/// under every forest layout.
 fn check_matrix(mut cfg: GBDTConfig, ds: &Dataset, loss_name: &str) {
     cfg.n_rounds = 4;
     cfg.learning_rate = 0.3;
@@ -49,21 +76,26 @@ fn check_matrix(mut cfg: GBDTConfig, ds: &Dataset, loss_name: &str) {
             c.max_depth = depth;
             let model = GBDT::fit(&c, ds, None);
             let naive = model.predict_raw_naive(ds);
-            let flat = FlatForest::from_ensemble(&model);
-            for threads in [1usize, 2, 4] {
-                for block in [37usize, 512] {
-                    let got = flat.predict_raw(
-                        ds,
-                        &PredictOptions { n_threads: threads, block_rows: block },
-                    );
-                    assert_bits_eq(
-                        &naive,
-                        &got,
-                        &format!(
-                            "{loss_name} sketch={} depth={depth} t={threads} block={block}",
+            for (lo, lname, exact) in layouts() {
+                let flat = FlatForest::compile(&model, lo);
+                for threads in [1usize, 2, 4] {
+                    for block in [37usize, 512] {
+                        let got = flat.predict_raw(
+                            ds,
+                            &PredictOptions::threads(threads).with_block_rows(block),
+                        );
+                        let ctx = format!(
+                            "{loss_name} sketch={} depth={depth} layout={lname} t={threads} block={block}",
                             c.sketch.name()
-                        ),
-                    );
+                        );
+                        if exact {
+                            assert_bits_eq(&naive, &got, &ctx);
+                        } else {
+                            // accumulation order is identical per cell, so
+                            // the summed per-tree f16 error bounds the gap
+                            assert_close(&naive, &got, flat.leaf_quant_error() + 1e-5, &ctx);
+                        }
+                    }
                 }
             }
         }
@@ -99,9 +131,14 @@ fn ova_flat_matches_naive_across_threads() {
     let naive = model.predict_raw_naive(&ds);
     for threads in [1usize, 2, 4] {
         let got = model
-            .predict_raw_with(&ds, &PredictOptions { n_threads: threads, block_rows: 53 });
+            .predict_raw_with(&ds, &PredictOptions::threads(threads).with_block_rows(53));
         assert_bits_eq(&naive, &got, &format!("ova t={threads}"));
     }
+    // the OVA facade honors layouts too: v2 stays bitwise
+    let opts = PredictOptions::threads(2)
+        .with_block_rows(53)
+        .with_layout(ForestLayout::V2Exact);
+    assert_bits_eq(&naive, &Predictor::compile_ova(&model, opts).raw(&ds), "ova v2");
 }
 
 #[test]
@@ -115,8 +152,15 @@ fn leaf_indices_flat_matches_naive() {
     let naive = model.predict_leaf_indices_naive(&ds);
     for threads in [1usize, 2, 4] {
         let got = model
-            .predict_leaf_indices_with(&ds, &PredictOptions { n_threads: threads, block_rows: 41 });
+            .predict_leaf_indices_with(&ds, &PredictOptions::threads(threads).with_block_rows(41));
         assert_eq!(naive, got, "leaf indices t={threads}");
+    }
+    // leaf identity is layout-invariant (quantized thresholds route the
+    // same rows to the same leaves)
+    for layout in [ForestLayout::V2Exact, ForestLayout::V2Quantized] {
+        let opts = PredictOptions::threads(2).with_block_rows(41).with_layout(layout);
+        let got = Predictor::compile(&model, opts).leaf_indices(&ds);
+        assert_eq!(naive, got, "leaf indices layout={}", layout.as_str());
     }
 }
 
@@ -145,6 +189,44 @@ fn save_load_predict_round_trip_is_bit_identical() {
         assert_bits_eq(&naive, &got, &format!("save/load t={threads}"));
     }
     assert_bits_eq(&naive, &loaded.predict_raw_naive(&ds), "save/load naive");
+
+    // quantized layouts recompile from the reloaded JSON with identical
+    // behavior: routing is exact, so exact leaves give back the bits
+    // and f16 leaves stay inside the recomputed error bound
+    let q = FlatForest::compile(
+        &loaded,
+        LayoutOptions::v2_quantized().with_exact_leaves(true),
+    );
+    assert_bits_eq(
+        &naive,
+        &q.predict_raw(&ds, &PredictOptions::threads(2)),
+        "save/load v2q-exact",
+    );
+    let qh = FlatForest::compile(&loaded, LayoutOptions::v2_quantized());
+    assert_close(
+        &naive,
+        &qh.predict_raw(&ds, &PredictOptions::threads(2)),
+        qh.leaf_quant_error() + 1e-5,
+        "save/load v2q-f16",
+    );
+}
+
+/// The Predictor facade is a thin veneer: its outputs are the legacy
+/// entry points' outputs, bit for bit, and `apply_link` matches
+/// `Ensemble::predict`.
+#[test]
+fn predictor_facade_matches_legacy_entry_points() {
+    let ds = make_multiclass(220, FeatureSpec::guyon(9), 4, 1.8, 17);
+    let mut cfg = GBDTConfig::multiclass(4);
+    cfg.n_rounds = 6;
+    cfg.max_depth = 4;
+    cfg.max_bins = 16;
+    let model = GBDT::fit(&cfg, &ds, None);
+    let opts = PredictOptions::threads(2).with_block_rows(29);
+    let pred = Predictor::compile(&model, opts);
+    assert_bits_eq(&model.predict_raw_with(&ds, &opts), &pred.raw(&ds), "raw");
+    assert_bits_eq(&model.predict_with(&ds, &opts), &pred.predict(&ds), "predict");
+    assert_eq!(model.predict_leaf_indices_with(&ds, &opts), pred.leaf_indices(&ds));
 }
 
 /// x0 <= 0.5 ? leaf0 : (x1 <= 2.0 ? leaf1 : leaf2) — NaN must follow
@@ -184,22 +266,30 @@ fn nan_features_route_left_identically() {
         Targets::Regression { values: vec![0.0; 8], n_targets: 2 },
     );
 
-    let flat = FlatForest::from_ensemble(&model);
-    for (row, want_leaf) in [(0usize, 0usize), (1, 1), (2, 0), (3, 2)] {
-        assert_eq!(model.trees[0].leaf_for_raw(&ds.row(row)), want_leaf, "naive row {row}");
-        assert_eq!(flat.leaf_of(0, &ds.row(row)), want_leaf, "flat row {row}");
-    }
-    for threads in [1usize, 2] {
-        let opts = PredictOptions { n_threads: threads, block_rows: 3 };
-        assert_bits_eq(
-            &model.predict_raw_naive(&ds),
-            &flat.predict_raw(&ds, &opts),
-            &format!("nan t={threads}"),
-        );
-        assert_eq!(
-            model.predict_leaf_indices_naive(&ds),
-            flat.predict_leaf_indices(&ds, &opts),
-            "nan leaf indices t={threads}"
-        );
+    for (lo, lname, _) in layouts() {
+        let flat = FlatForest::compile(&model, lo);
+        for (row, want_leaf) in [(0usize, 0usize), (1, 1), (2, 0), (3, 2)] {
+            assert_eq!(
+                model.trees[0].leaf_for_raw(&ds.row(row)),
+                want_leaf,
+                "naive row {row}"
+            );
+            assert_eq!(flat.leaf_of(0, &ds.row(row)), want_leaf, "{lname} row {row}");
+        }
+        for threads in [1usize, 2] {
+            let opts = PredictOptions::threads(threads).with_block_rows(3);
+            // the handcrafted leaves are f16-representable, so even the
+            // quantized-leaf layout reproduces the bits here
+            assert_bits_eq(
+                &model.predict_raw_naive(&ds),
+                &flat.predict_raw(&ds, &opts),
+                &format!("nan layout={lname} t={threads}"),
+            );
+            assert_eq!(
+                model.predict_leaf_indices_naive(&ds),
+                flat.predict_leaf_indices(&ds, &opts),
+                "nan leaf indices layout={lname} t={threads}"
+            );
+        }
     }
 }

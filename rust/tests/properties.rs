@@ -397,7 +397,11 @@ fn prop_coalesced_serving_is_bit_identical_to_per_row_walks() {
         cfg.seed = g.seed;
         let model = GBDT::fit(&cfg, &ds, None);
         let naive = model.predict_raw_naive(&ds);
-        let flat = FlatForest::from_ensemble(&model);
+        // serving scores through the Predictor facade; v2 keeps the
+        // bit-identity property intact
+        let layout = *g.choose(&[ForestLayout::V1, ForestLayout::V2Exact]);
+        let pred =
+            Predictor::compile(&model, PredictOptions::default().with_layout(layout));
 
         // random requests (rows sampled with replacement; some rows in
         // no request, some in several), some padded with junk features
@@ -430,7 +434,7 @@ fn prop_coalesced_serving_is_bit_identical_to_per_row_walks() {
         let mut tile = Vec::new();
         while let Some(batch) = coalescer.next_batch(g.usize_in(1, 64), Duration::ZERO) {
             let block = *g.choose(&[1usize, 3, 17, 512]);
-            score_batch(&flat, batch, block, &mut tile, &stats);
+            score_batch(&pred, batch, block, &mut tile, &stats);
         }
 
         for (ticket, rows) in tickets {
