@@ -1,0 +1,59 @@
+//! `sblint` — the repo's invariants-as-code lint (see `sketchboost::lint`).
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --release --bin sblint [-- --root <repo-root>]
+//! ```
+//!
+//! Walks `rust/src`, `rust/tests`, and `benches` under the root
+//! (defaulting to the workspace root this binary was built from),
+//! prints one `path:line: [rule] message` per finding, and exits
+//! nonzero iff anything was found. Suppress a finding with
+//! `// LINT-ALLOW(<rule>): <reason>` — see DESIGN.md "Invariants as
+//! code".
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use sketchboost::lint;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(r) => root = Some(PathBuf::from(r)),
+                None => {
+                    eprintln!("sblint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!("usage: sblint [--root <repo-root>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("sblint: unknown argument {other:?} (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // CARGO_MANIFEST_DIR is rust/; the lint root is the repo root above it
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+    });
+
+    let diags = lint::run(&root);
+    for d in &diags {
+        println!("{}", d.render());
+    }
+    if diags.is_empty() {
+        eprintln!("sblint: clean ({} dirs checked)", lint::LINT_DIRS.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("sblint: {} finding(s)", diags.len());
+        ExitCode::FAILURE
+    }
+}

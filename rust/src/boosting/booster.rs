@@ -130,6 +130,9 @@ impl Booster {
         let kinds = cfg.merged_kinds(train);
         let binned = BinnedDataset::from_dataset_with_kinds(train, cfg.max_bins, &kinds);
         let mut rng = Rng::new(cfg.seed);
+        // LINT-ALLOW(determinism): wall-clock telemetry for callbacks
+        // only; no training decision reads it unless the user opts into
+        // TimeBudget, which is documented as nondeterministic.
         let t_start = Instant::now();
 
         let base_score = objective.base_score(&train.targets, d);

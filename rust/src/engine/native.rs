@@ -214,8 +214,10 @@ impl ComputeEngine for NativeEngine {
         let shard_bufs = DisjointSlice::new(&mut self.scratch_shards);
         pool.for_each_chunk(n_shards, 1, |shard_range| {
             for s in shard_range {
-                // Safety: shard `s`'s buffer is written by exactly one
-                // worker (the queue hands out each shard index once).
+                // SAFETY: `s < n_shards` and the buffer holds
+                // `n_shards * total` cells, so the range is in bounds.
+                // DISJOINT: partitioned by shard index — the queue hands
+                // each `s` to exactly one worker.
                 let buf = unsafe { shard_bufs.range_mut(s * total..(s + 1) * total) };
                 buf.fill(0.0);
                 for (t, seg) in segs.iter().enumerate() {
@@ -289,9 +291,13 @@ impl ComputeEngine for NativeEngine {
         let scratch = DisjointSlice::new(&mut self.scratch_gain);
         let cat_all = DisjointSlice::new(&mut self.scratch_cat);
         self.pool.broadcast(|w| {
-            // Safety: each worker id is handed out once per broadcast, so
-            // the per-worker scratch ranges are disjoint.
+            // SAFETY: `w < pool.n_workers()` and both scratch buffers are
+            // sized per worker, so the ranges are in bounds.
+            // DISJOINT: partitioned by worker id — `broadcast` hands each
+            // `w` out exactly once.
             let ws = unsafe { scratch.range_mut(w * 3 * k..(w + 1) * 3 * k) };
+            // SAFETY: same per-worker bounds argument as `ws` above.
+            // DISJOINT: same worker-id partition as `ws` above.
             let cats = unsafe { cat_all.range_mut(w..w + 1) };
             let cat = &mut cats[0];
             loop {
@@ -300,9 +306,13 @@ impl ComputeEngine for NativeEngine {
                     break;
                 }
                 for pair in start..(start + PAIR_CHUNK).min(n_pairs) {
-                    // Safety: pair ranges are disjoint and the cursor
-                    // hands each pair index to exactly one worker.
+                    // SAFETY: `pair < n_pairs` and both outputs hold
+                    // `n_pairs * bins` cells, so the ranges are in bounds.
+                    // DISJOINT: partitioned by pair index — the atomic
+                    // cursor hands each `pair` to exactly one worker.
                     let dst = unsafe { dst_all.range_mut(pair * bins..(pair + 1) * bins) };
+                    // SAFETY: same bounds argument as `dst` above.
+                    // DISJOINT: same pair-index partition as `dst`.
                     let dfl = unsafe { dfl_all.range_mut(pair * bins..(pair + 1) * bins) };
                     scan_pair(hist, pair, spec, k, ws, cat, dst, dfl);
                 }
@@ -701,6 +711,11 @@ fn hist_pass<const K1: usize>(
         let col = binned.column(f);
         let fbase = base + f * bins * K1;
         for (j, &r) in rows.iter().enumerate() {
+            debug_assert!((r as usize) < col.len(), "row index out of bounds");
+            // SAFETY: `r` comes from the node's row-index partition,
+            // which only holds indices `< n_rows == col.len()`; the
+            // debug_assert above lets Miri/debug builds verify what
+            // release elides.
             let b = unsafe { *col.get_unchecked(r as usize) } as usize;
             let dst = fbase + b * K1;
             let src = &chan_g[j * K1..j * K1 + K1];

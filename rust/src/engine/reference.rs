@@ -80,8 +80,10 @@ pub fn histograms_flagged(
     let shard_bufs = DisjointSlice::new(&mut scratch_shards);
     pool.for_each_chunk(n_shards, 1, |shard_range| {
         for s in shard_range {
-            // Safety: shard `s`'s buffer is written by exactly one
-            // worker (the queue hands out each shard index once).
+            // SAFETY: `s < n_shards` and the buffer holds
+            // `n_shards * total` cells, so the range is in bounds.
+            // DISJOINT: partitioned by shard index — the queue hands
+            // each `s` to exactly one worker.
             let buf = unsafe { shard_bufs.range_mut(s * total..(s + 1) * total) };
             buf.fill(0.0);
             let (j0, j1) = shard_bounds(nr, n_shards, s);

@@ -71,6 +71,7 @@ pub mod boosting;
 pub mod config;
 pub mod data;
 pub mod engine;
+pub mod lint;
 pub mod predict;
 pub mod runtime;
 pub mod serve;

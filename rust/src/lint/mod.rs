@@ -1,0 +1,59 @@
+//! `sblint`: the project's invariants, enforced as code.
+//!
+//! The crate's value proposition — bit-deterministic parallel training
+//! and serving on top of an unsafe disjoint-write core — rests on
+//! conventions that used to live only in prose (DESIGN.md §7 and the
+//! SAFETY comments around `DisjointSlice`). This module turns them into
+//! named, individually suppressible lint rules, run by the `sblint`
+//! binary and gated in CI:
+//!
+//! | rule            | invariant                                              |
+//! |-----------------|--------------------------------------------------------|
+//! | `unsafe-safety` | every `unsafe` carries a `// SAFETY:` / `# Safety`     |
+//! | `disjoint`      | every `range_mut` call names its partition (`DISJOINT:`)|
+//! | `determinism`   | no unordered maps / clocks / env in deterministic mods |
+//! | `serve-unwrap`  | no `unwrap`/`expect` on the serve request path         |
+//! | `registry`      | fault points ↔ error codes ↔ counters ↔ chaos ↔ benches|
+//! | `pragma`        | every `LINT-ALLOW` is well-formed and gives a reason   |
+//!
+//! Suppress a single finding with `// LINT-ALLOW(<rule>): <reason>` on
+//! (or directly above) the offending line. See DESIGN.md "Invariants as
+//! code" for the catalog and the add-a-rule procedure.
+
+pub mod registry;
+pub mod rules;
+pub mod scan;
+
+use std::fs;
+use std::path::Path;
+
+pub use rules::Diagnostic;
+
+/// The directories `sblint` walks, relative to the repo root.
+pub const LINT_DIRS: &[&str] = &["rust/src", "rust/tests", "benches"];
+
+/// Lint every `.rs` file under [`LINT_DIRS`] plus the cross-registry
+/// checks. Returns all findings, sorted by path then line; empty means
+/// the tree is clean.
+pub fn run(root: &Path) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for dir in LINT_DIRS {
+        for rel in registry::rs_files_under(root, dir) {
+            match fs::read_to_string(root.join(&rel)) {
+                Ok(text) => {
+                    let scanned = scan::scan_source(&rel, root.join(&rel), &text);
+                    diags.extend(rules::check_file(&scanned));
+                }
+                Err(e) => diags.push(Diagnostic {
+                    rel_path: rel.clone(),
+                    line: 1,
+                    rule: rules::RULE_REGISTRY,
+                    message: format!("unreadable: {e}"),
+                }),
+            }
+        }
+    }
+    diags.extend(registry::check_registries(root));
+    diags.sort_by(|a, b| (&a.rel_path, a.line).cmp(&(&b.rel_path, b.line)));
+    diags
+}

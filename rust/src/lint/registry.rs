@@ -1,0 +1,370 @@
+//! R5: cross-registry consistency.
+//!
+//! The serve stack's failure-mode contract (DESIGN.md §7) is spread
+//! across five places that must agree:
+//!
+//! 1. the fault-point table in `util/fault.rs` module docs,
+//! 2. the actual `fault::point`/`fault::failpoint` call sites,
+//! 3. the `ERR_*` error-code constants in `serve/protocol.rs`,
+//! 4. the `/stats` counter keys in `serve/stats.rs`,
+//! 5. the chaos coverage in `rust/tests/serve_chaos.rs`;
+//!
+//! plus the perf contract: every tracked claim key in a `BENCH_*.json`
+//! trajectory must exist in the bench source that regenerates it, and
+//! the schema tags must match. Each check here turns "the table rotted"
+//! from a code-review hope into a failing lint.
+
+use std::fs;
+use std::path::Path;
+
+use crate::lint::rules::{Diagnostic, RULE_REGISTRY};
+use crate::lint::scan::scan_source;
+use crate::util::json::Json;
+
+/// Which degradation counter each wire error code increments. Adding a
+/// new `ERR_*` code without extending this map is itself a diagnostic:
+/// DESIGN.md §7 says every failure mode ships code + counter + chaos
+/// coverage together.
+const CODE_COUNTERS: &[(&str, &str)] = &[
+    ("timeout", "timeouts"),
+    ("overloaded", "shed"),
+    ("too_large", "too_large"),
+    ("internal", "worker_panics"),
+];
+
+fn diag(rel_path: &str, line: usize, message: String) -> Diagnostic {
+    Diagnostic { rel_path: rel_path.to_string(), line, rule: RULE_REGISTRY, message }
+}
+
+fn read(root: &Path, rel: &str) -> Option<String> {
+    fs::read_to_string(root.join(rel)).ok()
+}
+
+/// Extract the first `` `name` ``-quoted cell of every table row in the
+/// fault-point doc table, with its 1-based line number.
+fn doc_table_points(fault_src: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in fault_src.lines().enumerate() {
+        let Some(rest) = line.trim_start().strip_prefix("//!") else { continue };
+        let t = rest.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        // first cell: between the leading `|` and the next `|`
+        let cell = t[1..].split('|').next().unwrap_or("").trim();
+        if let Some(name) = cell.strip_prefix('`').and_then(|c| c.strip_suffix('`')) {
+            if !name.is_empty() {
+                out.push((name.to_string(), idx + 1));
+            }
+        }
+    }
+    out
+}
+
+/// Find `fault::point("…")` / `fault::failpoint("…")` call sites in one
+/// file: the *code view* must contain the call (so doc comments and
+/// string literals mentioning the API don't count), and the point name
+/// is then pulled out of the raw line's string literal.
+fn fault_call_sites(rel: &str, src: &str) -> Vec<(String, usize)> {
+    let scanned = scan_source(rel, root_free_path(rel), src);
+    let mut out = Vec::new();
+    for (idx, line) in scanned.lines.iter().enumerate() {
+        for needle in ["fault::point(", "fault::failpoint("] {
+            if !line.code.contains(needle) {
+                continue;
+            }
+            // the code view proves this is a real call (not a comment or
+            // string mention); the name itself lives in the raw line's
+            // string literal, right after the needle
+            let Some(pos) = line.raw.find(needle) else { continue };
+            let at = pos + needle.len();
+            let rest = &line.raw[at..];
+            if let Some(stripped) = rest.strip_prefix('"') {
+                if let Some(end) = stripped.find('"') {
+                    out.push((stripped[..end].to_string(), idx + 1));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn root_free_path(rel: &str) -> std::path::PathBuf {
+    std::path::PathBuf::from(rel)
+}
+
+/// Parse `pub const ERR_NAME: &str = "code";` lines out of protocol.rs.
+fn err_consts(protocol_src: &str) -> Vec<(String, String, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in protocol_src.lines().enumerate() {
+        let t = line.trim();
+        let Some(rest) = t.strip_prefix("pub const ERR_") else { continue };
+        let Some(colon) = rest.find(':') else { continue };
+        let name = format!("ERR_{}", rest[..colon].trim());
+        let Some(q1) = rest.find('"') else { continue };
+        let Some(q2) = rest[q1 + 1..].find('"') else { continue };
+        out.push((name, rest[q1 + 1..q1 + 1 + q2].to_string(), idx + 1));
+    }
+    out
+}
+
+/// List `*.rs` files under `root/<dir>` (recursive, sorted), as
+/// `/`-separated paths relative to `root`.
+pub fn rs_files_under(root: &Path, dir: &str) -> Vec<String> {
+    fn walk(base: &Path, cur: &Path, out: &mut Vec<String>) {
+        let Ok(entries) = fs::read_dir(cur) else { return };
+        let mut entries: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(base, &p, out);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                if let Ok(rel) = p.strip_prefix(base) {
+                    out.push(rel.to_string_lossy().replace('\\', "/"));
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(root, &root.join(dir), &mut out);
+    out
+}
+
+/// Run every cross-registry check against the tree at `root`.
+pub fn check_registries(root: &Path) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    check_fault_registry(root, &mut diags);
+    check_error_code_registry(root, &mut diags);
+    check_bench_registry(root, &mut diags);
+    diags
+}
+
+const FAULT_RS: &str = "rust/src/util/fault.rs";
+const PROTOCOL_RS: &str = "rust/src/serve/protocol.rs";
+const STATS_RS: &str = "rust/src/serve/stats.rs";
+const CHAOS_RS: &str = "rust/tests/serve_chaos.rs";
+
+fn check_fault_registry(root: &Path, diags: &mut Vec<Diagnostic>) {
+    let Some(fault_src) = read(root, FAULT_RS) else {
+        diags.push(diag(FAULT_RS, 1, "missing (fault-point registry lives here)".into()));
+        return;
+    };
+    let table = doc_table_points(&fault_src);
+    if table.is_empty() {
+        diags.push(diag(
+            FAULT_RS,
+            1,
+            "no fault-point doc table found (expected `//! | \\`point\\` | … |` rows)".into(),
+        ));
+    }
+
+    // every call site anywhere in rust/src, except the registry itself
+    let mut sites: Vec<(String, String, usize)> = Vec::new();
+    for rel in rs_files_under(root, "rust/src") {
+        if rel == FAULT_RS {
+            continue;
+        }
+        if let Some(src) = read(root, &rel) {
+            for (name, line) in fault_call_sites(&rel, &src) {
+                sites.push((name, rel.clone(), line));
+            }
+        }
+    }
+
+    let chaos = read(root, CHAOS_RS).unwrap_or_default();
+    for (point, line) in &table {
+        if !sites.iter().any(|(n, _, _)| n == point) {
+            diags.push(diag(
+                FAULT_RS,
+                *line,
+                format!(
+                    "fault point `{point}` is documented in the registry table but has no \
+                     fault::point/failpoint call site under rust/src"
+                ),
+            ));
+        }
+        if !chaos.contains(point.as_str()) {
+            diags.push(diag(
+                FAULT_RS,
+                *line,
+                format!(
+                    "fault point `{point}` has no coverage in {CHAOS_RS} — every registered \
+                     point needs a chaos test exercising it"
+                ),
+            ));
+        }
+    }
+    for (name, rel, line) in &sites {
+        if !table.iter().any(|(p, _)| p == name) {
+            diags.push(diag(
+                rel,
+                *line,
+                format!(
+                    "fault point `{name}` is armed here but missing from the registry table \
+                     in {FAULT_RS} module docs"
+                ),
+            ));
+        }
+    }
+}
+
+fn check_error_code_registry(root: &Path, diags: &mut Vec<Diagnostic>) {
+    let Some(protocol_src) = read(root, PROTOCOL_RS) else {
+        diags.push(diag(PROTOCOL_RS, 1, "missing (error-code registry lives here)".into()));
+        return;
+    };
+    let consts = err_consts(&protocol_src);
+    if consts.is_empty() {
+        diags.push(diag(
+            PROTOCOL_RS,
+            1,
+            "no `pub const ERR_…: &str = \"…\";` constants found".into(),
+        ));
+    }
+    let stats = read(root, STATS_RS).unwrap_or_default();
+    let chaos = read(root, CHAOS_RS).unwrap_or_default();
+
+    // where may a code be *used*? every serve module except its definition
+    let serve_srcs: Vec<(String, String)> = rs_files_under(root, "rust/src/serve")
+        .into_iter()
+        .filter(|rel| rel != PROTOCOL_RS)
+        .filter_map(|rel| read(root, &rel).map(|s| (rel, s)))
+        .collect();
+
+    for (name, code, line) in &consts {
+        if !serve_srcs.iter().any(|(_, src)| src.contains(name.as_str())) {
+            diags.push(diag(
+                PROTOCOL_RS,
+                *line,
+                format!("error code {name} (\"{code}\") is defined but never used outside {PROTOCOL_RS}"),
+            ));
+        }
+        if !chaos.contains(code.as_str()) {
+            diags.push(diag(
+                PROTOCOL_RS,
+                *line,
+                format!(
+                    "error code \"{code}\" has no coverage in {CHAOS_RS} — every wire error \
+                     needs a chaos test asserting a structural `!{code}` response"
+                ),
+            ));
+        }
+        match CODE_COUNTERS.iter().find(|(c, _)| c == code) {
+            None => diags.push(diag(
+                PROTOCOL_RS,
+                *line,
+                format!(
+                    "error code \"{code}\" has no entry in sblint's CODE_COUNTERS map \
+                     (rust/src/lint/registry.rs) — per DESIGN.md §7 a new failure mode \
+                     ships an error code, a /stats counter, and a chaos test together; \
+                     name its counter in the map"
+                ),
+            )),
+            Some((_, counter)) => {
+                let key = format!("\"{counter}\"");
+                if !stats.contains(&key) {
+                    diags.push(diag(
+                        STATS_RS,
+                        1,
+                        format!(
+                            "error code \"{code}\" maps to /stats counter \"{counter}\" \
+                             but {STATS_RS} never emits that key"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn check_bench_registry(root: &Path, diags: &mut Vec<Diagnostic>) {
+    let Ok(entries) = fs::read_dir(root) else { return };
+    let mut bench_jsons: Vec<String> = entries
+        .flatten()
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    bench_jsons.sort();
+
+    for fname in bench_jsons {
+        let Some(text) = read(root, &fname) else { continue };
+        let parsed = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                diags.push(diag(&fname, 1, format!("not parseable as JSON: {e:?}")));
+                continue;
+            }
+        };
+        let Some(obj) = parsed.as_obj() else {
+            diags.push(diag(&fname, 1, "top level is not a JSON object".into()));
+            continue;
+        };
+        let Some(schema) = obj.get("schema").and_then(|s| s.as_str()) else {
+            diags.push(diag(&fname, 1, "missing \"schema\": \"<bench>/<version>\" tag".into()));
+            continue;
+        };
+        let bench_name = schema.split('/').next().unwrap_or("");
+        let bench_rel = format!("benches/{bench_name}.rs");
+        let Some(bench_src) = read(root, &bench_rel) else {
+            diags.push(diag(
+                &fname,
+                1,
+                format!("schema \"{schema}\" names {bench_rel}, which does not exist"),
+            ));
+            continue;
+        };
+        if !bench_src.contains(&format!("\"{schema}\"")) {
+            diags.push(diag(
+                &bench_rel,
+                1,
+                format!(
+                    "does not emit schema tag \"{schema}\" claimed by {fname} — bump both \
+                     sides together when the trajectory format changes"
+                ),
+            ));
+        }
+        // tracked claims: top-level objects carrying a "metric" field
+        for (key, val) in obj {
+            let is_claim = val.as_obj().is_some_and(|o| o.contains_key("metric"));
+            if is_claim && !bench_src.contains(&format!("\"{key}\"")) {
+                diags.push(diag(
+                    &bench_rel,
+                    1,
+                    format!(
+                        "claim key \"{key}\" tracked in {fname} is never written by this \
+                         bench — the regenerated trajectory would silently drop it"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doc_table_parsing_skips_header_and_separator() {
+        let src = "//! | point | kind |\n//! |-------|------|\n//! | `a.b` | failpoint |\n";
+        let pts = doc_table_points(src);
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].0, "a.b");
+        assert_eq!(pts[0].1, 3);
+    }
+
+    #[test]
+    fn call_sites_ignore_comments_and_plain_strings() {
+        let src = "// fault::point(\"doc.mention\")\nlet s = \"fault::failpoint(\";\nfault::failpoint(\"real.site\")?;\n";
+        let sites = fault_call_sites("rust/src/x.rs", src);
+        assert_eq!(sites.len(), 1, "{sites:?}");
+        assert_eq!(sites[0], ("real.site".to_string(), 3));
+    }
+
+    #[test]
+    fn err_const_parsing() {
+        let src = "pub const ERR_TIMEOUT: &str = \"timeout\";\nconst OTHER: &str = \"x\";\n";
+        let c = err_consts(src);
+        assert_eq!(c, vec![("ERR_TIMEOUT".to_string(), "timeout".to_string(), 1)]);
+    }
+}

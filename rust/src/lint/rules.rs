@@ -1,0 +1,305 @@
+//! The sblint rule catalog (R1–R4) and the `LINT-ALLOW` pragma grammar.
+//!
+//! Each rule is a named, individually suppressible invariant (see
+//! DESIGN.md "Invariants as code" for the catalog and the procedure for
+//! adding one). Suppression is always explicit and always carries a
+//! reason:
+//!
+//! ```text
+//! // LINT-ALLOW(<rule>): <reason>
+//! ```
+//!
+//! A pragma on a code line suppresses that rule on that line; a pragma
+//! on a comment-only line suppresses it on the next line that has code.
+//! A malformed pragma (unknown shape, empty rule, missing reason) is
+//! itself a diagnostic (`pragma`), so a typo'd suppression can never
+//! silently disable a rule.
+
+use crate::lint::scan::{has_token, Line, ScannedFile};
+
+/// One lint finding. `line` is 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rel_path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.rel_path, self.line, self.rule, self.message)
+    }
+}
+
+/// Rule names (the pragma vocabulary).
+pub const RULE_UNSAFE_SAFETY: &str = "unsafe-safety";
+pub const RULE_DISJOINT: &str = "disjoint";
+pub const RULE_DETERMINISM: &str = "determinism";
+pub const RULE_SERVE_UNWRAP: &str = "serve-unwrap";
+pub const RULE_REGISTRY: &str = "registry";
+pub const RULE_PRAGMA: &str = "pragma";
+
+/// Every rule a pragma may name.
+pub const ALL_RULES: &[&str] = &[
+    RULE_UNSAFE_SAFETY,
+    RULE_DISJOINT,
+    RULE_DETERMINISM,
+    RULE_SERVE_UNWRAP,
+    RULE_REGISTRY,
+    RULE_PRAGMA,
+];
+
+/// Modules whose code must be a pure function of its inputs (R3): same
+/// data + config ⇒ same bits, for any thread count, on any host.
+const DETERMINISTIC_DIRS: &[&str] = &[
+    "rust/src/engine/",
+    "rust/src/tree/",
+    "rust/src/sketch/",
+    "rust/src/predict/",
+    "rust/src/boosting/",
+];
+
+/// The serve request path (R4): files whose reader/writer/worker loops
+/// must never abort the process on a per-request failure.
+const SERVE_REQUEST_PATH: &[&str] = &[
+    "rust/src/serve/protocol.rs",
+    "rust/src/serve/queue.rs",
+    "rust/src/serve/server.rs",
+];
+
+/// A parsed `LINT-ALLOW(rule): reason` pragma, anchored to the line it
+/// suppresses.
+#[derive(Debug)]
+struct Allow {
+    /// 0-based index of the line the pragma suppresses.
+    target: usize,
+    rule: String,
+}
+
+/// Extract pragmas (and malformed-pragma diagnostics) from a file.
+fn collect_allows(file: &ScannedFile) -> (Vec<Allow>, Vec<Diagnostic>) {
+    let mut allows = Vec::new();
+    let mut diags = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        // a pragma must *start* the comment — prose that merely
+        // mentions the LINT-ALLOW marker (like these docs) is not a
+        // suppression attempt
+        let trimmed = line.comment.trim_start();
+        if !trimmed.starts_with("LINT-ALLOW") {
+            continue;
+        }
+        let rest = &trimmed["LINT-ALLOW".len()..];
+        let parsed = (|| -> Result<String, String> {
+            let rest = rest
+                .strip_prefix('(')
+                .ok_or("expected `LINT-ALLOW(<rule>): <reason>`")?;
+            let close = rest.find(')').ok_or("unclosed `(` in LINT-ALLOW")?;
+            let rule = rest[..close].trim();
+            if rule.is_empty() {
+                return Err("empty rule name in LINT-ALLOW".to_string());
+            }
+            if !ALL_RULES.contains(&rule) {
+                return Err(format!(
+                    "unknown rule {rule:?} in LINT-ALLOW (known: {})",
+                    ALL_RULES.join(", ")
+                ));
+            }
+            let after = rest[close + 1..].trim_start();
+            let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+            if reason.is_empty() {
+                return Err(format!(
+                    "LINT-ALLOW({rule}) needs a reason: `LINT-ALLOW({rule}): <why this is sound>`"
+                ));
+            }
+            Ok(rule.to_string())
+        })();
+        match parsed {
+            Err(msg) => diags.push(Diagnostic {
+                rel_path: file.rel_path.clone(),
+                line: idx + 1,
+                rule: RULE_PRAGMA,
+                message: msg.to_string(),
+            }),
+            Ok(rule) => {
+                // a comment-only pragma line covers the next code line
+                let target = if file.lines[idx].is_code_empty() {
+                    file.lines[idx + 1..]
+                        .iter()
+                        .position(|l| !l.is_code_empty())
+                        .map(|off| idx + 1 + off)
+                        .unwrap_or(idx)
+                } else {
+                    idx
+                };
+                allows.push(Allow { target, rule });
+            }
+        }
+    }
+    (allows, diags)
+}
+
+fn allowed(allows: &[Allow], idx: usize, rule: &str) -> bool {
+    allows.iter().any(|a| a.target == idx && a.rule == rule)
+}
+
+/// The comment context of line `idx`: its own trailing comment plus the
+/// contiguous block of comment/attribute-only lines directly above it.
+/// This is where `SAFETY:` / `DISJOINT:` / `# Safety` must live.
+fn comment_context(lines: &[Line], idx: usize) -> String {
+    let mut ctx = lines[idx].comment.clone();
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        // a comment-only line continues the block even when its text is
+        // empty (a bare `///` separator inside a rustdoc section); only
+        // a genuinely blank line or code breaks it
+        if l.is_code_empty() && !l.raw.trim().is_empty() {
+            ctx.push('\n');
+            ctx.push_str(&l.comment);
+        } else if l.is_attr_only() {
+            ctx.push('\n');
+            ctx.push_str(&l.comment);
+        } else {
+            break;
+        }
+    }
+    ctx
+}
+
+/// Run R1–R4 over one scanned file. (R5, the cross-registry check,
+/// needs the whole tree — see [`crate::lint::registry`].)
+pub fn check_file(file: &ScannedFile) -> Vec<Diagnostic> {
+    let (allows, mut diags) = collect_allows(file);
+    let is_deterministic_module =
+        DETERMINISTIC_DIRS.iter().any(|d| file.rel_path.starts_with(d));
+    let on_request_path = SERVE_REQUEST_PATH.contains(&file.rel_path.as_str());
+
+    for (idx, line) in file.lines.iter().enumerate() {
+        let code = line.code.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+        let mut push = |rule: &'static str, message: String| {
+            if !allowed(&allows, idx, rule) {
+                diags.push(Diagnostic {
+                    rel_path: file.rel_path.clone(),
+                    line: idx + 1,
+                    rule,
+                    message,
+                });
+            }
+        };
+
+        // R1: every unsafe block/fn/impl carries its invariant.
+        if has_token(code, "unsafe") {
+            let ctx = comment_context(&file.lines, idx);
+            if !ctx.contains("SAFETY:") && !ctx.contains("# Safety") {
+                push(
+                    RULE_UNSAFE_SAFETY,
+                    "`unsafe` without a `// SAFETY:` comment (state the invariant that \
+                     makes this sound; `# Safety` rustdoc sections also count)"
+                        .to_string(),
+                );
+            }
+        }
+
+        // R2: range_mut call sites name their partition.
+        if code.contains("range_mut(") && !code.contains("fn range_mut") {
+            let ctx = comment_context(&file.lines, idx);
+            if !ctx.contains("DISJOINT:") {
+                push(
+                    RULE_DISJOINT,
+                    "`range_mut` call without a `// DISJOINT:` comment naming the \
+                     partition that makes concurrent ranges disjoint"
+                        .to_string(),
+                );
+            }
+        }
+
+        // R3: deterministic modules stay pure in their inputs.
+        if is_deterministic_module && !line.in_test {
+            for (needle, what) in [
+                ("HashMap", "`HashMap` (iteration order is nondeterministic; use `BTreeMap` or a `Vec`)"),
+                ("HashSet", "`HashSet` (iteration order is nondeterministic; use `BTreeSet` or a sorted `Vec`)"),
+                ("Instant::now", "`Instant::now` (wall-clock reads)"),
+                ("SystemTime", "`SystemTime` (wall-clock reads)"),
+                ("std::env::", "`std::env` (environment reads)"),
+                ("env::var", "`env::var` (environment reads)"),
+            ] {
+                if code.contains(needle) {
+                    push(
+                        RULE_DETERMINISM,
+                        format!(
+                            "{what} in a deterministic module — engine/, tree/, sketch/, \
+                             predict/, boosting/ must be pure functions of their inputs \
+                             (same data + config => same bits)"
+                        ),
+                    );
+                    break; // one finding per line, even if needles overlap
+                }
+            }
+        }
+
+        // R4: the serve request path never aborts on a per-request error.
+        if on_request_path && !line.in_test {
+            for needle in [".unwrap()", ".expect("] {
+                if code.contains(needle) {
+                    push(
+                        RULE_SERVE_UNWRAP,
+                        format!(
+                            "`{needle}` on the serve request path — return a structured \
+                             `!internal` error or recover the lock with \
+                             `unwrap_or_else(PoisonError::into_inner)`"
+                        ),
+                    );
+                    break; // one finding per line
+                }
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan_source;
+    use std::path::PathBuf;
+
+    fn check(rel: &str, src: &str) -> Vec<Diagnostic> {
+        check_file(&scan_source(rel, PathBuf::from(rel), src))
+    }
+
+    #[test]
+    fn pragma_on_comment_line_covers_next_code_line() {
+        let src = "// LINT-ALLOW(serve-unwrap): provably non-poisoned\nlet x = m.lock().unwrap();\n";
+        assert!(check("rust/src/serve/queue.rs", src).is_empty());
+    }
+
+    #[test]
+    fn malformed_pragma_is_its_own_diagnostic() {
+        let d = check("rust/src/serve/queue.rs", "// LINT-ALLOW(serve-unwrap) no colon\nf();\n");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_PRAGMA);
+        let d = check("rust/src/x.rs", "// LINT-ALLOW(not-a-rule): whatever\n");
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn unsafe_accepts_rustdoc_safety_section() {
+        let src = "/// Does things.\n///\n/// # Safety\n///\n/// Caller upholds X.\npub unsafe fn f() {}\n";
+        assert!(check("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn determinism_rule_skips_test_mods_and_other_modules() {
+        let in_test =
+            "#[cfg(test)]\nmod tests {\n    fn t() { let _ = std::env::var(\"X\"); }\n}\n";
+        assert!(check("rust/src/engine/x.rs", in_test).is_empty());
+        let elsewhere = "fn f() { let _ = Instant::now(); }\n";
+        assert!(check("rust/src/serve/x.rs", elsewhere).is_empty());
+    }
+}

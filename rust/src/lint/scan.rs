@@ -1,0 +1,370 @@
+//! The sblint source scanner: a small, dependency-free line/token pass.
+//!
+//! `sblint` deliberately avoids `syn` (the crate's zero-external-deps
+//! rule), so every rule works on a *scanned* view of each source file:
+//!
+//! * [`Line::code`] — the line with comments stripped and the contents
+//!   of string/char literals blanked to spaces (delimiters kept). Rules
+//!   that look for tokens (`unsafe`, `.unwrap()`, `HashMap`) match
+//!   here, so a string containing the word "unsafe" never trips R1.
+//! * [`Line::comment`] — the comment text on the line (`//`, `///`,
+//!   `//!`, and `/* */` bodies). `SAFETY:`/`DISJOINT:`/`LINT-ALLOW`
+//!   grammar lives here.
+//! * [`Line::raw`] — the untouched source line. Only the cross-registry
+//!   checks read this (they extract names *out of* string literals,
+//!   e.g. `fault::point("serve.worker.score")`).
+//! * [`Line::in_test`] — whether the line sits inside a
+//!   `#[cfg(test)] mod … { … }` block. The determinism and serve-unwrap
+//!   rules skip test code; the `SAFETY`/`DISJOINT` rules do not (unsafe
+//!   in a test still needs its invariant written down).
+//!
+//! The scanner is conservative where Rust's lexis is genuinely hard
+//! without a real lexer (lifetimes vs char literals are disambiguated
+//! by lookahead; nested block comments are depth-counted; raw strings
+//! track their `#` count). It has line-level granularity on purpose:
+//! every project invariant the lint enforces is already written as a
+//! line-adjacent comment convention.
+
+use std::path::PathBuf;
+
+/// One scanned source line (see module docs for the three views).
+#[derive(Debug, Clone)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+    pub raw: String,
+    pub in_test: bool,
+}
+
+impl Line {
+    /// True when the line carries no code at all (blank, or
+    /// comment-only once literals/comments are stripped).
+    pub fn is_code_empty(&self) -> bool {
+        self.code.trim().is_empty()
+    }
+
+    /// True when the line's code is only an attribute (`#[…]`/`#![…]`).
+    pub fn is_attr_only(&self) -> bool {
+        let t = self.code.trim();
+        (t.starts_with("#[") || t.starts_with("#![")) && t.ends_with(']')
+    }
+}
+
+/// A fully scanned file.
+#[derive(Debug)]
+pub struct ScannedFile {
+    /// Path relative to the lint root, `/`-separated.
+    pub rel_path: String,
+    /// Absolute (or as-given) path, for diagnostics.
+    pub path: PathBuf,
+    pub lines: Vec<Line>,
+}
+
+/// Lexer state that survives line breaks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    /// `/* … */`, with nesting depth.
+    Block(u32),
+    /// `"…"`, possibly continued across lines via `\` or verbatim.
+    Str,
+    /// `r##"…"##` with the given number of `#`s.
+    RawStr(u32),
+}
+
+/// Scan `text` into per-line code/comment views (no test-mod marking
+/// yet — [`scan_source`] runs both passes).
+fn lex_lines(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = State::Code;
+    for raw_line in text.lines() {
+        let b = raw_line.as_bytes();
+        let mut code = String::with_capacity(b.len());
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < b.len() {
+            match state {
+                State::Block(depth) => {
+                    if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        state = if depth > 1 { State::Block(depth - 1) } else { State::Code };
+                        i += 2;
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        state = State::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(b[i] as char);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if b[i] == b'\\' {
+                        code.push(' ');
+                        if i + 1 < b.len() {
+                            code.push(' ');
+                        }
+                        i += 2; // skip the escaped char (possibly past EOL)
+                    } else if b[i] == b'"' {
+                        code.push('"');
+                        state = State::Code;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if b[i] == b'"' {
+                        let h = hashes as usize;
+                        if i + 1 + h <= b.len() && b[i + 1..i + 1 + h].iter().all(|&c| c == b'#') {
+                            code.push('"');
+                            for _ in 0..h {
+                                code.push('#');
+                            }
+                            state = State::Code;
+                            i += 1 + h;
+                            continue;
+                        }
+                    }
+                    code.push(' ');
+                    i += 1;
+                }
+                State::Code => {
+                    let c = b[i];
+                    if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        // line comment (also ///, //!): rest of line
+                        comment.push_str(raw_line[i..].trim_start_matches('/'));
+                        i = b.len();
+                    } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        state = State::Block(1);
+                        i += 2;
+                    } else if c == b'"' {
+                        code.push('"');
+                        state = State::Str;
+                        i += 1;
+                    } else if (c == b'r' || c == b'b')
+                        && !prev_is_ident(&code)
+                        && raw_prefix_len(&b[i..]).is_some()
+                    {
+                        let (skip, hashes) = raw_prefix_len(&b[i..]).unwrap();
+                        for &p in &b[i..i + skip] {
+                            code.push(p as char);
+                        }
+                        state = State::RawStr(hashes);
+                        i += skip;
+                    } else if c == b'\'' {
+                        // char literal vs lifetime: a literal is '\…' or
+                        // exactly one char then ' — anything else is a
+                        // lifetime and stays code
+                        if i + 1 < b.len() && b[i + 1] == b'\\' {
+                            code.push('\'');
+                            i += 2; // the opening quote and the backslash
+                            if i < b.len() {
+                                code.push(' '); // the escaped char (handles '\'')
+                                i += 1;
+                            }
+                            while i < b.len() && b[i] != b'\'' {
+                                code.push(' ');
+                                i += 1;
+                            }
+                            if i < b.len() {
+                                code.push('\'');
+                                i += 1;
+                            }
+                        } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                            code.push('\'');
+                            code.push(' ');
+                            code.push('\'');
+                            i += 3;
+                        } else {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c as char);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // a normal string left open at EOL continues on the next line
+        out.push(Line {
+            code,
+            comment,
+            raw: raw_line.to_string(),
+            in_test: false,
+        });
+    }
+    out
+}
+
+/// Is the last pushed code char part of an identifier? (Guards the raw
+/// string prefix check so `attr` in `attrs` never reads as `r"…"`.)
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().last().is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// If `b` starts a raw (byte) string prefix — `r"`, `r#"`, `br##"`, … —
+/// return (prefix length including the opening quote, hash count).
+fn raw_prefix_len(b: &[u8]) -> Option<(usize, u32)> {
+    let mut i = 0usize;
+    if b[i] == b'b' {
+        i += 1;
+    }
+    if i >= b.len() || b[i] != b'r' {
+        return None;
+    }
+    i += 1;
+    let mut hashes = 0u32;
+    while i < b.len() && b[i] == b'#' {
+        hashes += 1;
+        i += 1;
+    }
+    if i < b.len() && b[i] == b'"' {
+        Some((i + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Mark lines inside `#[cfg(test)] mod … { … }` blocks via brace-depth
+/// tracking on the code view (string braces are already blanked).
+fn mark_test_mods(lines: &mut [Line]) {
+    let mut depth = 0i64;
+    let mut pending_cfg_test = false;
+    // depth at which a test mod was entered; in_test while depth > it
+    let mut test_entry: Option<i64> = None;
+    for line in lines.iter_mut() {
+        let code = line.code.clone();
+        let trimmed = code.trim();
+        if let Some(entry) = test_entry {
+            line.in_test = depth > entry;
+        }
+        if trimmed.contains("#[cfg(test)]") {
+            pending_cfg_test = true;
+        } else if pending_cfg_test && !trimmed.is_empty() {
+            if trimmed.starts_with("mod ") || trimmed.starts_with("pub mod ") {
+                if test_entry.is_none() {
+                    test_entry = Some(depth);
+                    line.in_test = true;
+                }
+                pending_cfg_test = false;
+            } else if !line.is_attr_only() {
+                pending_cfg_test = false;
+            }
+        }
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if let Some(entry) = test_entry {
+                        if depth <= entry {
+                            test_entry = None;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Scan one source file into the views every rule consumes.
+pub fn scan_source(rel_path: &str, path: PathBuf, text: &str) -> ScannedFile {
+    let mut lines = lex_lines(text);
+    mark_test_mods(&mut lines);
+    ScannedFile { rel_path: rel_path.to_string(), path, lines }
+}
+
+/// Does `code` contain `word` as a standalone token (not a substring of
+/// a longer identifier)?
+pub fn has_token(code: &str, word: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+        let end = at + word.len();
+        let after_ok = end >= code.len()
+            || !code[end..]
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(text: &str) -> ScannedFile {
+        scan_source("rust/src/x.rs", PathBuf::from("x.rs"), text)
+    }
+
+    #[test]
+    fn strings_and_comments_leave_the_code_view() {
+        let f = scan("let s = \"unsafe { }\"; // unsafe here too\nunsafe { x() }\n");
+        assert!(!has_token(&f.lines[0].code, "unsafe"), "{:?}", f.lines[0].code);
+        assert!(f.lines[0].comment.contains("unsafe here too"));
+        assert!(has_token(&f.lines[1].code, "unsafe"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes_are_blanked() {
+        let f = scan(r####"let a = r#"has "quotes" and unsafe"#; let b = "esc\"unsafe";"####);
+        assert!(!has_token(&f.lines[0].code, "unsafe"), "{:?}", f.lines[0].code);
+        // code after both literals survives
+        assert!(f.lines[0].code.contains("let b"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let f = scan("/* outer /* inner */ still comment */ code();\n/* open\nunsafe\n*/ tail();\n");
+        assert!(f.lines[0].code.contains("code()"));
+        assert!(f.lines[0].comment.contains("still comment"));
+        assert!(!has_token(&f.lines[2].code, "unsafe"));
+        assert!(f.lines[3].code.contains("tail()"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let f = scan("fn f<'a>(x: &'a str) -> char { 'x' }\nlet c = '{';\nlet d = '\\n';\n");
+        assert!(f.lines[0].code.contains("&'a str"));
+        // brace inside a char literal must not affect depth tracking
+        assert!(!f.lines[1].code.contains('{'), "{:?}", f.lines[1].code);
+        assert!(f.lines[2].code.contains("let d"));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_marked_to_its_closing_brace() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let f = scan(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[2].in_test, "mod line");
+        assert!(f.lines[4].in_test, "test body");
+        assert!(!f.lines[6].in_test, "code after the mod");
+    }
+
+    #[test]
+    fn multiline_string_keeps_blanking() {
+        let f = scan("let s = \"line one\nunsafe two\";\nunsafe { real() }\n");
+        assert!(!has_token(&f.lines[1].code, "unsafe"));
+        assert!(has_token(&f.lines[2].code, "unsafe"));
+    }
+
+    #[test]
+    fn token_boundaries_are_respected() {
+        assert!(has_token("unsafe {", "unsafe"));
+        assert!(!has_token("unsafer()", "unsafe"));
+        assert!(!has_token("an_unsafe_name", "unsafe"));
+        assert!(has_token("x.unwrap()", ".unwrap()"));
+    }
+}

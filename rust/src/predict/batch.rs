@@ -130,7 +130,10 @@ impl FlatForest {
                 }
                 let end = (start + block).min(n);
                 gather_block(ds, start, end, &mut tile);
-                // Safety: pairwise-disjoint block ranges (see above).
+                // SAFETY: `end <= n` and `out` holds `n * width` cells,
+                // so the range is in bounds.
+                // DISJOINT: partitioned by row block — the atomic cursor
+                // hands each `[start, end)` block to exactly one worker.
                 let dst = unsafe { out_cells.range_mut(start * width..end * width) };
                 per_block(&tile, end - start, dst);
             }

@@ -67,7 +67,9 @@ impl Job {
     /// Deliver the result (scores row-major, or an error message) and
     /// wake the waiting ticket. Consumes the job: exactly one delivery.
     pub fn complete(self, result: Result<Vec<f32>, String>) {
-        let mut state = self.slot.state.lock().unwrap();
+        // a panicked completer leaves plain data behind; recover the
+        // lock rather than poisoning every ticket on the request path
+        let mut state = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
         debug_assert!(state.is_none(), "job completed twice");
         *state = Some(result);
         self.slot.done.notify_all();
@@ -94,12 +96,14 @@ impl Drop for Job {
 impl JobTicket {
     /// Block until the job completes and take its result.
     pub fn wait(self) -> Result<Vec<f32>, String> {
-        let mut state = self.slot.state.lock().unwrap();
+        // poison recovery on both acquire and re-acquire: the slot holds
+        // plain data, and an aborted waiter must not kill later requests
+        let mut state = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(result) = state.take() {
                 return result;
             }
-            state = self.slot.done.wait(state).unwrap();
+            state = self.slot.done.wait(state).unwrap_or_else(|e| e.into_inner());
         }
     }
 }

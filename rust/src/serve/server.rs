@@ -200,7 +200,9 @@ impl Shared {
     fn signal_shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         let (lock, cvar) = &self.shutdown_cv;
-        *lock.lock().unwrap() = true;
+        // the guarded value is a single bool; recover a poisoned lock so
+        // shutdown always propagates even after a panicked thread
+        *lock.lock().unwrap_or_else(|e| e.into_inner()) = true;
         cvar.notify_all();
     }
 }
@@ -279,9 +281,11 @@ impl Server {
     /// Block until shutdown is requested (`/shutdown` or [`Server::stop`]).
     pub fn wait(&self) {
         let (lock, cvar) = &self.shared.shutdown_cv;
-        let mut down = lock.lock().unwrap();
+        // poison-recovered like signal_shutdown: the bool is trivially
+        // consistent, and wait() must return once shutdown is signalled
+        let mut down = lock.lock().unwrap_or_else(|e| e.into_inner());
         while !*down {
-            down = cvar.wait(down).unwrap();
+            down = cvar.wait(down).unwrap_or_else(|e| e.into_inner());
         }
     }
 

@@ -142,8 +142,10 @@ pub fn reduce_shards(pool: &ThreadPool, shards: &[f32], n_shards: usize, out: &m
     }
     let out_cells = DisjointSlice::new(out);
     pool.for_each_chunk(len, 16 * 1024, |r| {
-        // Safety: chunk ranges from the queue are disjoint sub-ranges of
-        // `0..len`, so every cell is written by exactly one worker.
+        // SAFETY: chunk ranges from the queue lie within `0..len` and
+        // every cell is written by exactly one worker.
+        // DISJOINT: partitioned by output cell range — `for_each_chunk`
+        // hands each `r` out once, and chunks never overlap.
         let dst = unsafe { out_cells.range_mut(r.clone()) };
         for s in 0..n_shards {
             let src = &shards[s * len + r.start..s * len + r.end];
@@ -165,7 +167,13 @@ pub struct DisjointSlice<'a, T> {
     _borrow: std::marker::PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: the wrapper is a pointer + length into a `&mut [T]` whose
+// borrow it holds; moving it across threads moves no `T`, so `T: Send`
+// suffices.
 unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+// SAFETY: sharing `&DisjointSlice` only permits `range_mut`, whose own
+// contract (pairwise-disjoint ranges) makes concurrent use race-free;
+// `T: Send` because disjoint &mut access hands values between threads.
 unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
 
 impl<'a, T> DisjointSlice<'a, T> {
@@ -391,11 +399,17 @@ mod tests {
 
     #[test]
     fn for_each_chunk_covers_every_item_exactly_once() {
-        let n = 1000;
+        // Miri interprets every access; a smaller n keeps the run in
+        // seconds while still spanning many chunks (130 / 13 = 10)
+        let n = if cfg!(miri) { 130 } else { 1000 };
         let mut hits = vec![0u8; n];
         let pool = ThreadPool::new(4);
         let cells = DisjointSlice::new(&mut hits);
         pool.for_each_chunk(n, 13, |r| {
+            // SAFETY: in-bounds — `for_each_chunk` only yields ranges
+            // within `0..n`, which is `hits.len()`.
+            // DISJOINT: partitioned by chunk — each range is handed to
+            // exactly one worker (the property this test asserts).
             let dst = unsafe { cells.range_mut(r) };
             for v in dst {
                 *v += 1;
@@ -561,11 +575,13 @@ mod tests {
                 }
             }));
         }
+        // scaled under Miri: contention, not volume, is what this checks
+        let per: u32 = if cfg!(miri) { 8 } else { 50 };
         let mut producers = Vec::new();
         for p in 0..2u32 {
             let q2 = q.clone();
             producers.push(std::thread::spawn(move || {
-                for i in 0..50u32 {
+                for i in 0..per {
                     q2.push(p * 100 + i).unwrap();
                 }
             }));
@@ -579,7 +595,7 @@ mod tests {
         }
         let mut got = seen.lock().unwrap().clone();
         got.sort_unstable();
-        let mut want: Vec<u32> = (0..50).chain(100..150).collect();
+        let mut want: Vec<u32> = (0..per).chain(100..100 + per).collect();
         want.sort_unstable();
         assert_eq!(got, want);
     }

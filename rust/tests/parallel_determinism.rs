@@ -12,10 +12,24 @@ use sketchboost::data::profiles::Profile;
 use sketchboost::engine::{ComputeEngine, NativeEngine};
 use sketchboost::prelude::*;
 
+/// `SB_TEST_SCALE` in (0, 1] shrinks the workload for slow
+/// instrumented builds (ThreadSanitizer/AddressSanitizer run this suite
+/// 5–20× slower); unset means full size.
+fn test_scale() -> f64 {
+    std::env::var("SB_TEST_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .map(|s| s.clamp(0.05, 1.0))
+        .unwrap_or(1.0)
+}
+
 /// A synthetic profile big enough to shard (otto: 9 classes, 93
-/// features; 6000 rows ≈ 3 histogram shards at the root).
+/// features; 6000 rows ≈ 3 histogram shards at the root). The floor
+/// keeps scaled runs above the 2·2048-row sharding threshold so the
+/// parallel histogram path — the thing under test — still executes.
 fn workload() -> Dataset {
-    Profile::by_name("otto").expect("otto profile").generate_sized(6000, 9)
+    let rows = ((6000.0 * test_scale()) as usize).max(4200);
+    Profile::by_name("otto").expect("otto profile").generate_sized(rows, 9)
 }
 
 fn assert_ensembles_identical(a: &Ensemble, b: &Ensemble, label: &str) {

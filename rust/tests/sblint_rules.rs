@@ -1,0 +1,369 @@
+//! Fixture tests for every `sblint` rule: one known-bad snippet per
+//! rule asserting the exact diagnostic, one known-good asserting
+//! silence, temp-tree fixtures for the cross-registry checks, and a
+//! self-test that the lint runs clean on the repo's own tree (both via
+//! the library API and the built `sblint` binary's exit code).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use sketchboost::lint;
+use sketchboost::lint::registry::check_registries;
+use sketchboost::lint::rules::{check_file, Diagnostic};
+use sketchboost::lint::scan::scan_source;
+
+fn check(rel: &str, src: &str) -> Vec<Diagnostic> {
+    check_file(&scan_source(rel, PathBuf::from(rel), src))
+}
+
+fn the_one(diags: &[Diagnostic]) -> &Diagnostic {
+    assert_eq!(diags.len(), 1, "expected exactly one diagnostic, got {diags:#?}");
+    &diags[0]
+}
+
+// ---------------------------------------------------------------- R1
+
+#[test]
+fn r1_unsafe_without_safety_comment() {
+    let d = check("rust/src/util/x.rs", "fn f() {\n    unsafe { g() }\n}\n");
+    let d = the_one(&d);
+    assert_eq!((d.rule, d.line), ("unsafe-safety", 2));
+    assert!(d.message.contains("`unsafe` without a `// SAFETY:` comment"), "{}", d.message);
+}
+
+#[test]
+fn r1_safety_comment_silences() {
+    let src = "fn f() {\n    // SAFETY: g has no preconditions here\n    unsafe { g() }\n}\n";
+    assert!(check("rust/src/util/x.rs", src).is_empty());
+    // trailing same-line comments count too
+    let inline = "fn f() {\n    unsafe { g() } // SAFETY: g has no preconditions here\n}\n";
+    assert!(check("rust/src/util/x.rs", inline).is_empty());
+}
+
+#[test]
+fn r1_applies_inside_test_mods_too() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn t() { unsafe { g() } }\n}\n";
+    let d = check("rust/src/util/x.rs", src);
+    assert_eq!(the_one(&d).rule, "unsafe-safety");
+}
+
+#[test]
+fn r1_word_unsafe_in_strings_and_comments_is_ignored() {
+    let src = "// this mentions unsafe code\nlet s = \"unsafe { }\";\n";
+    assert!(check("rust/src/util/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- R2
+
+#[test]
+fn r2_range_mut_without_disjoint_comment() {
+    let src = "// SAFETY: in bounds\nlet d = unsafe { s.range_mut(0..n) };\n";
+    let d = check("rust/src/engine/x.rs", src);
+    let d = the_one(&d);
+    assert_eq!((d.rule, d.line), ("disjoint", 2));
+    assert!(d.message.contains("`// DISJOINT:` comment naming the partition"), "{}", d.message);
+}
+
+#[test]
+fn r2_disjoint_comment_silences() {
+    let src = "// SAFETY: in bounds\n// DISJOINT: partitioned by shard index\nlet d = unsafe { s.range_mut(0..n) };\n";
+    assert!(check("rust/src/engine/x.rs", src).is_empty());
+}
+
+#[test]
+fn r2_definition_site_is_exempt() {
+    // the declaration carries `# Safety` docs; R2 targets call sites
+    let src = "/// # Safety\n/// disjoint ranges only\npub unsafe fn range_mut(&self, r: Range<usize>) -> &mut [T] {\n    body()\n}\n";
+    assert!(check("rust/src/util/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- R3
+
+#[test]
+fn r3_hashmap_in_deterministic_module() {
+    let d = check("rust/src/tree/x.rs", "use std::collections::HashMap;\n");
+    let d = the_one(&d);
+    assert_eq!((d.rule, d.line), ("determinism", 1));
+    assert!(d.message.contains("`HashMap`"), "{}", d.message);
+    assert!(d.message.contains("deterministic module"), "{}", d.message);
+}
+
+#[test]
+fn r3_clock_reads_in_deterministic_module() {
+    let d = check("rust/src/sketch/x.rs", "fn f() { let t = Instant::now(); }\n");
+    assert_eq!(the_one(&d).rule, "determinism");
+    let d = check("rust/src/predict/x.rs", "fn f() { let v = std::env::var(\"X\"); }\n");
+    assert_eq!(the_one(&d).rule, "determinism");
+}
+
+#[test]
+fn r3_silent_outside_deterministic_modules_and_in_tests() {
+    assert!(check("rust/src/serve/x.rs", "use std::collections::HashMap;\n").is_empty());
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { let t = Instant::now(); }\n}\n";
+    assert!(check("rust/src/engine/x.rs", in_test).is_empty());
+}
+
+#[test]
+fn r3_lint_allow_with_reason_silences() {
+    let src = "// LINT-ALLOW(determinism): telemetry only, nothing reads it\nlet t = Instant::now();\n";
+    assert!(check("rust/src/boosting/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- R4
+
+#[test]
+fn r4_unwrap_on_request_path() {
+    let d = check("rust/src/serve/queue.rs", "fn f() { let g = m.lock().unwrap(); }\n");
+    let d = the_one(&d);
+    assert_eq!((d.rule, d.line), ("serve-unwrap", 1));
+    assert!(d.message.contains("`.unwrap()` on the serve request path"), "{}", d.message);
+}
+
+#[test]
+fn r4_expect_on_request_path() {
+    let d = check("rust/src/serve/server.rs", "fn f() { x.expect(\"boom\"); }\n");
+    assert_eq!(the_one(&d).rule, "serve-unwrap");
+}
+
+#[test]
+fn r4_poison_recovery_and_off_path_files_are_silent() {
+    let src = "fn f() { let g = m.lock().unwrap_or_else(|e| e.into_inner()); }\n";
+    assert!(check("rust/src/serve/queue.rs", src).is_empty());
+    // stats.rs is not on the request path
+    assert!(check("rust/src/serve/stats.rs", "fn f() { x.unwrap(); }\n").is_empty());
+    // test mods are exempt (they assert, they don't serve)
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+    assert!(check("rust/src/serve/server.rs", in_test).is_empty());
+}
+
+// ------------------------------------------------------------ pragma
+
+#[test]
+fn pragma_must_be_well_formed() {
+    let d = check("rust/src/serve/queue.rs", "// LINT-ALLOW(serve-unwrap) missing colon\nf();\n");
+    let d = the_one(&d);
+    assert_eq!(d.rule, "pragma");
+    assert!(d.message.contains("unclosed `(`") || d.message.contains("needs a reason"), "{}", d.message);
+}
+
+#[test]
+fn pragma_unknown_rule_and_missing_reason_are_diagnostics() {
+    let d = check("rust/src/x.rs", "// LINT-ALLOW(no-such-rule): whatever\n");
+    assert!(the_one(&d).message.contains("unknown rule"), "{:?}", d);
+    let d = check("rust/src/x.rs", "// LINT-ALLOW(determinism):\n");
+    assert!(the_one(&d).message.contains("needs a reason"), "{:?}", d);
+}
+
+#[test]
+fn pragma_only_suppresses_its_named_rule() {
+    // a determinism allow must not hide the serve-unwrap finding
+    let src = "// LINT-ALLOW(determinism): wrong rule for this line\nlet g = m.lock().unwrap();\n";
+    let d = check("rust/src/serve/queue.rs", src);
+    assert_eq!(the_one(&d).rule, "serve-unwrap");
+}
+
+// ---------------------------------------------------------------- R5
+
+/// A minimal tree where every registry agrees. Each breaking test
+/// perturbs exactly one file.
+fn consistent_tree() -> Vec<(&'static str, String)> {
+    vec![
+        (
+            "rust/src/util/fault.rs",
+            "//! | point | kind | effect |\n\
+             //! |-------|------|--------|\n\
+             //! | `a.b` | failpoint | boom |\n\
+             pub fn failpoint(_p: &str) {}\n"
+                .to_string(),
+        ),
+        (
+            "rust/src/serve/protocol.rs",
+            "pub const ERR_TIMEOUT: &str = \"timeout\";\n".to_string(),
+        ),
+        (
+            "rust/src/serve/server.rs",
+            // a real call site + a use of the error constant
+            format!("fn f() {{ {}(\"a.b\"); let _ = ERR_TIMEOUT; }}\n", "fault::failpoint"),
+        ),
+        (
+            "rust/src/serve/stats.rs",
+            "pub fn emit() { set(\"timeouts\"); }\n".to_string(),
+        ),
+        (
+            "rust/tests/serve_chaos.rs",
+            "// covers point a.b and asserts a structural !timeout response\n".to_string(),
+        ),
+        (
+            "BENCH_x.json",
+            "{\n  \"schema\": \"x/v1\",\n  \"claim\": { \"metric\": \"m\", \"measured\": null }\n}\n"
+                .to_string(),
+        ),
+        (
+            "benches/x.rs",
+            "fn main() { emit(\"x/v1\"); emit(\"claim\"); }\n".to_string(),
+        ),
+    ]
+}
+
+fn write_tree(case: &str, files: &[(&str, String)]) -> PathBuf {
+    let base = std::env::temp_dir().join(format!("sblint_fixture_{case}"));
+    let _ = fs::remove_dir_all(&base);
+    for (rel, text) in files {
+        let p = base.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(&p, text).unwrap();
+    }
+    base
+}
+
+fn perturbed(case: &str, rel: &str, text: &str) -> PathBuf {
+    let mut files = consistent_tree();
+    files.retain(|(r, _)| *r != rel);
+    files.push((Box::leak(rel.to_string().into_boxed_str()), text.to_string()));
+    write_tree(case, &files)
+}
+
+#[test]
+fn r5_consistent_tree_is_clean() {
+    let root = write_tree("clean", &consistent_tree());
+    let d = check_registries(&root);
+    assert!(d.is_empty(), "{d:#?}");
+}
+
+#[test]
+fn r5_documented_point_without_call_site() {
+    let root = perturbed(
+        "nocall",
+        "rust/src/serve/server.rs",
+        "fn f() { let _ = ERR_TIMEOUT; }\n",
+    );
+    let d = check_registries(&root);
+    let hit = d
+        .iter()
+        .find(|d| d.message.contains("no fault::point/failpoint call site"))
+        .unwrap_or_else(|| panic!("{d:#?}"));
+    assert_eq!(hit.rule, "registry");
+    assert!(hit.message.contains("`a.b`"));
+    assert_eq!(hit.line, 3, "points at the doc-table row");
+}
+
+#[test]
+fn r5_armed_point_missing_from_table() {
+    let root = perturbed(
+        "notable",
+        "rust/src/util/fault.rs",
+        "//! no table here\npub fn failpoint(_p: &str) {}\n",
+    );
+    let d = check_registries(&root);
+    assert!(
+        d.iter().any(|d| d.message.contains("missing from the registry table")
+            && d.message.contains("`a.b`")
+            && d.rel_path == "rust/src/serve/server.rs"),
+        "{d:#?}"
+    );
+}
+
+#[test]
+fn r5_point_without_chaos_coverage() {
+    let root = perturbed(
+        "nochaos",
+        "rust/tests/serve_chaos.rs",
+        "// asserts a structural !timeout response but never arms the fault point\n",
+    );
+    let d = check_registries(&root);
+    assert!(
+        d.iter().any(|d| d.message.contains("no coverage in rust/tests/serve_chaos.rs")
+            && d.message.contains("`a.b`")),
+        "{d:#?}"
+    );
+}
+
+#[test]
+fn r5_error_code_must_be_used_covered_and_counted() {
+    // unused constant
+    let root = perturbed("unused", "rust/src/serve/server.rs", "fn f() { fault::failpoint(\"a.b\"); }\n");
+    let d = check_registries(&root);
+    assert!(d.iter().any(|d| d.message.contains("defined but never used")), "{d:#?}");
+
+    // code whose counter key is missing from stats.rs
+    let root = perturbed("nostat", "rust/src/serve/stats.rs", "pub fn emit() {}\n");
+    let d = check_registries(&root);
+    assert!(
+        d.iter().any(|d| d.message.contains("never emits that key") && d.message.contains("\"timeouts\"")),
+        "{d:#?}"
+    );
+
+    // a code outside the CODE_COUNTERS map: the new-failure-mode guard
+    let root = perturbed(
+        "unmapped",
+        "rust/src/serve/protocol.rs",
+        "pub const ERR_TIMEOUT: &str = \"timeout\";\npub const ERR_WEIRD: &str = \"weird\";\n",
+    );
+    let d = check_registries(&root);
+    assert!(
+        d.iter().any(|d| d.message.contains("CODE_COUNTERS") && d.message.contains("\"weird\"")),
+        "{d:#?}"
+    );
+}
+
+#[test]
+fn r5_bench_claims_and_schema_must_exist_in_bench_source() {
+    // bench stops emitting a tracked claim key
+    let root = perturbed("noclaim", "benches/x.rs", "fn main() { emit(\"x/v1\"); }\n");
+    let d = check_registries(&root);
+    assert!(
+        d.iter().any(|d| d.message.contains("claim key \"claim\"") && d.rel_path == "benches/x.rs"),
+        "{d:#?}"
+    );
+
+    // schema tag drift
+    let root = perturbed("noschema", "benches/x.rs", "fn main() { emit(\"x/v2\"); emit(\"claim\"); }\n");
+    let d = check_registries(&root);
+    assert!(d.iter().any(|d| d.message.contains("does not emit schema tag \"x/v1\"")), "{d:#?}");
+
+    // schema naming a bench that does not exist
+    let mut files = consistent_tree();
+    files.retain(|(r, _)| *r != "benches/x.rs");
+    let root = write_tree("nobench", &files);
+    let d = check_registries(&root);
+    assert!(d.iter().any(|d| d.message.contains("benches/x.rs, which does not exist")), "{d:#?}");
+}
+
+// ------------------------------------------------------- self-tests
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+#[test]
+fn sblint_runs_clean_on_this_repo() {
+    let diags = lint::run(&repo_root());
+    for d in &diags {
+        eprintln!("{}", d.render());
+    }
+    assert!(diags.is_empty(), "sblint found {} violation(s) in the repo tree", diags.len());
+}
+
+#[test]
+fn sblint_binary_exit_codes() {
+    use std::process::Command;
+    let bin = env!("CARGO_BIN_EXE_sblint");
+
+    // clean repo tree -> exit 0
+    let ok = Command::new(bin).arg("--root").arg(repo_root()).output().unwrap();
+    assert!(
+        ok.status.success(),
+        "sblint on the repo tree failed:\n{}",
+        String::from_utf8_lossy(&ok.stdout)
+    );
+
+    // one injected violation -> exit nonzero, diagnostic on stdout
+    let mut files = consistent_tree();
+    files.push(("rust/src/util/bad.rs", "fn f() { unsafe { g() } }\n".to_string()));
+    let root = write_tree("binary_bad", &files);
+    let bad = Command::new(bin).arg("--root").arg(&root).output().unwrap();
+    assert!(!bad.status.success(), "sblint must exit nonzero on a violation");
+    let out = String::from_utf8_lossy(&bad.stdout);
+    assert!(out.contains("[unsafe-safety]"), "stdout was:\n{out}");
+    assert!(out.contains("rust/src/util/bad.rs:1"), "stdout was:\n{out}");
+}

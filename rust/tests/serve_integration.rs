@@ -30,6 +30,19 @@ fn train_and_save(dir: &str, seed: u64) -> (Dataset, Ensemble, PathBuf) {
     (ds, model, path)
 }
 
+/// `SB_TEST_SCALE` in (0, 1] shrinks per-client request counts for
+/// slow instrumented builds (ThreadSanitizer/AddressSanitizer); the
+/// floor of 5 keeps every interleaving class (single-row, multi-row,
+/// cross-batch) represented.
+fn scaled(n: usize) -> usize {
+    let s = std::env::var("SB_TEST_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .map(|s| s.clamp(0.05, 1.0))
+        .unwrap_or(1.0);
+    ((n as f64 * s) as usize).max(5)
+}
+
 /// One request line for row `i` (Display round-trips every f32 bit).
 fn row_line(ds: &Dataset, i: usize) -> String {
     ds.row(i)
@@ -114,7 +127,7 @@ fn concurrent_interleavings_match_offline_predict_bitwise() {
                     let (ds, naive) = (&ds, &naive);
                     s.spawn(move || {
                         let mut client = Client::connect(addr);
-                        for k in 0..20usize {
+                        for k in 0..scaled(20) {
                             let rows: Vec<usize> = if (k + t) % 3 == 0 {
                                 // multi-row request of varying length
                                 (0..(k % 4) + 2).map(|j| (t * 31 + k * 7 + j * 13) % ds.n_rows).collect()
@@ -171,7 +184,7 @@ fn hot_swap_mid_load_never_tears_a_response() {
             let (ds, naive_a, naive_b) = (&ds, &naive_a, &naive_b);
             loaders.push(s.spawn(move || {
                 let mut client = Client::connect(addr);
-                for k in 0..60usize {
+                for k in 0..scaled(60) {
                     let rows: Vec<usize> = if k % 4 == 0 {
                         (0..3).map(|j| (t * 17 + k * 5 + j * 11) % ds.n_rows).collect()
                     } else {
