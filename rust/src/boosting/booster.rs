@@ -33,8 +33,9 @@ use crate::boosting::eval::EvalMetric;
 use crate::boosting::objective::Objective;
 use crate::boosting::sampling::{row_grad_norms, RowSampling};
 use crate::boosting::trainer::GBDTConfig;
-use crate::data::binning::BinnedDataset;
-use crate::data::dataset::Dataset;
+use crate::data::binning::{BinnedDataset, BinnedSource};
+use crate::data::chunked::ChunkedBinned;
+use crate::data::dataset::{Dataset, Targets};
 use crate::engine::{ComputeEngine, EngineOpts, NativeEngine, ScoreMode};
 use crate::tree::builder::{build_tree_in, BuildParams, SENTINEL};
 use crate::tree::workspace::TreeWorkspace;
@@ -115,6 +116,49 @@ impl Booster {
         valid: Option<&Dataset>,
         engine: &mut dyn ComputeEngine,
     ) -> Ensemble {
+        self.cfg.validate(train);
+        let kinds = self.cfg.merged_kinds(train);
+        let binned = BinnedDataset::from_dataset_with_kinds(train, self.cfg.max_bins, &kinds);
+        self.fit_session(&binned, &train.targets, valid, engine)
+    }
+
+    /// Train from an on-disk chunked store (`sketchboost bin`,
+    /// `data/store.rs`) without materializing the binned matrix: only
+    /// the chunk pool plus the per-round derivative matrices stay in
+    /// RAM. `cfg.max_bins` and `cfg.categorical` are ignored — binning
+    /// was fixed when the store was written. Same store contents ⇒ the
+    /// ensemble is bitwise-identical to an in-RAM fit on the same codes
+    /// (`rust/tests/out_of_core.rs`).
+    pub fn fit_chunked(self, store: &ChunkedBinned, valid: Option<&Dataset>) -> Ensemble {
+        let mut engine = NativeEngine::with_opts(EngineOpts::threads(self.cfg.n_threads));
+        self.fit_chunked_with_engine(store, valid, &mut engine)
+    }
+
+    /// [`Booster::fit_chunked`] with an explicit engine. Engines that
+    /// cannot stream chunks (`reference`, `xla`) reject chunked input;
+    /// use the native engine.
+    pub fn fit_chunked_with_engine(
+        self,
+        store: &ChunkedBinned,
+        valid: Option<&Dataset>,
+        engine: &mut dyn ComputeEngine,
+    ) -> Ensemble {
+        self.cfg.validate_for_outputs(store.n_outputs());
+        self.fit_session(store, store.targets(), valid, engine)
+    }
+
+    /// The shared training session over any binned source. The chunked
+    /// path differs from in-RAM only in *where* codes are read; every
+    /// numeric statement runs in the same order (see
+    /// `engine/native.rs` and `tree/builder.rs` for the argument), so
+    /// the two paths are bitwise-interchangeable.
+    fn fit_session(
+        self,
+        binned: &dyn BinnedSource,
+        targets: &Targets,
+        valid: Option<&Dataset>,
+        engine: &mut dyn ComputeEngine,
+    ) -> Ensemble {
         let Booster { cfg, objective, metric, mut callbacks } = self;
         let mut objective: Box<dyn Objective> =
             objective.unwrap_or_else(|| Box::new(cfg.loss));
@@ -124,18 +168,15 @@ impl Booster {
         // registered first so user callbacks observe a consistent order
         callbacks.insert(0, Box::new(HistoryRecorder::default()));
 
-        cfg.validate(train);
-        let n = train.n_rows;
+        let n = binned.n_rows();
         let d = cfg.n_outputs;
-        let kinds = cfg.merged_kinds(train);
-        let binned = BinnedDataset::from_dataset_with_kinds(train, cfg.max_bins, &kinds);
         let mut rng = Rng::new(cfg.seed);
         // LINT-ALLOW(determinism): wall-clock telemetry for callbacks
         // only; no training decision reads it unless the user opts into
         // TimeBudget, which is documented as nondeterministic.
         let t_start = Instant::now();
 
-        let base_score = objective.base_score(&train.targets, d);
+        let base_score = objective.base_score(targets, d);
         assert_eq!(base_score.len(), d, "objective base_score must have d values");
         let mut preds = vec![0.0f32; n * d];
         for row in preds.chunks_mut(d) {
@@ -177,8 +218,8 @@ impl Booster {
             // engine so accelerated backends keep serving this op; the
             // returned loss is the (pre-update) train loss for free.
             let grad_loss = match objective.builtin() {
-                Some(kind) => engine.grad_hess(kind, &preds, &train.targets, &mut g, &mut h),
-                None => objective.grad_hess(&preds, &train.targets, d, &mut g, &mut h),
+                Some(kind) => engine.grad_hess(kind, &preds, targets, &mut g, &mut h),
+                None => objective.grad_hess(&preds, targets, d, &mut g, &mut h),
             };
 
             // sketch the gradient matrix for split scoring (section 3)
@@ -215,7 +256,7 @@ impl Booster {
 
             // feature subsample
             let feature_mask: Option<Vec<bool>> = if cfg.colsample < 1.0 {
-                let m = binned.n_features;
+                let m = binned.n_features();
                 let keep = ((m as f64) * cfg.colsample as f64).round().max(1.0) as usize;
                 let chosen = round_rng.sample_indices(m, keep);
                 let mut mask = vec![false; m];
@@ -228,7 +269,7 @@ impl Booster {
             };
 
             let params = BuildParams {
-                binned: &binned,
+                binned,
                 rows,
                 g: &g,
                 h: &h,
@@ -250,18 +291,55 @@ impl Booster {
             tree.scale_leaves(cfg.learning_rate);
 
             // update train predictions (leaf_of_row for sampled rows;
-            // route the rest through the binned tree)
+            // route the rest through the binned tree). Each row's pred
+            // is touched exactly once per tree, so the chunked walk
+            // below is trivially bit-equal to the in-RAM one.
             let leaf_of_row = ws.leaf_of_row();
-            for r in 0..n {
-                let leaf = if leaf_of_row[r] != SENTINEL {
-                    leaf_of_row[r] as usize
-                } else {
-                    tree.leaf_for_binned(&binned, r)
-                };
-                let v = &tree.leaf_values[leaf * d..(leaf + 1) * d];
-                let p = &mut preds[r * d..(r + 1) * d];
-                for j in 0..d {
-                    p[j] += v[j];
+            if let Some(ram) = binned.as_in_ram() {
+                for r in 0..n {
+                    let leaf = if leaf_of_row[r] != SENTINEL {
+                        leaf_of_row[r] as usize
+                    } else {
+                        tree.leaf_for_binned(ram, r)
+                    };
+                    let v = &tree.leaf_values[leaf * d..(leaf + 1) * d];
+                    let p = &mut preds[r * d..(r + 1) * d];
+                    for j in 0..d {
+                        p[j] += v[j];
+                    }
+                }
+            } else {
+                for c in 0..binned.n_chunks() {
+                    let cr = binned.chunk_range(c);
+                    // rows the builder already routed need no chunk I/O;
+                    // skip loading chunks made of nothing else
+                    if cr.clone().all(|r| leaf_of_row[r] != SENTINEL) {
+                        for r in cr {
+                            let leaf = leaf_of_row[r] as usize;
+                            let v = &tree.leaf_values[leaf * d..(leaf + 1) * d];
+                            let p = &mut preds[r * d..(r + 1) * d];
+                            for j in 0..d {
+                                p[j] += v[j];
+                            }
+                        }
+                    } else {
+                        let tree = &tree;
+                        let preds = &mut preds;
+                        binned.with_chunk(c, &mut |cols| {
+                            for r in cr.clone() {
+                                let leaf = if leaf_of_row[r] != SENTINEL {
+                                    leaf_of_row[r] as usize
+                                } else {
+                                    tree.leaf_for_chunk(&cols, r)
+                                };
+                                let v = &tree.leaf_values[leaf * d..(leaf + 1) * d];
+                                let p = &mut preds[r * d..(r + 1) * d];
+                                for j in 0..d {
+                                    p[j] += v[j];
+                                }
+                            }
+                        });
+                    }
                 }
             }
 
@@ -270,7 +348,7 @@ impl Booster {
             // free loss (pre-update, one round stale) instead of a
             // second O(n*d) evaluation — see trainer.rs history notes
             let train_loss = if cfg.eval_train {
-                metric.eval(&preds, &train.targets)
+                metric.eval(&preds, targets)
             } else if valid.is_none() {
                 grad_loss
             } else {

@@ -103,7 +103,14 @@ impl GBDTConfig {
 
     /// Config matching the targets of a dataset.
     pub fn for_dataset(ds: &Dataset) -> GBDTConfig {
-        GBDTConfig::base(LossKind::for_targets(&ds.targets), ds.n_outputs())
+        GBDTConfig::for_targets(&ds.targets)
+    }
+
+    /// Config matching a bare target matrix — what `train --store` uses
+    /// when no `Dataset` ever exists in RAM (the targets come from the
+    /// chunked store's header).
+    pub fn for_targets(t: &crate::data::dataset::Targets) -> GBDTConfig {
+        GBDTConfig::base(LossKind::for_targets(t), t.n_outputs())
     }
 
     /// The metric used for train/valid tracking and early stopping.
@@ -129,9 +136,15 @@ impl GBDTConfig {
     }
 
     pub(crate) fn validate(&self, ds: &Dataset) {
+        self.validate_for_outputs(ds.n_outputs());
+    }
+
+    /// [`GBDTConfig::validate`] for sources with no `Dataset` in RAM
+    /// (the chunked store): same checks against the target width read
+    /// from the store header.
+    pub(crate) fn validate_for_outputs(&self, n_outputs: usize) {
         assert_eq!(
-            self.n_outputs,
-            ds.n_outputs(),
+            self.n_outputs, n_outputs,
             "config n_outputs != dataset outputs"
         );
         // categorical_features bounds are checked (with diagnostics) by
@@ -172,6 +185,19 @@ impl GBDT {
         engine: &mut dyn ComputeEngine,
     ) -> Ensemble {
         Booster::from_config(cfg).fit_with_engine(train, valid, engine)
+    }
+
+    /// Train out-of-core from an on-disk chunked store (`sketchboost
+    /// bin`). Binning is fixed at store-write time, so `cfg.max_bins` /
+    /// `cfg.categorical_features` are ignored here. Bitwise-identical
+    /// to [`GBDT::fit`] on the same binned codes — see
+    /// `rust/tests/out_of_core.rs`.
+    pub fn fit_chunked(
+        cfg: &GBDTConfig,
+        store: &crate::data::ChunkedBinned,
+        valid: Option<&Dataset>,
+    ) -> Ensemble {
+        Booster::from_config(cfg).fit_chunked(store, valid)
     }
 
     /// 5-fold CV as in Appendix B.2: returns per-fold (model, valid loss).

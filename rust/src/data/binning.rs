@@ -24,6 +24,7 @@
 //! and category ids `0..max_bins-1`).
 
 use crate::data::dataset::{Dataset, FeatureKind};
+use crate::util::rng::Rng;
 
 /// The reserved per-feature missing bin (NaN maps here for every
 /// feature kind; split search routes it by a learned default).
@@ -124,6 +125,242 @@ impl BinnedDataset {
         } else {
             e[b.saturating_sub(1).min(e.len() - 1)]
         }
+    }
+}
+
+/// One resident chunk of bin codes, column-major **within the chunk**:
+/// feature `f` of global row `r` (with `start <= r < start + len`) is
+/// `codes[f * len + (r - start)]`.
+pub struct ChunkCols<'a> {
+    pub codes: &'a [u8],
+    /// First global row this chunk covers.
+    pub start: usize,
+    /// Rows in this chunk.
+    pub len: usize,
+}
+
+impl<'a> ChunkCols<'a> {
+    /// This chunk's slice of feature `f`'s column.
+    #[inline]
+    pub fn col(&self, f: usize) -> &'a [u8] {
+        &self.codes[f * self.len..(f + 1) * self.len]
+    }
+
+    /// Bin code of (global) `row` on feature `f`.
+    #[inline]
+    pub fn code(&self, f: usize, row: usize) -> u8 {
+        self.codes[f * self.len + (row - self.start)]
+    }
+}
+
+/// The histogram input contract: binned feature codes served as one or
+/// more row chunks. [`BinnedDataset`] is the trivial one-chunk in-RAM
+/// implementor; `data/chunked.rs::ChunkedBinned` pages chunks in from
+/// the on-disk store. The engine and the tree builder consume
+/// `&dyn BinnedSource`, so the whole training loop runs unchanged over
+/// either.
+///
+/// ## Determinism contract (DESIGN.md §2d)
+///
+/// Chunks partition `0..n_rows` into consecutive ascending ranges:
+/// `chunk_range(0).start == 0`, `chunk_range(c).end ==
+/// chunk_range(c + 1).start`, and `chunk_range(n_chunks - 1).end ==
+/// n_rows`. Because the builder keeps every node's rows ascending,
+/// iterating chunks in order visits any node's rows in exactly the
+/// in-RAM order — which is what makes chunked training bitwise-identical
+/// to in-RAM training (`rust/tests/out_of_core.rs`).
+pub trait BinnedSource: Sync {
+    fn n_rows(&self) -> usize;
+    fn n_features(&self) -> usize;
+    /// The global bin budget histograms are sized to.
+    fn max_bins(&self) -> usize;
+    fn kinds(&self) -> &[FeatureKind];
+    /// Raw-value threshold for the numeric split "left = value bins <= b".
+    fn threshold_value(&self, f: usize, b: usize) -> f32;
+    fn n_chunks(&self) -> usize;
+    /// Global row range `[start, end)` of chunk `c` (see the trait docs
+    /// for the partition invariants).
+    fn chunk_range(&self, c: usize) -> std::ops::Range<usize>;
+    /// Run `body` with chunk `c` resident. May be called concurrently
+    /// from engine worker threads; implementations must tolerate the
+    /// same chunk being requested from several threads at once.
+    fn with_chunk(&self, c: usize, body: &mut dyn FnMut(ChunkCols<'_>));
+    /// The whole matrix, if it is resident anyway — the engines take
+    /// this fast path to keep the in-RAM hot loops byte-for-byte intact.
+    fn as_in_ram(&self) -> Option<&BinnedDataset> {
+        None
+    }
+}
+
+impl BinnedSource for BinnedDataset {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+    fn max_bins(&self) -> usize {
+        self.max_bins
+    }
+    fn kinds(&self) -> &[FeatureKind] {
+        &self.kinds
+    }
+    fn threshold_value(&self, f: usize, b: usize) -> f32 {
+        BinnedDataset::threshold_value(self, f, b)
+    }
+    fn n_chunks(&self) -> usize {
+        1
+    }
+    fn chunk_range(&self, c: usize) -> std::ops::Range<usize> {
+        debug_assert_eq!(c, 0);
+        0..self.n_rows
+    }
+    fn with_chunk(&self, c: usize, body: &mut dyn FnMut(ChunkCols<'_>)) {
+        debug_assert_eq!(c, 0);
+        body(ChunkCols { codes: &self.codes, start: 0, len: self.n_rows });
+    }
+    fn as_in_ram(&self) -> Option<&BinnedDataset> {
+        Some(self)
+    }
+}
+
+/// A dataset-free description of one binning: everything needed to map
+/// raw feature values to codes (and back to split thresholds). This is
+/// what the on-disk store header carries.
+#[derive(Clone, Debug)]
+pub struct BinSpec {
+    pub max_bins: usize,
+    pub kinds: Vec<FeatureKind>,
+    /// Ascending split-candidate edges per numeric feature (empty for
+    /// categorical).
+    pub edges: Vec<Vec<f32>>,
+    /// Bins actually used per feature, including the missing bin.
+    pub n_bins: Vec<u16>,
+}
+
+impl BinSpec {
+    pub fn of(b: &BinnedDataset) -> BinSpec {
+        BinSpec {
+            max_bins: b.max_bins,
+            kinds: b.kinds.clone(),
+            edges: b.edges.clone(),
+            n_bins: b.n_bins.clone(),
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// Bin a raw feature value exactly as [`BinnedDataset`] would.
+    #[inline]
+    pub fn code_of(&self, f: usize, x: f32) -> u8 {
+        match self.kinds[f] {
+            FeatureKind::Numeric => bin_of(&self.edges[f], x),
+            FeatureKind::Categorical => cat_bin_of(x, self.max_bins, f),
+        }
+    }
+}
+
+/// One-pass streaming edge construction: per-feature deterministic
+/// reservoir samples stand in for the full column, so quantile edges
+/// for an out-of-core source come from a single pass over the rows
+/// without materializing the feature matrix (XGBoost's out-of-core
+/// sketch plays the same role; see PAPERS.md).
+///
+/// Deterministic: one seeded [`Rng`] drives every replacement decision,
+/// so the same row stream always yields the same edges. When a feature
+/// has at most `capacity` non-missing values the reservoir *is* the
+/// column and the edges equal the in-RAM [`quantile_edges`] exactly;
+/// beyond that they are a sampled approximation (the trade the
+/// streaming path buys its O(m * capacity) memory bound with).
+pub struct StreamingQuantiles {
+    max_bins: usize,
+    kinds: Vec<FeatureKind>,
+    capacity: usize,
+    rng: Rng,
+    /// Per-feature reservoir of non-NaN values.
+    reservoirs: Vec<Vec<f32>>,
+    /// Non-NaN values seen per feature (drives replacement odds).
+    seen: Vec<u64>,
+    /// Per-categorical-feature max code (0 until a value shows up).
+    max_code: Vec<u8>,
+    n_rows: usize,
+}
+
+/// Default per-feature reservoir size (64 KiB of f32 per feature).
+pub const STREAM_RESERVOIR: usize = 16 * 1024;
+
+impl StreamingQuantiles {
+    pub fn new(max_bins: usize, kinds: &[FeatureKind], capacity: usize, seed: u64) -> Self {
+        assert!((2..=256).contains(&max_bins), "max_bins must be in [2, 256]");
+        assert!(capacity > 0, "reservoir capacity must be positive");
+        let m = kinds.len();
+        StreamingQuantiles {
+            max_bins,
+            kinds: kinds.to_vec(),
+            capacity,
+            rng: Rng::new(seed ^ 0x5b1e_55ed),
+            reservoirs: vec![Vec::new(); m],
+            seen: vec![0; m],
+            max_code: vec![0; m],
+            n_rows: 0,
+        }
+    }
+
+    /// Feed one raw feature row (length `m`; NaN = missing).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.kinds.len(), "row width");
+        for (f, &x) in row.iter().enumerate() {
+            if x.is_nan() {
+                continue;
+            }
+            match self.kinds[f] {
+                FeatureKind::Numeric => {
+                    self.seen[f] += 1;
+                    let res = &mut self.reservoirs[f];
+                    if res.len() < self.capacity {
+                        res.push(x);
+                    } else {
+                        // Algorithm R: replace slot j < cap with prob cap/seen
+                        let j = self.rng.next_below(self.seen[f] as usize);
+                        if j < self.capacity {
+                            res[j] = x;
+                        }
+                    }
+                }
+                FeatureKind::Categorical => {
+                    let code = cat_bin_of(x, self.max_bins, f);
+                    self.max_code[f] = self.max_code[f].max(code);
+                }
+            }
+        }
+        self.n_rows += 1;
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Close the pass and produce the binning spec.
+    pub fn finish(self) -> BinSpec {
+        let m = self.kinds.len();
+        let mut edges = Vec::with_capacity(m);
+        let mut n_bins = Vec::with_capacity(m);
+        for f in 0..m {
+            match self.kinds[f] {
+                FeatureKind::Numeric => {
+                    let e = quantile_edges(&self.reservoirs[f], self.max_bins - 1);
+                    n_bins.push((e.len() + 2) as u16);
+                    edges.push(e);
+                }
+                FeatureKind::Categorical => {
+                    n_bins.push(self.max_code[f] as u16 + 1);
+                    edges.push(Vec::new());
+                }
+            }
+        }
+        BinSpec { max_bins: self.max_bins, kinds: self.kinds, edges, n_bins }
     }
 }
 
@@ -343,5 +580,78 @@ mod tests {
     #[should_panic]
     fn max_bins_over_256_rejected() {
         BinnedDataset::from_dataset(&ds_from_col(vec![1.0, 2.0]), 300);
+    }
+
+    #[test]
+    fn binned_dataset_is_the_one_chunk_source() {
+        let col: Vec<f32> = (0..50).map(|i| (i % 7) as f32).collect();
+        let b = BinnedDataset::from_dataset(&ds_from_col(col), 8);
+        let src: &dyn BinnedSource = &b;
+        assert_eq!(src.n_rows(), 50);
+        assert_eq!(src.n_features(), 1);
+        assert_eq!(src.n_chunks(), 1);
+        assert_eq!(src.chunk_range(0), 0..50);
+        assert!(src.as_in_ram().is_some());
+        let mut seen = Vec::new();
+        src.with_chunk(0, &mut |cols| {
+            assert_eq!(cols.start, 0);
+            assert_eq!(cols.len, 50);
+            assert_eq!(cols.col(0), b.column(0));
+            seen.extend((0..50).map(|r| cols.code(0, r)));
+        });
+        assert_eq!(&seen[..], b.column(0));
+    }
+
+    #[test]
+    fn spec_code_of_matches_from_dataset() {
+        let mut col: Vec<f32> = (0..200).map(|i| ((i * 37) % 91) as f32 * 0.25).collect();
+        col[13] = f32::NAN;
+        let ds = ds_from_col(col.clone());
+        let b = BinnedDataset::from_dataset(&ds, 16);
+        let spec = BinSpec::of(&b);
+        for (i, &x) in col.iter().enumerate() {
+            assert_eq!(spec.code_of(0, x), b.column(0)[i], "row {i}");
+        }
+    }
+
+    #[test]
+    fn streaming_edges_exact_when_column_fits_reservoir() {
+        // non-NaN count <= capacity: the reservoir IS the column, so the
+        // streaming edges must equal the in-RAM quantile edges bit-for-bit
+        let mut col: Vec<f32> = (0..500).map(|i| ((i * 17) % 163) as f32).collect();
+        col[3] = f32::NAN;
+        col[77] = f32::NAN;
+        let ds = ds_from_col(col.clone());
+        let b = BinnedDataset::from_dataset(&ds, 16);
+        let mut sq = StreamingQuantiles::new(16, &[FeatureKind::Numeric], 1024, 42);
+        for &x in &col {
+            sq.push_row(&[x]);
+        }
+        assert_eq!(sq.n_rows(), 500);
+        let spec = sq.finish();
+        assert_eq!(spec.edges[0].len(), b.edges[0].len());
+        for (a, e) in spec.edges[0].iter().zip(b.edges[0].iter()) {
+            assert_eq!(a.to_bits(), e.to_bits());
+        }
+        assert_eq!(spec.n_bins, b.n_bins);
+    }
+
+    #[test]
+    fn streaming_is_deterministic_and_bounded() {
+        let kinds = [FeatureKind::Numeric, FeatureKind::Categorical];
+        let run = || {
+            let mut sq = StreamingQuantiles::new(32, &kinds, 64, 7);
+            for i in 0..5000usize {
+                let x = ((i * 29) % 1009) as f32 * 0.5;
+                let c = (i % 9) as f32;
+                sq.push_row(&[x, c]);
+            }
+            sq.finish()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.edges[0], b.edges[0], "same stream + seed => same edges");
+        assert!(a.edges[0].len() <= 31);
+        assert_eq!(a.n_bins[1], 10, "cat ids 0..=8 -> codes 1..=9, plus missing");
+        assert!(a.edges[1].is_empty());
     }
 }

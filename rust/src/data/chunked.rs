@@ -1,0 +1,323 @@
+//! Out-of-core binned source: pages the `data/store.rs` chunk payloads
+//! in on demand through a bounded pool of recycled buffers and serves
+//! them through the [`BinnedSource`] histogram input contract, so the
+//! engine and tree builder train from disk exactly as they do from RAM
+//! (DESIGN.md §2d).
+//!
+//! Residency is pure caching: which chunks happen to be pooled never
+//! changes a single bit of the training result — the determinism
+//! contract lives entirely in the chunk *plan* (the ascending row
+//! partition recorded in the store header).
+
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::data::binning::{BinSpec, BinnedDataset, BinnedSource, ChunkCols};
+use crate::data::dataset::{FeatureKind, Targets};
+use crate::data::store::{read_header, read_targets, verify_chunks, StoreError, StoreHeader};
+
+struct PoolInner {
+    /// Resident chunks in LRU order (front = coldest). The `Arc` count
+    /// doubles as a pin: entries some thread is still reading
+    /// (`strong_count > 1`) are never evicted.
+    resident: Vec<(usize, Arc<Vec<u8>>)>,
+    /// Retired buffers awaiting reuse (keeps steady-state at zero
+    /// allocation once the pool is warm).
+    free: Vec<Vec<u8>>,
+}
+
+/// Bounded pool of recycled chunk buffers. Loads happen under the pool
+/// lock: that serializes disk reads (memcpy-speed on page-cached files)
+/// but guarantees each chunk is read exactly once however many engine
+/// shards race for it, with no double-buffering.
+struct ChunkPool {
+    inner: Mutex<PoolInner>,
+    /// Target resident-chunk count. Temporarily exceeded when more than
+    /// `budget` chunks are pinned by concurrent readers — the pool
+    /// over-allocates rather than deadlocks.
+    budget: usize,
+}
+
+impl ChunkPool {
+    fn new(budget: usize) -> ChunkPool {
+        ChunkPool {
+            inner: Mutex::new(PoolInner { resident: Vec::new(), free: Vec::new() }),
+            budget: budget.max(1),
+        }
+    }
+
+    /// Get chunk `c` resident, loading via `load` on a miss.
+    fn acquire(&self, c: usize, bytes: usize, load: impl FnOnce(&mut [u8])) -> Arc<Vec<u8>> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(pos) = g.resident.iter().position(|(id, _)| *id == c) {
+            let entry = g.resident.remove(pos);
+            let arc = entry.1.clone();
+            g.resident.push(entry); // refresh to MRU
+            return arc;
+        }
+        let mut buf = g.free.pop().unwrap_or_default();
+        buf.resize(bytes, 0);
+        load(&mut buf);
+        let arc = Arc::new(buf);
+        g.resident.push((c, arc.clone()));
+        // evict coldest idle entries down to budget; pinned ones
+        // (readers still hold the Arc) stay
+        let mut i = 0;
+        while g.resident.len() > self.budget && i < g.resident.len() - 1 {
+            if Arc::strong_count(&g.resident[i].1) == 1 {
+                let (_, a) = g.resident.remove(i);
+                if let Ok(v) = Arc::try_unwrap(a) {
+                    g.free.push(v);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        arc
+    }
+}
+
+/// An on-disk chunked binned dataset, opened from a `sketchboost bin`
+/// store file. Implements [`BinnedSource`], so `Booster::fit_chunked`
+/// trains from it with the unchanged engine/builder stack; only
+/// `O(n_features * chunk_rows * pool_chunks)` code bytes are ever
+/// resident.
+pub struct ChunkedBinned {
+    file: File,
+    header: StoreHeader,
+    targets: Targets,
+    pool: ChunkPool,
+}
+
+impl ChunkedBinned {
+    /// Open a store, structurally validating the header (truncation and
+    /// malformed indexes surface as [`StoreError::Format`]). `pool_chunks`
+    /// bounds how many chunks stay resident at once.
+    pub fn open(path: &Path, pool_chunks: usize) -> Result<ChunkedBinned, StoreError> {
+        let mut file = File::open(path)?;
+        let header = read_header(&mut file)?;
+        let targets = read_targets(&file, &header)?;
+        Ok(ChunkedBinned { file, header, targets, pool: ChunkPool::new(pool_chunks) })
+    }
+
+    /// [`ChunkedBinned::open`] plus a streaming FNV-1a pass over every
+    /// chunk payload ([`StoreError::Corrupt`] on mismatch).
+    pub fn open_verified(path: &Path, pool_chunks: usize) -> Result<ChunkedBinned, StoreError> {
+        let cb = ChunkedBinned::open(path, pool_chunks)?;
+        verify_chunks(&cb.file, &cb.header)?;
+        Ok(cb)
+    }
+
+    pub fn targets(&self) -> &Targets {
+        &self.targets
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.targets.n_outputs()
+    }
+
+    pub fn spec(&self) -> BinSpec {
+        self.header.spec()
+    }
+
+    /// Nominal rows per chunk (the tail may be ragged).
+    pub fn chunk_rows(&self) -> usize {
+        self.header.chunk_rows
+    }
+
+    pub fn header(&self) -> &StoreHeader {
+        &self.header
+    }
+
+    /// Load the whole store into an in-RAM [`BinnedDataset`] (tests and
+    /// small-data escapes; defeats the point for big data).
+    pub fn to_binned(&self) -> BinnedDataset {
+        let n = self.header.n_rows;
+        let m = self.header.n_features;
+        let mut codes = vec![0u8; n * m];
+        for c in 0..self.header.chunks.len() {
+            self.with_chunk(c, &mut |cols| {
+                for f in 0..m {
+                    codes[f * n + cols.start..f * n + cols.start + cols.len]
+                        .copy_from_slice(cols.col(f));
+                }
+            });
+        }
+        BinnedDataset {
+            n_rows: n,
+            n_features: m,
+            codes,
+            edges: self.header.edges.clone(),
+            n_bins: self.header.n_bins.clone(),
+            max_bins: self.header.max_bins,
+            kinds: self.header.kinds.clone(),
+        }
+    }
+}
+
+impl BinnedSource for ChunkedBinned {
+    fn n_rows(&self) -> usize {
+        self.header.n_rows
+    }
+    fn n_features(&self) -> usize {
+        self.header.n_features
+    }
+    fn max_bins(&self) -> usize {
+        self.header.max_bins
+    }
+    fn kinds(&self) -> &[FeatureKind] {
+        &self.header.kinds
+    }
+    fn threshold_value(&self, f: usize, b: usize) -> f32 {
+        debug_assert_eq!(self.header.kinds[f], FeatureKind::Numeric);
+        let e = &self.header.edges[f];
+        if e.is_empty() {
+            f32::INFINITY
+        } else {
+            e[b.saturating_sub(1).min(e.len() - 1)]
+        }
+    }
+    fn n_chunks(&self) -> usize {
+        self.header.chunks.len()
+    }
+    fn chunk_range(&self, c: usize) -> std::ops::Range<usize> {
+        let m = &self.header.chunks[c];
+        m.start..m.start + m.rows
+    }
+    fn with_chunk(&self, c: usize, body: &mut dyn FnMut(ChunkCols<'_>)) {
+        let meta = &self.header.chunks[c];
+        let buf = self.pool.acquire(c, meta.bytes, |dst| {
+            // The store was structurally validated at open; a read
+            // failure here is an environment fault (device error,
+            // file deleted under us) with no recovery path mid-train.
+            self.file
+                .read_exact_at(dst, meta.offset)
+                .unwrap_or_else(|e| panic!("chunked store: reading chunk {c}: {e}"));
+        });
+        body(ChunkCols { codes: &buf, start: meta.start, len: meta.rows });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::write_binned;
+    use crate::data::synthetic::{inject_missing, make_multiclass, FeatureSpec};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sb_chunked_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> (BinnedDataset, Targets) {
+        let mut ds = make_multiclass(150, FeatureSpec::guyon(6), 3, 1.5, 11);
+        inject_missing(&mut ds, 0.1, 5);
+        let binned = BinnedDataset::from_dataset(&ds, 32);
+        (binned, ds.targets)
+    }
+
+    #[test]
+    fn round_trips_every_chunk_byte() {
+        let (binned, targets) = sample();
+        for &chunk_rows in &[150usize, 64, 1] {
+            let path = tmp(&format!("rt_{chunk_rows}.bin"));
+            write_binned(&path, &binned, &targets, chunk_rows).unwrap();
+            let cb = ChunkedBinned::open_verified(&path, 2).unwrap();
+            assert_eq!(cb.n_rows(), binned.n_rows);
+            assert_eq!(cb.n_features(), binned.n_features);
+            assert_eq!(cb.max_bins(), binned.max_bins);
+            assert_eq!(cb.kinds(), &binned.kinds[..]);
+            assert_eq!(cb.targets(), &targets);
+            let back = cb.to_binned();
+            assert_eq!(back.codes, binned.codes, "chunk_rows={chunk_rows}");
+            assert_eq!(back.n_bins, binned.n_bins);
+            for f in 0..binned.n_features {
+                for (a, e) in back.edges[f].iter().zip(binned.edges[f].iter()) {
+                    assert_eq!(a.to_bits(), e.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_partition_rows_ascending() {
+        let (binned, targets) = sample();
+        let path = tmp("plan.bin");
+        write_binned(&path, &binned, &targets, 40).unwrap();
+        let cb = ChunkedBinned::open(&path, 2).unwrap();
+        assert_eq!(cb.n_chunks(), 4); // 40+40+40+30
+        let mut next = 0;
+        for c in 0..cb.n_chunks() {
+            let r = cb.chunk_range(c);
+            assert_eq!(r.start, next);
+            assert!(r.end > r.start);
+            next = r.end;
+        }
+        assert_eq!(next, cb.n_rows());
+    }
+
+    #[test]
+    fn pool_recycles_buffers_within_budget() {
+        let (binned, targets) = sample();
+        let path = tmp("pool.bin");
+        write_binned(&path, &binned, &targets, 10).unwrap(); // 15 chunks
+        let cb = ChunkedBinned::open(&path, 3).unwrap();
+        // several full sweeps through all chunks with a 3-chunk budget
+        for _ in 0..4 {
+            for c in 0..cb.n_chunks() {
+                cb.with_chunk(c, &mut |cols| {
+                    assert_eq!(cols.len, cb.chunk_range(c).len());
+                });
+            }
+        }
+        let g = cb.pool.inner.lock().unwrap();
+        assert!(
+            g.resident.len() <= 3,
+            "resident {} exceeds budget with no pins outstanding",
+            g.resident.len()
+        );
+        // free list holds retired buffers, ready for reuse
+        assert!(g.resident.len() + g.free.len() <= 4);
+    }
+
+    #[test]
+    fn concurrent_readers_see_consistent_chunks() {
+        let (binned, targets) = sample();
+        let path = tmp("conc.bin");
+        write_binned(&path, &binned, &targets, 16).unwrap();
+        let cb = ChunkedBinned::open(&path, 2).unwrap();
+        let expected = &binned;
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let cb = &cb;
+                s.spawn(move || {
+                    for round in 0..3 {
+                        for c in 0..cb.n_chunks() {
+                            let c = (c + t + round) % cb.n_chunks();
+                            cb.with_chunk(c, &mut |cols| {
+                                let r = cols.start;
+                                for f in 0..expected.n_features {
+                                    assert_eq!(
+                                        cols.code(f, r),
+                                        expected.codes[f * expected.n_rows + r]
+                                    );
+                                }
+                            });
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        match ChunkedBinned::open(&tmp("nope.bin"), 2) {
+            Err(StoreError::Io(_)) => {}
+            other => panic!("expected Io error, got {:?}", other.map(|_| ())),
+        }
+    }
+}

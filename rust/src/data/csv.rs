@@ -79,6 +79,50 @@ pub fn read_table(path: &Path) -> Result<Table, Box<dyn std::error::Error>> {
     Ok(Table { n_rows, n_cols, cells, header })
 }
 
+/// Stream a numeric CSV row by row without materializing the table —
+/// the out-of-core `sketchboost bin --stream` path reads the file twice
+/// through this (pass 1: streaming quantiles; pass 2: chunk payloads),
+/// so peak memory stays one row. Header detection, NaN/empty cells, and
+/// ragged-row errors match [`read_table`] exactly. Returns the number
+/// of data rows; `body` sees each parsed row in file order.
+pub fn stream_rows(
+    path: &Path,
+    body: &mut dyn FnMut(&[f32]) -> Result<(), Box<dyn std::error::Error>>,
+) -> Result<usize, Box<dyn std::error::Error>> {
+    let f = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(f);
+    let mut n_cols = 0usize;
+    let mut n_rows = 0usize;
+    let mut row: Vec<f32> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if lineno == 0 && !fields.iter().all(|f| parse_cell(f).is_ok()) {
+            n_cols = fields.len(); // header row
+            continue;
+        }
+        if n_cols == 0 {
+            n_cols = fields.len();
+        } else if fields.len() != n_cols {
+            return Err(Box::new(CsvError(format!(
+                "row {lineno}: expected {n_cols} fields, got {}",
+                fields.len()
+            ))));
+        }
+        row.clear();
+        for f in &fields {
+            row.push(parse_cell(f)?);
+        }
+        body(&row)?;
+        n_rows += 1;
+    }
+    Ok(n_rows)
+}
+
 /// Load a dataset whose last `n_targets` columns are the targets.
 pub fn load_dataset(
     path: &Path,
@@ -313,6 +357,33 @@ mod tests {
         let ds = load_dataset(&path, "multiclass", 2).unwrap();
         assert!(ds.value(0, 1).is_nan());
         assert!(ds.value(1, 0).is_nan());
+    }
+
+    #[test]
+    fn stream_rows_matches_read_table() {
+        let ds = make_multiclass(40, FeatureSpec::guyon(4), 3, 1.0, 9);
+        let dir = std::env::temp_dir().join("sb_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.csv");
+        write_dataset(&path, &ds).unwrap();
+        let t = read_table(&path).unwrap();
+        let mut streamed: Vec<f32> = Vec::new();
+        let n = stream_rows(&path, &mut |row| {
+            assert_eq!(row.len(), t.n_cols);
+            streamed.extend_from_slice(row);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, t.n_rows);
+        assert_eq!(streamed.len(), t.cells.len());
+        // bit-for-bit the same parse as the materializing reader
+        for (a, b) in streamed.iter().zip(&t.cells) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // ragged rows fail the same way
+        let bad = dir.join("stream_bad.csv");
+        std::fs::write(&bad, "1,2,3\n1,2\n").unwrap();
+        assert!(stream_rows(&bad, &mut |_| Ok(())).is_err());
     }
 
     #[test]

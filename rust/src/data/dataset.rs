@@ -6,7 +6,7 @@
 //! loops sequential. Targets cover the paper's three task families.
 
 /// Task targets. `d` below is the model's output dimension.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Targets {
     /// Class index per row; `d` = number of classes.
     Multiclass { labels: Vec<u32>, n_classes: usize },

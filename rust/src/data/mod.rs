@@ -1,12 +1,16 @@
 //! Data substrate: dataset container, quantile binning, synthetic
-//! workload generators (paper-dataset profiles), CSV I/O, and CV splits.
+//! workload generators (paper-dataset profiles), CSV I/O, CV splits,
+//! and the out-of-core chunked binned store (DESIGN.md §2d).
 
 pub mod binning;
+pub mod chunked;
 pub mod csv;
 pub mod dataset;
 pub mod profiles;
 pub mod split;
+pub mod store;
 pub mod synthetic;
 
-pub use binning::BinnedDataset;
+pub use binning::{BinnedDataset, BinnedSource};
+pub use chunked::ChunkedBinned;
 pub use dataset::{Dataset, FeatureKind, Targets};

@@ -110,7 +110,7 @@ impl EngineOpts {
 }
 
 use crate::boosting::losses::LossKind;
-use crate::data::binning::BinnedDataset;
+use crate::data::binning::BinnedSource;
 use crate::data::dataset::Targets;
 
 pub use crate::data::dataset::FeatureKind;
@@ -347,10 +347,16 @@ pub trait ComputeEngine {
     /// the smaller child of each split appears in `segs`, while `n_slots`
     /// stays the full frontier width (it sizes `out` and the deterministic
     /// shard partition).
+    ///
+    /// `binned` is any [`BinnedSource`] — the in-RAM [`BinnedDataset`]
+    /// (its `as_in_ram` fast path keeps the historical hot loops intact)
+    /// or the out-of-core `ChunkedBinned` store. The determinism
+    /// contract is source-independent: same codes + same chunk plan ⇒
+    /// bit-identical histograms (`rust/tests/out_of_core.rs`).
     #[allow(clippy::too_many_arguments)]
     fn histograms(
         &mut self,
-        binned: &BinnedDataset,
+        binned: &dyn BinnedSource,
         rows: &[u32],
         chan: &[f32],
         k1: usize,

@@ -47,7 +47,7 @@
 //! [`super::reference::ReferenceEngine`]).
 
 use crate::boosting::losses::LossKind;
-use crate::data::binning::BinnedDataset;
+use crate::data::binning::{BinnedDataset, BinnedSource, ChunkCols};
 use crate::data::dataset::{FeatureKind, Targets};
 use crate::util::threading::{reduce_shards, shard_bounds, DisjointSlice, ThreadPool};
 
@@ -157,7 +157,7 @@ impl ComputeEngine for NativeEngine {
 
     fn histograms(
         &mut self,
-        binned: &BinnedDataset,
+        binned: &dyn BinnedSource,
         rows: &[u32],
         chan: &[f32],
         k1: usize,
@@ -165,8 +165,8 @@ impl ComputeEngine for NativeEngine {
         n_slots: usize,
         out: &mut [f32],
     ) {
-        let m = binned.n_features;
-        let bins = binned.max_bins;
+        let m = binned.n_features();
+        let bins = binned.max_bins();
         let slice = m * bins * k1;
         debug_assert_eq!(out.len(), n_slots * slice);
         debug_assert_eq!(chan.len(), rows.len() * k1);
@@ -178,21 +178,59 @@ impl ComputeEngine for NativeEngine {
             return;
         }
 
+        // The in-RAM fast path keeps the historical hot loops (and their
+        // `get_unchecked` column walks) byte-for-byte intact; the chunked
+        // path below visits the same rows in the same ascending per-cell
+        // order — chunks partition the row space ascending and every
+        // segment is ascending — so per-cell f32 addition order, and
+        // therefore every result bit, is identical between the two
+        // (`rust/tests/out_of_core.rs` enforces this end to end).
+        let ram = binned.as_in_ram();
+
         let n_shards = hist_shards(nr, n_slots * bins);
         if n_shards == 1 {
             // small level: one serial pass straight into `out`, segment by
             // segment with a constant slot base (sharding only ever
             // changes results when it actually splits the rows)
-            for seg in segs {
-                let (a, b) = (seg.start as usize, seg.end as usize);
-                hist_dispatch(
-                    binned,
-                    &rows[a..b],
-                    &chan[a * k1..b * k1],
-                    k1,
-                    seg.slot as usize * slice,
-                    out,
-                );
+            if let Some(ram) = ram {
+                for seg in segs {
+                    let (a, b) = (seg.start as usize, seg.end as usize);
+                    hist_dispatch(
+                        ram,
+                        &rows[a..b],
+                        &chan[a * k1..b * k1],
+                        k1,
+                        seg.slot as usize * slice,
+                        out,
+                    );
+                }
+            } else {
+                // chunk-outer so each chunk is paged in exactly once per
+                // pass; segment rows are ascending, so the chunk's slice
+                // of a segment is one contiguous position sub-range
+                for c in 0..binned.n_chunks() {
+                    let cr = binned.chunk_range(c);
+                    binned.with_chunk(c, &mut |cols| {
+                        for seg in segs {
+                            let (a, b) = (seg.start as usize, seg.end as usize);
+                            let sr = &rows[a..b];
+                            let lo = a + sr.partition_point(|&r| (r as usize) < cr.start);
+                            let hi = a + sr.partition_point(|&r| (r as usize) < cr.end);
+                            if lo < hi {
+                                hist_dispatch_chunk(
+                                    &cols,
+                                    m,
+                                    bins,
+                                    &rows[lo..hi],
+                                    &chan[lo * k1..hi * k1],
+                                    k1,
+                                    seg.slot as usize * slice,
+                                    out,
+                                );
+                            }
+                        }
+                    });
+                }
             }
             return;
         }
@@ -200,7 +238,8 @@ impl ComputeEngine for NativeEngine {
         // Merged-rank shard alignment (module docs): shard s covers, in
         // every segment, the rows whose rank in the ascending merge of
         // all segments lies in shard_bounds(nr, S, s). Pure in the inputs
-        // and independent of the thread count.
+        // and independent of the thread count — and of the chunk plan,
+        // which only tiles each shard's row ranges.
         let ns = segs.len();
         align_shard_cuts(rows, segs, nr, n_shards, &mut self.scratch_cuts);
         let cuts = &self.scratch_cuts;
@@ -220,18 +259,54 @@ impl ComputeEngine for NativeEngine {
                 // each `s` to exactly one worker.
                 let buf = unsafe { shard_bufs.range_mut(s * total..(s + 1) * total) };
                 buf.fill(0.0);
-                for (t, seg) in segs.iter().enumerate() {
-                    let a = cuts[s * ns + t] as usize;
-                    let b = cuts[(s + 1) * ns + t] as usize;
-                    if a < b {
-                        hist_dispatch(
-                            binned,
-                            &rows[a..b],
-                            &chan[a * k1..b * k1],
-                            k1,
-                            seg.slot as usize * slice,
-                            buf,
-                        );
+                if let Some(ram) = ram {
+                    for (t, seg) in segs.iter().enumerate() {
+                        let a = cuts[s * ns + t] as usize;
+                        let b = cuts[(s + 1) * ns + t] as usize;
+                        if a < b {
+                            hist_dispatch(
+                                ram,
+                                &rows[a..b],
+                                &chan[a * k1..b * k1],
+                                k1,
+                                seg.slot as usize * slice,
+                                buf,
+                            );
+                        }
+                    }
+                } else {
+                    // chunk-outer within the shard: for each resident
+                    // chunk, accumulate its intersection with every
+                    // segment's shard cut range. Rows stay ascending per
+                    // (segment, feature) stream, so shard contents — and
+                    // result bits — match the in-RAM arm exactly.
+                    for c in 0..binned.n_chunks() {
+                        let cr = binned.chunk_range(c);
+                        binned.with_chunk(c, &mut |cols| {
+                            for (t, seg) in segs.iter().enumerate() {
+                                let a = cuts[s * ns + t] as usize;
+                                let b = cuts[(s + 1) * ns + t] as usize;
+                                if a >= b {
+                                    continue;
+                                }
+                                let sr = &rows[a..b];
+                                let lo =
+                                    a + sr.partition_point(|&r| (r as usize) < cr.start);
+                                let hi = a + sr.partition_point(|&r| (r as usize) < cr.end);
+                                if lo < hi {
+                                    hist_dispatch_chunk(
+                                        &cols,
+                                        m,
+                                        bins,
+                                        &rows[lo..hi],
+                                        &chan[lo * k1..hi * k1],
+                                        k1,
+                                        seg.slot as usize * slice,
+                                        buf,
+                                    );
+                                }
+                            }
+                        });
                     }
                 }
             }
@@ -756,6 +831,83 @@ fn hist_pass_dyn(
     }
 }
 
+/// Chunked mirror of [`hist_dispatch`]: the same monomorphized channel
+/// widths, reading codes from one resident [`ChunkCols`] instead of the
+/// whole in-RAM column. `rows` must lie inside the chunk's row range.
+/// Feature-outer / row-inner like the in-RAM pass, so per-cell addition
+/// order is identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn hist_dispatch_chunk(
+    cols: &ChunkCols<'_>,
+    m: usize,
+    bins: usize,
+    rows: &[u32],
+    chan_g: &[f32],
+    k1: usize,
+    base: usize,
+    out: &mut [f32],
+) {
+    match k1 {
+        2 => hist_chunk_pass::<2>(cols, m, bins, rows, chan_g, base, out),
+        3 => hist_chunk_pass::<3>(cols, m, bins, rows, chan_g, base, out),
+        6 => hist_chunk_pass::<6>(cols, m, bins, rows, chan_g, base, out),
+        11 => hist_chunk_pass::<11>(cols, m, bins, rows, chan_g, base, out),
+        _ => hist_chunk_pass_dyn(cols, m, bins, rows, chan_g, k1, base, out),
+    }
+}
+
+/// One chunk histogram pass with a compile-time channel width.
+fn hist_chunk_pass<const K1: usize>(
+    cols: &ChunkCols<'_>,
+    m: usize,
+    bins: usize,
+    rows: &[u32],
+    chan_g: &[f32],
+    base: usize,
+    out: &mut [f32],
+) {
+    for f in 0..m {
+        let col = cols.col(f);
+        let fbase = base + f * bins * K1;
+        for (j, &r) in rows.iter().enumerate() {
+            let b = col[r as usize - cols.start] as usize;
+            let dst = fbase + b * K1;
+            let src = &chan_g[j * K1..j * K1 + K1];
+            let out_s = &mut out[dst..dst + K1];
+            for c in 0..K1 {
+                out_s[c] += src[c];
+            }
+        }
+    }
+}
+
+/// Fallback chunk histogram pass for arbitrary channel widths.
+#[allow(clippy::too_many_arguments)]
+fn hist_chunk_pass_dyn(
+    cols: &ChunkCols<'_>,
+    m: usize,
+    bins: usize,
+    rows: &[u32],
+    chan_g: &[f32],
+    k1: usize,
+    base: usize,
+    out: &mut [f32],
+) {
+    for f in 0..m {
+        let col = cols.col(f);
+        let fbase = base + f * bins * k1;
+        for (j, &r) in rows.iter().enumerate() {
+            let b = col[r as usize - cols.start] as usize;
+            let dst = fbase + b * k1;
+            let src = &chan_g[j * k1..(j + 1) * k1];
+            let out_s = &mut out[dst..dst + k1];
+            for (o, &s) in out_s.iter_mut().zip(src.iter()) {
+                *o += s;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1269,6 +1421,82 @@ mod tests {
             }
         }
         assert_close(&base, &want, 1e-3, 1e-3);
+    }
+
+    /// Test-only chunked source: serves a [`BinnedDataset`] in fixed-size
+    /// row chunks (materializing each chunk's column-major slab on
+    /// demand), with `as_in_ram()` disabled so the engine takes the real
+    /// chunked path.
+    struct FakeChunks {
+        b: BinnedDataset,
+        chunk: usize,
+    }
+
+    impl BinnedSource for FakeChunks {
+        fn n_rows(&self) -> usize {
+            self.b.n_rows
+        }
+        fn n_features(&self) -> usize {
+            self.b.n_features
+        }
+        fn max_bins(&self) -> usize {
+            self.b.max_bins
+        }
+        fn kinds(&self) -> &[FeatureKind] {
+            &self.b.kinds
+        }
+        fn threshold_value(&self, f: usize, b: usize) -> f32 {
+            self.b.threshold_value(f, b)
+        }
+        fn n_chunks(&self) -> usize {
+            (self.b.n_rows + self.chunk - 1) / self.chunk
+        }
+        fn chunk_range(&self, c: usize) -> std::ops::Range<usize> {
+            let start = c * self.chunk;
+            start..(start + self.chunk).min(self.b.n_rows)
+        }
+        fn with_chunk(&self, c: usize, body: &mut dyn FnMut(ChunkCols<'_>)) {
+            let r = self.chunk_range(c);
+            let len = r.len();
+            let mut codes = vec![0u8; self.b.n_features * len];
+            for f in 0..self.b.n_features {
+                codes[f * len..(f + 1) * len]
+                    .copy_from_slice(&self.b.column(f)[r.start..r.end]);
+            }
+            body(ChunkCols { codes: &codes, start: r.start, len });
+        }
+    }
+
+    #[test]
+    fn chunked_histograms_bit_identical_to_in_ram() {
+        // chunk plans {1 chunk, ragged tail, 1-row chunks} x thread
+        // counts, against the in-RAM fast path — bitwise
+        let n = 2 * SHARD_TARGET_ROWS + 57;
+        let (m, bins, slots, k1) = (4usize, 16usize, 3usize, 3usize);
+        let binned = tiny_binned(n, m, bins, 13);
+        let mut rng = Rng::new(21);
+        let slot_of_row: Vec<u32> = (0..n).map(|_| rng.next_below(slots) as u32).collect();
+        let mut chan = vec![0.0f32; n * k1];
+        rng.fill_gaussian(&mut chan, 1.0);
+        for i in 0..n {
+            chan[i * k1 + k1 - 1] = 1.0;
+        }
+        let rows: Vec<u32> = (0..n as u32).filter(|&r| r % 5 != 4).collect();
+        let (prows, pchan, segs) =
+            crate::engine::reference::partition_inputs(&rows, &slot_of_row, &chan, k1, slots);
+        let size = slots * m * bins * k1;
+        let mut want = vec![0.0f32; size];
+        NativeEngine::with_threads(1)
+            .histograms(&binned, &prows, &pchan, k1, &segs, slots, &mut want);
+        for chunk in [n, 1000, 1] {
+            let src = FakeChunks { b: binned.clone(), chunk };
+            for t in [1usize, 2, 4] {
+                let mut got = vec![0.0f32; size];
+                NativeEngine::with_threads(t)
+                    .histograms(&src, &prows, &pchan, k1, &segs, slots, &mut got);
+                assert_eq!(got, want, "chunk={chunk} threads={t}");
+            }
+        }
     }
 
     #[test]

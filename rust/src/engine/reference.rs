@@ -25,7 +25,7 @@
 //! never sit on a hot path.
 
 use crate::boosting::losses::LossKind;
-use crate::data::binning::BinnedDataset;
+use crate::data::binning::{BinnedDataset, BinnedSource};
 use crate::data::dataset::{FeatureKind, Targets};
 use crate::util::threading::{reduce_shards, shard_bounds, DisjointSlice, ThreadPool};
 
@@ -363,7 +363,7 @@ impl ComputeEngine for ReferenceEngine {
 
     fn histograms(
         &mut self,
-        binned: &BinnedDataset,
+        binned: &dyn BinnedSource,
         rows: &[u32],
         chan: &[f32],
         k1: usize,
@@ -371,6 +371,10 @@ impl ComputeEngine for ReferenceEngine {
         n_slots: usize,
         out: &mut [f32],
     ) {
+        // The oracle pins the historical in-RAM numerics; chunked
+        // sources are NativeEngine's concern (out_of_core.rs compares
+        // the two paths through NativeEngine itself).
+        let binned = binned.as_in_ram().expect("ReferenceEngine requires in-RAM binned data");
         // Reconstruct the historical inputs: the globally ascending
         // interleaved row list, the per-global-row slot map, and the
         // [n, k1] channel matrix indexed by global row.

@@ -21,7 +21,7 @@
 //! no silent fallback; pick the default [`NativeEngine`] explicitly).
 
 use crate::boosting::losses::LossKind;
-use crate::data::binning::BinnedDataset;
+use crate::data::binning::BinnedSource;
 use crate::data::dataset::Targets;
 use crate::runtime::registry::{ArtifactRegistry, Signature};
 use crate::runtime::{literal_f32, literal_i32};
@@ -201,7 +201,7 @@ impl ComputeEngine for XlaEngine {
 
     fn histograms(
         &mut self,
-        binned: &BinnedDataset,
+        binned: &dyn BinnedSource,
         rows: &[u32],
         chan: &[f32],
         k1: usize,
@@ -209,6 +209,9 @@ impl ComputeEngine for XlaEngine {
         n_slots: usize,
         out: &mut [f32],
     ) {
+        // The artifact path packs whole code rows into device literals;
+        // it has no out-of-core story (train chunked with --engine native).
+        let binned = binned.as_in_ram().expect("XlaEngine requires in-RAM binned data");
         let sig = self.sig("hist");
         let m = binned.n_features;
         let bins = binned.max_bins;

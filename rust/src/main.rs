@@ -1,7 +1,8 @@
 //! SketchBoost CLI launcher.
 //!
 //! Subcommands:
-//!   train              train on a dataset profile or CSV file
+//!   train              train on a dataset profile, CSV file, or chunked store
+//!   bin                write a CSV/profile as an on-disk chunked binned store
 //!   predict            batch-score a CSV with a saved model (FlatForest)
 //!   serve              TCP daemon with request coalescing + model hot-swap
 //!   evaluate           load a saved model and score a dataset
@@ -16,9 +17,13 @@ use std::process::ExitCode;
 use sketchboost::baselines::one_vs_all::fit_one_vs_all;
 use sketchboost::boosting::metrics::Metric;
 use sketchboost::boosting::trainer::{GBDTConfig, GBDT};
+use sketchboost::data::binning::{BinnedDataset, StreamingQuantiles, STREAM_RESERVOIR};
 use sketchboost::data::csv;
+use sketchboost::data::dataset::{FeatureKind, Targets};
 use sketchboost::data::profiles::Profile;
 use sketchboost::data::split::train_test_split;
+use sketchboost::data::store::StoreWriter;
+use sketchboost::data::{store, ChunkedBinned};
 use sketchboost::engine::{EngineOpts, MissingPolicy, XlaEngine};
 use sketchboost::prelude::*;
 use sketchboost::util::bench::{fmt_secs, time_once, Table};
@@ -29,6 +34,7 @@ fn main() -> ExitCode {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let result = match cmd {
         "train" => cmd_train(&args),
+        "bin" => cmd_bin(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
         "evaluate" => cmd_evaluate(&args),
@@ -56,6 +62,7 @@ fn top_usage() -> String {
      Usage: sketchboost <command> [options]\n\n\
      Commands:\n\
      \x20 train              train a model (see `train --help`)\n\
+     \x20 bin                write a chunked binned store for out-of-core training (see `bin --help`)\n\
      \x20 predict            batch-score a CSV with a saved model (see `predict --help`)\n\
      \x20 serve              micro-batching TCP model server (see `serve --help`)\n\
      \x20 evaluate           score a saved model on a dataset\n\
@@ -83,13 +90,13 @@ fn load_data(args: &Args) -> Result<Dataset, Box<dyn std::error::Error>> {
     }
 }
 
-fn config_from_args(args: &Args, ds: &Dataset) -> GBDTConfig {
+fn config_from_args(args: &Args, targets: &Targets) -> GBDTConfig {
     if let Some(path) = args.get("config") {
         let mut cfg = sketchboost::config::load_config(std::path::Path::new(path))
             .unwrap_or_else(|e| panic!("--config {path}: {e}"));
         assert_eq!(
             cfg.n_outputs,
-            ds.n_outputs(),
+            targets.n_outputs(),
             "--config outputs != dataset outputs"
         );
         cfg.verbose = args.flag("verbose") || cfg.verbose;
@@ -106,7 +113,7 @@ fn config_from_args(args: &Args, ds: &Dataset) -> GBDTConfig {
         }
         return cfg;
     }
-    let mut cfg = GBDTConfig::for_dataset(ds);
+    let mut cfg = GBDTConfig::for_targets(targets);
     cfg.n_rounds = args.get_usize("rounds", 100);
     cfg.learning_rate = args.get_f32("lr", 0.05);
     cfg.max_depth = args.get_usize("depth", 6);
@@ -159,16 +166,24 @@ fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                     ("--engine E", "native | xla (default native)"),
                     ("--test-frac F", "holdout fraction (default 0.2)"),
                     ("--out FILE", "save the model JSON"),
+                    ("--out-of-core", "train through an on-disk chunked store (bit-identical to in-RAM)"),
+                    ("--store FILE", "existing store from `sketchboost bin`; trains on it directly (implies --out-of-core, no holdout)"),
+                    ("--chunk-rows N", "rows per chunk when auto-binning under --out-of-core (default 16384)"),
+                    ("--chunk-pool N", "resident chunk budget for the loader pool (default 8)"),
                 ],
             )
         );
         return Ok(());
     }
+    if let Some(path) = args.get("store") {
+        return cmd_train_store(args, std::path::Path::new(path));
+    }
     let ds = load_data(args)?;
     let (train, test) = train_test_split(&ds, args.get_f32("test-frac", 0.2) as f64, 7);
-    let mut cfg = config_from_args(args, &ds);
+    let mut cfg = config_from_args(args, &ds.targets);
     let strategy = args.get_str("strategy", "single-tree");
     let engine = args.get_str("engine", "native");
+    let out_of_core = args.flag("out-of-core");
     println!(
         "training: n={} m={} d={} loss={} sketch={} engine={engine} strategy={strategy}",
         train.n_rows,
@@ -190,44 +205,54 @@ fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 .into());
             }
         }
+        if out_of_core {
+            return Err("--out-of-core needs --strategy single-tree".into());
+        }
         let (model, secs) = time_once(|| fit_one_vs_all(&cfg, &train, Some(&test)));
         report_scores("one-vs-all", &model.predict_raw(&test), &test, secs);
         return Ok(());
     }
 
-    // assemble the callback-driven session: Booster::from_config wires
-    // early stopping + the default verbose logger from the config; the
-    // flags below attach the rest
-    let eval_every = args.get_usize("eval-every", 0);
-    if eval_every > 0 {
-        cfg.verbose = false; // --eval-every supersedes the 10-round default
-    }
-    let mut booster = Booster::from_config(&cfg);
-    if eval_every > 0 {
-        booster = booster.callback(EvalLogger::every(eval_every));
-    }
-    if let Some(path) = args.get("checkpoint") {
-        booster = booster
-            .callback(Checkpoint::every(path, args.get_usize("checkpoint-every", 10)));
-    } else if args.get("checkpoint-every").is_some() {
-        return Err("--checkpoint-every needs --checkpoint FILE".into());
-    }
-    let time_budget = args.get_f32("time-budget", 0.0);
-    if time_budget > 0.0 {
-        booster = booster.callback(TimeBudget::seconds(time_budget as f64));
-    }
+    let booster = assemble_booster(args, &mut cfg)?;
 
-    let (model, secs) = match engine.as_str() {
-        "native" => time_once(|| booster.fit(&train, Some(&test))),
-        "xla" => {
-            let mut eng = XlaEngine::with_opts(
-                &args.get_str("tag", "e2e"),
-                EngineOpts::threads(cfg.n_threads),
-            )?;
-            println!("xla engine: {}", eng.describe());
-            time_once(|| booster.fit_with_engine(&train, Some(&test), &mut eng))
+    let (model, secs) = if out_of_core {
+        if engine != "native" {
+            return Err("--out-of-core requires --engine native".into());
         }
-        other => return Err(format!("unknown engine {other:?}").into()),
+        // bin the train split into a scratch store, then run the
+        // chunked session over it — bit-identical to the in-RAM fit on
+        // the same split (the CI smoke step pins this end to end)
+        let chunk_rows = args.get_usize("chunk-rows", 16384);
+        let pool = args.get_usize("chunk-pool", 8);
+        let dir = std::env::temp_dir().join("sketchboost_ooc");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("train_{}.sbbin", std::process::id()));
+        let binned =
+            BinnedDataset::from_dataset_with_kinds(&train, cfg.max_bins, &cfg.merged_kinds(&train));
+        store::write_binned(&path, &binned, &train.targets, chunk_rows)?;
+        drop(binned); // out-of-core from here on
+        let chunked = ChunkedBinned::open(&path, pool)?;
+        println!(
+            "out-of-core: store {} ({} chunks x {chunk_rows} rows, pool {pool})",
+            path.display(),
+            chunked.header().chunks.len(),
+        );
+        let r = time_once(|| booster.fit_chunked(&chunked, Some(&test)));
+        std::fs::remove_file(&path).ok();
+        r
+    } else {
+        match engine.as_str() {
+            "native" => time_once(|| booster.fit(&train, Some(&test))),
+            "xla" => {
+                let mut eng = XlaEngine::with_opts(
+                    &args.get_str("tag", "e2e"),
+                    EngineOpts::threads(cfg.n_threads),
+                )?;
+                println!("xla engine: {}", eng.describe());
+                time_once(|| booster.fit_with_engine(&train, Some(&test), &mut eng))
+            }
+            other => return Err(format!("unknown engine {other:?}").into()),
+        }
     };
     report_scores(cfg.sketch.name(), &model.predict_raw(&test), &test, secs);
     println!("trees: {}, nodes: {}", model.n_trees(), model.n_nodes());
@@ -235,6 +260,211 @@ fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         model.save(std::path::Path::new(out))?;
         println!("model saved to {out}");
     }
+    Ok(())
+}
+
+/// The callback-driven session shared by every train path:
+/// `Booster::from_config` wires early stopping + the default verbose
+/// logger from the config; the flags here attach the rest.
+fn assemble_booster(
+    args: &Args,
+    cfg: &mut GBDTConfig,
+) -> Result<Booster, Box<dyn std::error::Error>> {
+    let eval_every = args.get_usize("eval-every", 0);
+    if eval_every > 0 {
+        cfg.verbose = false; // --eval-every supersedes the 10-round default
+    }
+    let mut booster = Booster::from_config(cfg);
+    if eval_every > 0 {
+        booster = booster.callback(EvalLogger::every(eval_every));
+    }
+    if let Some(path) = args.get("checkpoint") {
+        booster =
+            booster.callback(Checkpoint::every(path, args.get_usize("checkpoint-every", 10)));
+    } else if args.get("checkpoint-every").is_some() {
+        return Err("--checkpoint-every needs --checkpoint FILE".into());
+    }
+    let time_budget = args.get_f32("time-budget", 0.0);
+    if time_budget > 0.0 {
+        booster = booster.callback(TimeBudget::seconds(time_budget as f64));
+    }
+    Ok(booster)
+}
+
+/// `train --store FILE`: the fully out-of-core path — the feature
+/// matrix never exists in RAM, only the store's chunk pool plus the
+/// targets from its header. No holdout (the store is one fixed split);
+/// history carries the train metric.
+fn cmd_train_store(
+    args: &Args,
+    store_path: &std::path::Path,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let strategy = args.get_str("strategy", "single-tree");
+    if strategy != "single-tree" {
+        return Err("--store needs --strategy single-tree".into());
+    }
+    if args.get_str("engine", "native") != "native" {
+        return Err("--store requires --engine native".into());
+    }
+    let pool = args.get_usize("chunk-pool", 8);
+    let chunked = ChunkedBinned::open(store_path, pool)?;
+    let h = chunked.header();
+    let mut cfg = config_from_args(args, chunked.targets());
+    println!(
+        "training (out-of-core): n={} m={} d={} loss={} sketch={} store={} ({} chunks x {} rows, pool {pool})",
+        h.n_rows,
+        h.n_features,
+        chunked.n_outputs(),
+        cfg.loss.name(),
+        cfg.sketch.name(),
+        store_path.display(),
+        h.chunks.len(),
+        h.chunk_rows,
+    );
+    let booster = assemble_booster(args, &mut cfg)?;
+    let (model, secs) = time_once(|| booster.fit_chunked(&chunked, None));
+    let last = model.history.train_loss.last().copied().unwrap_or(f64::NAN);
+    println!(
+        "[{}] train loss = {last:.5}, time = {}",
+        cfg.sketch.name(),
+        fmt_secs(secs)
+    );
+    println!("trees: {}, nodes: {}", model.n_trees(), model.n_nodes());
+    if let Some(out) = args.get("out") {
+        model.save(std::path::Path::new(out))?;
+        println!("model saved to {out}");
+    }
+    Ok(())
+}
+
+/// `sketchboost bin`: write a dataset as an on-disk chunked binned
+/// store for out-of-core training.
+fn cmd_bin(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "sketchboost bin --out FILE [options]",
+                "Bin a dataset into an on-disk chunked store (train --store / --out-of-core).",
+                &[
+                    ("--out FILE", "store file to write (required)"),
+                    ("--profile NAME", "synthetic profile (default otto); see data/profiles.rs"),
+                    ("--rows N", "override profile row count"),
+                    ("--data FILE", "CSV instead of a profile (with --task, --outputs)"),
+                    ("--task S", "multiclass | multilabel | regression (default multiclass)"),
+                    ("--outputs N", "target columns / classes (default 2)"),
+                    ("--categorical LIST", "feature columns holding category ids (e.g. 0,3,7)"),
+                    ("--bins N", "max histogram bins (default 64)"),
+                    ("--chunk-rows N", "rows per chunk (default 16384)"),
+                    ("--stream", "two-pass streaming CSV binning: reservoir quantiles, one-row memory (needs --data)"),
+                    ("--seed N", "reservoir seed under --stream (default 42)"),
+                ],
+            )
+        );
+        return Ok(());
+    }
+    let out = args.get("out").ok_or("bin needs --out FILE (the store to write)")?;
+    let out = std::path::Path::new(out);
+    let chunk_rows = args.get_usize("chunk-rows", 16384);
+    let max_bins = args.get_usize("bins", 64);
+    if args.flag("stream") {
+        return cmd_bin_stream(args, out, chunk_rows, max_bins);
+    }
+    // exact path: bin in RAM with the same quantile code training uses,
+    // so a store written here reproduces in-RAM training bit for bit
+    let ds = load_data(args)?;
+    let binned = BinnedDataset::from_dataset(&ds, max_bins);
+    store::write_binned(out, &binned, &ds.targets, chunk_rows)?;
+    let n_chunks = (ds.n_rows + chunk_rows - 1) / chunk_rows;
+    println!(
+        "wrote {} ({} rows x {} features, {} outputs, {} chunks x {chunk_rows} rows, bins {max_bins})",
+        out.display(),
+        ds.n_rows,
+        ds.n_features,
+        ds.n_outputs(),
+        n_chunks,
+    );
+    Ok(())
+}
+
+/// `bin --stream`: two passes over the CSV, never holding more than one
+/// row of features — pass 1 feeds per-feature reservoir quantiles
+/// (exact when a column's non-NaN count fits the reservoir), pass 2
+/// bins rows straight into chunk payloads. Targets accumulate in RAM
+/// (they are O(n*d), the same budget training itself needs).
+fn cmd_bin_stream(
+    args: &Args,
+    out: &std::path::Path,
+    chunk_rows: usize,
+    max_bins: usize,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let data = args.get("data").ok_or("--stream needs --data FILE (CSV)")?;
+    let data = std::path::Path::new(data);
+    let task = args.get_str("task", "multiclass");
+    let d = args.get_usize("outputs", 2);
+    let cats = args.get_usize_list("categorical", &[]);
+    let tgt_cols = if task == "multiclass" { 1 } else { d };
+    let seed = args.get_u64("seed", 42);
+
+    // pass 1: per-feature reservoirs -> bin edges
+    let mut sq: Option<StreamingQuantiles> = None;
+    let mut m = 0usize;
+    csv::stream_rows(data, &mut |row| {
+        if sq.is_none() {
+            if row.len() <= tgt_cols {
+                return Err("no feature columns left".into());
+            }
+            m = row.len() - tgt_cols;
+            let mut kinds = vec![FeatureKind::Numeric; m];
+            for &f in &cats {
+                if f >= m {
+                    return Err(format!(
+                        "categorical column {f} out of range ({m} feature columns)"
+                    )
+                    .into());
+                }
+                kinds[f] = FeatureKind::Categorical;
+            }
+            sq = Some(StreamingQuantiles::new(max_bins, &kinds, STREAM_RESERVOIR, seed));
+        }
+        sq.as_mut().unwrap().push_row(&row[..m]);
+        Ok(())
+    })?;
+    let sq = sq.ok_or("empty csv: nothing to bin")?;
+    let n = sq.n_rows();
+    let spec = sq.finish();
+
+    // pass 2: bin each row into chunk payloads + collect targets
+    let mut w = StoreWriter::create(out, spec, chunk_rows)?;
+    let mut labels_u32: Vec<u32> = Vec::new();
+    let mut values_f32: Vec<f32> = Vec::new();
+    csv::stream_rows(data, &mut |row| {
+        w.push_row(&row[..m])?;
+        if task == "multiclass" {
+            labels_u32.push(row[m] as u32);
+        } else {
+            values_f32.extend_from_slice(&row[m..]);
+        }
+        Ok(())
+    })?;
+    let targets = match task.as_str() {
+        "multiclass" => {
+            let n_classes =
+                d.max(labels_u32.iter().copied().max().unwrap_or(0) as usize + 1);
+            Targets::Multiclass { labels: labels_u32, n_classes }
+        }
+        "multilabel" => Targets::Multilabel { labels: values_f32, n_labels: d },
+        "regression" | "multitask" => Targets::Regression { values: values_f32, n_targets: d },
+        other => return Err(format!("unknown task {other:?}").into()),
+    };
+    w.finish(&targets)?;
+    let n_chunks = (n + chunk_rows - 1) / chunk_rows;
+    println!(
+        "wrote {} ({n} rows x {m} features, {} outputs, {} chunks x {chunk_rows} rows, bins {max_bins}, streamed)",
+        out.display(),
+        targets.n_outputs(),
+        n_chunks,
+    );
     Ok(())
 }
 
@@ -460,7 +690,7 @@ fn cmd_serve(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 /// 5-fold CV exactly as the paper's Appendix B.2 evaluation stage.
 fn cmd_cv(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let ds = load_data(args)?;
-    let cfg = config_from_args(args, &ds);
+    let cfg = config_from_args(args, &ds.targets);
     let k = args.get_usize("folds", 5);
     let metric = cfg.metric();
     println!(

@@ -115,16 +115,20 @@ impl LayoutOptions {
 // --- f32 <-> IEEE binary16 bit conversion (no `f16` type at MSRV 1.70) --
 
 /// Round-to-nearest-even f32 -> binary16 bits. Overflow saturates to
-/// infinity; NaN stays NaN (payload truncated, quiet bit forced).
+/// infinity; NaN stays NaN (payload truncated; the quiet bit is forced
+/// only when truncation alone would collapse the NaN into an infinity).
 pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
     let bits = x.to_bits();
     let sign = ((bits >> 16) & 0x8000) as u16;
     let exp32 = ((bits >> 23) & 0xff) as i32;
     let man = bits & 0x007f_ffff;
     if exp32 == 0xff {
-        // Inf / NaN: keep NaN-ness even if the payload's top bits are 0
-        let payload = (man >> 13) as u16 | u16::from(man != 0);
-        return sign | 0x7c00 | payload;
+        // Inf / NaN: truncate the payload; only when truncation would
+        // lose NaN-ness entirely (nonzero payload, top 10 bits all
+        // zero) force the quiet bit. ORing the low bit unconditionally
+        // corrupted payloads of genuine NaNs and broke Inf round-trips.
+        let payload = (man >> 13) as u16;
+        return sign | 0x7c00 | payload | ((u16::from(man != 0 && payload == 0)) << 9);
     }
     let exp = exp32 - 127 + 15; // rebias into binary16
     if exp >= 0x1f {
@@ -226,7 +230,12 @@ struct QuantMap {
 }
 
 impl QuantMap {
-    fn build(soa: &SoaNodes, n_features: usize) -> QuantMap {
+    /// Build the per-feature code tables, or say why this forest cannot
+    /// be quantized (a feature split both ways, or more distinct
+    /// thresholds than u16 codes can index). `FlatForest::compile`
+    /// treats an `Err` as "fall back to V2Exact", never a panic — any
+    /// valid forest stays servable.
+    fn try_build(soa: &SoaNodes, n_features: usize) -> Result<QuantMap, String> {
         let mut per: Vec<Vec<f32>> = vec![Vec::new(); n_features];
         let mut is_cat = vec![false; n_features];
         for i in 0..soa.feature.len() {
@@ -241,22 +250,24 @@ impl QuantMap {
         let mut offsets = Vec::with_capacity(n_features + 1);
         offsets.push(0u32);
         for (f, mut ts) in per.into_iter().enumerate() {
-            assert!(
-                !(is_cat[f] && !ts.is_empty()),
-                "feature {f} is split both numerically and categorically; cannot quantize"
-            );
+            if is_cat[f] && !ts.is_empty() {
+                return Err(format!(
+                    "feature {f} is split both numerically and categorically; cannot quantize"
+                ));
+            }
             ts.sort_by(|a, b| a.partial_cmp(b).expect("split thresholds are finite"));
             ts.dedup();
-            assert!(
-                ts.len() <= u16::MAX as usize - 1,
-                "feature {f} has {} distinct thresholds; v2q codes cap at {}",
-                ts.len(),
-                u16::MAX - 1
-            );
+            if ts.len() > u16::MAX as usize - 1 {
+                return Err(format!(
+                    "feature {f} has {} distinct thresholds; v2q codes cap at {}",
+                    ts.len(),
+                    u16::MAX - 1
+                ));
+            }
             edges.extend_from_slice(&ts);
             offsets.push(edges.len() as u32);
         }
-        QuantMap { edges, offsets, is_cat }
+        Ok(QuantMap { edges, offsets, is_cat })
     }
 
     #[inline]
@@ -548,20 +559,44 @@ impl FlatForest {
                 self.nodes = Nodes::V2 { recs };
             }
             ForestLayout::V2Quantized => {
-                let map = QuantMap::build(&soa, self.n_features_required);
-                let recs = (0..soa.feature.len())
-                    .map(|i| {
-                        let key = if soa.cat_idx[i] >= 0 {
-                            soa.cat_idx[i] as u32
-                        } else {
-                            map.code_of_threshold(soa.feature[i] as usize, soa.threshold[i])
-                        };
-                        rec_of(i, key)
-                    })
-                    .collect();
-                self.nodes = Nodes::V2Q { recs, map };
-                if !opts.exact_leaves {
-                    self.compress_leaves();
+                match QuantMap::try_build(&soa, self.n_features_required) {
+                    Ok(map) => {
+                        let recs = (0..soa.feature.len())
+                            .map(|i| {
+                                let key = if soa.cat_idx[i] >= 0 {
+                                    soa.cat_idx[i] as u32
+                                } else {
+                                    map.code_of_threshold(
+                                        soa.feature[i] as usize,
+                                        soa.threshold[i],
+                                    )
+                                };
+                                rec_of(i, key)
+                            })
+                            .collect();
+                        self.nodes = Nodes::V2Q { recs, map };
+                        if !opts.exact_leaves {
+                            self.compress_leaves();
+                        }
+                    }
+                    Err(_why) => {
+                        // unquantizable forest (e.g. > 65534 distinct
+                        // thresholds on one feature): serve it in the
+                        // exact interleaved layout instead of panicking
+                        let recs = (0..soa.feature.len())
+                            .map(|i| {
+                                let key = if soa.cat_idx[i] >= 0 {
+                                    soa.cat_idx[i] as u32
+                                } else {
+                                    soa.threshold[i].to_bits()
+                                };
+                                rec_of(i, key)
+                            })
+                            .collect();
+                        self.nodes = Nodes::V2 { recs };
+                        self.layout = ForestLayout::V2Exact;
+                        return;
+                    }
                 }
             }
             ForestLayout::V1 => unreachable!(),
@@ -1114,6 +1149,77 @@ mod tests {
         let v = 0.1f32;
         let err = (v - f16_bits_to_f32(f32_to_f16_bits(v))).abs();
         assert!(err > 0.0 && err <= 0.000_048_83, "err {err}");
+    }
+
+    #[test]
+    fn f16_every_bit_pattern_round_trips() {
+        // binary16 -> f32 is exact, so encoding back must reproduce the
+        // original bits for all 65536 patterns — zeros, subnormals,
+        // normals, infinities, and every NaN payload
+        for h in 0..=u16::MAX {
+            let back = f32_to_f16_bits(f16_bits_to_f32(h));
+            assert_eq!(back, h, "bits {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_nan_payloads_and_infinities() {
+        // infinities map to the canonical f16 infinities
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        // a quiet NaN's payload truncates cleanly: the quiet bit (f32
+        // mantissa bit 22) lands on f16 mantissa bit 9, nothing else set
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x7fc0_0000)), 0x7e00);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0xffc0_0000)), 0xfe00);
+        // high payload bits survive the shift untouched
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x7f80_4000)), 0x7c02);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x7fbf_e000)), 0x7dff);
+        // a NaN whose payload lives only in the truncated low 13 bits
+        // must stay NaN (quiet bit forced), not collapse into infinity
+        let sig = f32_to_f16_bits(f32::from_bits(0x7f80_0001));
+        assert_eq!(sig, 0x7e00);
+        assert!(f16_bits_to_f32(sig).is_nan());
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0xff80_1fff)), 0xfe00);
+    }
+
+    #[test]
+    fn unquantizable_forest_falls_back_to_exact_layout() {
+        // 65535 distinct thresholds on one feature exceed the u16 code
+        // space; compile must degrade to V2Exact, not panic, and the
+        // served predictions stay bitwise-equal to V1
+        let n = (u16::MAX as usize) + 1; // 65536 stumps, 65535+1 thresholds
+        let trees: Vec<Tree> = (0..n)
+            .map(|i| Tree {
+                n_outputs: 1,
+                nodes: vec![TreeNode {
+                    feature: 0,
+                    bin: 0,
+                    threshold: i as f32,
+                    default_left: i % 2 == 0,
+                    cats: None,
+                    left: encode_leaf(0),
+                    right: encode_leaf(1),
+                    gain: 1.0,
+                }],
+                leaf_values: vec![-1.0e-4, 1.0e-4],
+                n_leaves: 2,
+            })
+            .collect();
+        let model = Ensemble {
+            loss: LossKind::MSE,
+            n_outputs: 1,
+            base_score: vec![0.0],
+            trees,
+            history: TrainHistory::default(),
+        };
+        let v2q = FlatForest::compile(&model, LayoutOptions::v2_quantized());
+        assert_eq!(v2q.layout(), ForestLayout::V2Exact, "fallback layout");
+        let v1 = FlatForest::compile(&model, LayoutOptions::v1());
+        for row in [[-1.0f32], [0.0], [17.5], [65534.0], [1.0e9], [f32::NAN]] {
+            for t in [0usize, 1, 17, n - 1] {
+                assert_eq!(v2q.leaf_of(t, &row), v1.leaf_of(t, &row), "row {row:?} tree {t}");
+            }
+        }
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! accumulation order (and therefore every result bit) matches the
 //! historical flag-routed builder (`rust/tests/partition_equivalence.rs`).
 
-use crate::data::binning::{BinnedDataset, MISSING_BIN};
+use crate::data::binning::{BinnedSource, MISSING_BIN};
 use crate::engine::{ComputeEngine, MissingPolicy, ScanSpec, ScoreMode, SlotRange};
 use crate::tree::splitter::{best_split, node_score, SplitDecision};
 use crate::tree::tree::{encode_leaf, Tree, TreeNode};
@@ -39,7 +39,11 @@ pub const SENTINEL: u32 = u32::MAX;
 /// *global* row index of `binned` (0..n); `rows` selects the active
 /// (possibly subsampled) training rows.
 pub struct BuildParams<'a> {
-    pub binned: &'a BinnedDataset,
+    /// Binned feature codes: the in-RAM [`crate::data::BinnedDataset`]
+    /// (a `&BinnedDataset` coerces here) or the out-of-core
+    /// `ChunkedBinned` store. Same codes + same chunk plan build the
+    /// bit-identical tree (`rust/tests/out_of_core.rs`).
+    pub binned: &'a dyn BinnedSource,
     pub rows: &'a [u32],
     /// full gradients [n, d] (leaf values)
     pub g: &'a [f32],
@@ -89,9 +93,13 @@ pub fn build_tree_in(
     engine: &mut dyn ComputeEngine,
     ws: &mut TreeWorkspace,
 ) -> Tree {
-    let n = p.binned.n_rows;
-    let m = p.binned.n_features;
-    let bins = p.binned.max_bins;
+    let n = p.binned.n_rows();
+    let m = p.binned.n_features();
+    let bins = p.binned.max_bins();
+    // split routing takes the in-RAM column walk when the whole matrix
+    // is resident; otherwise the chunk-outer walk below (identical
+    // per-row decisions, identical row order — see the routing loop)
+    let ram = p.binned.as_in_ram();
     let k1 = p.mode.channels(p.kc);
     assert!(p.max_depth >= 1, "max_depth must be >= 1");
     assert!(p.min_data_in_leaf >= 1, "min_data_in_leaf must be >= 1");
@@ -186,7 +194,7 @@ pub fn build_tree_in(
             k1,
             lam: p.lambda,
             mode: p.mode,
-            kinds: &p.binned.kinds,
+            kinds: p.binned.kinds(),
             missing: p.missing,
         };
         engine.split_gains(&ws.hist, &spec, &mut ws.gains, &mut ws.defaults);
@@ -294,31 +302,83 @@ pub fn build_tree_in(
                     }
                 }
                 Outcome::Split { feature, rule, default_left, left_slot, right_slot } => {
-                    let col = p.binned.column(*feature as usize);
                     ws.right_rows.clear();
                     ws.right_chan.clear();
                     let start = write;
-                    for pos in seg.range() {
-                        let r = ws.rows[pos];
-                        let crow = &ws.chan[pos * k1..(pos + 1) * k1];
-                        let code = col[r as usize];
-                        let go_left = if code == MISSING_BIN {
-                            *default_left
-                        } else {
-                            match rule {
-                                SplitRule::Numeric { bin } => code <= *bin,
-                                SplitRule::Categorical { cats } => {
-                                    cats.contains(code as u32 - 1)
+                    if let Some(ram) = ram {
+                        let col = ram.column(*feature as usize);
+                        for pos in seg.range() {
+                            let r = ws.rows[pos];
+                            let crow = &ws.chan[pos * k1..(pos + 1) * k1];
+                            let code = col[r as usize];
+                            let go_left = if code == MISSING_BIN {
+                                *default_left
+                            } else {
+                                match rule {
+                                    SplitRule::Numeric { bin } => code <= *bin,
+                                    SplitRule::Categorical { cats } => {
+                                        cats.contains(code as u32 - 1)
+                                    }
                                 }
+                            };
+                            if go_left {
+                                ws.rows_next[write] = r;
+                                ws.chan_next[write * k1..(write + 1) * k1].copy_from_slice(crow);
+                                write += 1;
+                            } else {
+                                ws.right_rows.push(r);
+                                ws.right_chan.extend_from_slice(crow);
                             }
-                        };
-                        if go_left {
-                            ws.rows_next[write] = r;
-                            ws.chan_next[write * k1..(write + 1) * k1].copy_from_slice(crow);
-                            write += 1;
-                        } else {
-                            ws.right_rows.push(r);
-                            ws.right_chan.extend_from_slice(crow);
+                        }
+                    } else {
+                        // chunk-outer walk: the segment's rows are
+                        // ascending, so each chunk's share is one
+                        // contiguous sub-range and visiting chunks in
+                        // ascending order replays the exact row order
+                        // of the in-RAM pass above — same decisions,
+                        // same writes, bit-identical partition
+                        let f = *feature as usize;
+                        let (a, b) = (seg.start as usize, seg.end as usize);
+                        let mut pos = a;
+                        while pos < b {
+                            let c = chunk_of(p.binned, ws.rows[pos] as usize);
+                            let cr = p.binned.chunk_range(c);
+                            let hi = pos
+                                + ws.rows[pos..b].partition_point(|&r| (r as usize) < cr.end);
+                            let rows = &ws.rows[..];
+                            let chan = &ws.chan[..];
+                            let rows_next = &mut ws.rows_next[..];
+                            let chan_next = &mut ws.chan_next[..];
+                            let right_rows = &mut ws.right_rows;
+                            let right_chan = &mut ws.right_chan;
+                            let write_ref = &mut write;
+                            p.binned.with_chunk(c, &mut |cols| {
+                                for pos in pos..hi {
+                                    let r = rows[pos];
+                                    let crow = &chan[pos * k1..(pos + 1) * k1];
+                                    let code = cols.code(f, r as usize);
+                                    let go_left = if code == MISSING_BIN {
+                                        *default_left
+                                    } else {
+                                        match rule {
+                                            SplitRule::Numeric { bin } => code <= *bin,
+                                            SplitRule::Categorical { cats } => {
+                                                cats.contains(code as u32 - 1)
+                                            }
+                                        }
+                                    };
+                                    let w = *write_ref;
+                                    if go_left {
+                                        rows_next[w] = r;
+                                        chan_next[w * k1..(w + 1) * k1].copy_from_slice(crow);
+                                        *write_ref += 1;
+                                    } else {
+                                        right_rows.push(r);
+                                        right_chan.extend_from_slice(crow);
+                                    }
+                                }
+                            });
+                            pos = hi;
                         }
                     }
                     let mid = write;
@@ -419,6 +479,21 @@ pub fn build_tree_in(
     tree
 }
 
+/// Index of the chunk holding global row `r`. Chunks partition
+/// `0..n_rows` in ascending order, so this is a plain binary search.
+fn chunk_of(src: &dyn BinnedSource, r: usize) -> usize {
+    let (mut lo, mut hi) = (0usize, src.n_chunks());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if src.chunk_range(mid).end <= r {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
 /// GBDT-MO (sparse): keep only the top-K outputs by |v| per leaf.
 fn sparsify_leaves(values: &mut [f32], n_leaves: usize, d: usize, topk: usize) {
     if topk >= d {
@@ -439,6 +514,7 @@ fn sparsify_leaves(values: &mut [f32], n_leaves: usize, d: usize, topk: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::binning::BinnedDataset;
     use crate::data::dataset::{Dataset, Targets};
     use crate::engine::NativeEngine;
     use crate::util::proptest::run_prop;
@@ -701,6 +777,66 @@ mod tests {
         sparsify_leaves(&mut v, 2, 4, 2);
         assert_eq!(&v[0..4], &[3.0, 0.0, 0.0, -4.0]);
         assert_eq!(&v[4..8], &[0.0, 0.0, 0.3, 0.4]);
+    }
+
+    /// Test-only chunked facade over an in-RAM matrix: same codes, no
+    /// `as_in_ram` fast path, so the builder takes the chunk-outer
+    /// routing arm.
+    struct Chunked<'a> {
+        b: &'a BinnedDataset,
+        chunk: usize,
+    }
+
+    impl BinnedSource for Chunked<'_> {
+        fn n_rows(&self) -> usize {
+            self.b.n_rows
+        }
+        fn n_features(&self) -> usize {
+            self.b.n_features
+        }
+        fn max_bins(&self) -> usize {
+            self.b.max_bins
+        }
+        fn kinds(&self) -> &[crate::data::FeatureKind] {
+            &self.b.kinds
+        }
+        fn threshold_value(&self, f: usize, b: usize) -> f32 {
+            self.b.threshold_value(f, b)
+        }
+        fn n_chunks(&self) -> usize {
+            (self.b.n_rows + self.chunk - 1) / self.chunk
+        }
+        fn chunk_range(&self, c: usize) -> std::ops::Range<usize> {
+            let start = c * self.chunk;
+            start..(start + self.chunk).min(self.b.n_rows)
+        }
+        fn with_chunk(&self, c: usize, body: &mut dyn FnMut(crate::data::binning::ChunkCols<'_>)) {
+            let cr = self.chunk_range(c);
+            let len = cr.len();
+            let mut codes = vec![0u8; self.b.n_features * len];
+            for f in 0..self.b.n_features {
+                codes[f * len..(f + 1) * len].copy_from_slice(&self.b.column(f)[cr.clone()]);
+            }
+            body(crate::data::binning::ChunkCols { codes: &codes, start: cr.start, len });
+        }
+    }
+
+    #[test]
+    fn chunked_source_builds_bit_identical_tree() {
+        let (binned, g, h) = sign_problem(313, 17);
+        let mut rng = Rng::new(3);
+        let gn: Vec<f32> = g.iter().map(|&v| v + 0.4 * rng.next_gaussian() as f32).collect();
+        let rows: Vec<u32> = (0..313).filter(|&r| r % 7 != 3).collect();
+        let mut eng = NativeEngine::new();
+        let (want, want_leaves) = build_tree(&params(&binned, &rows, &gn, &h, 4), &mut eng);
+        for chunk in [313usize, 64, 1] {
+            let src = Chunked { b: &binned, chunk };
+            let mut p = params(&binned, &rows, &gn, &h, 4);
+            p.binned = &src;
+            let (got, got_leaves) = build_tree(&p, &mut eng);
+            assert_eq!(got, want, "chunk={chunk}");
+            assert_eq!(got_leaves, want_leaves, "chunk={chunk}");
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! categorical splits route by category-*set* membership ([`CatSet`])
 //! instead of a threshold.
 
-use crate::data::binning::{BinnedDataset, MISSING_BIN};
+use crate::data::binning::{BinnedDataset, ChunkCols, MISSING_BIN};
 
 /// A set of category ids (0..=255) routed to the left child of a
 /// categorical split — a fixed 256-bit bitset, `Copy` so routing and
@@ -122,6 +122,33 @@ impl Tree {
         loop {
             let nd = &self.nodes[node as usize];
             let code = binned.codes[nd.feature as usize * binned.n_rows + row];
+            let go_left = if code == MISSING_BIN {
+                nd.default_left
+            } else {
+                match &nd.cats {
+                    Some(cats) => cats.contains(code as u32 - 1),
+                    None => code <= nd.bin,
+                }
+            };
+            let child = if go_left { nd.left } else { nd.right };
+            if is_leaf(child) {
+                return leaf_id(child);
+            }
+            node = child;
+        }
+    }
+
+    /// [`Tree::leaf_for_binned`] against one resident chunk of an
+    /// out-of-core source: identical routing, with codes read from the
+    /// chunk's column-major slab. `row` must lie in the chunk's range.
+    pub fn leaf_for_chunk(&self, cols: &ChunkCols<'_>, row: usize) -> usize {
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let mut node = 0i32;
+        loop {
+            let nd = &self.nodes[node as usize];
+            let code = cols.code(nd.feature as usize, row);
             let go_left = if code == MISSING_BIN {
                 nd.default_left
             } else {
@@ -384,6 +411,17 @@ mod tests {
         assert_eq!(t.leaf_for_binned(&binned, 1), 1);
         assert_eq!(t.leaf_for_binned(&binned, 2), 1);
         assert_eq!(t.leaf_for_binned(&binned, 3), 1, "missing follows default");
+
+        // chunked routing agrees row for row (2-row chunks, ragged pairs)
+        for start in [0usize, 2] {
+            let len = 2;
+            let mut codes = vec![0u8; len];
+            codes.copy_from_slice(&binned.column(0)[start..start + len]);
+            let cols = ChunkCols { codes: &codes, start, len };
+            for r in start..start + len {
+                assert_eq!(t.leaf_for_chunk(&cols, r), t.leaf_for_binned(&binned, r));
+            }
+        }
     }
 
     #[test]

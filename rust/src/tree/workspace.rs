@@ -91,6 +91,9 @@ pub struct TreeWorkspace {
     /// `[nr, k1]` channel matrix parallel to `rows` by position.
     pub(crate) chan: Vec<f32>,
     /// Partition targets for the next level (ping-pong with `rows`/`chan`).
+    /// The stable partition keeps each segment's rows ascending — the
+    /// invariant the chunked routing arm in `tree/builder.rs` leans on
+    /// to visit each chunk's share of a segment as one contiguous run.
     pub(crate) rows_next: Vec<u32>,
     pub(crate) chan_next: Vec<f32>,
     /// Right-child staging for the single-pass stable partition.

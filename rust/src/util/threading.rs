@@ -563,6 +563,47 @@ mod tests {
     }
 
     #[test]
+    fn queue_pop_deadline_prefers_items_over_expired_deadline() {
+        // audit pins: an available item wins even when the deadline is
+        // already in the past — the item check precedes the clock check
+        let q = BoundedQueue::new(4);
+        q.push(1u32).unwrap();
+        q.push(2).unwrap();
+        let past = Instant::now() - std::time::Duration::from_millis(50);
+        assert_eq!(q.pop_deadline(past), PopResult::Item(1));
+        assert_eq!(q.pop_deadline(past), PopResult::Item(2));
+        // drained + open + past deadline -> TimedOut, not a hang
+        assert_eq!(q.pop_deadline(past), PopResult::TimedOut);
+    }
+
+    #[test]
+    fn queue_pop_deadline_drains_closed_queue_before_reporting_closed() {
+        // Closed is only reported once the queue is also empty; queued
+        // items survive close() and beat both the clock and the flag
+        let q = BoundedQueue::new(4);
+        q.push(9u32).unwrap();
+        q.close();
+        let past = Instant::now() - std::time::Duration::from_millis(1);
+        assert_eq!(q.pop_deadline(past), PopResult::Item(9));
+        assert_eq!(q.pop_deadline(past), PopResult::Closed);
+    }
+
+    #[test]
+    fn queue_pop_deadline_wakes_for_late_producer() {
+        // a push while the consumer is parked inside wait_timeout must
+        // deliver the item (the loop re-checks items after every wake,
+        // so spurious wakeups and real notifies behave alike)
+        let q = std::sync::Arc::new(BoundedQueue::<u32>::new(2));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            q2.pop_deadline(Instant::now() + std::time::Duration::from_secs(30))
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(42).unwrap();
+        assert_eq!(consumer.join().unwrap(), PopResult::Item(42));
+    }
+
+    #[test]
     fn queue_mpmc_delivers_every_item_once() {
         let q = std::sync::Arc::new(BoundedQueue::new(3));
         let seen = std::sync::Arc::new(Mutex::new(Vec::new()));

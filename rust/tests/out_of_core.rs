@@ -1,0 +1,134 @@
+//! Out-of-core training contract: a chunked on-disk store round-trips
+//! every byte of the binned matrix, and training from it is
+//! bitwise-identical to the in-RAM fit on the same codes — across
+//! profiles (missing values, categorical splits), chunk plans (single
+//! chunk, ragged tail, one-row chunks), and engine thread counts.
+
+use sketchboost::data::binning::{BinnedDataset, BinnedSource};
+use sketchboost::data::chunked::ChunkedBinned;
+use sketchboost::data::profiles::Profile;
+use sketchboost::data::store::{self, StoreError};
+use sketchboost::prelude::*;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("sb_out_of_core_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The exact binned matrix training would build for this config.
+fn binned_for(ds: &Dataset, cfg: &GBDTConfig) -> BinnedDataset {
+    BinnedDataset::from_dataset_with_kinds(ds, cfg.max_bins, &cfg.merged_kinds(ds))
+}
+
+fn fast_cfg(ds: &Dataset) -> GBDTConfig {
+    let mut cfg = GBDTConfig::for_dataset(ds);
+    cfg.n_rounds = 3;
+    cfg.max_depth = 3;
+    cfg.max_bins = 32;
+    cfg.learning_rate = 0.3;
+    // subsample leaves SENTINEL rows for the prediction update, so the
+    // chunked leaf_for_chunk routing arm is exercised every round
+    cfg.subsample = 0.8;
+    cfg
+}
+
+#[test]
+fn store_round_trips_header_and_every_chunk_byte() {
+    // moa-nan: multilabel with 25% missing — MISSING_BIN codes included
+    let ds = Profile::by_name("moa-nan").unwrap().generate_sized(240, 5);
+    let cfg = fast_cfg(&ds);
+    let binned = binned_for(&ds, &cfg);
+    let path = tmp("roundtrip.sbbin");
+    store::write_binned(&path, &binned, &ds.targets, 64).unwrap();
+
+    let cb = ChunkedBinned::open_verified(&path, 4).unwrap();
+    assert_eq!(cb.n_rows(), binned.n_rows);
+    assert_eq!(cb.n_features(), binned.n_features);
+    assert_eq!(cb.max_bins(), binned.max_bins);
+    assert_eq!(cb.kinds(), &binned.kinds[..]);
+    assert_eq!(cb.targets(), &ds.targets);
+    // bin edges survive JSON bit-exactly (stored as u32 bit patterns)
+    let spec = cb.spec();
+    for f in 0..binned.n_features {
+        let want: Vec<u32> = binned.edges[f].iter().map(|e| e.to_bits()).collect();
+        let got: Vec<u32> = spec.edges[f].iter().map(|e| e.to_bits()).collect();
+        assert_eq!(got, want, "feature {f} edges");
+    }
+    // every chunk byte equals the in-RAM columns; ragged tail included
+    assert_eq!(cb.n_chunks(), 4); // 240 rows / 64 = 3 full + 48-row tail
+    let mut seen_rows = 0usize;
+    for c in 0..cb.n_chunks() {
+        let r = cb.chunk_range(c);
+        cb.with_chunk(c, &mut |cols| {
+            assert_eq!((cols.start, cols.len), (r.start, r.len()));
+            for f in 0..binned.n_features {
+                assert_eq!(cols.col(f), &binned.column(f)[r.clone()], "chunk {c} feature {f}");
+            }
+            seen_rows += cols.len;
+        });
+    }
+    assert_eq!(seen_rows, binned.n_rows);
+}
+
+#[test]
+fn chunked_training_is_bitwise_identical_to_in_ram() {
+    for (profile, n, seed) in [("moa-nan", 240usize, 11u64), ("cat-rule", 300, 13)] {
+        let ds = Profile::by_name(profile).unwrap().generate_sized(n, seed);
+        let base = fast_cfg(&ds);
+        let want = GBDT::fit(&base, &ds, None);
+
+        for chunk_rows in [n, 64, 1] {
+            let binned = binned_for(&ds, &base);
+            let path = tmp(&format!("train_{profile}_{chunk_rows}.sbbin"));
+            store::write_binned(&path, &binned, &ds.targets, chunk_rows).unwrap();
+            let chunked = ChunkedBinned::open(&path, 3).unwrap();
+            for threads in [1usize, 2, 4] {
+                let mut cfg = base.clone();
+                cfg.n_threads = threads;
+                let got = GBDT::fit_chunked(&cfg, &chunked, None);
+                assert_eq!(
+                    got.trees, want.trees,
+                    "{profile}: chunk_rows={chunk_rows} threads={threads}"
+                );
+                assert_eq!(got.base_score, want.base_score);
+                let (a, b) = (got.predict_raw(&ds), want.predict_raw(&ds));
+                assert_eq!(a, b, "{profile}: predictions chunk_rows={chunk_rows}");
+            }
+        }
+    }
+}
+
+#[test]
+fn truncated_and_corrupted_stores_fail_with_structured_errors() {
+    let ds = Profile::by_name("cat-rule").unwrap().generate_sized(200, 3);
+    let cfg = fast_cfg(&ds);
+    let binned = binned_for(&ds, &cfg);
+
+    // truncation: the JSON header (at the tail) is gone -> Format error
+    let path = tmp("damage.sbbin");
+    store::write_binned(&path, &binned, &ds.targets, 64).unwrap();
+    let len = std::fs::metadata(&path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+    match ChunkedBinned::open(&path, 2) {
+        Err(StoreError::Format(_)) | Err(StoreError::Io(_)) => {}
+        other => panic!("truncated store: expected Format/Io error, got {other:?}"),
+    }
+
+    // bit rot inside a chunk payload: checksums name the chunk
+    store::write_binned(&path, &binned, &ds.targets, 64).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let hdr = {
+        let mut file = std::fs::File::open(&path).unwrap();
+        store::read_header(&mut file).unwrap()
+    };
+    let victim = hdr.chunks[1].offset as usize + 7;
+    bytes[victim] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    match ChunkedBinned::open_verified(&path, 2) {
+        Err(StoreError::Corrupt { chunk, .. }) => assert_eq!(chunk, 1),
+        other => panic!("corrupted chunk: expected Corrupt{{chunk: 1}}, got {other:?}"),
+    }
+}
